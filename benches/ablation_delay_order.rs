@@ -1,0 +1,106 @@
+//! **Fig 12/15 ablation** — delay-sorted edge layout vs unsorted.
+//!
+//! The paper reorders each thread's synaptic interactions by delay so a
+//! time step touches contiguous runs and ring-buffer slots in order.
+//! This micro-bench isolates exactly that effect: one delivery pass over
+//! identical edges, once with the store's (pre, delay)-sorted runs and
+//! once with each run shuffled.
+//!
+//! Run: `cargo bench --bench ablation_delay_order`
+
+use std::path::Path;
+use std::sync::Arc;
+
+use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
+use cortex::decomp::{area_processes_partition, RankStore};
+use cortex::engine::ring::InputRing;
+use cortex::metrics::Table;
+use cortex::util::bench::{black_box, time_median};
+use cortex::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let spec = Arc::new(marmoset_spec(
+        &MarmosetParams {
+            n_neurons: 8_000,
+            n_areas: 8,
+            indegree: 300,
+            ..Default::default()
+        },
+        41,
+    ));
+    let part = area_processes_partition(&spec, 1, 41);
+    let store = RankStore::build(&spec, &part.members[0], |_| true, 0, 1);
+    let te = &store.threads[0];
+    let n_pres = store.n_pres();
+
+    // a plausible spiking set: 2% of pres fire
+    let mut rng = Rng::new(7);
+    let spikes: Vec<u32> = (0..n_pres as u32)
+        .filter(|_| rng.bool(0.02))
+        .collect();
+
+    // shuffled copy: same edges, randomised order within each pre run
+    let mut sh_post = te.post.clone();
+    let mut sh_weight = te.weight.clone();
+    let mut sh_delay = te.delay.clone();
+    for p in 0..n_pres {
+        let r = te.run(p);
+        let idx: Vec<usize> = {
+            let mut v: Vec<usize> = (0..r.len()).collect();
+            rng.shuffle(&mut v);
+            v
+        };
+        for (k, &j) in idx.iter().enumerate() {
+            sh_post[r.start + k] = te.post[r.start + j];
+            sh_weight[r.start + k] = te.weight[r.start + j];
+            sh_delay[r.start + k] = te.delay[r.start + j];
+        }
+    }
+
+    let ring_len = store.max_delay as usize + 1;
+    let mut ring = InputRing::new(store.n_posts(), ring_len);
+
+    let mut deliver = |post: &[u32], weight: &[f64], delay: &[u16]| {
+        for &p in &spikes {
+            let r = te.run(p as usize);
+            for ei in r {
+                let due = 100 + delay[ei] as u64;
+                ring.add(post[ei] as usize, due, weight[ei]);
+            }
+        }
+    };
+
+    let reps = 15;
+    let t_sorted =
+        time_median(reps, || deliver(&te.post, &te.weight, &te.delay));
+    let t_shuffled =
+        time_median(reps, || deliver(&sh_post, &sh_weight, &sh_delay));
+    black_box(&ring);
+
+    let n_edges: usize =
+        spikes.iter().map(|&p| te.run(p as usize).len()).sum();
+    let mut table = Table::new(
+        "delay-order ablation — one delivery pass over the same edges",
+        &["layout", "time_ms", "ns_per_edge", "speedup"],
+    );
+    table.row(&[
+        "delay-sorted (paper)".into(),
+        format!("{:.3}", t_sorted * 1e3),
+        format!("{:.2}", t_sorted * 1e9 / n_edges as f64),
+        format!("{:.2}x", t_shuffled / t_sorted),
+    ]);
+    table.row(&[
+        "shuffled".into(),
+        format!("{:.3}", t_shuffled * 1e3),
+        format!("{:.2}", t_shuffled * 1e9 / n_edges as f64),
+        "1.00x".into(),
+    ]);
+    table.emit(Path::new("target/bench_out"), "ablation_delay_order")?;
+    println!(
+        "{} spiking pres, {} edges delivered per pass, ring {} slots\n",
+        spikes.len(),
+        n_edges,
+        ring_len
+    );
+    Ok(())
+}

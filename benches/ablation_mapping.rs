@@ -1,0 +1,99 @@
+//! **Fig 8/9/10 ablation** — Area-Processes Mapping vs Random Equivalent
+//! Mapping: the number of pre-synaptic neurons each rank must store, the
+//! local/remote edge split, and the resulting per-rank memory.
+//!
+//! The paper's Fig 9/10 example: random mapping forces ~all N sources
+//! into every rank's pre table, area mapping keeps it near the area size.
+//!
+//! Run: `cargo bench --bench ablation_mapping`
+
+use std::path::Path;
+use std::sync::Arc;
+
+use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
+use cortex::config::MappingKind;
+use cortex::decomp::{
+    area_processes_partition, random_equivalent_partition, RankStore,
+};
+use cortex::metrics::table::human_bytes;
+use cortex::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let spec = Arc::new(marmoset_spec(
+        &MarmosetParams {
+            n_neurons: 8_000,
+            n_areas: 8,
+            indegree: 200,
+            ..Default::default()
+        },
+        23,
+    ));
+    let n = spec.n_total();
+
+    let mut table = Table::new(
+        "mapping ablation — pre-vertex replication and memory per rank",
+        &[
+            "ranks",
+            "mapping",
+            "avg_pres",
+            "max_pres",
+            "remote_edge_%",
+            "max_rank_mem",
+        ],
+    );
+
+    for &ranks in &[4usize, 8, 16] {
+        for mapping in
+            [MappingKind::AreaProcesses, MappingKind::RandomEquivalent]
+        {
+            let part = match mapping {
+                MappingKind::AreaProcesses => {
+                    area_processes_partition(&spec, ranks, 5)
+                }
+                MappingKind::RandomEquivalent => {
+                    random_equivalent_partition(n, ranks, 5)
+                }
+            };
+            let mut pres = Vec::new();
+            let mut mems = Vec::new();
+            let mut local_e = 0u64;
+            let mut remote_e = 0u64;
+            for r in 0..ranks {
+                let rank_of = part.rank_of.clone();
+                let store = RankStore::build(
+                    &spec,
+                    &part.members[r],
+                    move |g| rank_of[g as usize] as usize == r,
+                    r as u16,
+                    1,
+                );
+                pres.push(store.n_pres() as f64);
+                mems.push(store.memory().total());
+                local_e += store.n_local_edges;
+                remote_e += store.n_remote_edges;
+            }
+            let avg =
+                pres.iter().sum::<f64>() / ranks as f64;
+            let max = pres.iter().cloned().fold(0.0, f64::max);
+            table.row(&[
+                ranks.to_string(),
+                format!("{mapping:?}"),
+                format!("{avg:.0}"),
+                format!("{max:.0}"),
+                format!(
+                    "{:.1}",
+                    100.0 * remote_e as f64 / (local_e + remote_e) as f64
+                ),
+                human_bytes(*mems.iter().max().unwrap()),
+            ]);
+        }
+    }
+
+    table.emit(Path::new("target/bench_out"), "ablation_mapping")?;
+    println!(
+        "paper Fig 9/10: random mapping should push pre counts toward \
+         N = {n}, area mapping toward the area size (~{}).\n",
+        n / spec.n_areas()
+    );
+    Ok(())
+}

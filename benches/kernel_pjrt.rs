@@ -1,0 +1,76 @@
+//! **Kernel bench** — per-neuron cost of the LIF dynamics step: native
+//! Rust vs the AOT JAX/Pallas artifact executed through PJRT.
+//!
+//! Quantifies the dispatch + copy overhead of the PJRT path at the block
+//! sizes the artifacts were lowered for (the L1 kernel itself is
+//! interpret-mode Pallas lowered to plain HLO; see DESIGN.md §8 for why
+//! its TPU performance is analysed statically instead).
+//!
+//! Run: `cargo bench --bench kernel_pjrt` (needs `make artifacts`).
+
+use std::path::Path;
+
+use cortex::atlas::random_spec;
+use cortex::metrics::Table;
+use cortex::model::lif::{step_slice, LifParams, LifState, Propagators};
+use cortex::runtime::PjrtLif;
+use cortex::util::bench::time_median;
+use cortex::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP: run `make artifacts` first");
+        return Ok(());
+    }
+
+    let params = LifParams::default();
+    let props = [Propagators::new(&params, 0.1)];
+    let mut table = Table::new(
+        "LIF step: native Rust vs AOT JAX/Pallas via PJRT",
+        &["n", "native_us", "pjrt_us", "native_ns/neuron", "pjrt_ns/neuron"],
+    );
+
+    for &n in &[512usize, 2048, 8192] {
+        let mut rng = Rng::new(n as u64);
+        let mut state = LifState::new(n, &props, vec![0; n]);
+        for i in 0..n {
+            state.u[i] = params.e_l + rng.range_f64(0.0, 16.0);
+        }
+        let in_e: Vec<f64> =
+            (0..n).map(|_| rng.range_f64(0.0, 100.0)).collect();
+        let in_i: Vec<f64> =
+            (0..n).map(|_| -rng.range_f64(0.0, 100.0)).collect();
+
+        let mut native_state = state.clone();
+        let t_native = time_median(30, || {
+            let mut spikes = Vec::new();
+            step_slice(
+                &mut native_state, 0, n, &in_e, &in_i, &props, &mut spikes,
+            );
+        });
+
+        let spec = random_spec(n.max(100), 10, 1);
+        let mut pjrt = PjrtLif::load("artifacts", &spec)?;
+        let mut pjrt_state = state.clone();
+        let t_pjrt = time_median(10, || {
+            pjrt.step(&mut pjrt_state, &in_e, &in_i).unwrap();
+        });
+
+        table.row(&[
+            n.to_string(),
+            format!("{:.1}", t_native * 1e6),
+            format!("{:.1}", t_pjrt * 1e6),
+            format!("{:.2}", t_native * 1e9 / n as f64),
+            format!("{:.2}", t_pjrt * 1e9 / n as f64),
+        ]);
+    }
+
+    table.emit(Path::new("target/bench_out"), "kernel_pjrt")?;
+    println!(
+        "the PJRT column pays per-dispatch literal copies; the gap \
+         narrows with block size (amortised dispatch). On real TPU the \
+         same artifact maps the Pallas kernel onto VPU tiles instead \
+         (DESIGN.md §8).\n"
+    );
+    Ok(())
+}

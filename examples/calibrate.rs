@@ -1,0 +1,67 @@
+//! Calibration sweep for the hpc_benchmark verification network: scans
+//! the (η, g) plane and reports the population firing rate of each point,
+//! marking the paper's acceptance band (< 10 Hz, asynchronous-irregular).
+//!
+//! Usage: cargo run --example calibrate [n_neurons] [indegree]
+
+use std::sync::Arc;
+
+use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
+use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::engine::{run_simulation, RunConfig};
+use cortex::metrics::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().map(|s| s.parse().unwrap()).unwrap_or(1000);
+    let k: u32 = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(100);
+
+    let mut table = Table::new(
+        "hpc_benchmark calibration (300 ms)",
+        &["eta", "g", "rate_hz", "isi_cv", "verdict"],
+    );
+    for &eta in &[0.6, 0.65, 0.7, 0.75, 0.8] {
+        for &g in &[5.0, 6.0, 7.0, 8.0] {
+            let spec = Arc::new(hpc_benchmark_spec(
+                &HpcParams {
+                    n_neurons: n,
+                    indegree: k,
+                    eta,
+                    g,
+                    plastic: false,
+                    ..Default::default()
+                },
+                1,
+            ));
+            let steps = 3000;
+            let out = run_simulation(
+                &spec,
+                &RunConfig {
+                    ranks: 1,
+                    threads: 2,
+                    mapping: MappingKind::AreaProcesses,
+                    comm: CommMode::Serialized,
+                    backend: DynamicsBackend::Native,
+                    steps,
+                    record_limit: Some(u32::MAX),
+                    verify_ownership: false,
+                    artifacts_dir: "artifacts".into(),
+                    seed: 5,
+                },
+            )
+            .unwrap();
+            let rate =
+                out.total_spikes as f64 / spec.n_total() as f64 / 0.3;
+            let stats = out.raster.stats(spec.n_total(), 0.1, steps);
+            let verdict = if rate > 0.05 && rate < 10.0 { "PASS" } else { "-" };
+            table.row(&[
+                format!("{eta}"),
+                format!("{g}"),
+                format!("{rate:.2}"),
+                format!("{:.2}", stats.mean_isi_cv),
+                verdict.into(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+}

@@ -1,0 +1,74 @@
+//! Verification case (paper §IV.A): the NEST `hpc_benchmark` — a balanced
+//! random network whose E→E synapses exhibit STDP with multiplicative
+//! depression and power-law potentiation.
+//!
+//! What this demonstrates, in the paper's own terms:
+//! * CORTEX supports nonlinear plastic synaptic interactions **without
+//!   any mutex or atomic operation** — plastic edge state lives with the
+//!   post-owning thread;
+//! * the thread-mapping result is checked at runtime: any edge or
+//!   post-vertex access from a foreign thread calls Abort
+//!   (`verify_ownership: true` compiles the check into the hot loop);
+//! * the network stays in the asynchronous-irregular regime with mean
+//!   firing below 10 Hz.
+//!
+//! Run: `cargo run --release --example hpc_benchmark [n_neurons] [sim_ms]`
+
+use std::sync::Arc;
+
+use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
+use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::engine::{run_simulation, RunConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let n: usize =
+        args.next().map(|s| s.parse().unwrap()).unwrap_or(2250);
+    let sim_ms: f64 =
+        args.next().map(|s| s.parse().unwrap()).unwrap_or(1000.0);
+
+    let params = HpcParams { n_neurons: n, ..Default::default() };
+    let spec = Arc::new(hpc_benchmark_spec(&params, 42));
+    println!(
+        "hpc_benchmark: {} neurons ({}E/{}I), indegree {}, STDP on E->E",
+        spec.n_total(),
+        spec.populations[0].n,
+        spec.populations[1].n,
+        params.indegree
+    );
+
+    let steps = (sim_ms / spec.dt_ms) as u64;
+    let cfg = RunConfig {
+        ranks: 2,
+        threads: 2,
+        mapping: MappingKind::AreaProcesses,
+        comm: CommMode::Overlap,
+        backend: DynamicsBackend::Native,
+        steps,
+        record_limit: Some(u32::MAX),
+        verify_ownership: true, // the paper's Abort-on-foreign-access
+        artifacts_dir: "artifacts".into(),
+        seed: 42,
+    };
+    let out = run_simulation(&spec, &cfg)?;
+
+    let rate =
+        out.total_spikes as f64 / spec.n_total() as f64 / (sim_ms * 1e-3);
+    let stats = out.raster.stats(spec.n_total(), spec.dt_ms, steps);
+    println!(
+        "simulated {sim_ms} ms in {:.2}s wall: {} spikes",
+        out.wall_seconds, out.total_spikes
+    );
+    println!(
+        "mean rate {rate:.2} Hz | ISI-CV {:.2} | active fraction {:.2}",
+        stats.mean_isi_cv, stats.active_fraction
+    );
+    println!("thread-ownership violations: 0 (no abort raised)");
+
+    anyhow::ensure!(
+        rate > 0.05 && rate < 10.0,
+        "rate {rate:.2} Hz outside the paper's verification band"
+    );
+    println!("VERIFICATION PASSED: asynchronous regime, rate < 10 Hz");
+    Ok(())
+}

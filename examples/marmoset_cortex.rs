@@ -1,0 +1,148 @@
+//! End-to-end evaluation driver — the paper's §IV.B workload on this
+//! testbed: a multi-area marmoset-like cortical network simulated by the
+//! full CORTEX stack (atlas → area-processes mapping → multisection →
+//! per-rank indegree stores → mutex-free threads → windowed overlap
+//! exchange), with the headline quantities of Fig 18 (per-rank memory,
+//! wall time per simulated second) and Fig 19 (raster of area "V1")
+//! reported and written to `target/bench_out/`.
+//!
+//! Run: `cargo run --release --example marmoset_cortex [n_neurons]`
+//! (default 20 000 neurons, ~5M synapses, 4 ranks × 3 threads, 200 ms)
+
+use std::path::Path;
+use std::sync::Arc;
+
+use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
+use cortex::comm::TofuModel;
+use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::engine::{run_simulation, RunConfig};
+use cortex::metrics::table::{human_bytes, write_csv};
+use cortex::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("n_neurons"))
+        .unwrap_or(20_000);
+    let params = MarmosetParams {
+        n_neurons: n,
+        n_areas: 8,
+        indegree: 250,
+        ..Default::default()
+    };
+    let spec = Arc::new(marmoset_spec(&params, 20240710));
+    println!(
+        "marmoset atlas: {} neurons / {} synapses / {} areas",
+        spec.n_total(),
+        spec.n_edges(),
+        spec.n_areas()
+    );
+
+    let sim_ms = 200.0;
+    let steps = (sim_ms / spec.dt_ms) as u64;
+    let cfg = RunConfig {
+        ranks: 4,
+        threads: 3,
+        mapping: MappingKind::AreaProcesses,
+        comm: CommMode::Overlap,
+        backend: DynamicsBackend::Native,
+        steps,
+        record_limit: Some(u32::MAX),
+        verify_ownership: false,
+        artifacts_dir: "artifacts".into(),
+        seed: 20240710,
+    };
+    let out = run_simulation(&spec, &cfg)?;
+
+    // -- headline metrics -------------------------------------------------
+    let sim_s = sim_ms * 1e-3;
+    let rate = out.total_spikes as f64 / spec.n_total() as f64 / sim_s;
+    let slowdown = out.wall_seconds / sim_s;
+    println!(
+        "\nsimulated {sim_ms} ms in {:.2}s wall ({slowdown:.0}x real time) \
+         on {} ranks x {} threads",
+        out.wall_seconds, cfg.ranks, cfg.threads
+    );
+    println!(
+        "activity : {} spikes, mean rate {rate:.2} Hz",
+        out.total_spikes
+    );
+    println!(
+        "memory   : max-rank {} (imbalance {:.2}), {} synapses/rank avg",
+        human_bytes(out.memory.max_rank_bytes()),
+        out.memory.imbalance(),
+        spec.n_edges() / cfg.ranks as u64
+    );
+    println!(
+        "comm     : {} payload over {} windows",
+        human_bytes(out.comm_bytes),
+        out.windows
+    );
+    print!("{}", out.timer_max.report());
+
+    // Fugaku-scale projection of the same spike traffic (Tofu-D model)
+    let tofu = TofuModel::default();
+    let bytes_per_rank_window =
+        out.comm_bytes as f64 / cfg.ranks as f64 / out.windows as f64;
+    let projected = tofu.total_comm_seconds(
+        1536, // the paper's largest NEST-comparison config (384 nodes)
+        out.windows,
+        bytes_per_rank_window,
+    );
+    println!(
+        "tofu-d projection: this spike traffic on 1536 Fugaku ranks \
+         ≈ {projected:.3}s communication"
+    );
+
+    // -- per-area activity table + V1 raster (Fig 19 artifacts) ----------
+    let mut table = Table::new(
+        "per-area activity",
+        &["area", "neurons", "rate_hz", "isi_cv"],
+    );
+    let sim_steps = steps;
+    for a in 0..spec.n_areas() as u16 {
+        let gids: Vec<(u32, u32)> = spec
+            .populations
+            .iter()
+            .filter(|p| p.area == a)
+            .map(|p| (p.first_gid, p.first_gid + p.n))
+            .collect();
+        let in_area = |g: u32| gids.iter().any(|&(lo, hi)| g >= lo && g < hi);
+        let n_area: u32 = gids.iter().map(|&(lo, hi)| hi - lo).sum();
+        let events: Vec<(u64, u32)> = out
+            .raster
+            .events
+            .iter()
+            .filter(|&&(_, g)| in_area(g))
+            .copied()
+            .collect();
+        let mut sub = cortex::metrics::SpikeRecorder::new(u32::MAX);
+        sub.events = events;
+        let first = gids[0].0;
+        // shift gids so stats index from 0
+        for e in &mut sub.events {
+            e.1 -= first;
+        }
+        let st = sub.stats(n_area as usize, spec.dt_ms, sim_steps);
+        table.row(&[
+            format!("A{a:02}"),
+            n_area.to_string(),
+            format!("{:.2}", st.mean_rate_hz),
+            format!("{:.2}", st.mean_isi_cv),
+        ]);
+    }
+    let out_dir = Path::new("target/bench_out");
+    table.emit(out_dir, "marmoset_area_rates")?;
+
+    // V1 = area 0 raster, first 1000 neurons (the Fig 19 plot data)
+    let v1_limit = 1000u32;
+    let mut v1 = String::from("time_ms,gid\n");
+    for &(t, g) in &out.raster.events {
+        if g < v1_limit {
+            v1.push_str(&format!("{},{g}\n", t as f64 * spec.dt_ms));
+        }
+    }
+    write_csv(out_dir, "marmoset_v1_raster", &v1)?;
+    println!("wrote target/bench_out/marmoset_v1_raster.csv (Fig 19 data)");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Potjans-Diesmann 2014 cortical microcircuit — the architecture the
+//! paper derives its areas' internal structure from (ref [30]). Runs the
+//! downscaled column (variance-preserving 1/√scale weights + DC mean
+//! compensation) and compares per-population firing rates against the
+//! published full-scale spontaneous rates.
+//!
+//! Run: `cargo run --release --example potjans_microcircuit [scale]`
+//! (default scale 0.05 ≈ 3 860 neurons)
+
+use std::sync::Arc;
+
+use cortex::atlas::potjans::{potjans_spec, POP_NAMES, TARGET_RATES_HZ};
+use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::engine::{run_simulation, RunConfig};
+use cortex::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("scale"))
+        .unwrap_or(0.05);
+    let spec = Arc::new(potjans_spec(scale, 7));
+    println!(
+        "microcircuit at scale {scale}: {} neurons, {} synapses",
+        spec.n_total(),
+        spec.n_edges()
+    );
+
+    let sim_ms = 500.0;
+    let steps = (sim_ms / spec.dt_ms) as u64;
+    let cfg = RunConfig {
+        ranks: 2,
+        threads: 2,
+        mapping: MappingKind::AreaProcesses,
+        comm: CommMode::Overlap,
+        backend: DynamicsBackend::Native,
+        steps,
+        record_limit: Some(u32::MAX),
+        verify_ownership: false,
+        artifacts_dir: "artifacts".into(),
+        seed: 7,
+    };
+    let out = run_simulation(&spec, &cfg)?;
+    println!(
+        "simulated {sim_ms} ms in {:.2}s wall, {} spikes",
+        out.wall_seconds, out.total_spikes
+    );
+
+    let sim_s = sim_ms * 1e-3;
+    let mut table = Table::new(
+        "per-population rates (published full-scale target in parens)",
+        &["pop", "neurons", "rate_hz", "target_hz"],
+    );
+    for (i, p) in spec.populations.iter().enumerate() {
+        let count = out
+            .raster
+            .events
+            .iter()
+            .filter(|&&(_, g)| g >= p.first_gid && g < p.first_gid + p.n)
+            .count();
+        let rate = count as f64 / p.n as f64 / sim_s;
+        table.row(&[
+            POP_NAMES[i].to_string(),
+            p.n.to_string(),
+            format!("{rate:.2}"),
+            format!("{:.2}", TARGET_RATES_HZ[i]),
+        ]);
+    }
+    table.emit(std::path::Path::new("target/bench_out"), "potjans_rates")?;
+    Ok(())
+}

@@ -1,0 +1,13 @@
+"""CORTEX build-time python package (L1 Pallas kernels + L2 JAX model + AOT).
+
+Python is ONLY used at build time: `make artifacts` lowers the L2 graph
+(which calls the L1 kernels) to HLO text that the Rust runtime loads via
+PJRT. Nothing in this package runs on the simulation path.
+
+All numerics are float64 (the paper: "IEEE 754 64-bit floating point format
+without any compression on accuracy"), hence x64 is enabled on import.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

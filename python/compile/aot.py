@@ -1,0 +1,101 @@
+"""AOT: lower the L2 graph (with its L1 Pallas kernels) to HLO text.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids, which the xla_extension 0.5.1
+backing the published `xla` crate rejects (`proto.id() <= INT_MAX`).  The
+text parser on the Rust side reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs, under --out-dir (default ../artifacts):
+
+  lif_step_n{N}.hlo.txt      one LIF state-update step, N neurons
+  dense_net_n{N}.hlo.txt     full dense-coupling network step, N neurons
+  manifest.json              baked LifConfig + propagators + shapes so the
+                             Rust engine can mirror the computation
+  fixtures/lif_fixtures.json reference trajectories for Rust unit tests
+
+Run via `make artifacts`; it is a no-op when inputs are unchanged.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.ref import _dump_fixtures
+
+# Shapes baked into artifacts. The Rust engine pads its per-rank neuron
+# blocks to LIF_SIZES; the dense demo network uses DENSE_SIZES.
+LIF_SIZES = (512, 2048)
+DENSE_SIZES = (256,)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_lif_step(cfg: model.LifConfig, n: int) -> str:
+    step = model.lif_step(cfg, block=min(n, 2048))
+    vec = jax.ShapeDtypeStruct((n,), jnp.float64)
+    lowered = jax.jit(step).lower(vec, vec, vec, vec, vec, vec)
+    return to_hlo_text(lowered)
+
+
+def lower_dense_net(cfg: model.LifConfig, n: int) -> str:
+    net = model.dense_net_step(cfg, block=min(n, 128))
+    vec = jax.ShapeDtypeStruct((n,), jnp.float64)
+    mat = jax.ShapeDtypeStruct((n, n), jnp.float64)
+    lowered = jax.jit(net).lower(vec, vec, vec, vec, vec, mat, mat)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "fixtures"), exist_ok=True)
+
+    cfg = model.LifConfig()
+    files = {}
+
+    for n in LIF_SIZES:
+        name = f"lif_step_n{n}.hlo.txt"
+        text = lower_lif_step(cfg, n)
+        with open(os.path.join(out, name), "w") as f:
+            f.write(text)
+        files[name] = {"kind": "lif_step", "n": n}
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for n in DENSE_SIZES:
+        name = f"dense_net_n{n}.hlo.txt"
+        text = lower_dense_net(cfg, n)
+        with open(os.path.join(out, name), "w") as f:
+            f.write(text)
+        files[name] = {"kind": "dense_net", "n": n}
+        print(f"wrote {name} ({len(text)} chars)")
+
+    manifest = {
+        **model.config_manifest(cfg),
+        "artifacts": files,
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+    _dump_fixtures(os.path.join(out, "fixtures", "lif_fixtures.json"))
+
+
+if __name__ == "__main__":
+    main()

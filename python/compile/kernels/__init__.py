@@ -1,0 +1,14 @@
+"""L1 Pallas kernels for the CORTEX hot path.
+
+- ``lif_step``  — fused exact-integration LIF state update (element-wise,
+                  VPU-bound on real TPU).
+- ``syn_accum`` — blocked spike→current accumulation expressed as a tiled
+                  dense mat-vec (the MXU re-think of the paper's CPU
+                  scatter loop; see DESIGN.md §Hardware-Adaptation).
+- ``ref``       — pure-jnp oracles for both, used by pytest/hypothesis and
+                  to dump fixtures for the Rust unit tests.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness (and
+artifact) path, while TPU performance is analysed statically (DESIGN.md §8).
+"""

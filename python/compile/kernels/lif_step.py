@@ -1,0 +1,110 @@
+"""Fused exact-integration LIF step as a Pallas kernel.
+
+One grid cell processes a block of `block` neurons: all six input vectors
+are staged into VMEM tiles, the affine propagator update + threshold /
+reset / refractory logic run element-wise, and five output tiles are
+written back.  The kernel is purely element-wise, so on a real TPU it is
+VPU work and the HBM↔VMEM streaming schedule expressed by the BlockSpecs
+is the whole performance story (see DESIGN.md §Hardware-Adaptation for the
+VMEM budget: 11 tiles × block × 8 B ≈ 176 KiB at block=2048 — far below
+the ~16 MiB VMEM, leaving room for double buffering).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# pallas_call in interpret mode is expensive to retrace; cache the jitted
+# padded-step per (params, shape, dtype) so repeated calls are cheap.
+_JIT_CACHE = {}
+
+
+def _lif_kernel(u_ref, ie_ref, ii_ref, r_ref, ine_ref, ini_ref,
+                uo_ref, ieo_ref, iio_ref, ro_ref, so_ref,
+                *, p22, p11e, p11i, p21e, p21i, p20,
+                e_l, v_reset, v_th, i_ext, ref_steps):
+    u = u_ref[...]
+    ie = ie_ref[...]
+    ii = ii_ref[...]
+    r = r_ref[...]
+
+    refractory = r > 0.0
+
+    # 1. exact-integration membrane propagation (non-refractory only)
+    u_prop = e_l + (u - e_l) * p22 + ie * p21e + ii * p21i + i_ext * p20
+    u_new = jnp.where(refractory, v_reset, u_prop)
+
+    # 2. refractory countdown
+    r_new = jnp.where(refractory, r - 1.0, r)
+
+    # 3. threshold, reset, arm refractory timer
+    spiked = jnp.logical_and(jnp.logical_not(refractory), u_new >= v_th)
+    u_new = jnp.where(spiked, v_reset, u_new)
+    r_new = jnp.where(spiked, float(ref_steps), r_new)
+
+    # 4. synaptic currents decay, then this step's input lands
+    ie_new = ie * p11e + ine_ref[...]
+    ii_new = ii * p11i + ini_ref[...]
+
+    uo_ref[...] = u_new
+    ieo_ref[...] = ie_new
+    iio_ref[...] = ii_new
+    ro_ref[...] = r_new
+    so_ref[...] = spiked.astype(u.dtype)
+
+
+def lif_step(u, ie, ii, r, in_e, in_i, *, cfg, prop, block=256, interpret=True):
+    """Apply one LIF step to N neurons (N arbitrary; padded to `block`).
+
+    Returns (u', ie', ii', r', spiked) with the same shape/dtype as `u`.
+    """
+    n = u.shape[0]
+    dtype = u.dtype
+    nb = max(1, -(-n // block))          # ceil-div, >= 1 block even for n=0
+    pad = nb * block - n
+
+    def padded(x, fill=0.0):
+        x = x.astype(dtype)
+        if pad:
+            x = jnp.pad(x, (0, pad), constant_values=fill)
+        return x
+
+    # Padding lanes are parked in the refractory state with u at reset so
+    # they can never spike and never interact with live lanes.
+    args = (
+        padded(u, cfg.v_reset),
+        padded(ie),
+        padded(ii),
+        padded(r, float(prop.ref_steps)),
+        padded(in_e),
+        padded(in_i),
+    )
+
+    key = (cfg, prop, block, nb, str(dtype), interpret)
+    call = _JIT_CACHE.get(key)
+    if call is None:
+        kern = functools.partial(
+            _lif_kernel,
+            p22=prop.p22, p11e=prop.p11e, p11i=prop.p11i,
+            p21e=prop.p21e, p21i=prop.p21i, p20=prop.p20,
+            e_l=cfg.e_l, v_reset=cfg.v_reset, v_th=cfg.v_th,
+            i_ext=cfg.i_ext, ref_steps=prop.ref_steps,
+        )
+        shape = jax.ShapeDtypeStruct((nb * block,), dtype)
+        spec = pl.BlockSpec((block,), lambda i: (i,))
+        call = jax.jit(pl.pallas_call(
+            kern,
+            grid=(nb,),
+            in_specs=[spec] * 6,
+            out_specs=[spec] * 5,
+            out_shape=[shape] * 5,
+            interpret=interpret,
+        ))
+        _JIT_CACHE[key] = call
+    outs = call(*args)
+
+    if pad:
+        outs = tuple(o[:n] for o in outs)
+    return tuple(outs)

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for the L1 kernels + fixture dumper for the Rust tests.
+
+``lif_step_ref`` / ``syn_accum_ref`` implement exactly the semantics
+documented in model.py, with no Pallas involved.  pytest asserts the Pallas
+kernels match these to f64 round-off; ``python -m compile.kernels.ref
+--dump out.json`` writes step-by-step trajectories that the Rust native
+engine's unit tests replay (same propagators, same update order).
+"""
+
+import argparse
+import json
+
+import jax.numpy as jnp
+
+
+def lif_step_ref(u, ie, ii, r, in_e, in_i, *, cfg, prop):
+    refractory = r > 0.0
+
+    u_prop = (
+        cfg.e_l
+        + (u - cfg.e_l) * prop.p22
+        + ie * prop.p21e
+        + ii * prop.p21i
+        + cfg.i_ext * prop.p20
+    )
+    u_new = jnp.where(refractory, cfg.v_reset, u_prop)
+    r_new = jnp.where(refractory, r - 1.0, r)
+
+    spiked = jnp.logical_and(jnp.logical_not(refractory), u_new >= cfg.v_th)
+    u_new = jnp.where(spiked, cfg.v_reset, u_new)
+    r_new = jnp.where(spiked, float(prop.ref_steps), r_new)
+
+    ie_new = ie * prop.p11e + in_e
+    ii_new = ii * prop.p11i + in_i
+    return u_new, ie_new, ii_new, r_new, spiked.astype(u.dtype)
+
+
+def syn_accum_ref(w, s):
+    return w.T @ s.astype(w.dtype)
+
+
+def dense_net_step_ref(u, ie, ii, r, s_prev, w_exc, w_inh, *, cfg, prop):
+    in_e = syn_accum_ref(w_exc, s_prev)
+    in_i = syn_accum_ref(w_inh, s_prev)
+    return lif_step_ref(u, ie, ii, r, in_e, in_i, cfg=cfg, prop=prop)
+
+
+def _dump_fixtures(path: str) -> None:
+    """Deterministic multi-step LIF trajectories for the Rust unit tests."""
+    import numpy as np
+
+    from compile.model import LifConfig, Propagators, config_manifest
+
+    cases = []
+    rng = np.random.default_rng(20240710)
+    for name, cfg in [
+        ("default", LifConfig()),
+        ("slow_syn", LifConfig(tau_syn_ex=2.0, tau_syn_in=4.0, i_ext=300.0)),
+        ("equal_tau", LifConfig(tau_syn_ex=10.0, tau_syn_in=10.0, i_ext=380.0)),
+        ("drive", LifConfig(i_ext=400.0, t_ref=1.0)),
+    ]:
+        prop = Propagators.from_config(cfg)
+        n, steps = 8, 50
+        u = jnp.asarray(cfg.e_l + rng.uniform(0.0, 14.0, n))
+        ie = jnp.asarray(rng.uniform(0.0, 200.0, n))
+        ii = jnp.asarray(rng.uniform(-200.0, 0.0, n))
+        r = jnp.zeros(n)
+        traj = {"u0": u.tolist(), "ie0": ie.tolist(), "ii0": ii.tolist(),
+                "in_e": [], "in_i": [], "u": [], "ie": [], "ii": [],
+                "refrac": [], "spiked": []}
+        for t in range(steps):
+            in_e = jnp.asarray(rng.uniform(0.0, 120.0, n) * (rng.random(n) < 0.3))
+            in_i = jnp.asarray(-rng.uniform(0.0, 120.0, n) * (rng.random(n) < 0.2))
+            u, ie, ii, r, s = lif_step_ref(
+                u, ie, ii, r, in_e, in_i, cfg=cfg, prop=prop)
+            traj["in_e"].append(in_e.tolist())
+            traj["in_i"].append(in_i.tolist())
+            traj["u"].append(u.tolist())
+            traj["ie"].append(ie.tolist())
+            traj["ii"].append(ii.tolist())
+            traj["refrac"].append(r.tolist())
+            traj["spiked"].append(s.tolist())
+        cases.append({"name": name, **config_manifest(cfg), "trajectory": traj})
+
+    with open(path, "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"wrote {len(cases)} LIF fixture cases to {path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dump", required=True, help="output JSON path")
+    _dump_fixtures(ap.parse_args().dump)

@@ -1,0 +1,74 @@
+"""Blocked spike→current accumulation as a Pallas kernel.
+
+The paper's hot loop is a CPU scatter: for every spiking pre-synaptic
+neuron, walk its (delay-sorted) edges and accumulate the weight into the
+post-synaptic neuron's input.  A TPU has no scatter unit; the equivalent
+dense formulation is a tiled mat-vec against the spike indicator vector:
+
+    input[i] = Σ_j  W[j, i] · s[j]
+
+with W[j, i] the paper's W_ji (pre j → post i).  The grid tiles the post
+axis; each grid cell streams the full pre axis through VMEM in `block`-row
+chunks and accumulates a partial dot-product per post lane.  On real TPU
+this contraction maps onto the MXU (a (1, K) × (K, block) matmul per tile);
+see DESIGN.md §Hardware-Adaptation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_JIT_CACHE = {}
+
+
+def _syn_accum_kernel(w_ref, s_ref, o_ref):
+    # w_ref: (pre_block, post_block) tile; s_ref: (pre_block,) tile.
+    # Grid = (post_tiles, pre_tiles); pre axis is the reduction (innermost).
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (1, K) @ (K, B): the MXU-shaped contraction for this tile pair.
+    s = s_ref[...]
+    w = w_ref[...]
+    o_ref[...] += jnp.dot(s[None, :], w, precision="highest")[0]
+
+
+def syn_accum(w, s, *, block=128, interpret=True):
+    """Return `input = Wᵀ·s` where w is (n_pre, n_post), s is (n_pre,).
+
+    Arbitrary shapes; both axes are padded to multiples of `block`.
+    """
+    n_pre, n_post = w.shape
+    dtype = w.dtype
+    bpre = max(1, -(-n_pre // block))
+    bpost = max(1, -(-n_post // block))
+    pad_pre = bpre * block - n_pre
+    pad_post = bpost * block - n_post
+
+    if pad_pre or pad_post:
+        w = jnp.pad(w, ((0, pad_pre), (0, pad_post)))
+        s = jnp.pad(s.astype(dtype), (0, pad_pre))
+    else:
+        s = s.astype(dtype)
+
+    key = (bpre, bpost, block, str(dtype), interpret)
+    call = _JIT_CACHE.get(key)
+    if call is None:
+        call = jax.jit(pl.pallas_call(
+            _syn_accum_kernel,
+            grid=(bpost, bpre),
+            in_specs=[
+                pl.BlockSpec((block, block), lambda i, k: (k, i)),
+                pl.BlockSpec((block,), lambda i, k: (k,)),
+            ],
+            out_specs=pl.BlockSpec((block,), lambda i, k: (i,)),
+            out_shape=jax.ShapeDtypeStruct((bpost * block,), dtype),
+            interpret=interpret,
+        ))
+        _JIT_CACHE[key] = call
+    out = call(w, s)
+
+    return out[:n_post]

@@ -1,0 +1,145 @@
+"""L2: the JAX compute graph of the CORTEX neuron-dynamics hot path.
+
+The CORTEX paper (eqs. 1-3) advances leaky integrate-and-fire neurons with
+exponential post-synaptic currents each time step.  The exact-integration
+propagators (Rotter & Diesmann 1999, the method the paper cites as [21])
+turn the ODE step into an affine update, which is what the L1 Pallas kernel
+(`kernels/lif_step.py`) computes for a block of neurons.
+
+Two exported computations (lowered by aot.py):
+
+- ``lif_step``       — the per-neuron state update used by the Rust engine's
+                       PJRT dynamics path (synaptic input arrives as two
+                       pre-accumulated vectors).
+- ``dense_net_step`` — a full dense-coupling network step (spike vector →
+                       synaptic accumulation via the `syn_accum` kernel →
+                       `lif_step`), used by the quickstart / kernel bench.
+
+State layout (all float64 vectors of length N):
+  u    membrane potential [mV]
+  ie   excitatory synaptic current [pA]
+  ii   inhibitory synaptic current [pA]
+  r    refractory countdown [steps] (kept f64; values are small exact ints)
+
+Update order matches NEST's iaf_psc_exp (and the Rust native engine):
+  1. non-refractory membranes integrate with the exact propagator,
+  2. refractory neurons hold u_reset and count down,
+  3. threshold crossing emits a spike, resets, arms the refractory timer,
+  4. synaptic currents decay, then this step's arriving input is added
+     (so input delivered at step t first moves the membrane at t+1).
+"""
+
+from dataclasses import dataclass, asdict
+import math
+
+from compile.kernels import lif_step as lif_kernel
+from compile.kernels import syn_accum as syn_kernel
+
+
+@dataclass(frozen=True)
+class LifConfig:
+    """Parameters of the LIF / exponential-PSC neuron (NEST iaf_psc_exp names).
+
+    Defaults are the values used by the Potjans-Diesmann microcircuit and the
+    NEST hpc_benchmark family, which the paper's evaluation builds on.
+    """
+
+    tau_m: float = 10.0       # membrane time constant [ms]
+    tau_syn_ex: float = 0.5   # excitatory synaptic time constant [ms]
+    tau_syn_in: float = 0.5   # inhibitory synaptic time constant [ms]
+    c_m: float = 250.0        # membrane capacitance [pF]
+    e_l: float = -65.0        # resting potential [mV]
+    v_reset: float = -65.0    # post-spike reset [mV]
+    v_th: float = -50.0       # spike threshold [mV]
+    t_ref: float = 2.0        # absolute refractory period [ms]
+    i_ext: float = 0.0        # constant external current [pA]
+    dt: float = 0.1           # integration step [ms]
+
+    @property
+    def ref_steps(self) -> int:
+        return int(round(self.t_ref / self.dt))
+
+
+@dataclass(frozen=True)
+class Propagators:
+    """Exact-integration propagators for one dt (Rotter & Diesmann 1999)."""
+
+    p22: float      # membrane decay        exp(-dt/tau_m)
+    p11e: float     # exc current decay     exp(-dt/tau_syn_ex)
+    p11i: float     # inh current decay     exp(-dt/tau_syn_in)
+    p21e: float     # exc current -> membrane coupling
+    p21i: float     # inh current -> membrane coupling
+    p20: float      # constant current -> membrane  (tau_m/C)(1-p22)
+    ref_steps: int
+
+    @staticmethod
+    def from_config(cfg: LifConfig) -> "Propagators":
+        h = cfg.dt
+        p22 = math.exp(-h / cfg.tau_m)
+
+        def p21(tau_s: float) -> float:
+            p11 = math.exp(-h / tau_s)
+            if abs(tau_s - cfg.tau_m) < 1e-12:
+                # degenerate (equal time constants) limit: h·e^{-h/tau}/C
+                return h * p11 / cfg.c_m
+            return (
+                tau_s
+                * cfg.tau_m
+                / (cfg.c_m * (tau_s - cfg.tau_m))
+                * (p11 - p22)
+            )
+
+        return Propagators(
+            p22=p22,
+            p11e=math.exp(-h / cfg.tau_syn_ex),
+            p11i=math.exp(-h / cfg.tau_syn_in),
+            p21e=p21(cfg.tau_syn_ex),
+            p21i=p21(cfg.tau_syn_in),
+            p20=cfg.tau_m / cfg.c_m * (1.0 - p22),
+            ref_steps=cfg.ref_steps,
+        )
+
+
+def lif_step(cfg: LifConfig, *, block: int = 256, interpret: bool = True):
+    """Return f(u, ie, ii, r, in_e, in_i) -> (u', ie', ii', r', spiked).
+
+    The returned function is traceable/jittable; the heavy lifting is the
+    L1 Pallas kernel. `spiked` is a f64 0/1 vector.
+    """
+    prop = Propagators.from_config(cfg)
+
+    def step(u, ie, ii, r, in_e, in_i):
+        return lif_kernel.lif_step(
+            u, ie, ii, r, in_e, in_i, cfg=cfg, prop=prop,
+            block=block, interpret=interpret,
+        )
+
+    return step
+
+
+def dense_net_step(cfg: LifConfig, *, block: int = 128, interpret: bool = True):
+    """Return f(u, ie, ii, r, s_prev, w_exc, w_inh) -> (u', ie', ii', r', s).
+
+    Dense single-delay coupling: the incoming synaptic drive of this step is
+    W⁺ᵀ·s_prev (excitatory) and W⁻ᵀ·s_prev (inhibitory), computed by the
+    blocked `syn_accum` Pallas kernel (the TPU re-expression of the paper's
+    scatter hot loop), followed by the `lif_step` kernel.
+
+    w_exc must be >= 0 elementwise and w_inh <= 0; both are (N, N) with
+    w[j, i] = weight from pre-synaptic neuron j to post-synaptic neuron i
+    (the paper's W_ji convention).
+    """
+    step = lif_step(cfg, block=max(block, 128), interpret=interpret)
+
+    def net(u, ie, ii, r, s_prev, w_exc, w_inh):
+        in_e = syn_kernel.syn_accum(w_exc, s_prev, block=block, interpret=interpret)
+        in_i = syn_kernel.syn_accum(w_inh, s_prev, block=block, interpret=interpret)
+        return step(u, ie, ii, r, in_e, in_i)
+
+    return net
+
+
+def config_manifest(cfg: LifConfig) -> dict:
+    """Everything the Rust side needs to mirror the baked computation."""
+    prop = Propagators.from_config(cfg)
+    return {"config": asdict(cfg), "propagators": asdict(prop)}

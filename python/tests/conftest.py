@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests run from python/ (see Makefile) but make the layout robust anyway.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import compile  # noqa: F401  (enables jax x64 on import)

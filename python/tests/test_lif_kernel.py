@@ -1,0 +1,136 @@
+"""L1 lif_step Pallas kernel vs the pure-jnp oracle (the core signal)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.model import LifConfig, Propagators
+from compile.kernels.lif_step import lif_step
+from compile.kernels.ref import lif_step_ref
+
+CFGS = {
+    "default": LifConfig(),
+    "slow_syn": LifConfig(tau_syn_ex=2.0, tau_syn_in=4.0, i_ext=300.0),
+    "equal_tau": LifConfig(tau_syn_ex=10.0, tau_syn_in=10.0, i_ext=380.0),
+    "short_ref": LifConfig(t_ref=0.5, i_ext=420.0),
+}
+
+
+def random_state(n, rng, cfg, dtype=jnp.float64, refractory_frac=0.2):
+    u = jnp.asarray(cfg.e_l + rng.uniform(0.0, 16.0, n), dtype)
+    ie = jnp.asarray(rng.uniform(0.0, 400.0, n), dtype)
+    ii = jnp.asarray(rng.uniform(-400.0, 0.0, n), dtype)
+    r = jnp.asarray(
+        (rng.random(n) < refractory_frac) * rng.integers(1, 20, n), dtype)
+    in_e = jnp.asarray(rng.uniform(0.0, 150.0, n), dtype)
+    in_i = jnp.asarray(-rng.uniform(0.0, 150.0, n), dtype)
+    return u, ie, ii, r, in_e, in_i
+
+
+@pytest.mark.parametrize("cfg_name", sorted(CFGS))
+@pytest.mark.parametrize("n,block", [(256, 256), (300, 128), (7, 64), (1024, 256)])
+def test_kernel_matches_ref(cfg_name, n, block):
+    cfg = CFGS[cfg_name]
+    prop = Propagators.from_config(cfg)
+    rng = np.random.default_rng(hash((cfg_name, n)) % 2**32)
+    state = random_state(n, rng, cfg)
+
+    got = lif_step(*state, cfg=cfg, prop=prop, block=block)
+    want = lif_step_ref(*state, cfg=cfg, prop=prop)
+    for g, w, name in zip(got, want, ["u", "ie", "ii", "r", "spiked"]):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-14, atol=1e-12,
+                        err_msg=name)
+
+
+def test_multi_step_trajectory_matches_ref():
+    """Iterating the kernel must track the oracle over a long trajectory."""
+    cfg = CFGS["slow_syn"]
+    prop = Propagators.from_config(cfg)
+    rng = np.random.default_rng(7)
+    u, ie, ii, r, _, _ = random_state(64, rng, cfg)
+    ku, kie, kii, kr = u, ie, ii, r
+    for t in range(200):
+        in_e = jnp.asarray(rng.uniform(0.0, 100.0, 64) * (rng.random(64) < 0.3))
+        in_i = jnp.asarray(-rng.uniform(0.0, 100.0, 64) * (rng.random(64) < 0.2))
+        u, ie, ii, r, s_ref = lif_step_ref(u, ie, ii, r, in_e, in_i,
+                                           cfg=cfg, prop=prop)
+        ku, kie, kii, kr, s_k = lif_step(ku, kie, kii, kr, in_e, in_i,
+                                         cfg=cfg, prop=prop, block=64)
+        assert_allclose(np.asarray(ku), np.asarray(u), rtol=1e-13, atol=1e-11)
+        assert (np.asarray(s_k) == np.asarray(s_ref)).all(), f"step {t}"
+
+
+def test_refractory_hold_and_countdown():
+    cfg = LifConfig(t_ref=0.3)  # 3 steps
+    prop = Propagators.from_config(cfg)
+    # huge drive: spikes immediately
+    u = jnp.asarray([cfg.v_th + 1.0])
+    z = jnp.zeros(1)
+    u1, ie1, ii1, r1, s1 = lif_step(u, z, z, z, z, z, cfg=cfg, prop=prop, block=64)
+    assert s1[0] == 1.0 and u1[0] == cfg.v_reset and r1[0] == 3.0
+    # during refractoriness u holds at reset even with strong input current
+    strong = jnp.asarray([1e4])
+    u2, ie2, _, r2, s2 = lif_step(u1, strong, z, r1, z, z, cfg=cfg, prop=prop, block=64)
+    assert s2[0] == 0.0 and u2[0] == cfg.v_reset and r2[0] == 2.0
+
+
+def test_spike_threshold_exact_boundary():
+    cfg = LifConfig()
+    prop = Propagators.from_config(cfg)
+    z = jnp.zeros(1)
+    # membrane that lands exactly on v_th must spike (>= semantics)
+    # solve for u0 such that e_l + (u0-e_l)*p22 == v_th
+    u0 = (cfg.v_th - cfg.e_l) / prop.p22 + cfg.e_l
+    u, _, _, r, s = lif_step(jnp.asarray([u0]), z, z, z, z, z,
+                             cfg=cfg, prop=prop, block=64)
+    assert s[0] == 1.0 and r[0] == float(prop.ref_steps)
+
+
+def test_subthreshold_leak_decays_to_rest():
+    cfg = LifConfig()
+    prop = Propagators.from_config(cfg)
+    u = jnp.asarray([cfg.e_l + 5.0] * 4)
+    ie = ii = r = jnp.zeros(4)
+    z = jnp.zeros(4)
+    for _ in range(2000):
+        u, ie, ii, r, s = lif_step(u, ie, ii, r, z, z, cfg=cfg, prop=prop, block=64)
+        assert not np.any(np.asarray(s))
+    assert_allclose(np.asarray(u), cfg.e_l, atol=1e-8)
+
+
+def test_steady_state_under_constant_drive():
+    """With constant i_ext and no spikes, u converges to e_l + tau_m*I/C."""
+    cfg = LifConfig(i_ext=300.0)  # target = -65 + 10*300/250 = -53 mV < v_th
+    prop = Propagators.from_config(cfg)
+    u = jnp.asarray([cfg.e_l])
+    z = jnp.zeros(1)
+    ie = ii = r = jnp.zeros(1)
+    for _ in range(5000):
+        u, ie, ii, r, _ = lif_step(u, ie, ii, r, z, z, cfg=cfg, prop=prop, block=64)
+    assert_allclose(float(u[0]), cfg.e_l + cfg.tau_m * cfg.i_ext / cfg.c_m,
+                    atol=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 513),
+    block=st.sampled_from([32, 64, 128, 256]),
+    seed=st.integers(0, 2**31),
+    dtype=st.sampled_from([jnp.float32, jnp.float64]),
+)
+def test_hypothesis_shapes_dtypes(n, block, seed, dtype):
+    """Sweep shapes/dtypes: padding must never change live-lane results."""
+    cfg = CFGS["default"]
+    prop = Propagators.from_config(cfg)
+    rng = np.random.default_rng(seed)
+    state = random_state(n, rng, cfg, dtype=dtype)
+    got = lif_step(*state, cfg=cfg, prop=prop, block=block)
+    want = lif_step_ref(*state, cfg=cfg, prop=prop)
+    tol = dict(rtol=1e-13, atol=1e-11) if dtype == jnp.float64 else \
+          dict(rtol=1e-5, atol=1e-4)
+    for g, w in zip(got, want):
+        assert g.dtype == dtype
+        assert g.shape == (n,)
+        assert_allclose(np.asarray(g), np.asarray(w), **tol)

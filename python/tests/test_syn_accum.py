@@ -1,0 +1,64 @@
+"""L1 syn_accum Pallas kernel vs the dense mat-vec oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.syn_accum import syn_accum
+from compile.kernels.ref import syn_accum_ref
+
+
+def test_identity_delivery():
+    w = jnp.eye(16) * 2.5
+    s = jnp.zeros(16).at[3].set(1.0).at[9].set(1.0)
+    out = syn_accum(w, s, block=8)
+    want = np.zeros(16)
+    want[[3, 9]] = 2.5
+    assert_allclose(np.asarray(out), want)
+
+
+def test_no_spikes_no_input():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(40, 24)))
+    out = syn_accum(w, jnp.zeros(40), block=16)
+    assert_allclose(np.asarray(out), 0.0)
+
+
+def test_all_spikes_column_sums():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(33, 57)))
+    out = syn_accum(w, jnp.ones(33), block=16)
+    assert_allclose(np.asarray(out), np.asarray(w).sum(axis=0),
+                    rtol=1e-13, atol=1e-12)
+
+
+def test_rectangular_multi_tile():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(300, 130)))
+    s = jnp.asarray((rng.random(300) < 0.05).astype(np.float64))
+    out = syn_accum(w, s, block=64)
+    assert_allclose(np.asarray(out), np.asarray(syn_accum_ref(w, s)),
+                    rtol=1e-13, atol=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_pre=st.integers(1, 260),
+    n_post=st.integers(1, 260),
+    block=st.sampled_from([16, 32, 64, 128]),
+    seed=st.integers(0, 2**31),
+    dtype=st.sampled_from([jnp.float32, jnp.float64]),
+    density=st.floats(0.0, 1.0),
+)
+def test_hypothesis_shapes(n_pre, n_post, block, seed, dtype, density):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(n_pre, n_post)), dtype)
+    s = jnp.asarray((rng.random(n_pre) < density).astype(np.float64), dtype)
+    out = syn_accum(w, s, block=block)
+    want = syn_accum_ref(w, s)
+    assert out.shape == (n_post,)
+    assert out.dtype == dtype
+    tol = dict(rtol=1e-12, atol=1e-11) if dtype == jnp.float64 else \
+          dict(rtol=1e-4, atol=1e-3)
+    assert_allclose(np.asarray(out), np.asarray(want), **tol)

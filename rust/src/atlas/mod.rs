@@ -1,0 +1,499 @@
+//! Connectome builders ("the Atlas", paper §III.A.1 and Fig 7).
+//!
+//! A [`NetworkSpec`] describes populations (per brain area), connection
+//! rules, neuron parameters, positions and external drive. Everything
+//! downstream — edges, positions, initial membrane potentials — is a
+//! **deterministic function of (seed, gid)**: edges are generated
+//! *post-synaptically* (`in_edges`), so any rank can materialise exactly
+//! its own indegree sub-graph without ever touching the full network.
+//! That is the constructive counterpart of the paper's indegree sub-graph
+//! decomposition, and it also makes the realised network independent of
+//! rank/thread counts and mapping strategy (the test suite's spike-exact
+//! engine comparisons rely on it).
+//!
+//! Builders:
+//! - [`marmoset::marmoset_spec`] — synthetic multi-area cortex standing in
+//!   for the paper's marmoset connectome (see DESIGN.md §2 substitutions),
+//! - [`potjans::potjans_spec`] — Potjans-Diesmann 2014 microcircuit (the
+//!   paper's internal-architecture reference [30]),
+//! - [`hpc::hpc_benchmark_spec`] — NEST hpc_benchmark verification network
+//!   (balanced random + STDP),
+//! - [`random_spec`] — uniform random network for unit tests.
+
+pub mod hpc;
+pub mod marmoset;
+pub mod potjans;
+
+use crate::graph::{DiGraph, Edge};
+use crate::model::{LifParams, PoissonDrive, Propagators, StdpParams};
+use crate::util::rng::{hash_stream, Rng};
+use crate::{DelaySteps, Gid};
+
+/// Stream tags (must never collide across purposes).
+const TAG_CONN: u64 = 0x434f4e4e; // "CONN"
+const TAG_VINIT: u64 = 0x56494e49; // "VINI"
+const TAG_POS: u64 = 0x504f5321; // "POS!"
+
+/// A homogeneous group of neurons within one area.
+#[derive(Clone, Debug)]
+pub struct Population {
+    pub name: String,
+    pub area: u16,
+    pub first_gid: Gid,
+    pub n: u32,
+    /// Index into `NetworkSpec::params`.
+    pub params: u8,
+    /// Excitatory (outgoing weights > 0) or inhibitory.
+    pub exc: bool,
+    pub drive: PoissonDrive,
+}
+
+impl Population {
+    pub fn gids(&self) -> std::ops::Range<Gid> {
+        self.first_gid..self.first_gid + self.n
+    }
+}
+
+/// Fixed-indegree connection rule: every neuron of `dst_pop` receives
+/// exactly `indegree` synapses from uniformly drawn `src_pop` neurons
+/// (multapses allowed, autapses excluded — NEST `fixed_indegree` style).
+#[derive(Clone, Debug)]
+pub struct ConnRule {
+    pub src_pop: u16,
+    pub dst_pop: u16,
+    pub indegree: u32,
+    /// Mean weight [pA]; sign must match the source population's type.
+    pub weight_mean: f64,
+    /// Relative standard deviation of the weight (clipped to keep sign).
+    pub weight_rel_sd: f64,
+    /// Mean delay [ms].
+    pub delay_mean_ms: f64,
+    /// Relative standard deviation of the delay.
+    pub delay_rel_sd: f64,
+    /// STDP-plastic edges (the verification case's E→E synapses).
+    pub plastic: bool,
+}
+
+/// Per-area spatial layout: neurons are placed around the area centre.
+#[derive(Clone, Debug)]
+pub struct AreaGeometry {
+    pub name: String,
+    /// Centre in mm.
+    pub center: [f64; 3],
+    /// Per-axis uniform spread in mm.
+    pub spread: f64,
+}
+
+/// Complete, deterministic network description.
+#[derive(Clone, Debug)]
+pub struct NetworkSpec {
+    pub name: String,
+    pub seed: u64,
+    pub dt_ms: f64,
+    pub params: Vec<LifParams>,
+    pub populations: Vec<Population>,
+    pub rules: Vec<ConnRule>,
+    pub areas: Vec<AreaGeometry>,
+    pub stdp: Option<StdpParams>,
+    /// Uniform jitter added to the resting potential at t=0, [lo, hi) mV.
+    pub v_init_jitter: (f64, f64),
+    /// Global lower bound on synaptic delays (steps). This is the
+    /// communication window: spikes are exchanged once per
+    /// `min_delay_steps` steps, and the exchange of window k may overlap
+    /// the computation of window k+1 (paper §III.C / Fig 16) precisely
+    /// because no synapse can deliver sooner. `in_edges` clamps delays
+    /// to this floor.
+    pub min_delay_steps: DelaySteps,
+    /// Per-rule cache: rules targeting each population (built lazily).
+    rules_by_dst: Vec<Vec<u32>>,
+}
+
+impl NetworkSpec {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: impl Into<String>,
+        seed: u64,
+        dt_ms: f64,
+        params: Vec<LifParams>,
+        populations: Vec<Population>,
+        rules: Vec<ConnRule>,
+        areas: Vec<AreaGeometry>,
+        stdp: Option<StdpParams>,
+    ) -> Self {
+        // validate gid layout is contiguous and rules reference real pops
+        let mut next = 0;
+        for p in &populations {
+            assert_eq!(p.first_gid, next, "populations must tile gid space");
+            next += p.n;
+            assert!((p.params as usize) < params.len());
+            assert!((p.area as usize) < areas.len());
+        }
+        for r in &rules {
+            assert!((r.src_pop as usize) < populations.len());
+            assert!((r.dst_pop as usize) < populations.len());
+            let src = &populations[r.src_pop as usize];
+            assert!(
+                (r.weight_mean >= 0.0) == src.exc,
+                "weight sign must match source population type ({})",
+                src.name
+            );
+            assert!(r.delay_mean_ms >= dt_ms, "delay below one step");
+        }
+        let mut rules_by_dst = vec![Vec::new(); populations.len()];
+        for (i, r) in rules.iter().enumerate() {
+            rules_by_dst[r.dst_pop as usize].push(i as u32);
+        }
+        NetworkSpec {
+            name: name.into(),
+            seed,
+            dt_ms,
+            params,
+            populations,
+            rules,
+            areas,
+            stdp,
+            v_init_jitter: (0.0, 5.0),
+            min_delay_steps: 2,
+            rules_by_dst,
+        }
+    }
+
+    pub fn n_total(&self) -> usize {
+        self.populations.iter().map(|p| p.n as usize).sum()
+    }
+
+    pub fn n_areas(&self) -> usize {
+        self.areas.len()
+    }
+
+    /// Expected total edge count (exact: fixed indegree × dst sizes).
+    pub fn n_edges(&self) -> u64 {
+        self.rules
+            .iter()
+            .map(|r| {
+                r.indegree as u64
+                    * self.populations[r.dst_pop as usize].n as u64
+            })
+            .sum()
+    }
+
+    /// Population index of a gid (binary search over contiguous ranges).
+    pub fn pop_of(&self, gid: Gid) -> u16 {
+        let i = self
+            .populations
+            .partition_point(|p| p.first_gid + p.n <= gid);
+        assert!(i < self.populations.len(), "gid {gid} out of range");
+        i as u16
+    }
+
+    pub fn area_of(&self, gid: Gid) -> u16 {
+        self.populations[self.pop_of(gid) as usize].area
+    }
+
+    /// Deterministic 3D position (mm) of a neuron.
+    pub fn position(&self, gid: Gid) -> [f64; 3] {
+        let area = &self.areas[self.area_of(gid) as usize];
+        let mut rng = Rng::new(hash_stream(&[self.seed, TAG_POS, gid as u64]));
+        [
+            area.center[0] + rng.range_f64(-area.spread, area.spread),
+            area.center[1] + rng.range_f64(-area.spread, area.spread),
+            area.center[2] + rng.range_f64(-area.spread, area.spread),
+        ]
+    }
+
+    /// Deterministic initial membrane potential.
+    pub fn v_init(&self, gid: Gid) -> f64 {
+        let p = &self.params
+            [self.populations[self.pop_of(gid) as usize].params as usize];
+        let mut rng =
+            Rng::new(hash_stream(&[self.seed, TAG_VINIT, gid as u64]));
+        p.e_l + rng.range_f64(self.v_init_jitter.0, self.v_init_jitter.1)
+    }
+
+    /// Deterministically generate all incoming edges of `gid`, appending
+    /// to `out`. This is the constructive indegree sub-graph: a rank calls
+    /// it only for the gids it owns.
+    pub fn in_edges(&self, gid: Gid, out: &mut Vec<Edge>) {
+        let dst_pop = self.pop_of(gid);
+        let max_delay_steps = u16::MAX as f64;
+        for &ri in &self.rules_by_dst[dst_pop as usize] {
+            let r = &self.rules[ri as usize];
+            let src = &self.populations[r.src_pop as usize];
+            let mut rng = Rng::new(hash_stream(&[
+                self.seed,
+                TAG_CONN,
+                ri as u64,
+                gid as u64,
+            ]));
+            for _ in 0..r.indegree {
+                // uniform source, excluding autapse
+                let mut pre =
+                    src.first_gid + rng.below(src.n as u64) as Gid;
+                if pre == gid {
+                    pre = src.first_gid
+                        + ((pre - src.first_gid + 1) % src.n);
+                    if pre == gid {
+                        continue; // single-neuron population: skip autapse
+                    }
+                }
+                // weight: normal, clipped to keep the source's sign
+                let w_raw = rng.normal_ms(
+                    r.weight_mean,
+                    r.weight_mean.abs() * r.weight_rel_sd,
+                );
+                let weight = if src.exc {
+                    w_raw.max(0.0)
+                } else {
+                    w_raw.min(0.0)
+                };
+                // delay: normal, clipped to [min_delay, u16::MAX steps]
+                let d_ms = rng
+                    .normal_ms(r.delay_mean_ms, r.delay_mean_ms * r.delay_rel_sd)
+                    .max(self.dt_ms);
+                let delay = ((d_ms / self.dt_ms).round() as f64)
+                    .clamp(self.min_delay_steps as f64, max_delay_steps)
+                    as DelaySteps;
+                out.push(Edge { pre, post: gid, weight, delay });
+            }
+        }
+    }
+
+    /// Is the rule feeding this edge plastic? Recomputed from (pre, post)
+    /// population types — only used by plastic networks.
+    pub fn edge_plastic(&self, pre: Gid, post: Gid) -> bool {
+        let sp = self.pop_of(pre) as usize;
+        let dp = self.pop_of(post) as usize;
+        self.rules
+            .iter()
+            .any(|r| r.src_pop as usize == sp && r.dst_pop as usize == dp && r.plastic)
+    }
+
+    /// External drive of a neuron.
+    pub fn drive(&self, gid: Gid) -> PoissonDrive {
+        self.populations[self.pop_of(gid) as usize].drive
+    }
+
+    /// Propagator table for the engine (one entry per parameter set).
+    pub fn propagators(&self) -> Vec<Propagators> {
+        self.params
+            .iter()
+            .map(|p| Propagators::new(p, self.dt_ms))
+            .collect()
+    }
+
+    /// Propagator index of a neuron.
+    pub fn pidx(&self, gid: Gid) -> u8 {
+        self.populations[self.pop_of(gid) as usize].params
+    }
+
+    /// Upper bound on delays in steps (used to size ring buffers) — scans
+    /// rule stats instead of materialising edges.
+    pub fn max_delay_steps(&self) -> DelaySteps {
+        let worst = self
+            .rules
+            .iter()
+            .map(|r| r.delay_mean_ms * (1.0 + 6.0 * r.delay_rel_sd))
+            .fold(1.0, f64::max);
+        ((worst / self.dt_ms).ceil() as u32).clamp(1, u16::MAX as u32)
+            as DelaySteps
+    }
+
+    /// Materialise the whole network as a [`DiGraph`] (small networks /
+    /// tests / the sub-graph algebra cross-checks only).
+    pub fn build_digraph(&self) -> DiGraph {
+        let n = self.n_total();
+        let mut edges = Vec::with_capacity(self.n_edges() as usize);
+        for gid in 0..n as Gid {
+            self.in_edges(gid, &mut edges);
+        }
+        DiGraph::new(n, edges)
+    }
+
+    /// Euclidean distance between two area centres (mm).
+    pub fn area_distance(&self, a: u16, b: u16) -> f64 {
+        let ca = self.areas[a as usize].center;
+        let cb = self.areas[b as usize].center;
+        ((ca[0] - cb[0]).powi(2) + (ca[1] - cb[1]).powi(2)
+            + (ca[2] - cb[2]).powi(2))
+        .sqrt()
+    }
+}
+
+/// Uniform random network over one excitatory + one inhibitory population
+/// (unit tests and micro-benches).
+pub fn random_spec(n: usize, indegree: u32, seed: u64) -> NetworkSpec {
+    let ne = (n * 4 / 5) as u32;
+    let ni = (n - n * 4 / 5) as u32;
+    let params = vec![LifParams::default()];
+    let drive = PoissonDrive::new(8000.0, 87.8);
+    let populations = vec![
+        Population {
+            name: "E".into(),
+            area: 0,
+            first_gid: 0,
+            n: ne,
+            params: 0,
+            exc: true,
+            drive,
+        },
+        Population {
+            name: "I".into(),
+            area: 0,
+            first_gid: ne,
+            n: ni,
+            params: 0,
+            exc: false,
+            drive,
+        },
+    ];
+    let ke = (indegree * 4) / 5;
+    let ki = indegree - ke;
+    let w = 87.8;
+    let g = 4.0;
+    let mut rules = Vec::new();
+    for dst in 0..2u16 {
+        rules.push(ConnRule {
+            src_pop: 0,
+            dst_pop: dst,
+            indegree: ke,
+            weight_mean: w,
+            weight_rel_sd: 0.1,
+            delay_mean_ms: 1.5,
+            delay_rel_sd: 0.5,
+            plastic: false,
+        });
+        rules.push(ConnRule {
+            src_pop: 1,
+            dst_pop: dst,
+            indegree: ki,
+            weight_mean: -g * w,
+            weight_rel_sd: 0.1,
+            delay_mean_ms: 0.8,
+            delay_rel_sd: 0.5,
+            plastic: false,
+        });
+    }
+    let areas = vec![AreaGeometry {
+        name: "A0".into(),
+        center: [0.0; 3],
+        spread: 1.0,
+    }];
+    NetworkSpec::new("random", seed, 0.1, params, populations, rules, areas, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::property;
+
+    #[test]
+    fn gid_layout_and_pop_lookup() {
+        let s = random_spec(1000, 100, 1);
+        assert_eq!(s.n_total(), 1000);
+        assert_eq!(s.pop_of(0), 0);
+        assert_eq!(s.pop_of(799), 0);
+        assert_eq!(s.pop_of(800), 1);
+        assert_eq!(s.pop_of(999), 1);
+    }
+
+    #[test]
+    fn in_edges_deterministic_and_exact_indegree() {
+        let s = random_spec(500, 50, 7);
+        let mut a = Vec::new();
+        s.in_edges(123, &mut a);
+        let mut b = Vec::new();
+        s.in_edges(123, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 50);
+        assert!(a.iter().all(|e| e.post == 123));
+        assert!(a.iter().all(|e| e.pre != 123), "autapse found");
+        assert!(a.iter().all(|e| e.delay >= s.min_delay_steps));
+    }
+
+    #[test]
+    fn weight_signs_respect_population_type() {
+        let s = random_spec(500, 50, 7);
+        let mut edges = Vec::new();
+        for gid in 0..500 {
+            s.in_edges(gid, &mut edges);
+        }
+        for e in &edges {
+            let exc = s.populations[s.pop_of(e.pre) as usize].exc;
+            assert!(
+                if exc { e.weight >= 0.0 } else { e.weight <= 0.0 },
+                "edge {e:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn n_edges_matches_materialised_graph() {
+        let s = random_spec(300, 30, 3);
+        let g = s.build_digraph();
+        // autapse-avoidance can only drop edges in 1-neuron pops
+        assert_eq!(g.n_edges() as u64, s.n_edges());
+        assert!(g.max_delay() >= g.min_delay());
+        assert!(g.max_delay() <= s.max_delay_steps());
+    }
+
+    #[test]
+    fn positions_and_vinit_deterministic() {
+        let s = random_spec(100, 10, 9);
+        assert_eq!(s.position(42), s.position(42));
+        assert_ne!(s.position(42), s.position(43));
+        let v = s.v_init(42);
+        assert_eq!(v, s.v_init(42));
+        let p = &s.params[0];
+        assert!(v >= p.e_l && v < p.e_l + 5.0);
+    }
+
+    #[test]
+    fn seed_changes_network() {
+        let s1 = random_spec(200, 20, 1);
+        let s2 = random_spec(200, 20, 2);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        s1.in_edges(50, &mut a);
+        s2.in_edges(50, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn property_indegree_and_ranges() {
+        property("random_spec invariants", 25, |g| {
+            let n = g.usize(10..400);
+            let k = g.u32(1..(n as u32).min(40));
+            let s = random_spec(n, k, g.case as u64);
+            let gid = g.u32(0..n as u32);
+            let mut edges = Vec::new();
+            s.in_edges(gid, &mut edges);
+            if edges.len() as u32 > k {
+                return Err(format!("indegree {} > {k}", edges.len()));
+            }
+            for e in &edges {
+                if e.pre as usize >= n || e.post != gid {
+                    return Err(format!("bad edge {e:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "weight sign")]
+    fn rule_sign_validation() {
+        let mut s = random_spec(100, 10, 1);
+        let mut rules = s.rules.clone();
+        rules[0].weight_mean = -1.0; // exc source with negative weight
+        let _ = NetworkSpec::new(
+            "bad",
+            1,
+            0.1,
+            s.params.clone(),
+            std::mem::take(&mut s.populations),
+            rules,
+            s.areas.clone(),
+            None,
+        );
+    }
+}

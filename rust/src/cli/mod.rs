@@ -1,0 +1,370 @@
+//! `cortex` launcher: from-scratch argument parsing (no clap in the
+//! offline registry) + the subcommand implementations.
+//!
+//! ```text
+//! cortex run       [--config F] [--set k=v]...   run an experiment
+//! cortex verify    [--config F] [--set k=v]...   paper §IV.A verification
+//! cortex partition [--config F] [--set k=v]...   inspect the decomposition
+//! cortex info      [--artifacts DIR]             PJRT artifact report
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::atlas::hpc::{hpc_benchmark_spec, HpcParams};
+use crate::atlas::marmoset::{marmoset_spec, MarmosetParams};
+use crate::atlas::potjans::potjans_spec;
+use crate::atlas::{random_spec, NetworkSpec};
+use crate::config::{
+    ConfigDoc, EngineKind, ExperimentConfig, NetworkKind,
+};
+use crate::decomp::{
+    area_processes_partition, random_equivalent_partition, RankStore,
+};
+use crate::engine::{run_simulation, RunConfig};
+use crate::metrics::table::human_bytes;
+use crate::nest_baseline::{run_nest_simulation, NestRunConfig};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub config_path: Option<String>,
+    pub overrides: Vec<String>,
+    pub artifacts_dir: String,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args {
+            artifacts_dir: "artifacts".into(),
+            ..Default::default()
+        };
+        let mut it = argv.iter().peekable();
+        let Some(sub) = it.next() else {
+            bail!("usage: cortex <run|verify|partition|info> [options]");
+        };
+        args.subcommand = sub.clone();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--config" | "-c" => {
+                    args.config_path = Some(
+                        it.next().context("--config needs a path")?.clone(),
+                    );
+                }
+                "--set" | "-s" => {
+                    args.overrides.push(
+                        it.next().context("--set needs key=value")?.clone(),
+                    );
+                }
+                "--artifacts" => {
+                    args.artifacts_dir =
+                        it.next().context("--artifacts needs a dir")?.clone();
+                }
+                other => bail!("unknown argument '{other}'"),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn experiment(&self) -> Result<ExperimentConfig> {
+        let mut doc = match &self.config_path {
+            Some(p) => ConfigDoc::load(std::path::Path::new(p))?,
+            None => ConfigDoc::parse("")?,
+        };
+        doc.apply_overrides(&self.overrides)?;
+        Ok(ExperimentConfig::from_doc(&doc)?)
+    }
+}
+
+/// Instantiate the configured network.
+pub fn build_spec(cfg: &ExperimentConfig) -> NetworkSpec {
+    match cfg.network {
+        NetworkKind::Marmoset => marmoset_spec(
+            &MarmosetParams {
+                n_neurons: cfg.n_neurons,
+                n_areas: cfg.n_areas,
+                indegree: cfg.indegree as u32,
+                ..Default::default()
+            },
+            cfg.seed,
+        ),
+        NetworkKind::Potjans => {
+            let scale = cfg.n_neurons as f64 / 77_169.0;
+            potjans_spec(scale.min(1.0), cfg.seed)
+        }
+        NetworkKind::HpcBenchmark => hpc_benchmark_spec(
+            &HpcParams {
+                n_neurons: cfg.n_neurons,
+                indegree: cfg.indegree as u32,
+                plastic: cfg.plastic,
+                ..Default::default()
+            },
+            cfg.seed,
+        ),
+        NetworkKind::Random => {
+            random_spec(cfg.n_neurons, cfg.indegree as u32, cfg.seed)
+        }
+    }
+}
+
+pub fn run_config_of(cfg: &ExperimentConfig) -> RunConfig {
+    RunConfig {
+        ranks: cfg.ranks,
+        threads: cfg.threads,
+        mapping: cfg.mapping,
+        comm: cfg.comm,
+        backend: cfg.backend,
+        steps: cfg.steps(),
+        record_limit: cfg.record_raster.then_some(cfg.record_limit as u32),
+        verify_ownership: false,
+        artifacts_dir: cfg.artifacts_dir.clone(),
+        seed: cfg.seed,
+    }
+}
+
+/// `cortex run`
+pub fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = args.experiment()?;
+    let spec = Arc::new(build_spec(&cfg));
+    println!(
+        "network '{}': {} neurons, {} synapses, {} areas",
+        spec.name,
+        spec.n_total(),
+        spec.n_edges(),
+        spec.n_areas()
+    );
+    match cfg.engine {
+        EngineKind::Cortex => {
+            let out = run_simulation(&spec, &run_config_of(&cfg))?;
+            let stats = out.raster.stats(
+                spec.n_total(),
+                cfg.dt_ms,
+                cfg.steps(),
+            );
+            println!(
+                "CORTEX: {} steps on {} ranks x {} threads in {:.3}s \
+                 ({} spikes, mean rate {:.2} Hz)",
+                cfg.steps(),
+                cfg.ranks,
+                cfg.threads,
+                out.wall_seconds,
+                out.total_spikes,
+                out.total_spikes as f64
+                    / spec.n_total() as f64
+                    / (cfg.sim_ms * 1e-3)
+            );
+            if cfg.record_raster {
+                println!(
+                    "recorded {} events (ISI-CV {:.2}, synchrony {:.2})",
+                    stats.n_events, stats.mean_isi_cv, stats.synchrony
+                );
+            }
+            println!(
+                "memory: max-rank {}, imbalance {:.2}; comm {} over {} windows",
+                human_bytes(out.memory.max_rank_bytes()),
+                out.memory.imbalance(),
+                human_bytes(out.comm_bytes),
+                out.windows
+            );
+            println!("--- phase times (critical path) ---");
+            print!("{}", out.timer_max.report());
+        }
+        EngineKind::NestBaseline => {
+            let out = run_nest_simulation(
+                &spec,
+                &NestRunConfig {
+                    ranks: cfg.ranks,
+                    threads: cfg.threads,
+                    steps: cfg.steps(),
+                    record_limit: cfg
+                        .record_raster
+                        .then_some(cfg.record_limit as u32),
+                    seed: cfg.seed,
+                },
+            );
+            println!(
+                "NEST-baseline: {} steps in {:.3}s ({} spikes); \
+                 memory max-rank {}",
+                cfg.steps(),
+                out.wall_seconds,
+                out.total_spikes,
+                human_bytes(out.memory.max_rank_bytes()),
+            );
+            print!("{}", out.timer_max.report());
+        }
+    }
+    Ok(())
+}
+
+/// `cortex verify` — the paper's §IV.A case: hpc_benchmark with STDP,
+/// thread-ownership aborts armed, firing rate below 10 Hz.
+pub fn cmd_verify(args: &Args) -> Result<()> {
+    let mut cfg = args.experiment()?;
+    cfg.network = NetworkKind::HpcBenchmark;
+    cfg.plastic = true;
+    let spec = Arc::new(build_spec(&cfg));
+    let mut rc = run_config_of(&cfg);
+    rc.verify_ownership = true; // the paper's Abort check
+    rc.record_limit = Some(spec.n_total() as u32);
+    println!(
+        "verification network: {} neurons, {} synapses, STDP on E->E",
+        spec.n_total(),
+        spec.n_edges()
+    );
+    let out = run_simulation(&spec, &rc)?;
+    let rate = out.total_spikes as f64
+        / spec.n_total() as f64
+        / (cfg.sim_ms * 1e-3);
+    println!(
+        "simulated {:.0} ms: {} spikes, mean rate {:.2} Hz",
+        cfg.sim_ms, out.total_spikes, rate
+    );
+    println!("thread-ownership violations: 0 (no abort raised)");
+    if rate > 0.05 && rate < 10.0 {
+        println!("VERIFICATION PASSED (asynchronous regime, rate < 10 Hz)");
+        Ok(())
+    } else {
+        bail!("VERIFICATION FAILED: rate {rate:.2} Hz outside (0.05, 10)");
+    }
+}
+
+/// `cortex partition` — decomposition inspection (pre-vertex counts, the
+/// Fig 9/10 quantities).
+pub fn cmd_partition(args: &Args) -> Result<()> {
+    let cfg = args.experiment()?;
+    let spec = Arc::new(build_spec(&cfg));
+    let part = match cfg.mapping {
+        crate::config::MappingKind::AreaProcesses => {
+            area_processes_partition(&spec, cfg.ranks, cfg.seed)
+        }
+        crate::config::MappingKind::RandomEquivalent => {
+            random_equivalent_partition(spec.n_total(), cfg.ranks, cfg.seed)
+        }
+    };
+    println!(
+        "{:?} mapping of '{}' onto {} ranks (imbalance {:.3})",
+        cfg.mapping,
+        spec.name,
+        cfg.ranks,
+        part.imbalance()
+    );
+    println!(
+        "{:>5} {:>8} {:>10} {:>10} {:>12} {:>12}",
+        "rank", "posts", "pres", "remote", "edges", "memory"
+    );
+    for r in 0..cfg.ranks {
+        let rank_of = part.rank_of.clone();
+        let store = RankStore::build(
+            &spec,
+            &part.members[r],
+            move |g| rank_of[g as usize] as usize == r,
+            r as u16,
+            cfg.threads,
+        );
+        println!(
+            "{:>5} {:>8} {:>10} {:>10} {:>12} {:>12}",
+            r,
+            store.n_posts(),
+            store.n_pres(),
+            store.n_remote_pres(),
+            store.n_edges(),
+            human_bytes(store.memory().total())
+        );
+    }
+    Ok(())
+}
+
+/// `cortex info` — artifact + PJRT platform report.
+pub fn cmd_info(args: &Args) -> Result<()> {
+    let dir = std::path::Path::new(&args.artifacts_dir);
+    let manifest = crate::runtime::Manifest::load(dir)?;
+    println!("artifacts dir: {}", dir.display());
+    println!("lif_step block sizes: {:?}", manifest.lif_sizes);
+    let (p22, ..) = manifest.propagators()?;
+    println!("baked p22 = {p22}");
+    let name = format!("lif_step_n{}", manifest.lif_sizes[0]);
+    let exe = crate::runtime::HloExecutable::load(dir, &name)?;
+    println!("compiled {} on platform '{}'", exe.name, exe.platform());
+    Ok(())
+}
+
+pub fn main_with(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "run" => cmd_run(&args),
+        "verify" => cmd_verify(&args),
+        "partition" => cmd_partition(&args),
+        "info" => cmd_info(&args),
+        other => bail!(
+            "unknown subcommand '{other}' \
+             (expected run|verify|partition|info)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_basic() {
+        let a = Args::parse(&s(&[
+            "run",
+            "--config",
+            "configs/x.toml",
+            "--set",
+            "engine.ranks=8",
+        ]))
+        .unwrap();
+        assert_eq!(a.subcommand, "run");
+        assert_eq!(a.config_path.as_deref(), Some("configs/x.toml"));
+        assert_eq!(a.overrides, vec!["engine.ranks=8"]);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Args::parse(&s(&[])).is_err());
+        assert!(Args::parse(&s(&["run", "--config"])).is_err());
+        assert!(Args::parse(&s(&["run", "--bogus"])).is_err());
+    }
+
+    #[test]
+    fn experiment_from_overrides_only() {
+        let a = Args::parse(&s(&[
+            "run",
+            "--set",
+            "network.n_neurons=500",
+            "--set",
+            "network.indegree=50",
+        ]))
+        .unwrap();
+        let cfg = a.experiment().unwrap();
+        assert_eq!(cfg.n_neurons, 500);
+        assert_eq!(cfg.indegree, 50);
+    }
+
+    #[test]
+    fn build_spec_all_kinds() {
+        for kind in ["marmoset", "potjans", "hpc_benchmark", "random"] {
+            let a = Args::parse(&s(&[
+                "run",
+                "--set",
+                &format!("network.kind=\"{kind}\""),
+                "--set",
+                "network.n_neurons=2000",
+                "--set",
+                "network.indegree=100",
+            ]))
+            .unwrap();
+            let spec = build_spec(&a.experiment().unwrap());
+            assert!(spec.n_total() > 0, "{kind}");
+            assert!(spec.n_edges() > 0, "{kind}");
+        }
+    }
+}

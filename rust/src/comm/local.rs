@@ -1,0 +1,205 @@
+//! In-memory cluster: ranks are threads, the transport is a full mesh of
+//! FIFO channels. `exchange` = send-to-all + receive-from-all, the same
+//! collective the paper's Spikes Broadcast performs over MPI.
+//!
+//! Window alignment is structural: each rank sends exactly one packet per
+//! window to every peer and channels are FIFO per (src, dst) pair, so the
+//! k-th receive from a peer is always that peer's window-k packet (the
+//! embedded window counter is asserted in debug builds).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::{Communicator, SpikePacket, SPIKE_WIRE_BYTES};
+
+struct Packet {
+    window: u64,
+    spikes: SpikePacket,
+}
+
+/// One rank's endpoint of the cluster.
+pub struct LocalComm {
+    rank: u16,
+    size: usize,
+    /// senders to every peer (self slot unused).
+    to_peer: Vec<Option<Sender<Packet>>>,
+    /// receivers from every peer (self slot unused).
+    from_peer: Vec<Option<Receiver<Packet>>>,
+    window: u64,
+    bytes_sent: u64,
+}
+
+/// Factory for a set of wired endpoints.
+pub struct LocalCluster;
+
+impl LocalCluster {
+    /// Create `n` fully-connected endpoints.
+    pub fn new(n: usize) -> Vec<LocalComm> {
+        assert!(n >= 1);
+        // channels[src][dst]
+        let mut senders: Vec<Vec<Option<Sender<Packet>>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        let mut receivers: Vec<Vec<Option<Receiver<Packet>>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        for src in 0..n {
+            for dst in 0..n {
+                if src == dst {
+                    continue;
+                }
+                let (tx, rx) = channel();
+                senders[src][dst] = Some(tx);
+                receivers[dst][src] = Some(rx);
+            }
+        }
+        senders
+            .into_iter()
+            .zip(receivers)
+            .enumerate()
+            .map(|(rank, (to_peer, from_peer))| LocalComm {
+                rank: rank as u16,
+                size: n,
+                to_peer,
+                from_peer,
+                window: 0,
+                bytes_sent: 0,
+            })
+            .collect()
+    }
+}
+
+impl Communicator for LocalComm {
+    fn rank(&self) -> u16 {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn exchange(&mut self, local: SpikePacket) -> SpikePacket {
+        let window = self.window;
+        self.window += 1;
+        // broadcast to all peers
+        for dst in 0..self.size {
+            if let Some(tx) = &self.to_peer[dst] {
+                self.bytes_sent +=
+                    local.len() as u64 * SPIKE_WIRE_BYTES;
+                // peer hung up (e.g. panicked): ignore, the join will
+                // surface the real error
+                let _ = tx.send(Packet { window, spikes: local.clone() });
+            }
+        }
+        // gather from all peers
+        let mut all = Vec::new();
+        for src in 0..self.size {
+            if let Some(rx) = &self.from_peer[src] {
+                match rx.recv() {
+                    Ok(p) => {
+                        debug_assert_eq!(
+                            p.window, window,
+                            "window misalignment {} vs {}",
+                            p.window, window
+                        );
+                        all.extend(p.spikes);
+                    }
+                    Err(_) => panic!(
+                        "rank {} lost peer {src} during window {window}",
+                        self.rank
+                    ),
+                }
+            }
+        }
+        all
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    fn exchanges(&self) -> u64 {
+        self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::SpikeMsg;
+    use std::thread;
+
+    #[test]
+    fn allgather_three_ranks() {
+        let comms = LocalCluster::new(3);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    let mine = vec![SpikeMsg {
+                        gid: c.rank() as u32 * 10,
+                        step: 1,
+                    }];
+                    let mut got = c.exchange(mine);
+                    got.sort_by_key(|m| m.gid);
+                    got
+                })
+            })
+            .collect();
+        for (r, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            // each rank receives the other two ranks' spikes
+            assert_eq!(got.len(), 2);
+            assert!(got.iter().all(|m| m.gid != r as u32 * 10));
+        }
+    }
+
+    #[test]
+    fn multiple_windows_stay_aligned() {
+        let comms = LocalCluster::new(2);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    let mut sums = Vec::new();
+                    for w in 0..50u32 {
+                        let mine = vec![SpikeMsg {
+                            gid: c.rank() as u32,
+                            step: w,
+                        }];
+                        let got = c.exchange(mine);
+                        sums.push(got[0].step);
+                    }
+                    sums
+                })
+            })
+            .collect();
+        for h in handles {
+            let sums = h.join().unwrap();
+            assert_eq!(sums, (0..50).collect::<Vec<u32>>());
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let comms = LocalCluster::new(2);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    let spikes = vec![SpikeMsg { gid: 0, step: 0 }; 5];
+                    c.exchange(spikes);
+                    c.bytes_sent()
+                })
+            })
+            .collect();
+        for h in handles {
+            // 5 spikes × 8 bytes × 1 peer
+            assert_eq!(h.join().unwrap(), 40);
+        }
+    }
+
+    #[test]
+    fn single_rank_cluster_is_trivial() {
+        let mut comms = LocalCluster::new(1);
+        let mut c = comms.pop().unwrap();
+        assert!(c.exchange(vec![SpikeMsg { gid: 1, step: 0 }]).is_empty());
+    }
+}

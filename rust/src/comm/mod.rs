@@ -1,0 +1,101 @@
+//! Inter-rank communication (paper §III.C).
+//!
+//! The paper runs MPI ranks over Fugaku's Tofu-D; here ranks are OS
+//! threads wired by in-memory channels behind the same interface an MPI
+//! backend would implement ([`Communicator`]). What the algorithm
+//! exchanges — spiking pre-synaptic gids, once per min-delay window —
+//! and what overlaps what is identical; only the transport differs.
+//! [`netmodel`] carries Tofu-D constants to project measured message
+//! volumes onto Fugaku-scale communication times.
+
+pub mod bsb;
+pub mod local;
+pub mod netmodel;
+
+pub use local::LocalCluster;
+pub use netmodel::TofuModel;
+
+use crate::Gid;
+
+/// One spike in flight: source neuron and emission step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpikeMsg {
+    pub gid: Gid,
+    pub step: u32,
+}
+
+/// Payload of one window exchange.
+pub type SpikePacket = Vec<SpikeMsg>;
+
+/// MPI-like collective interface for one rank. `Send` so each rank's
+/// endpoint can live on its own thread (or be handed to a dedicated
+/// communication thread, paper §III.C.2).
+pub trait Communicator: Send {
+    fn rank(&self) -> u16;
+    fn size(&self) -> usize;
+
+    /// Allgather-style spike broadcast: contribute this rank's spikes for
+    /// the current window, receive every other rank's. Blocking; one call
+    /// per rank per window, in window order.
+    fn exchange(&mut self, local: SpikePacket) -> SpikePacket;
+
+    /// Total payload bytes this rank has sent so far (for the network
+    /// cost model).
+    fn bytes_sent(&self) -> u64;
+
+    /// Number of exchanges performed.
+    fn exchanges(&self) -> u64;
+}
+
+/// Payload size of one spike on the wire (gid + step, packed).
+pub const SPIKE_WIRE_BYTES: u64 = 8;
+
+/// A no-op communicator for single-rank runs.
+pub struct SoloComm {
+    count: u64,
+}
+
+impl SoloComm {
+    pub fn new() -> Self {
+        SoloComm { count: 0 }
+    }
+}
+
+impl Default for SoloComm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Communicator for SoloComm {
+    fn rank(&self) -> u16 {
+        0
+    }
+    fn size(&self) -> usize {
+        1
+    }
+    fn exchange(&mut self, _local: SpikePacket) -> SpikePacket {
+        self.count += 1;
+        Vec::new()
+    }
+    fn bytes_sent(&self) -> u64 {
+        0
+    }
+    fn exchanges(&self) -> u64 {
+        self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solo_comm_echoes_nothing() {
+        let mut c = SoloComm::new();
+        assert_eq!(c.size(), 1);
+        let got = c.exchange(vec![SpikeMsg { gid: 1, step: 2 }]);
+        assert!(got.is_empty());
+        assert_eq!(c.exchanges(), 1);
+    }
+}

@@ -1,0 +1,110 @@
+//! Tofu-D network cost model (paper §I.E: 6.8 GB/s link bandwidth,
+//! 40.8 GB/s injection per node, ~1 µs MPI latency on Fugaku).
+//!
+//! Our ranks exchange through memory, so wall-clock communication time on
+//! this testbed says nothing about Fugaku. Instead the engines record
+//! *message volumes*, and this model projects what the paper's spike
+//! broadcast would cost at scale — the quantity behind the overlap
+//! ablation's "how much communication can the window hide" analysis.
+
+/// Network constants.
+#[derive(Clone, Copy, Debug)]
+pub struct TofuModel {
+    pub link_bw_gbs: f64,
+    pub injection_bw_gbs: f64,
+    pub latency_us: f64,
+    /// MPI ranks per node (paper: 4 CMGs per A64FX).
+    pub ranks_per_node: f64,
+}
+
+impl Default for TofuModel {
+    fn default() -> Self {
+        TofuModel {
+            link_bw_gbs: 6.8,
+            injection_bw_gbs: 40.8,
+            latency_us: 1.0,
+            ranks_per_node: 4.0,
+        }
+    }
+}
+
+impl TofuModel {
+    /// Estimated time (seconds) of one allgather-style spike broadcast of
+    /// `bytes_per_rank` payload among `ranks` ranks: a recursive-doubling
+    /// allgatherv moves (R-1)/R of the total volume through each rank's
+    /// injection port over log2(R) latency-bound stages.
+    pub fn allgather_seconds(&self, ranks: usize, bytes_per_rank: f64) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        let r = ranks as f64;
+        let stages = r.log2().ceil();
+        let recv_bytes = bytes_per_rank * (r - 1.0);
+        // each node injects for ranks_per_node ranks concurrently
+        let eff_bw =
+            self.injection_bw_gbs * 1e9 / self.ranks_per_node;
+        stages * self.latency_us * 1e-6 + recv_bytes / eff_bw
+    }
+
+    /// Time to stream `bytes` over one Tofu link (the per-hop bound).
+    pub fn link_seconds(&self, bytes: f64) -> f64 {
+        bytes / (self.link_bw_gbs * 1e9)
+    }
+
+    /// Project a full simulation's communication time: `windows` exchanges
+    /// of `avg_bytes_per_rank` each.
+    pub fn total_comm_seconds(
+        &self,
+        ranks: usize,
+        windows: u64,
+        avg_bytes_per_rank: f64,
+    ) -> f64 {
+        windows as f64 * self.allgather_seconds(ranks, avg_bytes_per_rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_costs_nothing() {
+        let m = TofuModel::default();
+        assert_eq!(m.allgather_seconds(1, 1e6), 0.0);
+    }
+
+    #[test]
+    fn latency_dominated_small_messages() {
+        let m = TofuModel::default();
+        // 100 bytes among 1024 ranks: ~10 stages of 1 us each
+        let t = m.allgather_seconds(1024, 100.0);
+        assert!(t > 9e-6 && t < 30e-6, "{t}");
+    }
+
+    #[test]
+    fn bandwidth_dominated_large_messages() {
+        let m = TofuModel::default();
+        // 10 MB among 4 ranks: >= 30 MB received at ~10.2 GB/s effective
+        let t = m.allgather_seconds(4, 10e6);
+        assert!(t > 2.5e-3, "{t}");
+    }
+
+    #[test]
+    fn monotone_in_ranks_and_bytes() {
+        let m = TofuModel::default();
+        assert!(
+            m.allgather_seconds(16, 1e4) < m.allgather_seconds(256, 1e4)
+        );
+        assert!(
+            m.allgather_seconds(16, 1e4) < m.allgather_seconds(16, 1e6)
+        );
+    }
+
+    #[test]
+    fn total_scales_with_windows() {
+        let m = TofuModel::default();
+        let one = m.total_comm_seconds(8, 1, 1e5);
+        let many = m.total_comm_seconds(8, 1000, 1e5);
+        assert!((many / one - 1000.0).abs() < 1e-6);
+    }
+}

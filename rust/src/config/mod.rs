@@ -1,0 +1,16 @@
+//! Experiment configuration: a from-scratch TOML-subset parser plus the
+//! typed experiment schema used by the `cortex` launcher.
+//!
+//! Supported syntax (covers all files in `configs/`): `[section.sub]`
+//! headers, `key = value` with strings, integers, floats, booleans, and
+//! flat arrays; `#` comments. Keys are exposed as dotted paths
+//! (`network.n_neurons`).
+
+mod schema;
+mod toml;
+
+pub use schema::{
+    CommMode, DynamicsBackend, EngineKind, ExperimentConfig, MappingKind,
+    NetworkKind,
+};
+pub use toml::{ConfigDoc, ConfigError, Value};

@@ -1,0 +1,306 @@
+//! Typed experiment schema on top of [`ConfigDoc`], with validation.
+
+use super::toml::{ConfigDoc, ConfigError};
+
+/// Which network builder to instantiate (see `atlas`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetworkKind {
+    /// Synthetic multi-area "marmoset-like" atlas (the evaluation workload).
+    Marmoset,
+    /// Potjans-Diesmann 2014 cortical microcircuit.
+    Potjans,
+    /// NEST hpc_benchmark: balanced random network with STDP (verification).
+    HpcBenchmark,
+    /// Uniform random network (unit tests / micro-benches).
+    Random,
+}
+
+/// Which simulation engine to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// The paper's engine: indegree sub-graph decomposition.
+    Cortex,
+    /// NEST-style baseline (random distribution, atomic delivery).
+    NestBaseline,
+}
+
+/// Rank → neuron mapping strategy (paper Fig 8-10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MappingKind {
+    /// Area-Processes Mapping + Multisection Division with Sampling.
+    AreaProcesses,
+    /// Random Equivalent Mapping (the naive baseline).
+    RandomEquivalent,
+}
+
+/// Neuron-dynamics backend for the CORTEX engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DynamicsBackend {
+    /// Native Rust exact-integration LIF (mirrors the L1 kernel bitwise
+    /// formulas).
+    Native,
+    /// AOT-compiled JAX/Pallas artifact executed via PJRT.
+    Pjrt,
+}
+
+/// Spike-exchange mode (paper §III.C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommMode {
+    /// Dedicated communication thread; exchange overlaps the next window's
+    /// computation.
+    Overlap,
+    /// Blocking exchange at each window end (the ablation baseline).
+    Serialized,
+}
+
+/// Fully-validated experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub title: String,
+    pub seed: u64,
+
+    // [network]
+    pub network: NetworkKind,
+    pub n_neurons: usize,
+    pub n_areas: usize,
+    pub indegree: usize,
+    pub plastic: bool,
+
+    // [sim]
+    pub dt_ms: f64,
+    pub sim_ms: f64,
+    pub record_raster: bool,
+    pub record_limit: usize,
+
+    // [engine]
+    pub engine: EngineKind,
+    pub ranks: usize,
+    pub threads: usize,
+    pub mapping: MappingKind,
+    pub backend: DynamicsBackend,
+    pub comm: CommMode,
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            title: "untitled".into(),
+            seed: 20240710,
+            network: NetworkKind::Marmoset,
+            n_neurons: 10_000,
+            n_areas: 8,
+            indegree: 250,
+            plastic: false,
+            dt_ms: 0.1,
+            sim_ms: 100.0,
+            record_raster: false,
+            record_limit: 1000,
+            engine: EngineKind::Cortex,
+            ranks: 4,
+            threads: 3,
+            mapping: MappingKind::AreaProcesses,
+            backend: DynamicsBackend::Native,
+            comm: CommMode::Overlap,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_doc(doc: &ConfigDoc) -> Result<Self, ConfigError> {
+        let d = ExperimentConfig::default();
+        let cfg = ExperimentConfig {
+            title: doc.str("title", &d.title)?,
+            seed: doc.usize("seed", d.seed as usize)? as u64,
+            network: parse_enum(
+                doc,
+                "network.kind",
+                "marmoset",
+                &[
+                    ("marmoset", NetworkKind::Marmoset),
+                    ("potjans", NetworkKind::Potjans),
+                    ("hpc_benchmark", NetworkKind::HpcBenchmark),
+                    ("random", NetworkKind::Random),
+                ],
+            )?,
+            n_neurons: doc.usize("network.n_neurons", d.n_neurons)?,
+            n_areas: doc.usize("network.n_areas", d.n_areas)?,
+            indegree: doc.usize("network.indegree", d.indegree)?,
+            plastic: doc.bool("network.plastic", d.plastic)?,
+            dt_ms: doc.f64("sim.dt_ms", d.dt_ms)?,
+            sim_ms: doc.f64("sim.sim_ms", d.sim_ms)?,
+            record_raster: doc.bool("sim.record_raster", d.record_raster)?,
+            record_limit: doc.usize("sim.record_limit", d.record_limit)?,
+            engine: parse_enum(
+                doc,
+                "engine.kind",
+                "cortex",
+                &[
+                    ("cortex", EngineKind::Cortex),
+                    ("nest_baseline", EngineKind::NestBaseline),
+                ],
+            )?,
+            ranks: doc.usize("engine.ranks", d.ranks)?,
+            threads: doc.usize("engine.threads", d.threads)?,
+            mapping: parse_enum(
+                doc,
+                "engine.mapping",
+                "area_processes",
+                &[
+                    ("area_processes", MappingKind::AreaProcesses),
+                    ("random_equivalent", MappingKind::RandomEquivalent),
+                ],
+            )?,
+            backend: parse_enum(
+                doc,
+                "engine.backend",
+                "native",
+                &[
+                    ("native", DynamicsBackend::Native),
+                    ("pjrt", DynamicsBackend::Pjrt),
+                ],
+            )?,
+            comm: parse_enum(
+                doc,
+                "engine.comm",
+                "overlap",
+                &[
+                    ("overlap", CommMode::Overlap),
+                    ("serialized", CommMode::Serialized),
+                ],
+            )?,
+            artifacts_dir: doc.str("engine.artifacts_dir", &d.artifacts_dir)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let bad = |key: &str, msg: &str| {
+            Err(ConfigError::Invalid { key: key.into(), msg: msg.into() })
+        };
+        if self.n_neurons == 0 {
+            return bad("network.n_neurons", "must be > 0");
+        }
+        if self.indegree >= self.n_neurons {
+            return bad("network.indegree", "must be < n_neurons");
+        }
+        if self.n_areas == 0 {
+            return bad("network.n_areas", "must be > 0");
+        }
+        if !(self.dt_ms > 0.0) {
+            return bad("sim.dt_ms", "must be > 0");
+        }
+        if !(self.sim_ms >= self.dt_ms) {
+            return bad("sim.sim_ms", "must cover at least one step");
+        }
+        if self.ranks == 0 || self.ranks > u16::MAX as usize {
+            return bad("engine.ranks", "must be in 1..65535");
+        }
+        if self.threads == 0 {
+            return bad("engine.threads", "must be > 0");
+        }
+        Ok(())
+    }
+
+    pub fn steps(&self) -> u64 {
+        (self.sim_ms / self.dt_ms).round() as u64
+    }
+}
+
+fn parse_enum<T: Copy>(
+    doc: &ConfigDoc,
+    key: &str,
+    default: &str,
+    table: &[(&str, T)],
+) -> Result<T, ConfigError> {
+    let s = doc.str(key, default)?;
+    table
+        .iter()
+        .find(|(name, _)| *name == s)
+        .map(|(_, v)| *v)
+        .ok_or_else(|| ConfigError::Invalid {
+            key: key.into(),
+            msg: format!(
+                "unknown variant '{s}' (expected one of {:?})",
+                table.iter().map(|(n, _)| *n).collect::<Vec<_>>()
+            ),
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_from_empty_doc() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.network, NetworkKind::Marmoset);
+        assert_eq!(cfg.engine, EngineKind::Cortex);
+        assert_eq!(cfg.steps(), 1000);
+    }
+
+    #[test]
+    fn full_file() {
+        let doc = ConfigDoc::parse(
+            r#"
+title = "verify"
+seed = 7
+[network]
+kind = "hpc_benchmark"
+n_neurons = 2250
+indegree = 200
+plastic = true
+[sim]
+dt_ms = 0.1
+sim_ms = 50
+[engine]
+kind = "cortex"
+ranks = 2
+threads = 2
+mapping = "random_equivalent"
+backend = "native"
+comm = "serialized"
+"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.network, NetworkKind::HpcBenchmark);
+        assert!(cfg.plastic);
+        assert_eq!(cfg.mapping, MappingKind::RandomEquivalent);
+        assert_eq!(cfg.comm, CommMode::Serialized);
+        assert_eq!(cfg.steps(), 500);
+    }
+
+    #[test]
+    fn validation_errors() {
+        for (k, v) in [
+            ("network.n_neurons", "0"),
+            ("network.indegree", "999999"),
+            ("sim.dt_ms", "0.0"),
+            ("engine.ranks", "0"),
+            ("engine.threads", "0"),
+        ] {
+            let doc = ConfigDoc::parse(&format!(
+                "[{}]\n{} = {}",
+                k.split('.').next().unwrap(),
+                k.split('.').nth(1).unwrap(),
+                v
+            ))
+            .unwrap();
+            assert!(
+                ExperimentConfig::from_doc(&doc).is_err(),
+                "expected error for {k}={v}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_enum_variant() {
+        let doc = ConfigDoc::parse("[engine]\nbackend = \"cuda\"").unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err();
+        assert!(format!("{err}").contains("cuda"));
+    }
+}

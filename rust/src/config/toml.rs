@@ -1,0 +1,310 @@
+//! TOML-subset parser producing a flat dotted-path → [`Value`] map.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config parse error on line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("missing key '{0}'")]
+    Missing(String),
+    #[error("key '{key}': expected {expected}")]
+    Type { key: String, expected: &'static str },
+    #[error("key '{key}': {msg}")]
+    Invalid { key: String, msg: String },
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Parsed document: dotted path → value.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigDoc {
+    map: BTreeMap<String, Value>,
+}
+
+impl ConfigDoc {
+    pub fn parse(text: &str) -> Result<ConfigDoc, ConfigError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| ConfigError::Parse {
+                line: lineno + 1,
+                msg: msg.to_string(),
+            };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let val = parse_value(line[eq + 1..].trim())
+                    .map_err(|m| err(&m))?;
+                let path = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                map.insert(path, val);
+            } else {
+                return Err(err("expected 'key = value' or '[section]'"));
+            }
+        }
+        Ok(ConfigDoc { map })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ConfigDoc, ConfigError> {
+        ConfigDoc::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Apply `key=value` command-line overrides on top of the file.
+    pub fn apply_overrides(&mut self, overrides: &[String]) -> Result<(), ConfigError> {
+        for ov in overrides {
+            let Some(eq) = ov.find('=') else {
+                return Err(ConfigError::Invalid {
+                    key: ov.clone(),
+                    msg: "override must be key=value".into(),
+                });
+            };
+            let key = ov[..eq].trim().to_string();
+            let val = parse_value(ov[eq + 1..].trim()).map_err(|m| {
+                ConfigError::Invalid { key: key.clone(), msg: m }
+            })?;
+            self.map.insert(key, val);
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64, ConfigError> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_f64().ok_or(ConfigError::Type {
+                key: key.into(),
+                expected: "number",
+            }),
+        }
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize, ConfigError> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => match v.as_i64() {
+                Some(x) if x >= 0 => Ok(x as usize),
+                _ => Err(ConfigError::Type {
+                    key: key.into(),
+                    expected: "non-negative integer",
+                }),
+            },
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_bool().ok_or(ConfigError::Type {
+                key: key.into(),
+                expected: "bool",
+            }),
+        }
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> Result<String, ConfigError> {
+        match self.map.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(str::to_string)
+                .ok_or(ConfigError::Type { key: key.into(), expected: "string" }),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    // numbers: int if it parses as i64 and has no '.', 'e', 'E'
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    s.parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment file
+title = "fig18"           # inline comment
+[network]
+n_neurons = 20000
+indegree = 500
+scale = 1.5
+plastic = false
+sizes = [0.25, 0.5, 1, 2]
+[engine]
+threads = 3
+backend = "native"
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let doc = ConfigDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.str("title", "").unwrap(), "fig18");
+        assert_eq!(doc.usize("network.n_neurons", 0).unwrap(), 20000);
+        assert_eq!(doc.f64("network.scale", 0.0).unwrap(), 1.5);
+        assert!(!doc.bool("network.plastic", true).unwrap());
+        assert_eq!(doc.str("engine.backend", "").unwrap(), "native");
+        let Value::Array(a) = doc.get("network.sizes").unwrap() else {
+            panic!()
+        };
+        assert_eq!(a.len(), 4);
+        assert_eq!(a[2], Value::Int(1));
+    }
+
+    #[test]
+    fn defaults_and_type_errors() {
+        let doc = ConfigDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.usize("missing.key", 7).unwrap(), 7);
+        assert!(doc.usize("title", 0).is_err()); // string, not int
+        assert!(doc.f64("engine.backend", 0.0).is_err());
+    }
+
+    #[test]
+    fn overrides() {
+        let mut doc = ConfigDoc::parse(SAMPLE).unwrap();
+        doc.apply_overrides(&[
+            "network.n_neurons=99".to_string(),
+            "engine.backend=\"pjrt\"".to_string(),
+        ])
+        .unwrap();
+        assert_eq!(doc.usize("network.n_neurons", 0).unwrap(), 99);
+        assert_eq!(doc.str("engine.backend", "").unwrap(), "pjrt");
+        assert!(doc.apply_overrides(&["nonsense".to_string()]).is_err());
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let e = ConfigDoc::parse("a = 1\nbad line\n").unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(ConfigDoc::parse("[unterminated\n").is_err());
+        assert!(ConfigDoc::parse("k = \"open\n").is_err());
+        assert!(ConfigDoc::parse("= 3\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = ConfigDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.str("k", "").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = ConfigDoc::parse("a = -5\nb = -2.5e-3\nc = 1e4").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_i64(), Some(-5));
+        assert!((doc.f64("b", 0.0).unwrap() + 0.0025).abs() < 1e-15);
+        assert_eq!(doc.f64("c", 0.0).unwrap(), 1e4);
+    }
+}

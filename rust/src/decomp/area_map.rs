@@ -1,0 +1,226 @@
+//! Area-Processes Mapping (paper §III.A.2, Fig 10): apportion ranks to
+//! atlas areas in proportion to estimated memory, then subdivide each
+//! area's post-synaptic neurons spatially with the multisection method.
+
+use super::multisection::multisection;
+use super::Partition;
+use crate::atlas::NetworkSpec;
+use crate::util::rng::Rng;
+use crate::{Gid, RankId};
+
+/// Estimated memory weight of each area: O(n_pre + n_post + n_edges) with
+/// edges dominating (paper §III.A.4). Edge counts are exact (fixed
+/// indegree × population sizes); the pre/post terms use the same units
+/// (one neuron ≈ the engine's per-neuron state, one edge ≈ one edge
+/// record — the constant factors cancel in the apportionment).
+pub fn estimate_area_memory(spec: &NetworkSpec) -> Vec<f64> {
+    let mut est = vec![0.0f64; spec.n_areas()];
+    const NEURON_COST: f64 = 64.0; // bytes of state per neuron
+    const EDGE_COST: f64 = 16.0;   // bytes per edge record
+    for p in &spec.populations {
+        est[p.area as usize] += p.n as f64 * NEURON_COST;
+    }
+    for r in &spec.rules {
+        let dst = &spec.populations[r.dst_pop as usize];
+        est[dst.area as usize] +=
+            r.indegree as f64 * dst.n as f64 * EDGE_COST;
+    }
+    est
+}
+
+/// Largest-remainder apportionment of `n_ranks` to areas by weight; every
+/// area with nonzero weight gets at least one rank when `n_ranks >=`
+/// number of areas, otherwise areas are greedily packed onto ranks.
+pub fn apportion(weights: &[f64], n_ranks: usize) -> Vec<usize> {
+    assert!(!weights.is_empty());
+    assert!(n_ranks >= 1);
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        let mut out = vec![0; weights.len()];
+        out[0] = n_ranks;
+        return out;
+    }
+    if n_ranks >= weights.len() {
+        // one rank guaranteed per area, remainder by largest fraction
+        let spare = n_ranks - weights.len();
+        let quota: Vec<f64> =
+            weights.iter().map(|w| w / total * spare as f64).collect();
+        let mut counts: Vec<usize> =
+            quota.iter().map(|q| 1 + q.floor() as usize).collect();
+        let assigned: usize = counts.iter().sum();
+        let mut rem: Vec<(f64, usize)> = quota
+            .iter()
+            .enumerate()
+            .map(|(i, q)| (q - q.floor(), i))
+            .collect();
+        rem.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for i in 0..(n_ranks - assigned) {
+            counts[rem[i % rem.len()].1] += 1;
+        }
+        counts
+    } else {
+        // fewer ranks than areas: areas share ranks — mark each area with
+        // count 0 and let the caller group them (returned counts sum to
+        // n_ranks with zeros for co-located areas).
+        let mut counts = vec![0usize; weights.len()];
+        // greedy: assign each rank slot to the currently heaviest
+        // uncovered group; here we simply give the n_ranks largest areas
+        // one rank each — smaller areas are folded into the nearest
+        // assigned area by the partition function below.
+        let mut idx: Vec<usize> = (0..weights.len()).collect();
+        idx.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
+        for &i in idx.iter().take(n_ranks) {
+            counts[i] = 1;
+        }
+        counts
+    }
+}
+
+/// Full Area-Processes Mapping + Multisection Division partition.
+pub fn area_processes_partition(
+    spec: &NetworkSpec,
+    n_ranks: usize,
+    seed: u64,
+) -> Partition {
+    let weights = estimate_area_memory(spec);
+    let counts = apportion(&weights, n_ranks);
+    let n = spec.n_total();
+
+    // area → gids
+    let mut area_gids: Vec<Vec<Gid>> = vec![Vec::new(); spec.n_areas()];
+    for p in &spec.populations {
+        area_gids[p.area as usize].extend(p.gids());
+    }
+
+    // areas with zero ranks (n_ranks < n_areas) fold into the nearest
+    // area that did get ranks
+    let holders: Vec<usize> =
+        (0..counts.len()).filter(|&a| counts[a] > 0).collect();
+    assert!(!holders.is_empty());
+    let mut folded: Vec<Vec<Gid>> = vec![Vec::new(); counts.len()];
+    for a in 0..counts.len() {
+        if counts[a] > 0 {
+            folded[a].append(&mut area_gids[a]);
+        } else if !area_gids[a].is_empty() {
+            let nearest = *holders
+                .iter()
+                .min_by(|&&x, &&y| {
+                    spec.area_distance(a as u16, x as u16)
+                        .partial_cmp(&spec.area_distance(a as u16, y as u16))
+                        .unwrap()
+                })
+                .unwrap();
+            let mut gids = std::mem::take(&mut area_gids[a]);
+            folded[nearest].append(&mut gids);
+        }
+    }
+
+    // within each rank-holding area: multisection into `counts[a]` cells
+    let mut rank_of: Vec<RankId> = vec![0; n];
+    let mut next_rank: RankId = 0;
+    let mut rng = Rng::stream(seed, &[0x4d554c54]); // "MULT"
+    for a in 0..counts.len() {
+        if counts[a] == 0 {
+            continue;
+        }
+        let gids = &folded[a];
+        let pos: Vec<[f64; 3]> =
+            gids.iter().map(|&g| spec.position(g)).collect();
+        let cells = multisection(gids, &pos, counts[a], &mut rng);
+        for cell in cells {
+            for g in cell {
+                rank_of[g as usize] = next_rank;
+            }
+            next_rank += 1;
+        }
+    }
+    assert_eq!(next_rank as usize, n_ranks);
+    Partition::from_rank_of(n_ranks, rank_of)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::atlas::marmoset::{marmoset_spec, MarmosetParams};
+
+    #[test]
+    fn apportion_exact_sum_and_minimum() {
+        let counts = apportion(&[10.0, 30.0, 60.0], 10);
+        assert_eq!(counts.iter().sum::<usize>(), 10);
+        assert!(counts.iter().all(|&c| c >= 1));
+        assert!(counts[2] > counts[0]);
+    }
+
+    #[test]
+    fn apportion_fewer_ranks_than_areas() {
+        let counts = apportion(&[5.0, 1.0, 3.0, 2.0], 2);
+        assert_eq!(counts.iter().sum::<usize>(), 2);
+        assert_eq!(counts[0], 1); // heaviest get the ranks
+        assert_eq!(counts[2], 1);
+    }
+
+    #[test]
+    fn estimate_scales_with_area_size() {
+        let spec = marmoset_spec(&MarmosetParams::default(), 11);
+        let est = estimate_area_memory(&spec);
+        assert_eq!(est.len(), 8);
+        assert!(est.iter().all(|&e| e > 0.0));
+        // edges dominate: estimate per area >> neuron term alone
+        let n0: u32 = spec
+            .populations
+            .iter()
+            .filter(|p| p.area == 0)
+            .map(|p| p.n)
+            .sum();
+        assert!(est[0] > n0 as f64 * 64.0 * 5.0);
+    }
+
+    #[test]
+    fn partition_well_formed_and_balanced() {
+        let spec = marmoset_spec(
+            &MarmosetParams { n_neurons: 4000, ..Default::default() },
+            3,
+        );
+        for ranks in [1, 4, 8, 12] {
+            let part = area_processes_partition(&spec, ranks, 5);
+            part.check_well_formed().unwrap();
+            assert_eq!(part.n_ranks, ranks);
+            if ranks >= 8 {
+                assert!(
+                    part.imbalance() < 1.8,
+                    "ranks={ranks} imbalance {}",
+                    part.imbalance()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fewer_ranks_than_areas_folds_areas() {
+        let spec = marmoset_spec(
+            &MarmosetParams { n_neurons: 2000, ..Default::default() },
+            7,
+        );
+        let part = area_processes_partition(&spec, 3, 1);
+        part.check_well_formed().unwrap();
+        assert_eq!(part.n_ranks, 3);
+    }
+
+    #[test]
+    fn area_locality_preserved() {
+        // with ranks == areas every rank holds exactly one area's neurons
+        let spec = marmoset_spec(
+            &MarmosetParams { n_neurons: 3000, ..Default::default() },
+            9,
+        );
+        let part = area_processes_partition(&spec, 8, 2);
+        part.check_well_formed().unwrap();
+        for r in 0..8 {
+            let areas: std::collections::BTreeSet<u16> = part.members[r]
+                .iter()
+                .map(|&g| spec.area_of(g))
+                .collect();
+            assert_eq!(areas.len(), 1, "rank {r} spans areas {areas:?}");
+        }
+    }
+}

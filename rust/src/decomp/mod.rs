@@ -1,0 +1,113 @@
+//! Domain decomposition (paper §III.A): partition the vertex set, derive
+//! each rank's indegree sub-graph, and lay its edges out for mutex-free
+//! thread-level processing.
+//!
+//! Pipeline:
+//! 1. [`area_map`] — Area-Processes Mapping: ranks are apportioned to
+//!    atlas areas by estimated memory (paper §III.A.2, Fig 10);
+//! 2. [`multisection`] — Multisection Division with Sampling (FDPS-style,
+//!    paper §III.A.3, Fig 11): within an area, post-synaptic neurons are
+//!    split into equal-count spatial cells;
+//! 3. [`random_map`] — Random Equivalent Mapping, the naive baseline of
+//!    Fig 9 (and what NEST-class round-robin distribution amounts to);
+//! 4. [`store`] — the per-rank data instance (paper Fig 12): local and
+//!    remote pre-synaptic views, and per-thread edge groups sorted by
+//!    (pre, delay) so each thread writes only post-neurons it owns.
+
+pub mod area_map;
+pub mod multisection;
+pub mod random_map;
+pub mod store;
+
+pub use area_map::area_processes_partition;
+pub use random_map::random_equivalent_partition;
+pub use store::{RankStore, ThreadEdges};
+
+use crate::{Gid, RankId};
+
+/// A partition of the global vertex set onto ranks.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub n_ranks: usize,
+    /// gid → rank.
+    pub rank_of: Vec<RankId>,
+    /// rank → sorted member gids.
+    pub members: Vec<Vec<Gid>>,
+}
+
+impl Partition {
+    pub fn from_rank_of(n_ranks: usize, rank_of: Vec<RankId>) -> Self {
+        let mut members = vec![Vec::new(); n_ranks];
+        for (gid, &r) in rank_of.iter().enumerate() {
+            assert!((r as usize) < n_ranks, "rank {r} out of range");
+            members[r as usize].push(gid as Gid);
+        }
+        // members are pushed in gid order, hence sorted
+        Partition { n_ranks, rank_of, members }
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.rank_of.len()
+    }
+
+    /// Validate the well-partition property of paper eq. (9): member sets
+    /// are disjoint and cover 0..n. (Holds by construction for
+    /// `from_rank_of`; used by property tests on custom constructions.)
+    pub fn check_well_formed(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.rank_of.len()];
+        for (r, ms) in self.members.iter().enumerate() {
+            for &g in ms {
+                let gi = g as usize;
+                if gi >= seen.len() {
+                    return Err(format!("gid {g} out of range"));
+                }
+                if seen[gi] {
+                    return Err(format!("gid {g} in two ranks"));
+                }
+                seen[gi] = true;
+                if self.rank_of[gi] as usize != r {
+                    return Err(format!("rank_of[{g}] inconsistent"));
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("partition does not cover all vertices".into());
+        }
+        Ok(())
+    }
+
+    /// max/mean member count (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.members.iter().map(Vec::len).max().unwrap_or(0);
+        let mean = self.n_vertices() as f64 / self.n_ranks.max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max as f64 / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_rank_of_builds_sorted_members() {
+        let p = Partition::from_rank_of(2, vec![0, 1, 0, 1, 0]);
+        assert_eq!(p.members[0], vec![0, 2, 4]);
+        assert_eq!(p.members[1], vec![1, 3]);
+        p.check_well_formed().unwrap();
+        assert!((p.imbalance() - 3.0 / 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn well_formed_detects_violations() {
+        let mut p = Partition::from_rank_of(2, vec![0, 0, 1]);
+        p.members[1].push(0); // duplicate
+        assert!(p.check_well_formed().is_err());
+        let mut q = Partition::from_rank_of(2, vec![0, 0, 1]);
+        q.members[1].clear(); // hole
+        assert!(q.check_well_formed().is_err());
+    }
+}

@@ -1,0 +1,265 @@
+//! Multisection Division with Sampling Method (paper §III.A.3, Fig 11;
+//! after FDPS / Ishiyama et al. 2012).
+//!
+//! Splits a point set into `k1 × k2 × k3` spatial cells holding roughly
+//! equal counts, even for non-uniform distributions: a random sample is
+//! sorted along the widest axis, cut at equal-count quantiles, and each
+//! slab is recursed on with the remaining factors. The actual points are
+//! then binned by the sampled cut planes.
+
+use crate::util::rng::Rng;
+use crate::Gid;
+
+/// Factor `n` into up to three near-equal factors k1 >= k2 >= k3 with
+/// k1·k2·k3 = n (grid dimensions of the multisection).
+pub fn factor3(n: usize) -> [usize; 3] {
+    assert!(n >= 1);
+    let mut best = [n, 1, 1];
+    let mut best_score = usize::MAX;
+    let mut a = 1;
+    while a * a * a <= n {
+        if n % a == 0 {
+            let m = n / a;
+            let mut b = a;
+            while b * b <= m {
+                if m % b == 0 {
+                    let c = m / b;
+                    // minimise spread between the largest and smallest
+                    let score = c - a;
+                    if score < best_score {
+                        best_score = score;
+                        best = [c, b, a];
+                    }
+                }
+                b += 1;
+            }
+        }
+        a += 1;
+    }
+    best
+}
+
+/// Divide `ids` (with positions `pos[i]` for `ids[i]`) into `n_cells`
+/// equal-count cells. Returns one sorted gid list per cell; every input
+/// id appears in exactly one cell.
+pub fn multisection(
+    ids: &[Gid],
+    pos: &[[f64; 3]],
+    n_cells: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<Gid>> {
+    assert_eq!(ids.len(), pos.len());
+    assert!(n_cells >= 1);
+    if n_cells == 1 {
+        let mut v = ids.to_vec();
+        v.sort_unstable();
+        return vec![v];
+    }
+    let dims = factor3(n_cells);
+    let mut items: Vec<(Gid, [f64; 3])> =
+        ids.iter().copied().zip(pos.iter().copied()).collect();
+    let mut cells = Vec::with_capacity(n_cells);
+    recurse(&mut items, &dims, rng, &mut cells);
+    for c in &mut cells {
+        c.sort_unstable();
+    }
+    cells
+}
+
+fn recurse(
+    items: &mut [(Gid, [f64; 3])],
+    dims: &[usize],
+    rng: &mut Rng,
+    out: &mut Vec<Vec<Gid>>,
+) {
+    // find the first remaining factor > 1; if none, emit the cell
+    let Some((level, &k)) = dims.iter().enumerate().find(|(_, &k)| k > 1)
+    else {
+        out.push(items.iter().map(|(g, _)| *g).collect());
+        return;
+    };
+
+    // widest axis of this slab
+    let axis = widest_axis(items);
+
+    // sampling: sort a bounded random sample, read cut planes at quantiles
+    let sample_size = (items.len() / 10).clamp(k * 4, 4096).min(items.len());
+    let mut sample: Vec<f64> = (0..sample_size)
+        .map(|_| items[rng.below(items.len() as u64) as usize].1[axis])
+        .collect();
+    sample.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cuts: Vec<f64> = (1..k)
+        .map(|i| sample[i * sample.len() / k])
+        .collect();
+
+    // order items by axis, then split at the cut planes with equal-count
+    // correction: the sampled cut gives the split *hint*, the actual split
+    // index is clamped so every sub-slab keeps a proportional share (this
+    // guarantees balance even when the sample was unlucky).
+    items.sort_by(|a, b| a.1[axis].partial_cmp(&b.1[axis]).unwrap());
+    let n = items.len();
+    let mut bounds = Vec::with_capacity(k + 1);
+    bounds.push(0usize);
+    for (i, &cut) in cuts.iter().enumerate() {
+        let hint = items.partition_point(|it| it.1[axis] < cut);
+        let ideal = (i + 1) * n / k;
+        // allow the sampled plane to deviate by at most 20% of a cell
+        let tol = (n / k) / 5;
+        let lo = ideal.saturating_sub(tol).max(bounds[i]);
+        let hi = (ideal + tol).min(n);
+        bounds.push(hint.clamp(lo, hi));
+    }
+    bounds.push(n);
+
+    let rest = &dims[level + 1..];
+    let mut remaining = items;
+    let mut prev = 0usize;
+    for w in bounds.windows(2).skip(1) {
+        let take = w[0] - prev;
+        let (slab, tail) = remaining.split_at_mut(take);
+        prev = w[0];
+        remaining = tail;
+        recurse(slab, rest, rng, out);
+    }
+    recurse(remaining, rest, rng, out);
+}
+
+fn widest_axis(items: &[(Gid, [f64; 3])]) -> usize {
+    let mut lo = [f64::INFINITY; 3];
+    let mut hi = [f64::NEG_INFINITY; 3];
+    for (_, p) in items {
+        for a in 0..3 {
+            lo[a] = lo[a].min(p[a]);
+            hi[a] = hi[a].max(p[a]);
+        }
+    }
+    let mut axis = 0;
+    let mut best = f64::NEG_INFINITY;
+    for a in 0..3 {
+        let w = hi[a] - lo[a];
+        if w > best {
+            best = w;
+            axis = a;
+        }
+    }
+    axis
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::property;
+
+    #[test]
+    fn factor3_balanced() {
+        assert_eq!(factor3(1), [1, 1, 1]);
+        assert_eq!(factor3(8), [2, 2, 2]);
+        assert_eq!(factor3(12), [3, 2, 2]);
+        assert_eq!(factor3(7), [7, 1, 1]);
+        let f = factor3(24);
+        assert_eq!(f.iter().product::<usize>(), 24);
+        assert!(f[0] <= 4);
+    }
+
+    fn cube_points(n: usize, seed: u64) -> (Vec<Gid>, Vec<[f64; 3]>) {
+        let mut rng = Rng::new(seed);
+        let ids: Vec<Gid> = (0..n as Gid).collect();
+        let pos: Vec<[f64; 3]> = (0..n)
+            .map(|_| {
+                [
+                    rng.range_f64(0.0, 1.0),
+                    rng.range_f64(0.0, 1.0),
+                    rng.range_f64(0.0, 1.0),
+                ]
+            })
+            .collect();
+        (ids, pos)
+    }
+
+    #[test]
+    fn covers_and_balances_uniform() {
+        let (ids, pos) = cube_points(5000, 1);
+        let mut rng = Rng::new(2);
+        let cells = multisection(&ids, &pos, 8, &mut rng);
+        assert_eq!(cells.len(), 8);
+        let mut all: Vec<Gid> = cells.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, ids, "cells must partition the input");
+        let target = 5000.0 / 8.0;
+        for c in &cells {
+            assert!(
+                (c.len() as f64 - target).abs() < 0.25 * target,
+                "cell size {} vs target {target}",
+                c.len()
+            );
+        }
+    }
+
+    #[test]
+    fn balances_gaussian_cluster() {
+        // non-uniform distribution: dense ball + sparse halo (the case the
+        // sampling method exists for)
+        let mut rng = Rng::new(3);
+        let n = 4000;
+        let ids: Vec<Gid> = (0..n as Gid).collect();
+        let pos: Vec<[f64; 3]> = (0..n)
+            .map(|i| {
+                let r = if i % 4 == 0 { 10.0 } else { 0.5 };
+                [
+                    rng.normal() * r,
+                    rng.normal() * r,
+                    rng.normal() * r,
+                ]
+            })
+            .collect();
+        let cells = multisection(&ids, &pos, 6, &mut rng);
+        let sizes: Vec<usize> = cells.iter().map(Vec::len).collect();
+        let max = *sizes.iter().max().unwrap() as f64;
+        let mean = n as f64 / 6.0;
+        assert!(max / mean < 1.3, "imbalance {} ({sizes:?})", max / mean);
+    }
+
+    #[test]
+    fn single_cell_identity() {
+        let (ids, pos) = cube_points(17, 4);
+        let mut rng = Rng::new(5);
+        let cells = multisection(&ids, &pos, 1, &mut rng);
+        assert_eq!(cells, vec![ids]);
+    }
+
+    #[test]
+    fn property_partition_and_balance() {
+        property("multisection partition", 20, |g| {
+            let n = g.usize(32..3000);
+            let k = g.usize(1..13);
+            let mut rng = Rng::new(g.case as u64 + 100);
+            let ids: Vec<Gid> = (0..n as Gid).collect();
+            let pos: Vec<[f64; 3]> = (0..n)
+                .map(|_| {
+                    [
+                        rng.range_f64(-3.0, 3.0),
+                        rng.range_f64(-1.0, 1.0),
+                        rng.range_f64(0.0, 9.0),
+                    ]
+                })
+                .collect();
+            let cells = multisection(&ids, &pos, k, &mut rng);
+            if cells.len() != k {
+                return Err(format!("{} cells != {k}", cells.len()));
+            }
+            let mut all: Vec<Gid> = cells.iter().flatten().copied().collect();
+            all.sort_unstable();
+            if all != ids {
+                return Err("not a partition".into());
+            }
+            let mean = n as f64 / k as f64;
+            if mean >= 16.0 {
+                let max = cells.iter().map(Vec::len).max().unwrap() as f64;
+                if max / mean > 1.5 {
+                    return Err(format!("imbalance {}", max / mean));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,59 @@
+//! Random Equivalent Mapping (paper Fig 9) — the naive baseline: neurons
+//! are scattered uniformly over ranks with no regard for the atlas. Its
+//! pathology, which the mapping ablation quantifies: nearly every rank
+//! ends up needing pre-synaptic data for nearly every neuron in the
+//! network, so per-rank memory grows with global N instead of N/R.
+
+use super::Partition;
+use crate::util::rng::hash_stream;
+use crate::RankId;
+
+/// Hash-uniform gid → rank assignment (deterministic in `seed`).
+pub fn random_equivalent_partition(
+    n: usize,
+    n_ranks: usize,
+    seed: u64,
+) -> Partition {
+    assert!(n_ranks >= 1 && n_ranks <= u16::MAX as usize);
+    let rank_of: Vec<RankId> = (0..n)
+        .map(|gid| {
+            (hash_stream(&[seed, 0x524d4150, gid as u64]) % n_ranks as u64)
+                as RankId
+        })
+        .collect();
+    Partition::from_rank_of(n_ranks, rank_of)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::property;
+
+    #[test]
+    fn deterministic() {
+        let a = random_equivalent_partition(1000, 7, 42);
+        let b = random_equivalent_partition(1000, 7, 42);
+        assert_eq!(a.rank_of, b.rank_of);
+        assert_ne!(
+            a.rank_of,
+            random_equivalent_partition(1000, 7, 43).rank_of
+        );
+    }
+
+    #[test]
+    fn roughly_balanced() {
+        let p = random_equivalent_partition(10_000, 8, 1);
+        p.check_well_formed().unwrap();
+        assert!(p.imbalance() < 1.15, "imbalance {}", p.imbalance());
+    }
+
+    #[test]
+    fn property_well_formed() {
+        property("random mapping well-formed", 30, |g| {
+            let n = g.usize(1..2000);
+            let r = g.usize(1..32);
+            let p = random_equivalent_partition(n, r, g.case as u64);
+            p.check_well_formed()
+        });
+    }
+}

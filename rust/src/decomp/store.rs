@@ -1,0 +1,462 @@
+//! Per-rank data instance of the indegree sub-graph (paper Fig 12).
+//!
+//! For a rank owning post-neurons `V_i`:
+//!
+//! * `posts` — the owned (post-synaptic) gids, in local index order;
+//! * `pres` — every source gid with at least one edge onto this rank,
+//!   i.e. exactly the sub-graph's pre-vertex set `in-V_i^pre`; split
+//!   into the local part (`pre ∈ V_i`) and the remote part, whose sizes
+//!   are the quantities of the paper's Fig 8-10 memory argument;
+//! * per-thread [`ThreadEdges`] — each compute thread owns a contiguous
+//!   range of local posts and a private edge store holding **only** the
+//!   edges targeting those posts, as a CSR over pre index with runs
+//!   sorted by delay (paper Fig 12b: "synaptic interactions reordered
+//!   according to their delays and the corresponding threads"). During
+//!   delivery a thread walks just its own run for each spiking pre:
+//!   every write lands in thread-owned state — no mutex, no atomic.
+
+use crate::atlas::NetworkSpec;
+use crate::graph::Edge;
+use crate::metrics::memory::{vec_bytes, MemoryBreakdown};
+use crate::{DelaySteps, Gid, ThreadId};
+
+/// One compute thread's private share of the rank's indegree sub-graph.
+#[derive(Clone, Debug, Default)]
+pub struct ThreadEdges {
+    /// CSR offsets over the rank's `pres` array: edges of pre `p` owned by
+    /// this thread live at `post[offsets[p]..offsets[p+1]]`, delay-sorted.
+    pub offsets: Vec<u32>,
+    /// Local post index (into the rank's `posts`).
+    pub post: Vec<u32>,
+    pub weight: Vec<f64>,
+    pub delay: Vec<DelaySteps>,
+    /// Plastic-edge marker (present only for STDP networks).
+    pub plastic: Vec<bool>,
+    /// Pre index of each edge (present only for STDP networks, where the
+    /// potentiation path walks a post's incoming edges and needs their
+    /// sources' traces).
+    pub epre: Vec<u32>,
+    /// CSR by local post over this thread's *plastic* edges (potentiation
+    /// walks a post's incoming plastic edges when it fires): offsets are
+    /// relative to the thread's post range `[post_lo, post_hi)`.
+    pub plastic_by_post_offsets: Vec<u32>,
+    pub plastic_by_post_edge: Vec<u32>,
+    /// Owned local post range.
+    pub post_lo: u32,
+    pub post_hi: u32,
+}
+
+impl ThreadEdges {
+    pub fn n_edges(&self) -> usize {
+        self.post.len()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        vec_bytes(&self.offsets)
+            + vec_bytes(&self.post)
+            + vec_bytes(&self.weight)
+            + vec_bytes(&self.delay)
+            + vec_bytes(&self.plastic)
+            + vec_bytes(&self.epre)
+            + vec_bytes(&self.plastic_by_post_offsets)
+            + vec_bytes(&self.plastic_by_post_edge)
+    }
+
+    /// Edge run of pre index `p` (delay-sorted).
+    #[inline]
+    pub fn run(&self, p: usize) -> std::ops::Range<usize> {
+        self.offsets[p] as usize..self.offsets[p + 1] as usize
+    }
+}
+
+/// The rank's full data instance.
+#[derive(Clone, Debug)]
+pub struct RankStore {
+    pub rank: u16,
+    /// Owned posts, ascending gid; local index = position here.
+    pub posts: Vec<Gid>,
+    /// All sources with edges onto this rank, ascending gid;
+    /// pre index = position here.
+    pub pres: Vec<Gid>,
+    /// Number of `pres` that are also owned posts (the local part of
+    /// eq. 16; `pres.len() - n_local_pres` is the remote part).
+    pub n_local_pres: usize,
+    /// Edges arriving from local sources (the `in-S^l` of eq. 16).
+    pub n_local_edges: u64,
+    pub n_remote_edges: u64,
+    pub threads: Vec<ThreadEdges>,
+    /// thread → owned local post range.
+    pub thread_ranges: Vec<(u32, u32)>,
+    pub max_delay: DelaySteps,
+}
+
+impl RankStore {
+    /// Build the store for `rank`, generating exactly the rank's own
+    /// indegree sub-graph from the deterministic spec (no global state).
+    pub fn build(
+        spec: &NetworkSpec,
+        posts: &[Gid],
+        is_local: impl Fn(Gid) -> bool,
+        rank: u16,
+        n_threads: usize,
+    ) -> RankStore {
+        assert!(n_threads >= 1);
+        let n_posts = posts.len();
+        let plastic_net = spec.stdp.is_some();
+
+        // thread ranges: contiguous equal split of local posts
+        let thread_ranges: Vec<(u32, u32)> = (0..n_threads)
+            .map(|t| {
+                (
+                    (t * n_posts / n_threads) as u32,
+                    ((t + 1) * n_posts / n_threads) as u32,
+                )
+            })
+            .collect();
+        let thread_of = |local_post: u32| -> ThreadId {
+            thread_ranges
+                .iter()
+                .position(|&(lo, hi)| local_post >= lo && local_post < hi)
+                .expect("post outside thread ranges") as ThreadId
+        };
+
+        // generate the indegree sub-graph: all incoming edges of our posts
+        let mut edges: Vec<Edge> = Vec::new();
+        for &gid in posts {
+            spec.in_edges(gid, &mut edges);
+        }
+
+        // pres = sorted unique sources
+        let mut pres: Vec<Gid> = edges.iter().map(|e| e.pre).collect();
+        pres.sort_unstable();
+        pres.dedup();
+        pres.shrink_to_fit(); // dedup leaves the pre-dedup capacity
+        let n_local_pres = pres.iter().filter(|&&p| is_local(p)).count();
+
+        let pre_index = |gid: Gid| -> u32 {
+            pres.binary_search(&gid).expect("pre not in table") as u32
+        };
+        let post_index = |gid: Gid| -> u32 {
+            posts.binary_search(&gid).expect("post not in table") as u32
+        };
+
+        let mut n_local_edges = 0u64;
+        let mut n_remote_edges = 0u64;
+        let mut max_delay: DelaySteps = 1;
+
+        // (thread, pre, delay)-sorted staging: one bucket per thread
+        struct Staged {
+            pre: u32,
+            post: u32,
+            weight: f64,
+            delay: DelaySteps,
+            plastic: bool,
+        }
+        let mut staged: Vec<Vec<Staged>> =
+            (0..n_threads).map(|_| Vec::new()).collect();
+        for e in &edges {
+            let lp = post_index(e.post);
+            let t = thread_of(lp) as usize;
+            if is_local(e.pre) {
+                n_local_edges += 1;
+            } else {
+                n_remote_edges += 1;
+            }
+            max_delay = max_delay.max(e.delay);
+            staged[t].push(Staged {
+                pre: pre_index(e.pre),
+                post: lp,
+                weight: e.weight,
+                delay: e.delay,
+                plastic: plastic_net && spec.edge_plastic(e.pre, e.post),
+            });
+        }
+        drop(edges);
+
+        let threads: Vec<ThreadEdges> = staged
+            .into_iter()
+            .enumerate()
+            .map(|(t, mut st)| {
+                // paper Fig 12b: sort by (pre, delay) within the thread.
+                // Stable + cached key: multapse ties keep generation
+                // order, so delivery's per-slot addition order matches
+                // the baseline engine's (spike-exact comparability).
+                st.sort_by_cached_key(|s| {
+                    ((s.pre as u64) << 16) | s.delay as u64
+                });
+                let mut offsets = vec![0u32; pres.len() + 1];
+                for s in &st {
+                    offsets[s.pre as usize + 1] += 1;
+                }
+                for i in 0..pres.len() {
+                    offsets[i + 1] += offsets[i];
+                }
+                let post: Vec<u32> = st.iter().map(|s| s.post).collect();
+                let weight: Vec<f64> = st.iter().map(|s| s.weight).collect();
+                let delay: Vec<DelaySteps> =
+                    st.iter().map(|s| s.delay).collect();
+                let plastic: Vec<bool> = if plastic_net {
+                    st.iter().map(|s| s.plastic).collect()
+                } else {
+                    Vec::new()
+                };
+                let epre: Vec<u32> = if plastic_net {
+                    st.iter().map(|s| s.pre).collect()
+                } else {
+                    Vec::new()
+                };
+
+                // plastic-by-post CSR (potentiation path)
+                let (lo, hi) = thread_ranges[t];
+                let span = (hi - lo) as usize;
+                let (pbp_off, pbp_edge) = if plastic_net {
+                    let mut off = vec![0u32; span + 1];
+                    for s in &st {
+                        if s.plastic {
+                            off[(s.post - lo) as usize + 1] += 1;
+                        }
+                    }
+                    for i in 0..span {
+                        off[i + 1] += off[i];
+                    }
+                    let mut cursor = off.clone();
+                    let mut idx = vec![0u32; off[span] as usize];
+                    for (ei, s) in st.iter().enumerate() {
+                        if s.plastic {
+                            let b = (s.post - lo) as usize;
+                            idx[cursor[b] as usize] = ei as u32;
+                            cursor[b] += 1;
+                        }
+                    }
+                    (off, idx)
+                } else {
+                    (Vec::new(), Vec::new())
+                };
+
+                ThreadEdges {
+                    offsets,
+                    post,
+                    weight,
+                    delay,
+                    plastic,
+                    epre,
+                    plastic_by_post_offsets: pbp_off,
+                    plastic_by_post_edge: pbp_edge,
+                    post_lo: lo,
+                    post_hi: hi,
+                }
+            })
+            .collect();
+
+        RankStore {
+            rank,
+            posts: posts.to_vec(),
+            pres,
+            n_local_pres,
+            n_local_edges,
+            n_remote_edges,
+            threads,
+            thread_ranges,
+            max_delay,
+        }
+    }
+
+    pub fn n_posts(&self) -> usize {
+        self.posts.len()
+    }
+
+    pub fn n_pres(&self) -> usize {
+        self.pres.len()
+    }
+
+    pub fn n_remote_pres(&self) -> usize {
+        self.pres.len() - self.n_local_pres
+    }
+
+    pub fn n_edges(&self) -> u64 {
+        self.n_local_edges + self.n_remote_edges
+    }
+
+    /// Pre index of a gid if any of our edges source from it.
+    #[inline]
+    pub fn pre_index_of(&self, gid: Gid) -> Option<u32> {
+        self.pres.binary_search(&gid).ok().map(|i| i as u32)
+    }
+
+    /// Local post index of an owned gid.
+    #[inline]
+    pub fn post_index_of(&self, gid: Gid) -> Option<u32> {
+        self.posts.binary_search(&gid).ok().map(|i| i as u32)
+    }
+
+    /// Owning thread of a local post index.
+    #[inline]
+    pub fn thread_of(&self, local_post: u32) -> ThreadId {
+        self.thread_ranges
+            .iter()
+            .position(|&(lo, hi)| local_post >= lo && local_post < hi)
+            .expect("post outside thread ranges") as ThreadId
+    }
+
+    /// Memory accounting for the Fig 18 / Fig 9-10 benches.
+    pub fn memory(&self) -> MemoryBreakdown {
+        let mut m = MemoryBreakdown::new();
+        m.add("posts", vec_bytes(&self.posts));
+        m.add("pres", vec_bytes(&self.pres));
+        for t in &self.threads {
+            m.add("edges", t.bytes());
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::atlas::random_spec;
+    use crate::decomp::random_equivalent_partition;
+    use crate::util::proptest_lite::property;
+
+    fn build_stores(
+        n: usize,
+        k: u32,
+        ranks: usize,
+        threads: usize,
+        seed: u64,
+    ) -> (crate::atlas::NetworkSpec, Vec<RankStore>) {
+        let spec = random_spec(n, k, seed);
+        let part = random_equivalent_partition(n, ranks, seed);
+        let stores = (0..ranks)
+            .map(|r| {
+                let rank_of = part.rank_of.clone();
+                RankStore::build(
+                    &spec,
+                    &part.members[r],
+                    move |g| rank_of[g as usize] as usize == r,
+                    r as u16,
+                    threads,
+                )
+            })
+            .collect();
+        (spec, stores)
+    }
+
+    #[test]
+    fn edges_conserved_across_ranks() {
+        let (spec, stores) = build_stores(400, 40, 3, 2, 1);
+        let total: u64 = stores.iter().map(|s| s.n_edges()).sum();
+        assert_eq!(total, spec.n_edges());
+    }
+
+    #[test]
+    fn thread_write_sets_disjoint_and_covering() {
+        let (_, stores) = build_stores(300, 30, 2, 3, 2);
+        for s in &stores {
+            // ranges tile [0, n_posts)
+            let mut expect = 0u32;
+            for &(lo, hi) in &s.thread_ranges {
+                assert_eq!(lo, expect);
+                expect = hi;
+            }
+            assert_eq!(expect as usize, s.n_posts());
+            // every edge's post lies in its thread's range — the no-race
+            // invariant of paper §III.B.1
+            for (t, te) in s.threads.iter().enumerate() {
+                let (lo, hi) = s.thread_ranges[t];
+                assert!(te
+                    .post
+                    .iter()
+                    .all(|&p| p >= lo && p < hi));
+            }
+        }
+    }
+
+    #[test]
+    fn runs_are_delay_sorted() {
+        let (_, stores) = build_stores(300, 30, 2, 3, 3);
+        for s in &stores {
+            for te in &s.threads {
+                for p in 0..s.pres.len() {
+                    let r = te.run(p);
+                    let ds = &te.delay[r];
+                    assert!(
+                        ds.windows(2).all(|w| w[0] <= w[1]),
+                        "run not delay-sorted"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pres_exactly_the_sources() {
+        let (spec, stores) = build_stores(200, 25, 2, 2, 4);
+        for s in &stores {
+            // every pre has >= 1 edge in some thread
+            for (pi, _) in s.pres.iter().enumerate() {
+                let total: usize =
+                    s.threads.iter().map(|t| t.run(pi).len()).sum();
+                assert!(total > 0, "pre with no edges");
+            }
+            // and conversely every generated edge's source is in pres
+            let mut edges = Vec::new();
+            for &g in &s.posts {
+                spec.in_edges(g, &mut edges);
+            }
+            for e in &edges {
+                assert!(s.pre_index_of(e.pre).is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn local_remote_split_consistent() {
+        let (_, stores) = build_stores(300, 30, 3, 2, 5);
+        for s in &stores {
+            assert!(s.n_local_pres <= s.n_pres());
+            assert_eq!(
+                s.n_edges(),
+                s.threads.iter().map(|t| t.n_edges() as u64).sum::<u64>()
+            );
+        }
+    }
+
+    #[test]
+    fn memory_breakdown_nonzero() {
+        let (_, stores) = build_stores(200, 20, 2, 2, 6);
+        let m = stores[0].memory();
+        assert!(m.get("edges") > 0);
+        assert!(m.get("posts") > 0);
+        assert!(m.total() > m.get("edges"));
+    }
+
+    #[test]
+    fn property_store_invariants() {
+        property("rank store invariants", 15, |g| {
+            let n = g.usize(50..400);
+            let k = g.u32(1..30.min(n as u32));
+            let ranks = g.usize(1..5);
+            let threads = g.usize(1..4);
+            let (spec, stores) =
+                build_stores(n, k, ranks, threads, g.case as u64 + 50);
+            let total: u64 = stores.iter().map(|s| s.n_edges()).sum();
+            if total != spec.n_edges() {
+                return Err(format!(
+                    "edge conservation {total} != {}",
+                    spec.n_edges()
+                ));
+            }
+            for s in &stores {
+                if s.threads.len() != threads {
+                    return Err("thread count".into());
+                }
+                for te in &s.threads {
+                    if *te.offsets.last().unwrap() as usize != te.post.len() {
+                        return Err("csr tail mismatch".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,208 @@
+//! Engine checkpointing: snapshot a rank's complete dynamical state and
+//! resume bit-exactly. A long brain simulation on a shared machine (the
+//! paper's runs burn node-hours on Fugaku) needs restartability; the
+//! deterministic substrate makes it exact here.
+//!
+//! The snapshot covers everything that evolves: step counter, LIF state,
+//! both input rings, the pending spike list, plastic weights and STDP
+//! traces. Static structure (the indegree store layout) is *not* saved —
+//! it regenerates deterministically from the spec, which keeps
+//! checkpoints small (O(neurons + ring) instead of O(synapses)) except
+//! for plastic weights, which are dynamical and are saved.
+//!
+//! Consistency contract: checkpoint at a **window boundary, before
+//! `enqueue_remote`** (i.e. right after `run_rank`'s exchange completes
+//! and before the next window starts) so no spikes are in flight.
+//! `checkpoint_window` drives a window-aligned run loop for single-rank
+//! engines; multi-rank restart additionally requires replaying the same
+//! window schedule on every rank.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use super::RankEngine;
+use crate::Step;
+
+const MAGIC: u64 = 0x434f52_54455831; // "CORTEX1"
+
+fn put_u64(w: &mut impl Write, x: u64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn get_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn put_f64s(w: &mut impl Write, xs: &[f64]) -> Result<()> {
+    put_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn get_f64s(r: &mut impl Read) -> Result<Vec<f64>> {
+    let n = get_u64(r)? as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut b = [0u8; 8];
+    for _ in 0..n {
+        r.read_exact(&mut b)?;
+        out.push(f64::from_le_bytes(b));
+    }
+    Ok(out)
+}
+
+impl RankEngine {
+    /// Serialize the dynamical state (see module docs for the
+    /// consistency contract).
+    pub fn checkpoint(&self, w: &mut impl Write) -> Result<()> {
+        put_u64(w, MAGIC)?;
+        put_u64(w, self.rank as u64)?;
+        put_u64(w, self.step)?;
+        put_u64(w, self.total_spikes)?;
+        put_f64s(w, &self.state.u)?;
+        put_f64s(w, &self.state.ie)?;
+        put_f64s(w, &self.state.ii)?;
+        put_f64s(w, &self.state.refrac)?;
+        self.ring_e.save(w)?;
+        self.ring_i.save(w)?;
+        // pending spikes
+        put_u64(w, self.pending.len() as u64)?;
+        for &(p, emit) in &self.pending {
+            put_u64(w, p as u64)?;
+            put_u64(w, emit)?;
+        }
+        // plastic weights + traces
+        match &self.stdp {
+            None => put_u64(w, 0)?,
+            Some(s) => {
+                put_u64(w, 1)?;
+                for te in &self.store.threads {
+                    put_f64s(w, &te.weight)?;
+                }
+                s.pre_traces.save(w)?;
+                s.post_traces.save(w)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Restore a checkpoint written by [`Self::checkpoint`] into an
+    /// engine freshly built from the same spec/partition/options.
+    pub fn restore(&mut self, r: &mut impl Read) -> Result<()> {
+        if get_u64(r)? != MAGIC {
+            bail!("not a CORTEX checkpoint");
+        }
+        let rank = get_u64(r)?;
+        if rank != self.rank as u64 {
+            bail!("checkpoint is for rank {rank}, engine is {}", self.rank);
+        }
+        self.step = get_u64(r)?;
+        self.total_spikes = get_u64(r)?;
+        let n = self.state.len();
+        let load = |xs: Vec<f64>, want: usize| -> Result<Vec<f64>> {
+            if xs.len() != want {
+                bail!("checkpoint shape mismatch: {} vs {want}", xs.len());
+            }
+            Ok(xs)
+        };
+        self.state.u = load(get_f64s(r)?, n)?;
+        self.state.ie = load(get_f64s(r)?, n)?;
+        self.state.ii = load(get_f64s(r)?, n)?;
+        self.state.refrac = load(get_f64s(r)?, n)?;
+        self.ring_e.load(r).context("ring_e")?;
+        self.ring_i.load(r).context("ring_i")?;
+        let np = get_u64(r)? as usize;
+        self.pending.clear();
+        for _ in 0..np {
+            let p = get_u64(r)? as u32;
+            let emit = get_u64(r)?;
+            self.pending.push((p, emit));
+        }
+        let has_stdp = get_u64(r)? == 1;
+        if has_stdp != self.stdp.is_some() {
+            bail!("checkpoint plasticity flag mismatch");
+        }
+        if let Some(s) = &mut self.stdp {
+            for te in &mut self.store.threads {
+                let w = get_f64s(r)?;
+                if w.len() != te.weight.len() {
+                    bail!("plastic weight shape mismatch");
+                }
+                te.weight = w;
+            }
+            s.pre_traces.load(r).context("pre_traces")?;
+            s.post_traces.load(r).context("post_traces")?;
+        }
+        Ok(())
+    }
+
+    /// Run `windows` min-delay windows on a single-rank engine (no
+    /// exchange), window-aligned so the result can be checkpointed and
+    /// resumed exactly. Returns emitted spikes as (step, gid).
+    pub fn run_windows_solo(&mut self, windows: u64) -> Vec<(Step, u32)> {
+        assert_eq!(
+            self.spec.min_delay_steps >= 1,
+            true,
+            "window size must be positive"
+        );
+        let m = self.spec.min_delay_steps as u64;
+        let mut events = Vec::new();
+        for _ in 0..windows {
+            let mut outbox = Vec::new();
+            for _ in 0..m {
+                self.step_once(&mut outbox);
+            }
+            for msg in outbox {
+                events.push((msg.step as Step, msg.gid));
+            }
+        }
+        events
+    }
+}
+
+// persistence hooks for the containers (kept here so the main modules
+// stay serialization-free)
+impl super::ring::InputRing {
+    pub fn save(&self, w: &mut impl Write) -> Result<()> {
+        put_u64(w, self.len as u64)?;
+        put_f64s(w, self.raw())
+    }
+
+    pub fn load(&mut self, r: &mut impl Read) -> Result<()> {
+        let len = get_u64(r)? as usize;
+        if len != self.len {
+            bail!("ring length mismatch: {len} vs {}", self.len);
+        }
+        let buf = get_f64s(r)?;
+        self.raw_mut().copy_from_slice(&buf);
+        Ok(())
+    }
+}
+
+impl crate::model::stdp::TraceSet {
+    pub fn save(&self, w: &mut impl Write) -> Result<()> {
+        let (value, last) = self.raw();
+        put_f64s(w, value)?;
+        put_u64(w, last.len() as u64)?;
+        for &x in last {
+            put_u64(w, x)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(&mut self, r: &mut impl Read) -> Result<()> {
+        let value = get_f64s(r)?;
+        let n = get_u64(r)? as usize;
+        let mut last = Vec::with_capacity(n);
+        for _ in 0..n {
+            last.push(get_u64(r)?);
+        }
+        self.raw_restore(value, last)
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}

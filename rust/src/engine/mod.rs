@@ -1,0 +1,822 @@
+//! The CORTEX per-rank simulation engine (paper §III.B-C, Fig 16/17).
+//!
+//! Each rank owns the indegree sub-graph of its post-neurons
+//! ([`RankStore`]) and advances it with `n_threads` compute threads whose
+//! write sets are **provably disjoint** (graph::algebra, eq. 14): thread
+//! `t` owns a contiguous local-post range, the edges targeting it, their
+//! ring-buffer rows and plastic state. The synaptic hot loop therefore
+//! runs without a single mutex or atomic; with `verify_ownership` the
+//! engine additionally carries the paper's verification check ("if an
+//! edge or post-vertex is accessed by different threads, Abort").
+//!
+//! Per-step pipeline (paper Fig 17's circulatory dataflow):
+//!   1. **deliver** — every thread walks its delay-sorted edge runs for
+//!      all pending spikes, accumulating weights into ring slots
+//!      `emit + delay` (and applying STDP depression);
+//!   2. **integrate** — every thread consumes its ring slot + Poisson
+//!      drive and advances the LIF propagator (or the rank executes the
+//!      AOT PJRT artifact) collecting new spikes;
+//!   3. **plasticity** — spiking posts potentiate their incoming plastic
+//!      edges (thread-owned);
+//!   4. **exchange** — once per min-delay window, spiking gids are
+//!      broadcast; in [`CommMode::Overlap`] a dedicated communication
+//!      thread runs the exchange while the next window computes.
+
+pub mod checkpoint;
+pub mod ring;
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::atlas::NetworkSpec;
+use crate::comm::{Communicator, LocalCluster, SpikeMsg, SpikePacket};
+use crate::config::{CommMode, DynamicsBackend, MappingKind};
+use crate::decomp::{
+    area_processes_partition, random_equivalent_partition, Partition,
+    RankStore,
+};
+use crate::metrics::memory::{vec_bytes, MemoryBreakdown, MemoryReport};
+use crate::metrics::{PhaseTimer, SpikeRecorder};
+use crate::model::lif::{LifState, Propagators};
+use crate::model::stdp::{StdpParams, TraceSet};
+use crate::model::poisson::PreparedPoisson;
+use crate::{Gid, Step};
+use ring::InputRing;
+
+/// Engine knobs (a validated subset of [`crate::config::ExperimentConfig`]).
+#[derive(Clone, Debug)]
+pub struct EngineOptions {
+    pub n_threads: usize,
+    pub comm: CommMode,
+    pub backend: DynamicsBackend,
+    /// Record spikes of gids below this bound (None = no raster).
+    pub record_limit: Option<Gid>,
+    /// Compile the paper's thread-ownership abort check into the hot loop.
+    pub verify_ownership: bool,
+    /// Where the AOT artifacts live (PJRT backend).
+    pub artifacts_dir: String,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            n_threads: 1,
+            comm: CommMode::Overlap,
+            backend: DynamicsBackend::Native,
+            record_limit: None,
+            verify_ownership: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// Plasticity state of one rank.
+struct StdpRank {
+    params: StdpParams,
+    /// Traces of all pres (local + remote) — read-only in parallel phases.
+    pre_traces: TraceSet,
+    /// Traces of owned posts — split per thread.
+    post_traces: TraceSet,
+}
+
+/// One rank's engine.
+pub struct RankEngine {
+    pub rank: u16,
+    spec: Arc<NetworkSpec>,
+    pub store: RankStore,
+    state: LifState,
+    props: Vec<Propagators>,
+    ring_e: InputRing,
+    ring_i: InputRing,
+    stdp: Option<StdpRank>,
+    /// Spikes awaiting delivery: (pre index, emission step).
+    pending: Vec<(u32, Step)>,
+    drives: Vec<PreparedPoisson>,
+    pub recorder: SpikeRecorder,
+    pub timer: PhaseTimer,
+    step: Step,
+    opts: EngineOptions,
+    pjrt: Option<crate::runtime::PjrtLif>,
+    /// scratch buffers for the PJRT dynamics path
+    scratch_in: (Vec<f64>, Vec<f64>),
+    /// per-thread (in_e, in_i) scratch (no per-step allocation)
+    scratch: Vec<(Vec<f64>, Vec<f64>)>,
+    pub total_spikes: u64,
+}
+
+impl RankEngine {
+    pub fn new(
+        spec: Arc<NetworkSpec>,
+        store: RankStore,
+        opts: EngineOptions,
+    ) -> anyhow::Result<RankEngine> {
+        let props = spec.propagators();
+        let n = store.n_posts();
+        let pidx: Vec<u8> =
+            store.posts.iter().map(|&g| spec.pidx(g)).collect();
+        let mut state = LifState::new(n, &props, pidx);
+        for (i, &g) in store.posts.iter().enumerate() {
+            state.u[i] = spec.v_init(g);
+        }
+        let ring_len = store.max_delay as usize + 1;
+        let stdp = spec.stdp.map(|params| StdpRank {
+            params,
+            pre_traces: TraceSet::new(
+                store.n_pres(),
+                params.tau_plus_ms,
+                spec.dt_ms,
+            ),
+            post_traces: TraceSet::new(n, params.tau_minus_ms, spec.dt_ms),
+        });
+        let drives: Vec<PreparedPoisson> = store
+            .posts
+            .iter()
+            .map(|&g| spec.drive(g).prepare(spec.dt_ms))
+            .collect();
+        let recorder = match opts.record_limit {
+            Some(lim) => SpikeRecorder::new(lim),
+            None => SpikeRecorder::disabled(),
+        };
+        let pjrt = match opts.backend {
+            DynamicsBackend::Native => None,
+            DynamicsBackend::Pjrt => Some(crate::runtime::PjrtLif::load(
+                &opts.artifacts_dir,
+                &spec,
+            )?),
+        };
+        let scratch: Vec<(Vec<f64>, Vec<f64>)> = store
+            .thread_ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                let span = (hi - lo) as usize;
+                (vec![0.0; span], vec![0.0; span])
+            })
+            .collect();
+        Ok(RankEngine {
+            rank: store.rank,
+            spec,
+            ring_e: InputRing::new(n, ring_len.max(2)),
+            ring_i: InputRing::new(n, ring_len.max(2)),
+            store,
+            state,
+            props,
+            stdp,
+            pending: Vec::new(),
+            drives,
+            recorder,
+            timer: PhaseTimer::new(),
+            step: 0,
+            opts,
+            pjrt,
+            scratch_in: (vec![0.0; n], vec![0.0; n]),
+            scratch,
+            total_spikes: 0,
+        })
+    }
+
+    pub fn step(&self) -> Step {
+        self.step
+    }
+
+    /// Enqueue spikes received from other ranks (window start).
+    pub fn enqueue_remote(&mut self, spikes: &[SpikeMsg]) {
+        for m in spikes {
+            if let Some(p) = self.store.pre_index_of(m.gid) {
+                self.pending.push((p, m.step as Step));
+                if let Some(s) = &mut self.stdp {
+                    s.pre_traces.bump(p, m.step as Step);
+                }
+            }
+        }
+    }
+
+    /// One integration step; spiking gids are appended to `outbox`.
+    pub fn step_once(&mut self, outbox: &mut SpikePacket) {
+        let now = self.step;
+        let n_threads = self.store.threads.len();
+        let pending = std::mem::take(&mut self.pending);
+        let mut worker_spikes: Vec<Vec<u32>> =
+            vec![Vec::new(); n_threads];
+        // per-worker [delivery_ns, integrate_ns] for the phase report
+        let mut worker_ns: Vec<[u64; 2]> = vec![[0, 0]; n_threads];
+
+        // -- phases 1-3: deliver / integrate / plasticity, thread-parallel
+        let native = self.pjrt.is_none();
+        {
+            let ranges = &self.store.thread_ranges;
+            let ring_e = self.ring_e.split_mut(ranges);
+            let ring_i = self.ring_i.split_mut(ranges);
+            let (post_traces, stdp_params, pre_traces) = match &mut self.stdp
+            {
+                Some(s) => (
+                    Some(s.post_traces.split_mut(ranges)),
+                    Some(s.params),
+                    Some(&s.pre_traces),
+                ),
+                None => (None, None, None),
+            };
+            let mut post_traces = post_traces;
+
+            // split the LIF state SoA along thread ranges
+            let mut u: &mut [f64] = &mut self.state.u;
+            let mut ie: &mut [f64] = &mut self.state.ie;
+            let mut ii: &mut [f64] = &mut self.state.ii;
+            let mut refrac: &mut [f64] = &mut self.state.refrac;
+            let pidx: &[u8] = &self.state.pidx;
+            let props: &[Propagators] = &self.props;
+            let drives: &[PreparedPoisson] = &self.drives;
+            let pending_ref: &[(u32, Step)] = &pending;
+            let verify = self.opts.verify_ownership;
+            let seed = self.spec.seed;
+            let posts: &[Gid] = &self.store.posts;
+
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                let mut ring_e_iter = ring_e.into_iter();
+                let mut ring_i_iter = ring_i.into_iter();
+                for ((((t, te), spikes_out), phase_ns), scratch_t) in self
+                    .store
+                    .threads
+                    .iter_mut()
+                    .enumerate()
+                    .zip(worker_spikes.iter_mut())
+                    .zip(worker_ns.iter_mut())
+                    .zip(self.scratch.iter_mut())
+                {
+                    let (lo, hi) = ranges[t];
+                    let span = (hi - lo) as usize;
+                    let (u_t, u_rest) = u.split_at_mut(span);
+                    let (ie_t, ie_rest) = ie.split_at_mut(span);
+                    let (ii_t, ii_rest) = ii.split_at_mut(span);
+                    let (r_t, r_rest) = refrac.split_at_mut(span);
+                    u = u_rest;
+                    ie = ie_rest;
+                    ii = ii_rest;
+                    refrac = r_rest;
+                    let mut re = ring_e_iter.next().unwrap();
+                    let mut ri = ring_i_iter.next().unwrap();
+                    let mut pt =
+                        post_traces.as_mut().map(|v| v.remove(0));
+
+                    let mut work = move || {
+                        let t0 = std::time::Instant::now();
+                        // ---- phase 1: delivery ------------------------
+                        // Ring slots advance monotonically within a
+                        // delay-sorted run (paper Fig 12b/15), so the
+                        // wrap is a subtract, not a division per edge.
+                        let ring_len = re.len() as Step;
+                        for &(p, emit) in pending_ref {
+                            let run = te.run(p as usize);
+                            if run.is_empty() {
+                                continue;
+                            }
+                            let mut prev_delay = te.delay[run.start] as Step;
+                            let mut slot =
+                                ((emit + prev_delay) % ring_len) as usize;
+                            for ei in run {
+                                let post = te.post[ei];
+                                if verify && !(post >= lo && post < hi) {
+                                    // the paper's verification: Abort
+                                    panic!(
+                                        "DATA RACE: thread {t} touched \
+                                         post {post} outside [{lo},{hi})"
+                                    );
+                                }
+                                let delay = te.delay[ei] as Step;
+                                debug_assert!(delay >= prev_delay);
+                                slot += (delay - prev_delay) as usize;
+                                while slot >= ring_len as usize {
+                                    slot -= ring_len as usize;
+                                }
+                                prev_delay = delay;
+                                let mut w = te.weight[ei];
+                                if let (Some(params), Some(pt)) =
+                                    (stdp_params.as_ref(), pt.as_ref())
+                                {
+                                    if te.plastic[ei] {
+                                        // depression at (extrapolated)
+                                        // arrival time
+                                        let x = pt.at(post, emit + delay);
+                                        w = params.depress(w, x);
+                                        te.weight[ei] = w;
+                                    }
+                                }
+                                if w >= 0.0 {
+                                    re.add_at(post as usize, slot, w);
+                                } else {
+                                    ri.add_at(post as usize, slot, w);
+                                }
+                            }
+                        }
+
+                        phase_ns[0] = t0.elapsed().as_nanos() as u64;
+                        let t1 = std::time::Instant::now();
+
+                        // ---- phase 2: integrate -----------------------
+                        // (a fused ring+drive+LIF single pass was tried
+                        // and measured slower — see EXPERIMENTS.md §Perf)
+                        if native {
+                            let (in_e, in_i) = scratch_t;
+                            let now_slot = re.slot(now);
+                            for i in 0..span {
+                                let post = lo as usize + i;
+                                let mut e = re.take_at(post, now_slot);
+                                let inh = ri.take_at(post, now_slot);
+                                let d = &drives[post];
+                                if !d.is_off() {
+                                    let x =
+                                        d.sample(seed, posts[post], now);
+                                    if x >= 0.0 {
+                                        e += x;
+                                    }
+                                }
+                                in_e[i] = e;
+                                in_i[i] = inh;
+                            }
+                            // step in place over the borrowed slices
+                            step_slices(
+                                u_t, ie_t, ii_t, r_t,
+                                &pidx[lo as usize..hi as usize],
+                                in_e, in_i, props, spikes_out,
+                            );
+
+                            // ---- phase 3: plasticity ------------------
+                            if let (Some(params), Some(pt), Some(pre_tr)) = (
+                                stdp_params.as_ref(),
+                                pt.as_mut(),
+                                pre_traces,
+                            ) {
+                                for &ls in spikes_out.iter() {
+                                    let post = lo + ls;
+                                    // potentiate incoming plastic edges
+                                    let b = ls as usize;
+                                    let r0 = te.plastic_by_post_offsets[b]
+                                        as usize;
+                                    let r1 = te.plastic_by_post_offsets
+                                        [b + 1]
+                                        as usize;
+                                    for k in r0..r1 {
+                                        let ei = te.plastic_by_post_edge[k]
+                                            as usize;
+                                        let x = pre_tr
+                                            .at(te.epre[ei], now);
+                                        te.weight[ei] = params
+                                            .potentiate(te.weight[ei], x);
+                                    }
+                                    pt.bump(post, now);
+                                }
+                            }
+                        } else {
+                            // PJRT backend: threads only deliver; the
+                            // dynamics run below on the rank thread.
+                        }
+                        phase_ns[1] = t1.elapsed().as_nanos() as u64;
+                    };
+                    if n_threads == 1 {
+                        work();
+                    } else {
+                        handles.push(scope.spawn(work));
+                    }
+                }
+                for h in handles {
+                    h.join().expect("worker thread panicked");
+                }
+            });
+        }
+
+        // -- PJRT dynamics (serial per rank over the AOT artifact) -------
+        if !native {
+            let n = self.store.n_posts();
+            let (in_e, in_i) = &mut self.scratch_in;
+            for i in 0..n {
+                let mut e = self.ring_e.take(i, now);
+                let inh = self.ring_i.take(i, now);
+                let d = &self.drives[i];
+                if !d.is_off() {
+                    let x = d.sample(
+                        self.spec.seed,
+                        self.store.posts[i],
+                        now,
+                    );
+                    if x >= 0.0 {
+                        e += x;
+                    }
+                }
+                in_e[i] = e;
+                in_i[i] = inh;
+            }
+            let spiked = self
+                .pjrt
+                .as_mut()
+                .unwrap()
+                .step(&mut self.state, in_e, in_i)
+                .expect("pjrt step failed");
+            worker_spikes[0].extend(spiked);
+            // plasticity for PJRT backend (serial, still post-owned)
+            if let Some(s) = &mut self.stdp {
+                for &ls in &worker_spikes[0] {
+                    let t = self.store.thread_of(ls) as usize;
+                    let te = &mut self.store.threads[t];
+                    let (lo, _) = self.store.thread_ranges[t];
+                    let b = (ls - lo) as usize;
+                    let r0 = te.plastic_by_post_offsets[b] as usize;
+                    let r1 = te.plastic_by_post_offsets[b + 1] as usize;
+                    for k in r0..r1 {
+                        let ei = te.plastic_by_post_edge[k] as usize;
+                        let x = s.pre_traces.at(te.epre[ei], now);
+                        te.weight[ei] = s.params.potentiate(te.weight[ei], x);
+                    }
+                    s.post_traces.bump(ls, now);
+                }
+            }
+        }
+
+        for ns in &worker_ns {
+            self.timer.add("deliver", ns[0] as u128);
+            self.timer.add("integrate", ns[1] as u128);
+        }
+
+        // -- collect spikes, refill pending, feed outbox ------------------
+        for (t, spikes) in worker_spikes.iter().enumerate() {
+            let lo = if native { self.store.thread_ranges[t].0 } else { 0 };
+            for &ls in spikes {
+                let local = lo + ls;
+                let gid = self.store.posts[local as usize];
+                self.total_spikes += 1;
+                self.recorder.record(now, gid);
+                outbox.push(SpikeMsg { gid, step: now as u32 });
+                // deliver locally next step if we have edges from it
+                if let Some(p) = self.store.pre_index_of(gid) {
+                    self.pending.push((p, now));
+                    if let Some(s) = &mut self.stdp {
+                        s.pre_traces.bump(p, now);
+                    }
+                }
+            }
+        }
+
+        self.step += 1;
+    }
+
+    /// Per-rank heap accounting (the Fig 18 memory panel's quantity).
+    pub fn memory(&self) -> MemoryBreakdown {
+        let mut m = self.store.memory();
+        m.add("state", self.state.bytes());
+        m.add("rings", self.ring_e.bytes() + self.ring_i.bytes());
+        m.add("drives", vec_bytes(&self.drives));
+        if let Some(s) = &self.stdp {
+            m.add("traces", s.pre_traces.bytes() + s.post_traces.bytes());
+        }
+        m
+    }
+}
+
+/// Advance one thread's state slices (the split-borrow twin of
+/// `model::lif::step_slice`, operating on raw slices).
+#[allow(clippy::too_many_arguments)]
+fn step_slices(
+    u: &mut [f64],
+    ie: &mut [f64],
+    ii: &mut [f64],
+    refrac: &mut [f64],
+    pidx: &[u8],
+    in_e: &[f64],
+    in_i: &[f64],
+    props: &[Propagators],
+    spikes: &mut Vec<u32>,
+) {
+    for i in 0..u.len() {
+        let p = &props[pidx[i] as usize];
+        let (mut u_new, mut r_new);
+        if refrac[i] > 0.0 {
+            u_new = p.v_reset;
+            r_new = refrac[i] - 1.0;
+        } else {
+            u_new = p.e_l
+                + (u[i] - p.e_l) * p.p22
+                + ie[i] * p.p21e
+                + ii[i] * p.p21i
+                + p.i_ext * p.p20;
+            r_new = refrac[i];
+            if u_new >= p.v_th {
+                u_new = p.v_reset;
+                r_new = p.ref_steps as f64;
+                spikes.push(i as u32);
+            }
+        }
+        u[i] = u_new;
+        refrac[i] = r_new;
+        ie[i] = ie[i] * p.p11e + in_e[i];
+        ii[i] = ii[i] * p.p11i + in_i[i];
+    }
+}
+
+// ---------------------------------------------------------------------
+// Window-driven rank loop + communication drivers
+// ---------------------------------------------------------------------
+
+/// Spike-exchange driver: serialized (blocking at window end) or
+/// overlapped via a dedicated communication thread (paper §III.C.2).
+enum CommDriver {
+    Serialized {
+        comm: Box<dyn Communicator>,
+        staged: Option<SpikePacket>,
+    },
+    Overlap {
+        req: Sender<SpikePacket>,
+        resp: Receiver<SpikePacket>,
+        handle: JoinHandle<Box<dyn Communicator>>,
+        in_flight: bool,
+    },
+}
+
+impl CommDriver {
+    fn new(comm: Box<dyn Communicator>, mode: CommMode) -> CommDriver {
+        match mode {
+            CommMode::Serialized => {
+                CommDriver::Serialized { comm, staged: None }
+            }
+            CommMode::Overlap => {
+                let (req_tx, req_rx) = channel::<SpikePacket>();
+                let (resp_tx, resp_rx) = channel::<SpikePacket>();
+                let mut comm = comm;
+                let handle = std::thread::spawn(move || {
+                    // the dedicated communication thread: drains exchange
+                    // requests until the engine hangs up
+                    while let Ok(pkt) = req_rx.recv() {
+                        let got = comm.exchange(pkt);
+                        if resp_tx.send(got).is_err() {
+                            break;
+                        }
+                    }
+                    comm
+                });
+                CommDriver::Overlap {
+                    req: req_tx,
+                    resp: resp_rx,
+                    handle,
+                    in_flight: false,
+                }
+            }
+        }
+    }
+
+    /// Submit this window's spikes for exchange.
+    fn submit(&mut self, pkt: SpikePacket) {
+        match self {
+            CommDriver::Serialized { comm, staged } => {
+                debug_assert!(staged.is_none());
+                *staged = Some(comm.exchange(pkt));
+            }
+            CommDriver::Overlap { req, in_flight, .. } => {
+                debug_assert!(!*in_flight);
+                req.send(pkt).expect("comm thread died");
+                *in_flight = true;
+            }
+        }
+    }
+
+    /// Receive the previously submitted window's remote spikes.
+    fn recv_completed(&mut self) -> SpikePacket {
+        match self {
+            CommDriver::Serialized { staged, .. } => {
+                staged.take().unwrap_or_default()
+            }
+            CommDriver::Overlap { resp, in_flight, .. } => {
+                if *in_flight {
+                    *in_flight = false;
+                    resp.recv().expect("comm thread died")
+                } else {
+                    Vec::new()
+                }
+            }
+        }
+    }
+
+    /// Tear down; returns the communicator for its statistics.
+    fn finish(self) -> Box<dyn Communicator> {
+        match self {
+            CommDriver::Serialized { comm, .. } => comm,
+            CommDriver::Overlap { req, resp, handle, in_flight } => {
+                if in_flight {
+                    let _ = resp.recv();
+                }
+                drop(req);
+                handle.join().expect("comm thread panicked")
+            }
+        }
+    }
+}
+
+/// Result of one rank's run.
+pub struct RankOutput {
+    pub rank: u16,
+    pub recorder: SpikeRecorder,
+    pub timer: PhaseTimer,
+    pub memory: MemoryBreakdown,
+    pub total_spikes: u64,
+    pub comm_bytes: u64,
+    pub windows: u64,
+    /// store + engine construction time (not simulation)
+    pub build_seconds: f64,
+}
+
+/// Drive one rank for `steps` steps with window-batched spike exchange.
+pub fn run_rank(
+    mut engine: RankEngine,
+    comm: Box<dyn Communicator>,
+    mode: CommMode,
+    steps: Step,
+) -> RankOutput {
+    let m = engine.spec.min_delay_steps as Step;
+    let mut driver = CommDriver::new(comm, mode);
+    let mut done: Step = 0;
+    while done < steps {
+        // window start: pick up the previous window's exchange
+        let incoming =
+            engine.timer.time("comm_wait", || driver.recv_completed());
+        engine.enqueue_remote(&incoming);
+
+        let mut outbox = Vec::new();
+        let this_window = m.min(steps - done);
+        for _ in 0..this_window {
+            let t0 = std::time::Instant::now();
+            engine.step_once(&mut outbox);
+            engine.timer.add("compute", t0.elapsed().as_nanos());
+        }
+        done += this_window;
+
+        engine.timer.time("comm_submit", || driver.submit(outbox));
+    }
+    let comm = driver.finish();
+    RankOutput {
+        rank: engine.rank,
+        recorder: engine.recorder.clone(),
+        timer: engine.timer.clone(),
+        memory: engine.memory(),
+        total_spikes: engine.total_spikes,
+        comm_bytes: comm.bytes_sent(),
+        windows: comm.exchanges(),
+        build_seconds: 0.0,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Whole-simulation orchestration
+// ---------------------------------------------------------------------
+
+/// Run options for a full multi-rank simulation.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub ranks: usize,
+    pub threads: usize,
+    pub mapping: MappingKind,
+    pub comm: CommMode,
+    pub backend: DynamicsBackend,
+    pub steps: Step,
+    pub record_limit: Option<Gid>,
+    pub verify_ownership: bool,
+    pub artifacts_dir: String,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            ranks: 2,
+            threads: 2,
+            mapping: MappingKind::AreaProcesses,
+            comm: CommMode::Overlap,
+            backend: DynamicsBackend::Native,
+            steps: 1000,
+            record_limit: None,
+            verify_ownership: false,
+            artifacts_dir: "artifacts".into(),
+            seed: 1,
+        }
+    }
+}
+
+/// Merged output of a full run.
+pub struct RunOutput {
+    pub raster: SpikeRecorder,
+    /// Critical-path timer (max over ranks per phase).
+    pub timer_max: PhaseTimer,
+    /// Aggregate timer (sum over ranks).
+    pub timer_sum: PhaseTimer,
+    pub memory: MemoryReport,
+    pub total_spikes: u64,
+    /// Simulation wall time (the paper's Fig 18 quantity) — excludes
+    /// network construction.
+    pub wall_seconds: f64,
+    /// Network construction time (per-rank max): indegree sub-graph
+    /// generation + (pre, delay) edge layout.
+    pub build_seconds: f64,
+    pub comm_bytes: u64,
+    pub windows: u64,
+    pub partition: Partition,
+}
+
+/// Partition the network and run it on `cfg.ranks` simulated ranks.
+pub fn run_simulation(
+    spec: &Arc<NetworkSpec>,
+    cfg: &RunConfig,
+) -> anyhow::Result<RunOutput> {
+    let partition = Arc::new(match cfg.mapping {
+        MappingKind::AreaProcesses => {
+            area_processes_partition(spec, cfg.ranks, cfg.seed)
+        }
+        MappingKind::RandomEquivalent => {
+            random_equivalent_partition(spec.n_total(), cfg.ranks, cfg.seed)
+        }
+    });
+    let comms = LocalCluster::new(cfg.ranks);
+    // all ranks finish construction before simulation timing starts, so
+    // build and simulation wall-clock separate cleanly (the paper's
+    // Fig 18 reports simulation time)
+    let barrier = Arc::new(std::sync::Barrier::new(cfg.ranks));
+
+    let outputs: Vec<(RankOutput, f64)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (r, comm) in comms.into_iter().enumerate() {
+            let spec = Arc::clone(spec);
+            let partition = Arc::clone(&partition);
+            let barrier = Arc::clone(&barrier);
+            let cfg = cfg.clone();
+            handles.push(scope.spawn(
+                move || -> anyhow::Result<(RankOutput, f64)> {
+                let t_build = std::time::Instant::now();
+                let members = &partition.members[r];
+                let rank_of = &partition.rank_of;
+                let store = RankStore::build(
+                    &spec,
+                    members,
+                    |g| rank_of[g as usize] as usize == r,
+                    r as u16,
+                    cfg.threads,
+                );
+                let engine = RankEngine::new(
+                    Arc::clone(&spec),
+                    store,
+                    EngineOptions {
+                        n_threads: cfg.threads,
+                        comm: cfg.comm,
+                        backend: cfg.backend,
+                        record_limit: cfg.record_limit,
+                        verify_ownership: cfg.verify_ownership,
+                        artifacts_dir: cfg.artifacts_dir.clone(),
+                    },
+                )?;
+                let build_seconds = t_build.elapsed().as_secs_f64();
+                barrier.wait();
+                let t_sim = std::time::Instant::now();
+                let mut out =
+                    run_rank(engine, Box::new(comm), cfg.comm, cfg.steps);
+                out.build_seconds = build_seconds;
+                Ok((out, t_sim.elapsed().as_secs_f64()))
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect::<anyhow::Result<Vec<_>>>()
+    })?;
+
+    let mut raster = SpikeRecorder::new(
+        cfg.record_limit.unwrap_or(0),
+    );
+    let mut timer_max = PhaseTimer::new();
+    let mut timer_sum = PhaseTimer::new();
+    let mut per_rank_mem = Vec::new();
+    let mut total_spikes = 0;
+    let mut comm_bytes = 0;
+    let mut windows = 0;
+    let mut wall_seconds: f64 = 0.0;
+    let mut build_seconds: f64 = 0.0;
+    for (o, sim_s) in &outputs {
+        raster.merge(&o.recorder);
+        timer_max.merge_max(&o.timer);
+        timer_sum.merge(&o.timer);
+        per_rank_mem.push(o.memory.clone());
+        total_spikes += o.total_spikes;
+        comm_bytes += o.comm_bytes;
+        windows = windows.max(o.windows);
+        wall_seconds = wall_seconds.max(*sim_s);
+        build_seconds = build_seconds.max(o.build_seconds);
+    }
+    raster.events.sort_unstable();
+    Ok(RunOutput {
+        raster,
+        timer_max,
+        timer_sum,
+        memory: MemoryReport::new(per_rank_mem),
+        total_spikes,
+        wall_seconds,
+        build_seconds,
+        comm_bytes,
+        windows,
+        partition: Arc::try_unwrap(partition)
+            .unwrap_or_else(|a| (*a).clone()),
+    })
+}

@@ -1,0 +1,268 @@
+//! The sub-graph algebra of paper §II.A.1-2: binary operations ⊼ (meet,
+//! component-wise ∩) and ⊻ (join, component-wise ∪) on sub-graph triplets
+//! (eq. 7), the homomorphism `*S(Va) ⊛ *S(Vb) = *S(Va ⊙ Vb)` (eq. 8), and
+//! the disjoint-write-set results of eq. (13)-(15) that justify choosing
+//! indegree sub-graphs for parallelisation.
+
+
+use super::subgraph::SubGraph;
+
+/// ⊼: component-wise intersection of two same-kind sub-graphs (eq. 7).
+pub fn meet(a: &SubGraph, b: &SubGraph) -> SubGraph {
+    assert_eq!(a.kind, b.kind, "meet requires same sub-graph kind");
+    SubGraph {
+        kind: a.kind,
+        pre: a.pre.intersection(&b.pre).copied().collect(),
+        post: a.post.intersection(&b.post).copied().collect(),
+        edges: a.edges.intersection(&b.edges).copied().collect(),
+    }
+}
+
+/// ⊻: component-wise union of two same-kind sub-graphs (eq. 7).
+pub fn join(a: &SubGraph, b: &SubGraph) -> SubGraph {
+    assert_eq!(a.kind, b.kind, "join requires same sub-graph kind");
+    SubGraph {
+        kind: a.kind,
+        pre: a.pre.union(&b.pre).copied().collect(),
+        post: a.post.union(&b.post).copied().collect(),
+        edges: a.edges.union(&b.edges).copied().collect(),
+    }
+}
+
+/// The dependency between two sub-graphs during parallel synaptic
+/// interaction (eq. 12): the overlap of their write sets. Empty ⇒ the two
+/// can run on different threads/processes with no mutex or atomic.
+pub fn write_conflict(a: &SubGraph, b: &SubGraph) -> SubGraph {
+    meet(a, b)
+}
+
+/// Check eq. (14)/(15): given sub-graphs built over *disjoint* vertex
+/// sets, return whether their post-vertex and edge sets overlap.
+pub fn has_write_race(a: &SubGraph, b: &SubGraph) -> bool {
+    let c = write_conflict(a, b);
+    !c.post.is_empty() || !c.edges.is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::digraph::{DiGraph, Edge};
+    use crate::graph::subgraph::SubGraphKind;
+    use crate::util::proptest_lite::{property, Gen};
+    use crate::Gid;
+    use std::collections::BTreeSet;
+
+    /// Random directed graph for property tests.
+    fn random_graph(g: &mut Gen) -> DiGraph {
+        let n = g.usize(2..40);
+        let m = g.usize(0..200);
+        let edges: Vec<Edge> = (0..m)
+            .map(|_| Edge {
+                pre: g.u32(0..n as u32),
+                post: g.u32(0..n as u32),
+                weight: g.f64(-2.0, 2.0),
+                delay: g.u32(1..15) as u16,
+            })
+            .collect();
+        // dedup (pre, post) pairs so edge-set semantics are exact
+        let mut seen = BTreeSet::new();
+        let edges: Vec<Edge> = edges
+            .into_iter()
+            .filter(|e| seen.insert((e.pre, e.post)))
+            .collect();
+        DiGraph::new(n, edges)
+    }
+
+    fn vset(g: &mut Gen, n: u32, p: f64) -> BTreeSet<Gid> {
+        g.subset(n, p).into_iter().collect()
+    }
+
+    /// Eq. (8): `S(Va) ⊛ S(Vb) = S(Va ⊙ Vb)`.
+    ///
+    /// The join (⊻, ∪) homomorphism holds exactly in all three components.
+    /// For the meet (⊼, ∩) the *post and edge* components — the ones all of
+    /// the paper's later arguments (eq. 13-15) actually use — agree exactly,
+    /// while the pre component of `S(Va) ⊼ S(Vb)` is only a superset of
+    /// `S(Va ∩ Vb)`'s: a source feeding Va\Vb and Vb\Va sits in both
+    /// pre-sets yet has no edge onto Va ∩ Vb. The paper's own eq. (14)
+    /// writes the meet's pre component as the component-wise intersection,
+    /// i.e. it adopts the ⊛-side as the definition; we verify exactly that
+    /// relationship.
+    #[test]
+    fn homomorphism_eq8_meet_and_join() {
+        for kind in [SubGraphKind::In, SubGraphKind::Out] {
+            property(
+                match kind {
+                    SubGraphKind::In => "eq8 homomorphism (indegree)",
+                    SubGraphKind::Out => "eq8 homomorphism (outdegree)",
+                },
+                60,
+                |g| {
+                    let graph = random_graph(g);
+                    let n = graph.n_vertices() as u32;
+                    let va = vset(g, n, 0.4);
+                    let vb = vset(g, n, 0.4);
+                    let sa = SubGraph::of(&graph, kind, &va);
+                    let sb = SubGraph::of(&graph, kind, &vb);
+
+                    // S(Va) ⊻ S(Vb) = S(Va ∪ Vb)  — exact in all components
+                    let union_v: BTreeSet<Gid> =
+                        va.union(&vb).copied().collect();
+                    if join(&sa, &sb) != SubGraph::of(&graph, kind, &union_v) {
+                        return Err("join homomorphism violated".into());
+                    }
+
+                    // S(Va) ⊼ S(Vb) vs S(Va ∩ Vb)
+                    let inter_v: BTreeSet<Gid> =
+                        va.intersection(&vb).copied().collect();
+                    let lhs = meet(&sa, &sb);
+                    let rhs = SubGraph::of(&graph, kind, &inter_v);
+                    if lhs.edges != rhs.edges {
+                        return Err("meet edge component violated".into());
+                    }
+                    // the defining vertex component (post for indegree, pre
+                    // for outdegree) is exact; the derived one is ⊇
+                    let (exact_ok, derived_ok) = match kind {
+                        SubGraphKind::In => (
+                            lhs.post == rhs.post,
+                            lhs.pre.is_superset(&rhs.pre),
+                        ),
+                        SubGraphKind::Out => (
+                            lhs.pre == rhs.pre,
+                            lhs.post.is_superset(&rhs.post),
+                        ),
+                    };
+                    if !exact_ok {
+                        return Err("meet defining component violated".into());
+                    }
+                    if !derived_ok {
+                        return Err("meet derived ⊇ relation violated".into());
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn meet_join_commutative_associative() {
+        property("⊼/⊻ commutative + associative", 40, |g| {
+            let graph = random_graph(g);
+            let n = graph.n_vertices() as u32;
+            let kind = if g.bool(0.5) { SubGraphKind::In } else { SubGraphKind::Out };
+            let sa = SubGraph::of(&graph, kind, &vset(g, n, 0.4));
+            let sb = SubGraph::of(&graph, kind, &vset(g, n, 0.4));
+            let sc = SubGraph::of(&graph, kind, &vset(g, n, 0.4));
+            if meet(&sa, &sb) != meet(&sb, &sa) {
+                return Err("meet not commutative".into());
+            }
+            if join(&sa, &sb) != join(&sb, &sa) {
+                return Err("join not commutative".into());
+            }
+            if meet(&meet(&sa, &sb), &sc) != meet(&sa, &meet(&sb, &sc)) {
+                return Err("meet not associative".into());
+            }
+            if join(&join(&sa, &sb), &sc) != join(&sa, &join(&sb, &sc)) {
+                return Err("join not associative".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Eq. (14) — the paper's key result: indegree sub-graphs over
+    /// DISJOINT vertex sets never share post-vertices or edges, so writes
+    /// need no synchronisation. The pre overlap may be non-empty (shared
+    /// read-only data), which is exactly eq. (14)'s (V_pre∩V_pre, ∅, ∅).
+    #[test]
+    fn eq14_indegree_disjoint_write_sets() {
+        property("eq14 indegree no write race", 80, |g| {
+            let graph = random_graph(g);
+            let n = graph.n_vertices() as u32;
+            let va = vset(g, n, 0.5);
+            let vb: BTreeSet<Gid> =
+                (0..n).filter(|v| !va.contains(v)).collect();
+            let sa = SubGraph::of(&graph, SubGraphKind::In, &va);
+            let sb = SubGraph::of(&graph, SubGraphKind::In, &vb);
+            if has_write_race(&sa, &sb) {
+                return Err("indegree sub-graphs raced".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Eq. (15) — outdegree sub-graphs over disjoint vertex sets CAN share
+    /// post-vertices (two sources in different parts hitting one target),
+    /// which is why the paper rejects them. We verify the conflict is of
+    /// the (∅, post∩post, ∅) shape and demonstrate a concrete race.
+    #[test]
+    fn eq15_outdegree_conflict_shape() {
+        property("eq15 outdegree conflict shape", 60, |g| {
+            let graph = random_graph(g);
+            let n = graph.n_vertices() as u32;
+            let va = vset(g, n, 0.5);
+            let vb: BTreeSet<Gid> =
+                (0..n).filter(|v| !va.contains(v)).collect();
+            let sa = SubGraph::of(&graph, SubGraphKind::Out, &va);
+            let sb = SubGraph::of(&graph, SubGraphKind::Out, &vb);
+            let c = write_conflict(&sa, &sb);
+            // pres disjoint by construction, edges disjoint (an edge's pre
+            // lives in exactly one part) — only posts may overlap
+            if !c.pre.is_empty() {
+                return Err("outdegree pres overlapped".into());
+            }
+            if !c.edges.is_empty() {
+                return Err("outdegree edges overlapped".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn eq15_outdegree_concrete_race_exists() {
+        // paper Fig 5: sources 1 and 6 in different parts both hit 9
+        let graph = DiGraph::new(
+            3,
+            vec![
+                Edge { pre: 0, post: 2, weight: 1.0, delay: 1 },
+                Edge { pre: 1, post: 2, weight: 1.0, delay: 1 },
+            ],
+        );
+        let sa = SubGraph::of(&graph, SubGraphKind::Out, &[0].into_iter().collect());
+        let sb = SubGraph::of(&graph, SubGraphKind::Out, &[1].into_iter().collect());
+        assert!(has_write_race(&sa, &sb), "expected the Fig 5 race");
+    }
+
+    /// Eq. (13): the spiking restriction distributes over the meet.
+    #[test]
+    fn eq13_spiking_distributes() {
+        property("eq13 spiking ⊼ distributivity", 50, |g| {
+            let graph = random_graph(g);
+            let n = graph.n_vertices() as u32;
+            let va = vset(g, n, 0.4);
+            let vb = vset(g, n, 0.4);
+            let spikes: BTreeSet<Gid> = vset(g, n, 0.3);
+            let kind = SubGraphKind::In;
+            let lhs = meet(
+                &SubGraph::of(&graph, kind, &va).spiking(&spikes),
+                &SubGraph::of(&graph, kind, &vb).spiking(&spikes),
+            );
+            let inter: BTreeSet<Gid> = va.intersection(&vb).copied().collect();
+            let rhs = SubGraph::of(&graph, kind, &inter).spiking(&spikes);
+            // compare edge sets (pre/post of both sides are derived from
+            // edges after the spiking restriction)
+            if lhs.edges != rhs.edges {
+                return Err("eq13 edge sets differ".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "same sub-graph kind")]
+    fn mixed_kind_meet_panics() {
+        let g = DiGraph::new(2, vec![]);
+        let a = SubGraph::of(&g, SubGraphKind::In, &[0].into_iter().collect());
+        let b = SubGraph::of(&g, SubGraphKind::Out, &[1].into_iter().collect());
+        let _ = meet(&a, &b);
+    }
+}

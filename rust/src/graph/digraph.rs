@@ -1,0 +1,180 @@
+//! Concrete directed graph with weights/delays and CSR adjacency.
+
+use crate::{DelaySteps, Gid};
+
+/// One synaptic interaction (directed edge pre → post).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub pre: Gid,
+    pub post: Gid,
+    pub weight: f64,
+    pub delay: DelaySteps,
+}
+
+/// Directed graph over vertices `0..n` with CSR indices in both directions.
+///
+/// `out_csr` answers "edges *from* v" (outdegree view), `in_csr` answers
+/// "edges *onto* v" (indegree view — the decomposition's native layout).
+#[derive(Clone, Debug)]
+pub struct DiGraph {
+    n: usize,
+    edges: Vec<Edge>,
+    /// CSR over `edges` sorted by pre: offsets[v]..offsets[v+1]
+    out_offsets: Vec<u32>,
+    out_order: Vec<u32>,
+    /// CSR over `edges` sorted by post
+    in_offsets: Vec<u32>,
+    in_order: Vec<u32>,
+}
+
+impl DiGraph {
+    pub fn new(n: usize, edges: Vec<Edge>) -> Self {
+        for e in &edges {
+            assert!((e.pre as usize) < n, "edge pre {} out of range", e.pre);
+            assert!((e.post as usize) < n, "edge post {} out of range", e.post);
+            assert!(e.delay >= 1, "synaptic delay must be >= 1 step");
+        }
+        let (out_offsets, out_order) =
+            build_csr(n, &edges, |e| e.pre as usize);
+        let (in_offsets, in_order) = build_csr(n, &edges, |e| e.post as usize);
+        DiGraph { n, edges, out_offsets, out_order, in_offsets, in_order }
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.n
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    /// Edges whose pre-synaptic neuron is `v`.
+    pub fn out_edges(&self, v: Gid) -> impl Iterator<Item = &Edge> + '_ {
+        let (a, b) = (
+            self.out_offsets[v as usize] as usize,
+            self.out_offsets[v as usize + 1] as usize,
+        );
+        self.out_order[a..b].iter().map(move |&i| &self.edges[i as usize])
+    }
+
+    /// Edges whose post-synaptic neuron is `v`.
+    pub fn in_edges(&self, v: Gid) -> impl Iterator<Item = &Edge> + '_ {
+        let (a, b) = (
+            self.in_offsets[v as usize] as usize,
+            self.in_offsets[v as usize + 1] as usize,
+        );
+        self.in_order[a..b].iter().map(move |&i| &self.edges[i as usize])
+    }
+
+    pub fn outdegree(&self, v: Gid) -> usize {
+        (self.out_offsets[v as usize + 1] - self.out_offsets[v as usize]) as usize
+    }
+
+    pub fn indegree(&self, v: Gid) -> usize {
+        (self.in_offsets[v as usize + 1] - self.in_offsets[v as usize]) as usize
+    }
+
+    /// Maximum synaptic delay (in steps); 1 for an edgeless graph.
+    pub fn max_delay(&self) -> DelaySteps {
+        self.edges.iter().map(|e| e.delay).max().unwrap_or(1)
+    }
+
+    pub fn min_delay(&self) -> DelaySteps {
+        self.edges.iter().map(|e| e.delay).min().unwrap_or(1)
+    }
+}
+
+fn build_csr(
+    n: usize,
+    edges: &[Edge],
+    key: impl Fn(&Edge) -> usize,
+) -> (Vec<u32>, Vec<u32>) {
+    let mut counts = vec![0u32; n + 1];
+    for e in edges {
+        counts[key(e) + 1] += 1;
+    }
+    for i in 0..n {
+        counts[i + 1] += counts[i];
+    }
+    let offsets = counts.clone();
+    let mut cursor = counts;
+    let mut order = vec![0u32; edges.len()];
+    for (i, e) in edges.iter().enumerate() {
+        let k = key(e);
+        order[cursor[k] as usize] = i as u32;
+        cursor[k] += 1;
+    }
+    (offsets, order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> DiGraph {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3
+        DiGraph::new(
+            4,
+            vec![
+                Edge { pre: 0, post: 1, weight: 1.0, delay: 1 },
+                Edge { pre: 0, post: 2, weight: 2.0, delay: 2 },
+                Edge { pre: 1, post: 3, weight: 3.0, delay: 3 },
+                Edge { pre: 2, post: 3, weight: 4.0, delay: 4 },
+            ],
+        )
+    }
+
+    #[test]
+    fn degrees_and_iteration() {
+        let g = diamond();
+        assert_eq!(g.n_vertices(), 4);
+        assert_eq!(g.n_edges(), 4);
+        assert_eq!(g.outdegree(0), 2);
+        assert_eq!(g.indegree(3), 2);
+        assert_eq!(g.outdegree(3), 0);
+        let onto3: Vec<f64> = g.in_edges(3).map(|e| e.weight).collect();
+        assert_eq!(onto3, vec![3.0, 4.0]);
+        let from0: Vec<Gid> = g.out_edges(0).map(|e| e.post).collect();
+        assert_eq!(from0, vec![1, 2]);
+    }
+
+    #[test]
+    fn delays() {
+        let g = diamond();
+        assert_eq!(g.max_delay(), 4);
+        assert_eq!(g.min_delay(), 1);
+        let empty = DiGraph::new(3, vec![]);
+        assert_eq!(empty.max_delay(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range_edges() {
+        DiGraph::new(
+            2,
+            vec![Edge { pre: 0, post: 5, weight: 1.0, delay: 1 }],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "delay must be >= 1")]
+    fn rejects_zero_delay() {
+        DiGraph::new(
+            2,
+            vec![Edge { pre: 0, post: 1, weight: 1.0, delay: 0 }],
+        );
+    }
+
+    #[test]
+    fn csr_consistency_in_equals_out() {
+        let g = diamond();
+        let via_out: usize = (0..4).map(|v| g.outdegree(v)).sum();
+        let via_in: usize = (0..4).map(|v| g.indegree(v)).sum();
+        assert_eq!(via_out, g.n_edges());
+        assert_eq!(via_in, g.n_edges());
+    }
+}

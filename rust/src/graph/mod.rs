@@ -1,0 +1,20 @@
+//! Graph abstraction of spiking neural networks (paper §II.A).
+//!
+//! Vertices are neurons, directed edges are synaptic interactions
+//! (pre → post) carrying a weight and an integer synaptic delay.
+//!
+//! - [`DiGraph`] — the concrete network with CSR adjacency both ways.
+//! - [`SubGraph`] — the (pre, post, edges) triplets of eq. (4)-(6) in
+//!   indegree / outdegree form, over explicit vertex sets.
+//! - [`algebra`] — the ⊼ (meet/∩) and ⊻ (join/∪) operations of eq. (7) and
+//!   the homomorphism of eq. (8), with the property tests establishing the
+//!   paper's central argument: indegree sub-graphs over disjoint vertex
+//!   sets have **disjoint write sets** (eq. 14), outdegree sub-graphs do
+//!   not (eq. 15) — hence "indegree sub-graphs should be the only choice".
+
+pub mod algebra;
+mod digraph;
+mod subgraph;
+
+pub use digraph::{DiGraph, Edge};
+pub use subgraph::{SubGraph, SubGraphKind};

@@ -1,0 +1,150 @@
+//! Indegree / outdegree sub-graph triplets (paper eq. 4-6, 11).
+//!
+//! These are the *specification-level* objects the paper reasons with;
+//! the engine uses compact CSR stores derived from them (see `decomp`).
+//! Sets are `BTreeSet`s for deterministic iteration in tests.
+
+use std::collections::BTreeSet;
+
+use super::digraph::DiGraph;
+use crate::Gid;
+
+/// Edge identity within sub-graph algebra: the (pre, post) ordered pair.
+pub type EdgeKey = (Gid, Gid);
+
+/// Indegree or outdegree format (the `*` in the paper's `*S`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubGraphKind {
+    /// `in-S(V~)`: all edges whose *post* vertex is in V~ (eq. 5).
+    In,
+    /// `out-S(V~)`: all edges whose *pre* vertex is in V~ (eq. 6).
+    Out,
+}
+
+/// The triplet `*S = (V_pre, V_post, E)` of eq. (4).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SubGraph {
+    pub kind: SubGraphKind,
+    pub pre: BTreeSet<Gid>,
+    pub post: BTreeSet<Gid>,
+    pub edges: BTreeSet<EdgeKey>,
+}
+
+impl SubGraph {
+    /// Build `*S(V~)` from a concrete graph and a vertex subset.
+    pub fn of(graph: &DiGraph, kind: SubGraphKind, vs: &BTreeSet<Gid>) -> Self {
+        let mut pre = BTreeSet::new();
+        let mut post = BTreeSet::new();
+        let mut edges = BTreeSet::new();
+        match kind {
+            SubGraphKind::In => {
+                // posts are exactly V~; pres are every source pointing in
+                post.extend(vs.iter().copied());
+                for &v in vs {
+                    for e in graph.in_edges(v) {
+                        pre.insert(e.pre);
+                        edges.insert((e.pre, e.post));
+                    }
+                }
+            }
+            SubGraphKind::Out => {
+                pre.extend(vs.iter().copied());
+                for &v in vs {
+                    for e in graph.out_edges(v) {
+                        post.insert(e.post);
+                        edges.insert((e.pre, e.post));
+                    }
+                }
+            }
+        }
+        SubGraph { kind, pre, post, edges }
+    }
+
+    /// The spiking sub-graph of eq. (11): restrict to edges whose pre
+    /// vertex is currently spiking (`*S(V_i) ⊼ *S_s`). The result keeps
+    /// only the reachable pres/posts, mirroring the paper's Fig 4.
+    pub fn spiking(&self, spiking_pres: &BTreeSet<Gid>) -> SubGraph {
+        let edges: BTreeSet<EdgeKey> = self
+            .edges
+            .iter()
+            .filter(|(p, _)| spiking_pres.contains(p))
+            .copied()
+            .collect();
+        let pre: BTreeSet<Gid> = edges.iter().map(|(p, _)| *p).collect();
+        let post: BTreeSet<Gid> = edges.iter().map(|(_, q)| *q).collect();
+        SubGraph { kind: self.kind, pre, post, edges }
+    }
+
+    /// The write set of this sub-graph during synaptic interaction: the
+    /// post vertices (their state is mutated) plus the edges themselves
+    /// (plastic synapses mutate edge state).
+    pub fn write_set(&self) -> (BTreeSet<Gid>, BTreeSet<EdgeKey>) {
+        (self.post.clone(), self.edges.clone())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pre.is_empty() && self.post.is_empty() && self.edges.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::digraph::Edge;
+
+    fn set(xs: &[Gid]) -> BTreeSet<Gid> {
+        xs.iter().copied().collect()
+    }
+
+    /// The paper's Fig 3 example topology (small directed graph).
+    fn sample() -> DiGraph {
+        DiGraph::new(
+            6,
+            vec![
+                Edge { pre: 0, post: 2, weight: 1.0, delay: 1 },
+                Edge { pre: 1, post: 2, weight: 1.0, delay: 1 },
+                Edge { pre: 1, post: 3, weight: 1.0, delay: 1 },
+                Edge { pre: 2, post: 4, weight: 1.0, delay: 1 },
+                Edge { pre: 3, post: 4, weight: 1.0, delay: 1 },
+                Edge { pre: 5, post: 0, weight: 1.0, delay: 1 },
+            ],
+        )
+    }
+
+    #[test]
+    fn indegree_subgraph_definition() {
+        let g = sample();
+        // in-S({2, 3}): edges onto 2 or 3; pres are their sources
+        let s = SubGraph::of(&g, SubGraphKind::In, &set(&[2, 3]));
+        assert_eq!(s.post, set(&[2, 3]));
+        assert_eq!(s.pre, set(&[0, 1]));
+        assert_eq!(s.edges.len(), 3);
+    }
+
+    #[test]
+    fn outdegree_subgraph_definition() {
+        let g = sample();
+        let s = SubGraph::of(&g, SubGraphKind::Out, &set(&[1, 2]));
+        assert_eq!(s.pre, set(&[1, 2]));
+        assert_eq!(s.post, set(&[2, 3, 4]));
+        assert_eq!(s.edges.len(), 3);
+    }
+
+    #[test]
+    fn spiking_subgraph_eq11() {
+        let g = sample();
+        let s = SubGraph::of(&g, SubGraphKind::In, &set(&[2, 3, 4]));
+        let sp = s.spiking(&set(&[1]));
+        // only edges 1->2 and 1->3 remain
+        assert_eq!(sp.edges, [(1, 2), (1, 3)].into_iter().collect());
+        assert_eq!(sp.pre, set(&[1]));
+        assert_eq!(sp.post, set(&[2, 3]));
+    }
+
+    #[test]
+    fn spiking_of_nonspiking_is_empty() {
+        let g = sample();
+        let s = SubGraph::of(&g, SubGraphKind::In, &set(&[2]));
+        assert!(s.spiking(&set(&[4, 5])).is_empty());
+    }
+}

@@ -1,0 +1,56 @@
+//! # CORTEX — large-scale spiking-network brain simulator
+//!
+//! Reproduction of *"CORTEX: Large-Scale Brain Simulator Utilizing Indegree
+//! Sub-Graph Decomposition on Fugaku Supercomputer"* (Lyu et al., cs.DC 2024)
+//! as a three-layer Rust + JAX + Pallas system.  This crate is Layer 3: the
+//! paper's coordination contribution plus every substrate it depends on.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! - [`graph`]  — directed-graph abstraction of SNNs, indegree/outdegree
+//!   sub-graph triplets and their ⊼ / ⊻ algebra (paper §II.A).
+//! - [`atlas`]  — connectome builders: synthetic multi-area "marmoset"
+//!   atlas, Potjans-Diesmann 2014 microcircuit, NEST `hpc_benchmark`.
+//! - [`model`]  — LIF neurons with exact integration (Rotter-Diesmann
+//!   propagators identical to the L1 Pallas kernel), STDP synapses,
+//!   Poisson sources.
+//! - [`decomp`] — the paper's §III.A: Area-Processes Mapping, Multisection
+//!   Division with Sampling, Random Equivalent Mapping (baseline), thread
+//!   partitioning and the (thread, delay)-sorted edge layout.
+//! - [`engine`] — the per-rank CORTEX engine: mutex-free thread-level
+//!   delivery (paper §III.B), spike ring buffers, native or PJRT dynamics.
+//! - [`comm`]   — MPI-like communicator over in-memory ranks, spike
+//!   broadcast with dedicated communication thread (paper §III.C), and a
+//!   Tofu-D network cost model for Fugaku-scale projections.
+//! - [`nest_baseline`] — a NEST-style reference engine embodying the design
+//!   choices the paper compares against (random distribution, atomic
+//!   delivery, serialized exchange).
+//! - [`runtime`] — XLA/PJRT loading + execution of the AOT artifacts
+//!   produced by `python/compile/aot.py`.
+//! - [`config`], [`metrics`], [`util`], [`cli`] — experiment configuration,
+//!   instrumentation and the from-scratch support substrates (the offline
+//!   registry only carries the `xla` closure).
+
+pub mod atlas;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod decomp;
+pub mod engine;
+pub mod graph;
+pub mod metrics;
+pub mod model;
+pub mod nest_baseline;
+pub mod runtime;
+pub mod util;
+
+/// Global neuron id.
+pub type Gid = u32;
+/// Rank (simulated MPI process) id.
+pub type RankId = u16;
+/// Thread id within a rank.
+pub type ThreadId = u16;
+/// Synaptic delay in integration steps (>= 1).
+pub type DelaySteps = u16;
+/// Simulation step counter.
+pub type Step = u64;

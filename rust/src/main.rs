@@ -1,0 +1,9 @@
+//! `cortex` — launcher binary. See `cortex::cli` for subcommands.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = cortex::cli::main_with(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

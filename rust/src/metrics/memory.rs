@@ -1,0 +1,142 @@
+//! Per-rank memory accounting.
+//!
+//! The paper's Fig 18 memory panel reports the *maximal per-node memory
+//! consumption*. We account bytes analytically from the engines' data
+//! structures (every store reports its exact heap footprint), which is both
+//! deterministic and the quantity the paper's O(n_pre + n_post + n_edges)
+//! analysis speaks about.
+
+use std::collections::BTreeMap;
+
+/// A breakdown of one rank's memory by component.
+#[derive(Clone, Debug, Default)]
+pub struct MemoryBreakdown {
+    components: BTreeMap<&'static str, u64>,
+}
+
+impl MemoryBreakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, component: &'static str, bytes: u64) {
+        *self.components.entry(component).or_insert(0) += bytes;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.components.values().sum()
+    }
+
+    pub fn get(&self, component: &str) -> u64 {
+        self.components.get(component).copied().unwrap_or(0)
+    }
+
+    pub fn components(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.components.iter().map(|(k, v)| (*k, *v))
+    }
+}
+
+/// Memory across all ranks of a run.
+#[derive(Clone, Debug, Default)]
+pub struct MemoryReport {
+    pub per_rank: Vec<MemoryBreakdown>,
+}
+
+impl MemoryReport {
+    pub fn new(per_rank: Vec<MemoryBreakdown>) -> Self {
+        MemoryReport { per_rank }
+    }
+
+    /// The paper's reported quantity: max over ranks.
+    pub fn max_rank_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|b| b.total()).max().unwrap_or(0)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.per_rank.iter().map(|b| b.total()).sum()
+    }
+
+    /// Load imbalance: max/mean of per-rank totals (1.0 = perfectly even).
+    pub fn imbalance(&self) -> f64 {
+        if self.per_rank.is_empty() {
+            return 1.0;
+        }
+        let totals: Vec<f64> =
+            self.per_rank.iter().map(|b| b.total() as f64).collect();
+        let mean = totals.iter().sum::<f64>() / totals.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            totals.iter().cloned().fold(0.0, f64::max) / mean
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (i, b) in self.per_rank.iter().enumerate() {
+            out.push_str(&format!(
+                "rank {i}: {:.2} MiB\n",
+                b.total() as f64 / (1024.0 * 1024.0)
+            ));
+            for (k, v) in b.components() {
+                out.push_str(&format!(
+                    "    {k:<20} {:>10.2} KiB\n",
+                    v as f64 / 1024.0
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "max-rank {:.2} MiB, imbalance {:.3}\n",
+            self.max_rank_bytes() as f64 / (1024.0 * 1024.0),
+            self.imbalance()
+        ));
+        out
+    }
+}
+
+/// Exact heap bytes of a Vec<T> (capacity, not len — what the allocator holds).
+pub fn vec_bytes<T>(v: &Vec<T>) -> u64 {
+    (v.capacity() * std::mem::size_of::<T>()) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_totals() {
+        let mut b = MemoryBreakdown::new();
+        b.add("edges", 1000);
+        b.add("neurons", 200);
+        b.add("edges", 500);
+        assert_eq!(b.total(), 1700);
+        assert_eq!(b.get("edges"), 1500);
+        assert_eq!(b.get("nothing"), 0);
+    }
+
+    #[test]
+    fn report_max_and_imbalance() {
+        let mk = |bytes: u64| {
+            let mut b = MemoryBreakdown::new();
+            b.add("x", bytes);
+            b
+        };
+        let r = MemoryReport::new(vec![mk(100), mk(300), mk(200)]);
+        assert_eq!(r.max_rank_bytes(), 300);
+        assert_eq!(r.total_bytes(), 600);
+        assert!((r.imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report() {
+        let r = MemoryReport::default();
+        assert_eq!(r.max_rank_bytes(), 0);
+        assert_eq!(r.imbalance(), 1.0);
+    }
+
+    #[test]
+    fn vec_bytes_counts_capacity() {
+        let v: Vec<u64> = Vec::with_capacity(10);
+        assert_eq!(vec_bytes(&v), 80);
+    }
+}

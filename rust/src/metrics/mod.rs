@@ -1,0 +1,12 @@
+//! Instrumentation: phase timers, per-rank memory accounting, spike/raster
+//! recording, and plain-text table / CSV output for the bench harnesses.
+
+pub mod memory;
+pub mod recorder;
+pub mod table;
+pub mod timer;
+
+pub use memory::{MemoryBreakdown, MemoryReport};
+pub use recorder::{RasterStats, SpikeRecorder};
+pub use table::{write_csv, Table};
+pub use timer::PhaseTimer;

@@ -1,0 +1,156 @@
+//! Spike/raster recording and the activity statistics used to compare
+//! CORTEX against the NEST-style baseline (paper Fig 19: rasters must be
+//! "similar to each other with slight differences" — we compare rates,
+//! ISI-CV irregularity and population synchrony).
+
+use crate::util::stats;
+use crate::{Gid, Step};
+
+/// Records (step, gid) spike events for gids below `gid_limit`.
+#[derive(Clone, Debug)]
+pub struct SpikeRecorder {
+    pub gid_limit: Gid,
+    pub events: Vec<(Step, Gid)>,
+    enabled: bool,
+}
+
+impl SpikeRecorder {
+    pub fn new(gid_limit: Gid) -> Self {
+        SpikeRecorder { gid_limit, events: Vec::new(), enabled: true }
+    }
+
+    pub fn disabled() -> Self {
+        SpikeRecorder { gid_limit: 0, events: Vec::new(), enabled: false }
+    }
+
+    #[inline]
+    pub fn record(&mut self, step: Step, gid: Gid) {
+        if self.enabled && gid < self.gid_limit {
+            self.events.push((step, gid));
+        }
+    }
+
+    pub fn record_all(&mut self, step: Step, gids: &[Gid]) {
+        for &g in gids {
+            self.record(step, g);
+        }
+    }
+
+    pub fn merge(&mut self, other: &SpikeRecorder) {
+        self.events.extend_from_slice(&other.events);
+    }
+
+    /// Raster statistics over the recorded window.
+    pub fn stats(&self, n_neurons: usize, dt_ms: f64, steps: Step) -> RasterStats {
+        let sim_s = steps as f64 * dt_ms * 1e-3;
+        let mut per_neuron: Vec<Vec<f64>> = vec![Vec::new(); n_neurons];
+        for &(t, g) in &self.events {
+            if (g as usize) < n_neurons {
+                per_neuron[g as usize].push(t as f64 * dt_ms);
+            }
+        }
+        let counts: Vec<f64> =
+            per_neuron.iter().map(|v| v.len() as f64).collect();
+        let rates: Vec<f64> = counts.iter().map(|c| c / sim_s).collect();
+        let cvs: Vec<f64> = per_neuron
+            .iter()
+            .filter(|v| v.len() >= 3)
+            .map(|v| stats::isi_cv(v))
+            .collect();
+
+        // population synchrony: variance/mean of the per-step population
+        // spike count (Fano factor of the summed activity)
+        let mut per_step = vec![0.0f64; steps as usize + 1];
+        for &(t, _) in &self.events {
+            if (t as usize) < per_step.len() {
+                per_step[t as usize] += 1.0;
+            }
+        }
+        let m = stats::mean(&per_step);
+        let synchrony = if m > 0.0 {
+            stats::std(&per_step).powi(2) / m
+        } else {
+            0.0
+        };
+
+        RasterStats {
+            n_events: self.events.len(),
+            mean_rate_hz: stats::mean(&rates),
+            max_rate_hz: rates.iter().cloned().fold(0.0, f64::max),
+            mean_isi_cv: stats::mean(&cvs),
+            synchrony,
+            active_fraction: counts.iter().filter(|&&c| c > 0.0).count() as f64
+                / n_neurons.max(1) as f64,
+        }
+    }
+
+    /// CSV lines "time_ms,gid" (the Fig 19 raster format).
+    pub fn to_csv(&self, dt_ms: f64) -> String {
+        let mut out = String::from("time_ms,gid\n");
+        let mut sorted = self.events.clone();
+        sorted.sort_unstable();
+        for (t, g) in sorted {
+            out.push_str(&format!("{},{}\n", t as f64 * dt_ms, g));
+        }
+        out
+    }
+}
+
+/// Summary statistics of one raster (the quantities compared in Fig 19).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RasterStats {
+    pub n_events: usize,
+    pub mean_rate_hz: f64,
+    pub max_rate_hz: f64,
+    pub mean_isi_cv: f64,
+    pub synchrony: f64,
+    pub active_fraction: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_only_below_limit() {
+        let mut r = SpikeRecorder::new(10);
+        r.record(1, 5);
+        r.record(1, 15);
+        r.record_all(2, &[3, 12, 7]);
+        assert_eq!(r.events, vec![(1, 5), (2, 3), (2, 7)]);
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut r = SpikeRecorder::disabled();
+        r.record(1, 0);
+        assert!(r.events.is_empty());
+    }
+
+    #[test]
+    fn stats_rates() {
+        let mut r = SpikeRecorder::new(100);
+        // neuron 0 fires every 10 steps for 1000 steps at dt=1ms -> 100 Hz
+        for t in (0..1000).step_by(10) {
+            r.record(t, 0);
+        }
+        let s = r.stats(2, 1.0, 1000);
+        assert_eq!(s.n_events, 100);
+        // mean over 2 neurons, one at 100 Hz one silent
+        assert!((s.mean_rate_hz - 50.0).abs() < 1e-9);
+        assert!((s.max_rate_hz - 100.0).abs() < 1e-9);
+        assert!(s.mean_isi_cv.abs() < 1e-12); // perfectly regular
+        assert!((s.active_fraction - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_sorted_output() {
+        let mut r = SpikeRecorder::new(10);
+        r.record(5, 2);
+        r.record(1, 3);
+        let csv = r.to_csv(0.1);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "time_ms,gid");
+        assert!(lines[1].starts_with("0.1"));
+    }
+}

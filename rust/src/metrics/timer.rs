@@ -1,0 +1,122 @@
+//! Accumulating phase timer: wall-clock nanoseconds per named phase
+//! (delivery / dynamics / comm / plasticity …), the instrument behind the
+//! paper's Fig 18 time panel and EXPERIMENTS.md §Perf.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    acc: BTreeMap<&'static str, u128>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time one closure under `phase`.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed().as_nanos());
+        out
+    }
+
+    pub fn add(&mut self, phase: &'static str, nanos: u128) {
+        *self.acc.entry(phase).or_insert(0) += nanos;
+        *self.counts.entry(phase).or_insert(0) += 1;
+    }
+
+    /// Merge another timer (e.g. from a worker rank) into this one.
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.acc {
+            *self.acc.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_insert(0) += v;
+        }
+    }
+
+    /// Keep the elementwise max per phase (the critical-path view across
+    /// ranks: total time is governed by the slowest rank).
+    pub fn merge_max(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.acc {
+            let e = self.acc.entry(k).or_insert(0);
+            *e = (*e).max(*v);
+        }
+        for (k, v) in &other.counts {
+            let e = self.counts.entry(k).or_insert(0);
+            *e = (*e).max(*v);
+        }
+    }
+
+    pub fn nanos(&self, phase: &str) -> u128 {
+        self.acc.get(phase).copied().unwrap_or(0)
+    }
+
+    pub fn seconds(&self, phase: &str) -> f64 {
+        self.nanos(phase) as f64 * 1e-9
+    }
+
+    pub fn total_seconds(&self) -> f64 {
+        self.acc.values().sum::<u128>() as f64 * 1e-9
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.acc.iter().map(|(k, v)| (*k, *v as f64 * 1e-9))
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.acc {
+            let n = self.counts.get(k).copied().unwrap_or(0);
+            out.push_str(&format!(
+                "{k:<14} {:>10.3} ms  ({n} calls)\n",
+                *v as f64 * 1e-6
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_counts() {
+        let mut t = PhaseTimer::new();
+        t.add("delivery", 1000);
+        t.add("delivery", 500);
+        t.add("dynamics", 2000);
+        assert_eq!(t.nanos("delivery"), 1500);
+        assert_eq!(t.nanos("dynamics"), 2000);
+        assert_eq!(t.nanos("missing"), 0);
+        assert!(t.report().contains("delivery"));
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = PhaseTimer::new();
+        let v = t.time("x", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t.nanos("x") > 0);
+    }
+
+    #[test]
+    fn merge_and_merge_max() {
+        let mut a = PhaseTimer::new();
+        a.add("p", 100);
+        let mut b = PhaseTimer::new();
+        b.add("p", 300);
+        b.add("q", 50);
+        let mut sum = a.clone();
+        sum.merge(&b);
+        assert_eq!(sum.nanos("p"), 400);
+        assert_eq!(sum.nanos("q"), 50);
+        a.merge_max(&b);
+        assert_eq!(a.nanos("p"), 300);
+    }
+}

@@ -1,0 +1,193 @@
+//! Adaptive exponential integrate-and-fire neuron (Brette & Gerstner
+//! 2005 — the paper's ref [22], cited alongside LIF as the lightweight
+//! modeling family its evaluation builds on). Intermediate compute
+//! intensity between LIF and Hodgkin-Huxley; completes the
+//! `ablation_intensity` sweep of the paper's §I.C argument.
+//!
+//! dV/dt = (-g_L(V-E_L) + g_L·ΔT·exp((V-V_T)/ΔT) - w + I) / C
+//! dw/dt = (a(V-E_L) - w) / τ_w ;  on spike: V→V_r, w→w+b
+
+/// AdEx parameters (Brette & Gerstner 2005, regular-spiking defaults).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdexParams {
+    pub c_m: f64,     // [pF]
+    pub g_l: f64,     // [nS]
+    pub e_l: f64,     // [mV]
+    pub v_t: f64,     // rheobase threshold [mV]
+    pub delta_t: f64, // slope factor [mV]
+    pub tau_w: f64,   // adaptation time constant [ms]
+    pub a: f64,       // subthreshold adaptation [nS]
+    pub b: f64,       // spike-triggered adaptation [pA]
+    pub v_reset: f64, // [mV]
+    pub v_peak: f64,  // numerical spike cutoff [mV]
+    pub t_ref: f64,   // refractory period [ms]
+}
+
+impl Default for AdexParams {
+    fn default() -> Self {
+        AdexParams {
+            c_m: 281.0,
+            g_l: 30.0,
+            e_l: -70.6,
+            v_t: -50.4,
+            delta_t: 2.0,
+            tau_w: 144.0,
+            a: 4.0,
+            b: 80.5,
+            v_reset: -70.6,
+            v_peak: 0.0,
+            t_ref: 2.0,
+        }
+    }
+}
+
+/// SoA state for a block of AdEx neurons.
+#[derive(Clone, Debug)]
+pub struct AdexState {
+    pub v: Vec<f64>,
+    pub w: Vec<f64>,
+    pub refrac: Vec<f64>,
+}
+
+impl AdexState {
+    pub fn new(n: usize, p: &AdexParams) -> Self {
+        AdexState {
+            v: vec![p.e_l; n],
+            w: vec![0.0; n],
+            refrac: vec![0.0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.v.is_empty()
+    }
+}
+
+/// Advance neurons `[lo, hi)` one step of `dt_ms` with input currents
+/// `i_in` [pA]; local spike indices are appended.
+pub fn step_slice(
+    state: &mut AdexState,
+    lo: usize,
+    hi: usize,
+    i_in: &[f64],
+    p: &AdexParams,
+    dt_ms: f64,
+    spikes: &mut Vec<u32>,
+) {
+    let ref_steps = (p.t_ref / dt_ms).round();
+    for i in lo..hi {
+        if state.refrac[i] > 0.0 {
+            state.refrac[i] -= 1.0;
+            state.v[i] = p.v_reset;
+            // adaptation keeps integrating during refractoriness
+            let w = state.w[i];
+            state.w[i] =
+                w + dt_ms * (p.a * (p.v_reset - p.e_l) - w) / p.tau_w;
+            continue;
+        }
+        let v = state.v[i];
+        let w = state.w[i];
+        // exponential term clamped to keep the forward-Euler step finite
+        let exp_arg = ((v - p.v_t) / p.delta_t).min(20.0);
+        let dv = (-p.g_l * (v - p.e_l)
+            + p.g_l * p.delta_t * exp_arg.exp()
+            - w
+            + i_in[i - lo])
+            / p.c_m;
+        let dw = (p.a * (v - p.e_l) - w) / p.tau_w;
+        let mut v_new = v + dt_ms * dv;
+        let w_new = w + dt_ms * dw;
+        if v_new >= p.v_peak {
+            spikes.push((i - lo) as u32);
+            v_new = p.v_reset;
+            state.w[i] = w_new + p.b;
+            state.refrac[i] = ref_steps;
+        } else {
+            state.w[i] = w_new;
+        }
+        state.v[i] = v_new;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rest_is_stable() {
+        let p = AdexParams::default();
+        let mut s = AdexState::new(3, &p);
+        let mut spikes = Vec::new();
+        for _ in 0..2000 {
+            step_slice(&mut s, 0, 3, &[0.0; 3], &p, 0.1, &mut spikes);
+        }
+        assert!(spikes.is_empty());
+        assert!((s.v[0] - p.e_l).abs() < 0.5);
+        assert!(s.w[0].abs() < 1.0);
+    }
+
+    #[test]
+    fn step_current_produces_adapting_train() {
+        let p = AdexParams::default();
+        let mut s = AdexState::new(1, &p);
+        let mut when = Vec::new();
+        for t in 0..20_000 {
+            let mut spikes = Vec::new();
+            step_slice(&mut s, 0, 1, &[700.0], &p, 0.1, &mut spikes);
+            if !spikes.is_empty() {
+                when.push(t);
+            }
+        }
+        assert!(when.len() >= 4, "only {} spikes", when.len());
+        // spike-frequency adaptation: ISIs grow
+        let first_isi = when[1] - when[0];
+        let last_isi = when[when.len() - 1] - when[when.len() - 2];
+        assert!(
+            last_isi > first_isi,
+            "no adaptation: {first_isi} -> {last_isi}"
+        );
+    }
+
+    #[test]
+    fn refractory_holds_reset() {
+        let p = AdexParams::default();
+        let mut s = AdexState::new(1, &p);
+        s.v[0] = p.v_peak + 1.0;
+        let mut spikes = Vec::new();
+        step_slice(&mut s, 0, 1, &[0.0], &p, 0.1, &mut spikes);
+        assert_eq!(spikes.len(), 1);
+        for _ in 0..(p.t_ref / 0.1) as usize {
+            let mut sp = Vec::new();
+            step_slice(&mut s, 0, 1, &[1e5], &p, 0.1, &mut sp);
+            assert!(sp.is_empty());
+            assert_eq!(s.v[0], p.v_reset);
+        }
+    }
+
+    #[test]
+    fn spike_increments_adaptation() {
+        let p = AdexParams::default();
+        let mut s = AdexState::new(1, &p);
+        s.v[0] = p.v_peak + 1.0;
+        let w0 = s.w[0];
+        let mut spikes = Vec::new();
+        step_slice(&mut s, 0, 1, &[0.0], &p, 0.1, &mut spikes);
+        assert!(s.w[0] >= w0 + p.b * 0.9);
+    }
+
+    #[test]
+    fn exp_clamp_keeps_values_finite() {
+        let p = AdexParams::default();
+        let mut s = AdexState::new(1, &p);
+        s.v[0] = -20.0; // deep into the exponential regime
+        let mut spikes = Vec::new();
+        for _ in 0..100 {
+            step_slice(&mut s, 0, 1, &[0.0], &p, 0.1, &mut spikes);
+            assert!(s.v[0].is_finite() && s.w[0].is_finite());
+        }
+    }
+}

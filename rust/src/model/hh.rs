@@ -1,0 +1,244 @@
+//! Hodgkin-Huxley neuron (paper ref [31]) — the high compute-intensity
+//! model of the paper's §I.C discussion: simulations built on HH-class
+//! models show "absolutely better results in scalability" because the
+//! per-neuron arithmetic dwarfs communication; the paper deliberately
+//! evaluates on LIF ("bad cases") instead. This implementation exists to
+//! *quantify* that computation/communication argument on our substrate
+//! (`ablation_intensity` bench) and to extend the framework beyond LIF.
+//!
+//! Classic squid-axon parameters, integrated with exponential-Euler on
+//! the gates and forward Euler on the membrane, sub-stepped for
+//! stability at dt = 0.1 ms.
+
+/// HH parameters (classic Hodgkin & Huxley 1952 values, 1 µF/cm² scale).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HhParams {
+    pub c_m: f64,      // membrane capacitance [µF/cm²]
+    pub g_na: f64,     // peak sodium conductance [mS/cm²]
+    pub g_k: f64,      // peak potassium conductance [mS/cm²]
+    pub g_l: f64,      // leak conductance [mS/cm²]
+    pub e_na: f64,     // sodium reversal [mV]
+    pub e_k: f64,      // potassium reversal [mV]
+    pub e_l: f64,      // leak reversal [mV]
+    /// spike detection threshold [mV] (upward crossing)
+    pub v_spike: f64,
+    /// integration sub-steps per simulator step
+    pub substeps: u32,
+}
+
+impl Default for HhParams {
+    fn default() -> Self {
+        HhParams {
+            c_m: 1.0,
+            g_na: 120.0,
+            g_k: 36.0,
+            g_l: 0.3,
+            e_na: 50.0,
+            e_k: -77.0,
+            e_l: -54.387,
+            v_spike: 0.0,
+            substeps: 10,
+        }
+    }
+}
+
+/// SoA state for a block of HH neurons.
+#[derive(Clone, Debug)]
+pub struct HhState {
+    pub v: Vec<f64>,
+    pub m: Vec<f64>,
+    pub h: Vec<f64>,
+    pub n: Vec<f64>,
+    /// previous-step voltage (for upward-crossing spike detection)
+    pub v_prev: Vec<f64>,
+}
+
+impl HhState {
+    /// Resting state (v = -65 mV, gates at their steady state).
+    pub fn new(n_neurons: usize) -> Self {
+        let v0 = -65.0;
+        HhState {
+            v: vec![v0; n_neurons],
+            m: vec![steady(alpha_m(v0), beta_m(v0)); n_neurons],
+            h: vec![steady(alpha_h(v0), beta_h(v0)); n_neurons],
+            n: vec![steady(alpha_n(v0), beta_n(v0)); n_neurons],
+            v_prev: vec![v0; n_neurons],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.v.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.v.is_empty()
+    }
+}
+
+#[inline]
+fn steady(a: f64, b: f64) -> f64 {
+    a / (a + b)
+}
+
+// rate functions [1/ms]; the vtrap guards the 0/0 removable singularities
+#[inline]
+fn vtrap(x: f64, y: f64) -> f64 {
+    if (x / y).abs() < 1e-6 {
+        y * (1.0 - x / y / 2.0)
+    } else {
+        x / ((x / y).exp() - 1.0)
+    }
+}
+
+#[inline]
+pub fn alpha_m(v: f64) -> f64 {
+    0.1 * vtrap(-(v + 40.0), 10.0)
+}
+#[inline]
+pub fn beta_m(v: f64) -> f64 {
+    4.0 * (-(v + 65.0) / 18.0).exp()
+}
+#[inline]
+pub fn alpha_h(v: f64) -> f64 {
+    0.07 * (-(v + 65.0) / 20.0).exp()
+}
+#[inline]
+pub fn beta_h(v: f64) -> f64 {
+    1.0 / ((-(v + 35.0) / 10.0).exp() + 1.0)
+}
+#[inline]
+pub fn alpha_n(v: f64) -> f64 {
+    0.01 * vtrap(-(v + 55.0), 10.0)
+}
+#[inline]
+pub fn beta_n(v: f64) -> f64 {
+    0.125 * (-(v + 65.0) / 80.0).exp()
+}
+
+/// Advance neurons `[lo, hi)` by one simulator step of `dt_ms` given the
+/// external/synaptic current density `i_in` [µA/cm²] per neuron; local
+/// indices of spiking neurons (upward threshold crossings) are appended.
+pub fn step_slice(
+    state: &mut HhState,
+    lo: usize,
+    hi: usize,
+    i_in: &[f64],
+    p: &HhParams,
+    dt_ms: f64,
+    spikes: &mut Vec<u32>,
+) {
+    let h_dt = dt_ms / p.substeps as f64;
+    for i in lo..hi {
+        let mut v = state.v[i];
+        let mut m = state.m[i];
+        let mut hh = state.h[i];
+        let mut n = state.n[i];
+        let i_ext = i_in[i - lo];
+        for _ in 0..p.substeps {
+            // exponential Euler on gates
+            let (am, bm) = (alpha_m(v), beta_m(v));
+            let (ah, bh) = (alpha_h(v), beta_h(v));
+            let (an, bn) = (alpha_n(v), beta_n(v));
+            m = exp_euler(m, am, bm, h_dt);
+            hh = exp_euler(hh, ah, bh, h_dt);
+            n = exp_euler(n, an, bn, h_dt);
+            // membrane
+            let i_na = p.g_na * m * m * m * hh * (v - p.e_na);
+            let i_k = p.g_k * n * n * n * n * (v - p.e_k);
+            let i_l = p.g_l * (v - p.e_l);
+            v += h_dt * (i_ext - i_na - i_k - i_l) / p.c_m;
+        }
+        if state.v_prev[i] < p.v_spike && v >= p.v_spike {
+            spikes.push((i - lo) as u32);
+        }
+        state.v_prev[i] = v;
+        state.v[i] = v;
+        state.m[i] = m;
+        state.h[i] = hh;
+        state.n[i] = n;
+    }
+}
+
+#[inline]
+fn exp_euler(x: f64, a: f64, b: f64, dt: f64) -> f64 {
+    let tau = 1.0 / (a + b);
+    let inf = a * tau;
+    inf + (x - inf) * (-dt / tau).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resting_state_is_stable() {
+        let p = HhParams::default();
+        let mut s = HhState::new(2);
+        let mut spikes = Vec::new();
+        for _ in 0..1000 {
+            step_slice(&mut s, 0, 2, &[0.0, 0.0], &p, 0.1, &mut spikes);
+        }
+        assert!(spikes.is_empty());
+        assert!((s.v[0] + 65.0).abs() < 1.0, "drifted to {}", s.v[0]);
+    }
+
+    #[test]
+    fn suprathreshold_current_fires_tonically() {
+        let p = HhParams::default();
+        let mut s = HhState::new(1);
+        let mut count = 0;
+        for _ in 0..5000 {
+            let mut spikes = Vec::new();
+            step_slice(&mut s, 0, 1, &[10.0], &p, 0.1, &mut spikes);
+            count += spikes.len();
+        }
+        // 10 µA/cm² drives ~60-90 Hz tonic firing: 500 ms -> 30-50 spikes
+        assert!(
+            (20..=60).contains(&count),
+            "unexpected spike count {count}"
+        );
+    }
+
+    #[test]
+    fn subthreshold_current_does_not_fire() {
+        let p = HhParams::default();
+        let mut s = HhState::new(1);
+        let mut spikes = Vec::new();
+        for _ in 0..3000 {
+            step_slice(&mut s, 0, 1, &[1.0], &p, 0.1, &mut spikes);
+        }
+        assert!(spikes.is_empty(), "fired {} times", spikes.len());
+    }
+
+    #[test]
+    fn action_potential_shape() {
+        // peak above +20 mV, afterhyperpolarization below -70 mV
+        let p = HhParams::default();
+        let mut s = HhState::new(1);
+        let mut vmax = f64::NEG_INFINITY;
+        let mut vmin = f64::INFINITY;
+        for step in 0..2000 {
+            let i = if (100..150).contains(&step) { 15.0 } else { 0.0 };
+            let mut spikes = Vec::new();
+            step_slice(&mut s, 0, 1, &[i], &p, 0.1, &mut spikes);
+            vmax = vmax.max(s.v[0]);
+            vmin = vmin.min(s.v[0]);
+        }
+        assert!(vmax > 20.0, "peak {vmax}");
+        assert!(vmin < -70.0, "AHP {vmin}");
+    }
+
+    #[test]
+    fn gates_stay_in_unit_interval() {
+        let p = HhParams::default();
+        let mut s = HhState::new(1);
+        for step in 0..4000 {
+            let i = if step % 200 < 50 { 20.0 } else { -5.0 };
+            let mut spikes = Vec::new();
+            step_slice(&mut s, 0, 1, &[i], &p, 0.1, &mut spikes);
+            for g in [s.m[0], s.h[0], s.n[0]] {
+                assert!((0.0..=1.0).contains(&g), "gate {g} out of range");
+            }
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! LIF neuron with exponential PSCs, exact integration.
+//!
+//! This is the native (Layer-3) twin of the L1 Pallas kernel in
+//! `python/compile/kernels/lif_step.py`: identical propagator formulas,
+//! identical update order, f64 throughout. Keeping the two bit-compatible
+//! is what lets the engine switch between `DynamicsBackend::Native` and
+//! `DynamicsBackend::Pjrt` without changing results beyond round-off.
+
+/// Neuron parameters (NEST `iaf_psc_exp` names; defaults = Potjans 2014 /
+/// hpc_benchmark values, which the paper's evaluation builds on).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LifParams {
+    pub tau_m: f64,      // membrane time constant [ms]
+    pub tau_syn_ex: f64, // excitatory synaptic time constant [ms]
+    pub tau_syn_in: f64, // inhibitory synaptic time constant [ms]
+    pub c_m: f64,        // membrane capacitance [pF]
+    pub e_l: f64,        // resting potential [mV]
+    pub v_reset: f64,    // post-spike reset [mV]
+    pub v_th: f64,       // threshold [mV]
+    pub t_ref: f64,      // absolute refractory period [ms]
+    pub i_ext: f64,      // constant external current [pA]
+}
+
+impl Default for LifParams {
+    fn default() -> Self {
+        LifParams {
+            tau_m: 10.0,
+            tau_syn_ex: 0.5,
+            tau_syn_in: 0.5,
+            c_m: 250.0,
+            e_l: -65.0,
+            v_reset: -65.0,
+            v_th: -50.0,
+            t_ref: 2.0,
+            i_ext: 0.0,
+        }
+    }
+}
+
+/// Exact-integration propagators for one step of size `dt`
+/// (Rotter & Diesmann 1999; identical to `model.py::Propagators`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Propagators {
+    pub p22: f64,
+    pub p11e: f64,
+    pub p11i: f64,
+    pub p21e: f64,
+    pub p21i: f64,
+    pub p20: f64,
+    pub ref_steps: u32,
+    // baked parameter copies used by the step loop
+    pub e_l: f64,
+    pub v_reset: f64,
+    pub v_th: f64,
+    pub i_ext: f64,
+}
+
+impl Propagators {
+    pub fn new(p: &LifParams, dt: f64) -> Self {
+        let p22 = (-dt / p.tau_m).exp();
+        let p21 = |tau_s: f64| -> f64 {
+            let p11 = (-dt / tau_s).exp();
+            if (tau_s - p.tau_m).abs() < 1e-12 {
+                // degenerate (equal time constants) limit: h·e^{-h/tau}/C
+                dt * p11 / p.c_m
+            } else {
+                tau_s * p.tau_m / (p.c_m * (tau_s - p.tau_m)) * (p11 - p22)
+            }
+        };
+        Propagators {
+            p22,
+            p11e: (-dt / p.tau_syn_ex).exp(),
+            p11i: (-dt / p.tau_syn_in).exp(),
+            p21e: p21(p.tau_syn_ex),
+            p21i: p21(p.tau_syn_in),
+            p20: p.tau_m / p.c_m * (1.0 - p22),
+            ref_steps: (p.t_ref / dt).round() as u32,
+            e_l: p.e_l,
+            v_reset: p.v_reset,
+            v_th: p.v_th,
+            i_ext: p.i_ext,
+        }
+    }
+}
+
+/// SoA neuron state for a contiguous block of neurons.
+///
+/// `refrac` is f64 (small exact integers) to mirror the kernel layout, and
+/// `pidx` selects each neuron's propagator set, so one block can mix
+/// populations with different parameters.
+#[derive(Clone, Debug, Default)]
+pub struct LifState {
+    pub u: Vec<f64>,
+    pub ie: Vec<f64>,
+    pub ii: Vec<f64>,
+    pub refrac: Vec<f64>,
+    pub pidx: Vec<u8>,
+}
+
+impl LifState {
+    pub fn new(n: usize, props: &[Propagators], pidx: Vec<u8>) -> Self {
+        assert_eq!(pidx.len(), n);
+        assert!(pidx.iter().all(|&i| (i as usize) < props.len()));
+        LifState {
+            u: pidx.iter().map(|&i| props[i as usize].e_l).collect(),
+            ie: vec![0.0; n],
+            ii: vec![0.0; n],
+            refrac: vec![0.0; n],
+            pidx,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.u.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.u.is_empty()
+    }
+
+    /// Heap footprint in bytes (for the memory accounting).
+    pub fn bytes(&self) -> u64 {
+        use crate::metrics::memory::vec_bytes;
+        vec_bytes(&self.u)
+            + vec_bytes(&self.ie)
+            + vec_bytes(&self.ii)
+            + vec_bytes(&self.refrac)
+            + vec_bytes(&self.pidx)
+    }
+}
+
+/// Advance neurons `[lo, hi)` of `state` by one step.
+///
+/// `in_e` / `in_i` are this step's arriving synaptic input for the same
+/// index range (i.e. `in_e[i - lo]` belongs to neuron `i`); they are the
+/// consumed ring-buffer slots. Local indices (relative to `lo`) of spiking
+/// neurons are appended to `spikes`.
+///
+/// Update order matches the Pallas kernel exactly:
+///   1. non-refractory membranes integrate (exact propagator),
+///   2. refractory neurons hold reset and count down,
+///   3. threshold ⇒ spike, reset, arm refractory counter,
+///   4. synaptic currents decay, then input lands.
+#[allow(clippy::too_many_arguments)]
+pub fn step_slice(
+    state: &mut LifState,
+    lo: usize,
+    hi: usize,
+    in_e: &[f64],
+    in_i: &[f64],
+    props: &[Propagators],
+    spikes: &mut Vec<u32>,
+) {
+    debug_assert!(hi <= state.len());
+    debug_assert_eq!(in_e.len(), hi - lo);
+    debug_assert_eq!(in_i.len(), hi - lo);
+    for i in lo..hi {
+        let p = &props[state.pidx[i] as usize];
+        let u = state.u[i];
+        let ie = state.ie[i];
+        let ii = state.ii[i];
+        let r = state.refrac[i];
+
+        let (mut u_new, mut r_new);
+        if r > 0.0 {
+            u_new = p.v_reset;
+            r_new = r - 1.0;
+        } else {
+            u_new = p.e_l
+                + (u - p.e_l) * p.p22
+                + ie * p.p21e
+                + ii * p.p21i
+                + p.i_ext * p.p20;
+            r_new = r;
+            if u_new >= p.v_th {
+                u_new = p.v_reset;
+                r_new = p.ref_steps as f64;
+                spikes.push((i - lo) as u32);
+            }
+        }
+        state.u[i] = u_new;
+        state.refrac[i] = r_new;
+        state.ie[i] = ie * p.p11e + in_e[i - lo];
+        state.ii[i] = ii * p.p11i + in_i[i - lo];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn single(props: &[Propagators]) -> LifState {
+        LifState::new(1, props, vec![0])
+    }
+
+    #[test]
+    fn leak_decays_to_rest() {
+        let p = LifParams::default();
+        let props = [Propagators::new(&p, 0.1)];
+        let mut s = single(&props);
+        s.u[0] = p.e_l + 8.0;
+        let mut spikes = Vec::new();
+        for _ in 0..3000 {
+            step_slice(&mut s, 0, 1, &[0.0], &[0.0], &props, &mut spikes);
+        }
+        assert!(spikes.is_empty());
+        assert!((s.u[0] - p.e_l).abs() < 1e-8);
+    }
+
+    #[test]
+    fn constant_drive_steady_state() {
+        let p = LifParams { i_ext: 300.0, ..Default::default() };
+        let props = [Propagators::new(&p, 0.1)];
+        let mut s = single(&props);
+        let mut spikes = Vec::new();
+        for _ in 0..5000 {
+            step_slice(&mut s, 0, 1, &[0.0], &[0.0], &props, &mut spikes);
+        }
+        // steady state: e_l + tau_m*I/C = -65 + 10*300/250 = -53 mV
+        assert!(spikes.is_empty());
+        assert!((s.u[0] - (-53.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn suprathreshold_drive_fires_regularly() {
+        let p = LifParams { i_ext: 450.0, ..Default::default() };
+        let props = [Propagators::new(&p, 0.1)];
+        let mut s = single(&props);
+        let mut all = Vec::new();
+        let mut when = Vec::new();
+        for t in 0..3000 {
+            let mut spikes = Vec::new();
+            step_slice(&mut s, 0, 1, &[0.0], &[0.0], &props, &mut spikes);
+            if !spikes.is_empty() {
+                when.push(t);
+            }
+            all.extend(spikes);
+        }
+        assert!(all.len() > 3, "expected several spikes, got {}", all.len());
+        // inter-spike intervals identical for constant drive
+        let isis: Vec<i64> =
+            when.windows(2).map(|w| w[1] - w[0]).collect();
+        assert!(isis.windows(2).all(|w| w[0] == w[1]), "{isis:?}");
+        // refractory period respected: isi > ref_steps
+        assert!(isis[0] > props[0].ref_steps as i64);
+    }
+
+    #[test]
+    fn refractory_holds_under_bombardment() {
+        let p = LifParams::default();
+        let props = [Propagators::new(&p, 0.1)];
+        let mut s = single(&props);
+        s.u[0] = p.v_th + 1.0; // will spike on first step... (already above)
+        let mut spikes = Vec::new();
+        step_slice(&mut s, 0, 1, &[0.0], &[0.0], &props, &mut spikes);
+        assert_eq!(spikes.len(), 1);
+        assert_eq!(s.refrac[0], props[0].ref_steps as f64);
+        // bombard with huge input during refractoriness: u must stay at reset
+        for _ in 0..props[0].ref_steps {
+            let mut sp = Vec::new();
+            step_slice(&mut s, 0, 1, &[1e5], &[0.0], &props, &mut sp);
+            assert!(sp.is_empty());
+            assert_eq!(s.u[0], p.v_reset);
+        }
+        assert_eq!(s.refrac[0], 0.0);
+    }
+
+    #[test]
+    fn input_lands_after_decay_ordering() {
+        // input delivered at step t must not affect u at step t (only t+1)
+        let p = LifParams::default();
+        let props = [Propagators::new(&p, 0.1)];
+        let mut a = single(&props);
+        let mut b = single(&props);
+        let mut sp = Vec::new();
+        step_slice(&mut a, 0, 1, &[100.0], &[0.0], &props, &mut sp);
+        step_slice(&mut b, 0, 1, &[0.0], &[0.0], &props, &mut sp);
+        assert_eq!(a.u[0], b.u[0], "u must be unaffected in the same step");
+        assert_ne!(a.ie[0], b.ie[0]);
+        // ... but the next step differs
+        step_slice(&mut a, 0, 1, &[0.0], &[0.0], &props, &mut sp);
+        step_slice(&mut b, 0, 1, &[0.0], &[0.0], &props, &mut sp);
+        assert!(a.u[0] > b.u[0]);
+    }
+
+    #[test]
+    fn mixed_populations_in_one_block() {
+        let fast = LifParams { tau_m: 5.0, ..Default::default() };
+        let slow = LifParams { tau_m: 20.0, ..Default::default() };
+        let props = [Propagators::new(&fast, 0.1), Propagators::new(&slow, 0.1)];
+        let mut s = LifState::new(2, &props, vec![0, 1]);
+        s.u[0] = -60.0;
+        s.u[1] = -60.0;
+        let mut sp = Vec::new();
+        step_slice(&mut s, 0, 2, &[0.0; 2], &[0.0; 2], &props, &mut sp);
+        // the fast neuron decays toward rest more per step
+        assert!(s.u[0] < s.u[1]);
+    }
+
+    #[test]
+    fn slice_bounds_respected() {
+        let p = LifParams { i_ext: 1000.0, ..Default::default() };
+        let props = [Propagators::new(&p, 0.1)];
+        let mut s = LifState::new(4, &props, vec![0; 4]);
+        let before = s.u.clone();
+        let mut sp = Vec::new();
+        // step only [1, 3)
+        step_slice(&mut s, 1, 3, &[0.0; 2], &[0.0; 2], &props, &mut sp);
+        assert_eq!(s.u[0], before[0]);
+        assert_eq!(s.u[3], before[3]);
+        assert_ne!(s.u[1], before[1]);
+        assert_ne!(s.u[2], before[2]);
+    }
+
+    #[test]
+    fn propagators_match_python_manifest_values() {
+        // values cross-checked against python model.Propagators (default cfg)
+        let props = Propagators::new(&LifParams::default(), 0.1);
+        assert!((props.p22 - (-0.1f64 / 10.0).exp()).abs() < 1e-15);
+        assert!((props.p11e - (-0.1f64 / 0.5).exp()).abs() < 1e-15);
+        assert_eq!(props.ref_steps, 20);
+        // p21e = tau_s*tau_m/(C*(tau_s-tau_m)) * (p11e - p22)
+        let want = 0.5 * 10.0 / (250.0 * (0.5 - 10.0))
+            * ((-0.2f64).exp() - (-0.01f64).exp());
+        assert!((props.p21e - want).abs() < 1e-18);
+    }
+}

@@ -1,0 +1,33 @@
+//! Neuron and synapse models.
+//!
+//! - [`lif`] — leaky integrate-and-fire with exponential post-synaptic
+//!   currents, advanced by exact integration (Rotter & Diesmann 1999).
+//!   The Rust implementation mirrors the L1 Pallas kernel formula-for-
+//!   formula; `rust/tests/lif_fixtures.rs` replays python-generated
+//!   trajectories to prove both sides agree to f64 round-off.
+//! - [`stdp`] — spike-timing-dependent plasticity with multiplicative
+//!   depression and power-law potentiation (Morrison et al. 2007), the
+//!   rule of the paper's verification case (NEST hpc_benchmark).
+//! - [`poisson`] — deterministic, decomposition-independent Poisson drive:
+//!   every (neuron, step) pair derives its own counter-based PRNG stream,
+//!   so the generated noise is identical regardless of how neurons are
+//!   mapped to ranks/threads. This is what makes CORTEX and the NEST-style
+//!   baseline *spike-exact* comparable (stronger than the paper's
+//!   statistical comparison, where simulator RNGs differ).
+
+//! - [`hh`] / [`adex`] — Hodgkin-Huxley and adaptive-exponential
+//!   neurons: the higher compute-intensity models of the paper's §I.C
+//!   computation/communication-ratio discussion (refs [31], [22]),
+//!   quantified by `benches/ablation_intensity.rs`.
+
+pub mod adex;
+pub mod hh;
+pub mod lif;
+pub mod poisson;
+pub mod stdp;
+
+pub use adex::{AdexParams, AdexState};
+pub use hh::{HhParams, HhState};
+pub use lif::{LifParams, LifState, Propagators};
+pub use poisson::PoissonDrive;
+pub use stdp::{StdpParams, TraceSet};

@@ -1,0 +1,270 @@
+//! XLA/PJRT runtime: load the HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Python never runs at simulation time — `make artifacts` lowers the L2
+//! JAX graph (with its L1 Pallas kernels, `interpret=True`) to HLO *text*
+//! once; here we parse it with `HloModuleProto::from_text_file`, compile
+//! on the PJRT CPU client, and execute per step. Text is the interchange
+//! format because jax≥0.5 serialized protos carry 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects (see /opt/xla-example/README.md).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::atlas::NetworkSpec;
+use crate::model::lif::{LifState, Propagators};
+use crate::util::json::Json;
+
+/// A compiled HLO artifact on the PJRT CPU client.
+pub struct HloExecutable {
+    pub name: String,
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl HloExecutable {
+    /// Load + compile `<dir>/<name>.hlo.txt`.
+    pub fn load(dir: &Path, name: &str) -> Result<HloExecutable> {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("pjrt client: {e}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        Ok(HloExecutable { name: name.to_string(), client, exe })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute with f64 vector inputs of the given shapes; returns the
+    /// flattened f64 outputs of the result tuple.
+    pub fn run_f64(
+        &self,
+        inputs: &[(&[f64], &[usize])],
+    ) -> Result<Vec<Vec<f64>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e}"))?;
+            literals.push(lit);
+        }
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        // aot.py lowers with return_tuple=True
+        let tuple = result
+            .decompose_tuple()
+            .map_err(|e| anyhow!("tuple: {e}"))?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e}")))
+            .collect()
+    }
+}
+
+/// The AOT manifest: baked LIF config/propagators + available shapes.
+pub struct Manifest {
+    pub json: Json,
+    pub lif_sizes: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "missing {}/manifest.json — run `make artifacts`",
+                    dir.display()
+                )
+            })?;
+        let json = Json::parse(&text)?;
+        let mut lif_sizes: Vec<usize> = json
+            .get("artifacts")
+            .and_then(|a| match a {
+                Json::Obj(m) => Some(
+                    m.values()
+                        .filter(|v| {
+                            v.get("kind").and_then(Json::as_str)
+                                == Some("lif_step")
+                        })
+                        .filter_map(|v| v.get("n").and_then(Json::as_usize))
+                        .collect::<Vec<_>>(),
+                ),
+                _ => None,
+            })
+            .unwrap_or_default();
+        lif_sizes.sort_unstable();
+        if lif_sizes.is_empty() {
+            bail!("manifest lists no lif_step artifacts");
+        }
+        Ok(Manifest { json, lif_sizes })
+    }
+
+    /// The baked propagators (for the compatibility check).
+    pub fn propagators(&self) -> Result<(f64, f64, f64, f64, f64, f64, u32)> {
+        let p = self
+            .json
+            .get("propagators")
+            .context("manifest missing propagators")?;
+        let g = |k: &str| -> Result<f64> {
+            p.get(k).and_then(Json::as_f64).context("bad propagator")
+        };
+        Ok((
+            g("p22")?,
+            g("p11e")?,
+            g("p11i")?,
+            g("p21e")?,
+            g("p21i")?,
+            g("p20")?,
+            g("ref_steps")? as u32,
+        ))
+    }
+}
+
+/// The LIF dynamics backend running the AOT `lif_step` artifact, chunked
+/// over the rank's neurons.
+pub struct PjrtLif {
+    exe: HloExecutable,
+    /// artifact block size (neurons per execute call)
+    n_block: usize,
+    /// baked reset value for padding lanes
+    v_reset: f64,
+    ref_steps: f64,
+}
+
+impl PjrtLif {
+    /// Load the best-fitting artifact and verify the network's parameters
+    /// match what was baked at AOT time.
+    pub fn load(dir: &str, spec: &NetworkSpec) -> Result<PjrtLif> {
+        let dir = PathBuf::from(dir);
+        let manifest = Manifest::load(&dir)?;
+
+        // compatibility: the artifact bakes exactly one parameter set
+        if spec.params.len() != 1 {
+            bail!(
+                "PJRT backend supports a single neuron parameter set \
+                 (network has {})",
+                spec.params.len()
+            );
+        }
+        let ours = Propagators::new(&spec.params[0], spec.dt_ms);
+        let (p22, p11e, p11i, p21e, p21i, p20, ref_steps) =
+            manifest.propagators()?;
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * b.abs().max(1.0);
+        if !(close(p22, ours.p22)
+            && close(p11e, ours.p11e)
+            && close(p11i, ours.p11i)
+            && close(p21e, ours.p21e)
+            && close(p21i, ours.p21i)
+            && close(p20, ours.p20)
+            && ref_steps == ours.ref_steps)
+        {
+            bail!(
+                "network parameters do not match the AOT artifact \
+                 (re-run `make artifacts` with matching LifConfig)"
+            );
+        }
+
+        // smallest artifact that minimises padding for typical rank sizes:
+        // use the largest block (fewer dispatches; chunking covers any n)
+        let n_block = *manifest.lif_sizes.last().unwrap();
+        let exe = HloExecutable::load(&dir, &format!("lif_step_n{n_block}"))?;
+        Ok(PjrtLif {
+            exe,
+            n_block,
+            v_reset: spec.params[0].v_reset,
+            ref_steps: ours.ref_steps as f64,
+        })
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.n_block
+    }
+
+    /// Advance `state` by one step given this step's synaptic input;
+    /// returns the local indices of spiking neurons.
+    pub fn step(
+        &mut self,
+        state: &mut LifState,
+        in_e: &[f64],
+        in_i: &[f64],
+    ) -> Result<Vec<u32>> {
+        let n = state.len();
+        assert_eq!(in_e.len(), n);
+        assert_eq!(in_i.len(), n);
+        let mut spikes = Vec::new();
+        let nb = self.n_block;
+        let mut lo = 0usize;
+        // padded per-call buffers (parked in refractory reset state so
+        // padding lanes can never spike — same trick as the kernel wrapper)
+        let mut u = vec![self.v_reset; nb];
+        let mut ie = vec![0.0; nb];
+        let mut ii = vec![0.0; nb];
+        let mut r = vec![self.ref_steps; nb];
+        let mut pe = vec![0.0; nb];
+        let mut pi = vec![0.0; nb];
+        while lo < n {
+            let hi = (lo + nb).min(n);
+            let w = hi - lo;
+            u[..w].copy_from_slice(&state.u[lo..hi]);
+            ie[..w].copy_from_slice(&state.ie[lo..hi]);
+            ii[..w].copy_from_slice(&state.ii[lo..hi]);
+            r[..w].copy_from_slice(&state.refrac[lo..hi]);
+            pe[..w].copy_from_slice(&in_e[lo..hi]);
+            pi[..w].copy_from_slice(&in_i[lo..hi]);
+            for x in &mut u[w..] {
+                *x = self.v_reset;
+            }
+            for x in &mut ie[w..] {
+                *x = 0.0;
+            }
+            for x in &mut ii[w..] {
+                *x = 0.0;
+            }
+            for x in &mut r[w..] {
+                *x = self.ref_steps;
+            }
+            for x in &mut pe[w..] {
+                *x = 0.0;
+            }
+            for x in &mut pi[w..] {
+                *x = 0.0;
+            }
+
+            let shape = [nb];
+            let outs = self.exe.run_f64(&[
+                (&u, &shape),
+                (&ie, &shape),
+                (&ii, &shape),
+                (&r, &shape),
+                (&pe, &shape),
+                (&pi, &shape),
+            ])?;
+            debug_assert_eq!(outs.len(), 5);
+            state.u[lo..hi].copy_from_slice(&outs[0][..w]);
+            state.ie[lo..hi].copy_from_slice(&outs[1][..w]);
+            state.ii[lo..hi].copy_from_slice(&outs[2][..w]);
+            state.refrac[lo..hi].copy_from_slice(&outs[3][..w]);
+            for (i, &s) in outs[4][..w].iter().enumerate() {
+                if s != 0.0 {
+                    spikes.push((lo + i) as u32);
+                }
+            }
+            lo = hi;
+        }
+        Ok(spikes)
+    }
+}

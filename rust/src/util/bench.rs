@@ -1,0 +1,53 @@
+//! Timing helpers for the custom bench harnesses (criterion is not in the
+//! offline registry; every `benches/*.rs` is a `harness = false` binary
+//! built on these).
+
+use std::time::Instant;
+
+/// Median wall-clock seconds of `reps` runs of `f` (after one warm-up).
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    assert!(reps >= 1);
+    f(); // warm-up
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// One timed run.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Prevent the optimiser from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_median_positive_and_ordered() {
+        let t = time_median(3, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, t) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+}

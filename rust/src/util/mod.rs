@@ -1,0 +1,11 @@
+//! Support substrates built in-repo (the offline registry only carries the
+//! `xla` crate closure): deterministic PRNG, statistics, a minimal JSON
+//! reader/writer, and a property-based-testing harness.
+
+pub mod bench;
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

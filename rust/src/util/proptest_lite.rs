@@ -1,0 +1,129 @@
+//! A small property-based testing harness (proptest is not in the offline
+//! registry). Properties run against many seeded random inputs; on failure
+//! the seed is reported so the case can be replayed deterministically.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries miss the xla rpath for libstdc++
+//! use cortex::util::proptest_lite::{property, Gen};
+//! property("reverse twice is identity", 100, |g: &mut Gen| {
+//!     let xs = g.vec_u32(0..50, 1000);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     if ys == xs { Ok(()) } else { Err("mismatch".into()) }
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize(&mut self, r: Range<usize>) -> usize {
+        if r.is_empty() {
+            return r.start;
+        }
+        self.rng.range_u64(r.start as u64, r.end as u64) as usize
+    }
+
+    pub fn u32(&mut self, r: Range<u32>) -> u32 {
+        if r.is_empty() {
+            return r.start;
+        }
+        self.rng.range_u64(r.start as u64, r.end as u64) as u32
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Vector of length in `len`, values below `max`.
+    pub fn vec_u32(&mut self, len: Range<usize>, max: u32) -> Vec<u32> {
+        let n = self.usize(len);
+        (0..n).map(|_| self.u32(0..max)).collect()
+    }
+
+    /// A random subset of 0..n as a sorted, deduped vec.
+    pub fn subset(&mut self, n: u32, p: f64) -> Vec<u32> {
+        (0..n).filter(|_| self.rng.bool(p)).collect()
+    }
+}
+
+/// Run `cases` random cases of the property; panic with the failing seed on
+/// the first failure. Set `CORTEX_PROPTEST_SEED` to replay one case.
+pub fn property<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    if let Ok(seed) = std::env::var("CORTEX_PROPTEST_SEED") {
+        let seed: u64 = seed.parse().expect("CORTEX_PROPTEST_SEED must be u64");
+        let mut g = Gen { rng: Rng::new(seed), case: 0 };
+        if let Err(msg) = f(&mut g) {
+            panic!("property '{name}' failed (replay seed {seed}): {msg}");
+        }
+        return;
+    }
+    let base = crate::util::rng::hash_stream(&[name.len() as u64, cases as u64]);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(seed), case };
+        if let Err(msg) = f(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases}: {msg}\n\
+                 replay with CORTEX_PROPTEST_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        property("trivial", 25, |_g| {
+            ran += 1;
+            Ok(())
+        });
+        assert_eq!(ran, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails' failed")]
+    fn failing_property_panics_with_seed() {
+        property("fails", 10, |g| {
+            if g.case == 7 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn subset_sorted_unique() {
+        property("subset invariants", 50, |g| {
+            let s = g.subset(200, 0.3);
+            let mut d = s.clone();
+            d.dedup();
+            if d.len() != s.len() {
+                return Err("dups".into());
+            }
+            if s.windows(2).any(|w| w[0] >= w[1]) {
+                return Err("not sorted".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,103 @@
+//! CLI-level integration: config files → spec builders → short runs of
+//! every workload kind, exercising the same paths the launcher uses.
+
+use std::sync::Arc;
+
+use cortex::cli::{build_spec, run_config_of, Args};
+use cortex::config::{ConfigDoc, EngineKind, ExperimentConfig};
+use cortex::engine::run_simulation;
+
+fn args(sets: &[&str]) -> Args {
+    let mut v = vec!["run".to_string()];
+    for s in sets {
+        v.push("--set".into());
+        v.push(s.to_string());
+    }
+    Args::parse(&v).unwrap()
+}
+
+#[test]
+fn potjans_microcircuit_short_run() {
+    let a = args(&[
+        "network.kind=\"potjans\"",
+        "network.n_neurons=1600",
+        "sim.sim_ms=100",
+        "engine.ranks=2",
+        "engine.threads=2",
+    ]);
+    let cfg = a.experiment().unwrap();
+    let spec = Arc::new(build_spec(&cfg));
+    assert_eq!(spec.populations.len(), 8);
+    let out = run_simulation(&spec, &run_config_of(&cfg)).unwrap();
+    assert!(
+        out.total_spikes > 0,
+        "downscaled microcircuit should be active"
+    );
+}
+
+#[test]
+fn marmoset_short_run_produces_ai_activity() {
+    let a = args(&[
+        "network.kind=\"marmoset\"",
+        "network.n_neurons=2000",
+        "network.n_areas=4",
+        "network.indegree=100",
+        "sim.sim_ms=100",
+        "sim.record_raster=true",
+        "sim.record_limit=2000",
+        "engine.ranks=4",
+    ]);
+    let cfg = a.experiment().unwrap();
+    let spec = Arc::new(build_spec(&cfg));
+    let out = run_simulation(&spec, &run_config_of(&cfg)).unwrap();
+    let rate =
+        out.total_spikes as f64 / spec.n_total() as f64 / (cfg.sim_ms * 1e-3);
+    assert!(
+        rate > 0.5 && rate < 60.0,
+        "marmoset rate {rate:.1} Hz not in a plausible cortical band"
+    );
+    // not every neuron should fire in a 100 ms AI-regime window
+    let stats = out.raster.stats(spec.n_total(), cfg.dt_ms, cfg.steps());
+    assert!(
+        stats.active_fraction < 1.0,
+        "suspiciously regular: every neuron fired"
+    );
+}
+
+#[test]
+fn config_file_round_trip() {
+    let text = r#"
+title = "integration"
+[network]
+kind = "random"
+n_neurons = 300
+indegree = 30
+[sim]
+sim_ms = 10
+[engine]
+kind = "nest_baseline"
+ranks = 2
+"#;
+    let doc = ConfigDoc::parse(text).unwrap();
+    let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+    assert_eq!(cfg.engine, EngineKind::NestBaseline);
+    assert_eq!(cfg.steps(), 100);
+    let spec = build_spec(&cfg);
+    assert_eq!(spec.n_total(), 300);
+}
+
+#[test]
+fn shipped_config_files_parse_and_validate() {
+    for entry in std::fs::read_dir("configs").unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let doc = ConfigDoc::load(&path)
+            .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        let cfg = ExperimentConfig::from_doc(&doc)
+            .unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        let spec = build_spec(&cfg);
+        assert!(spec.n_total() > 0, "{path:?}");
+    }
+}

@@ -1,0 +1,325 @@
+//! Integration tests across decomp + engine + comm + nest_baseline.
+//!
+//! The deterministic network/noise streams (see `atlas`, `model::poisson`)
+//! make strong cross-checks possible:
+//! * same configuration twice          → bit-identical spike trains;
+//! * overlap vs serialized exchange    → bit-identical spike trains;
+//! * 1 thread vs 3 threads             → bit-identical spike trains
+//!   (the mutex-free ownership scheme cannot change delivery order per
+//!   post-neuron);
+//! * CORTEX vs the NEST-style baseline → bit-identical spike trains at
+//!   matching distribution (stronger than the paper's statistical Fig 19);
+//! * different rank counts / mappings  → statistically equivalent activity.
+
+use std::sync::Arc;
+
+use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
+use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
+use cortex::atlas::random_spec;
+use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::engine::{run_simulation, RunConfig};
+use cortex::nest_baseline::{run_nest_simulation, NestRunConfig};
+
+fn base_cfg(steps: u64) -> RunConfig {
+    RunConfig {
+        ranks: 2,
+        threads: 2,
+        mapping: MappingKind::AreaProcesses,
+        comm: CommMode::Overlap,
+        backend: DynamicsBackend::Native,
+        steps,
+        record_limit: Some(u32::MAX),
+        verify_ownership: true,
+        artifacts_dir: "artifacts".into(),
+        seed: 99,
+    }
+}
+
+#[test]
+fn deterministic_repeat() {
+    let spec = Arc::new(random_spec(400, 40, 7));
+    let cfg = base_cfg(300);
+    let a = run_simulation(&spec, &cfg).unwrap();
+    let b = run_simulation(&spec, &cfg).unwrap();
+    assert!(a.total_spikes > 0, "network should be active");
+    assert_eq!(a.raster.events, b.raster.events);
+}
+
+#[test]
+fn overlap_equals_serialized() {
+    let spec = Arc::new(random_spec(400, 40, 8));
+    let mut cfg = base_cfg(300);
+    let a = run_simulation(&spec, &cfg).unwrap();
+    cfg.comm = CommMode::Serialized;
+    let b = run_simulation(&spec, &cfg).unwrap();
+    assert!(a.total_spikes > 0);
+    assert_eq!(
+        a.raster.events, b.raster.events,
+        "overlap must not change results"
+    );
+}
+
+#[test]
+fn thread_count_does_not_change_results() {
+    let spec = Arc::new(random_spec(400, 40, 9));
+    let mut cfg = base_cfg(300);
+    cfg.threads = 1;
+    let a = run_simulation(&spec, &cfg).unwrap();
+    cfg.threads = 3;
+    let b = run_simulation(&spec, &cfg).unwrap();
+    assert!(a.total_spikes > 0);
+    assert_eq!(
+        a.raster.events, b.raster.events,
+        "thread partitioning must be result-invariant"
+    );
+}
+
+#[test]
+fn cortex_matches_nest_baseline_spike_exact() {
+    // single rank, single thread: identical delivery order ⇒ identical
+    // floating-point sums ⇒ identical spike trains
+    let spec = Arc::new(random_spec(300, 30, 10));
+    let mut cfg = base_cfg(400);
+    cfg.ranks = 1;
+    cfg.threads = 1;
+    let a = run_simulation(&spec, &cfg).unwrap();
+    let b = run_nest_simulation(
+        &spec,
+        &NestRunConfig {
+            ranks: 1,
+            threads: 1,
+            steps: 400,
+            record_limit: Some(u32::MAX),
+            seed: 99,
+        },
+    );
+    assert!(a.total_spikes > 0);
+    assert_eq!(a.total_spikes, b.total_spikes);
+    assert_eq!(a.raster.events, b.raster.events);
+}
+
+#[test]
+fn rank_count_statistically_equivalent() {
+    let spec = Arc::new(random_spec(600, 60, 11));
+    let mut cfg = base_cfg(500);
+    cfg.ranks = 1;
+    cfg.threads = 1;
+    let a = run_simulation(&spec, &cfg).unwrap();
+    cfg.ranks = 4;
+    cfg.threads = 2;
+    let b = run_simulation(&spec, &cfg).unwrap();
+    // chaotic dynamics: spike-exact equality is not expected across
+    // decompositions, but population activity must match closely
+    let ra = a.total_spikes as f64;
+    let rb = b.total_spikes as f64;
+    assert!(ra > 0.0 && rb > 0.0);
+    assert!(
+        (ra - rb).abs() / ra.max(rb) < 0.2,
+        "rates diverged: {ra} vs {rb}"
+    );
+}
+
+#[test]
+fn mapping_strategies_statistically_equivalent() {
+    let spec = Arc::new(marmoset_spec(
+        &MarmosetParams {
+            n_neurons: 1200,
+            n_areas: 4,
+            indegree: 60,
+            ..Default::default()
+        },
+        12,
+    ));
+    let mut cfg = base_cfg(400);
+    cfg.ranks = 4;
+    let a = run_simulation(&spec, &cfg).unwrap();
+    cfg.mapping = MappingKind::RandomEquivalent;
+    let b = run_simulation(&spec, &cfg).unwrap();
+    let (ra, rb) = (a.total_spikes as f64, b.total_spikes as f64);
+    assert!(ra > 0.0 && rb > 0.0, "marmoset net inactive: {ra} {rb}");
+    assert!(
+        (ra - rb).abs() / ra.max(rb) < 0.2,
+        "mapping changed activity: {ra} vs {rb}"
+    );
+}
+
+#[test]
+fn stdp_changes_dynamics() {
+    let mk = |plastic| {
+        Arc::new(hpc_benchmark_spec(
+            &HpcParams {
+                n_neurons: 500,
+                indegree: 100,
+                plastic,
+                ..Default::default()
+            },
+            13,
+        ))
+    };
+    let mut cfg = base_cfg(2000); // 200 ms: enough for weights to move
+    cfg.ranks = 2;
+    let with = run_simulation(&mk(true), &cfg).unwrap();
+    let without = run_simulation(&mk(false), &cfg).unwrap();
+    assert!(with.total_spikes > 0);
+    assert!(without.total_spikes > 0);
+    assert_ne!(
+        with.raster.events, without.raster.events,
+        "plasticity should alter the spike train"
+    );
+}
+
+#[test]
+fn verification_case_rate_below_10hz() {
+    // the paper's §IV.A acceptance: asynchronous regime, < 10 Hz
+    let spec = Arc::new(hpc_benchmark_spec(
+        &HpcParams {
+            n_neurons: 1000,
+            indegree: 100,
+            plastic: true,
+            ..Default::default()
+        },
+        14,
+    ));
+    let mut cfg = base_cfg(3000); // 300 ms
+    cfg.ranks = 2;
+    cfg.threads = 2;
+    let out = run_simulation(&spec, &cfg).unwrap();
+    let rate =
+        out.total_spikes as f64 / spec.n_total() as f64 / 0.3;
+    assert!(
+        rate > 0.05 && rate < 10.0,
+        "rate {rate:.2} Hz outside the verification band"
+    );
+}
+
+#[test]
+fn memory_accounting_cortex_below_baseline() {
+    // Fig 18 memory panel shape: at equal problem size and ranks, the
+    // baseline's O(N)-per-rank bookkeeping dominates CORTEX's store
+    let spec = Arc::new(marmoset_spec(
+        &MarmosetParams {
+            n_neurons: 4000,
+            n_areas: 8,
+            indegree: 50,
+            ..Default::default()
+        },
+        15,
+    ));
+    let mut cfg = base_cfg(10);
+    cfg.ranks = 16; // > n_areas so the apportionment can balance areas
+    cfg.threads = 1;
+    let a = run_simulation(&spec, &cfg).unwrap();
+    let b = run_nest_simulation(
+        &spec,
+        &NestRunConfig {
+            ranks: 16,
+            threads: 1,
+            steps: 10,
+            record_limit: None,
+            seed: 99,
+        },
+    );
+    assert!(
+        a.memory.max_rank_bytes() < b.memory.max_rank_bytes(),
+        "CORTEX {} >= baseline {}",
+        a.memory.max_rank_bytes(),
+        b.memory.max_rank_bytes()
+    );
+}
+
+#[test]
+fn windows_match_min_delay_batching() {
+    let spec = Arc::new(random_spec(200, 20, 16));
+    let mut cfg = base_cfg(600); // long enough for activity to start
+    cfg.ranks = 2;
+    let out = run_simulation(&spec, &cfg).unwrap();
+    let m = spec.min_delay_steps as u64;
+    assert_eq!(out.windows, 600u64.div_ceil(m));
+    assert!(out.total_spikes > 0);
+    assert!(out.comm_bytes > 0);
+}
+
+#[test]
+fn checkpoint_resume_is_exact() {
+    use cortex::decomp::{area_processes_partition, RankStore};
+    use cortex::engine::{EngineOptions, RankEngine};
+    use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
+
+    // plastic network: the checkpoint must carry weights + traces too
+    let spec = Arc::new(hpc_benchmark_spec(
+        &HpcParams {
+            n_neurons: 600,
+            indegree: 120,
+            eta: 0.95, // hotter than the verification point: the test
+            // needs activity quickly, not the <10 Hz regime
+            ..Default::default()
+        },
+        17,
+    ));
+    let part = area_processes_partition(&spec, 1, 17);
+    let mk = || {
+        let store = RankStore::build(&spec, &part.members[0], |_| true, 0, 2);
+        RankEngine::new(
+            Arc::clone(&spec),
+            store,
+            EngineOptions { n_threads: 2, ..Default::default() },
+        )
+        .unwrap()
+    };
+
+    // continuous run: 40 + 40 windows
+    let mut cont = mk();
+    let mut all = cont.run_windows_solo(40);
+    all.extend(cont.run_windows_solo(40));
+
+    // checkpointed run: 40 windows, snapshot, restore into a FRESH
+    // engine, 40 more
+    let mut a = mk();
+    let first = a.run_windows_solo(40);
+    let mut blob = Vec::new();
+    a.checkpoint(&mut blob).unwrap();
+    drop(a);
+    let mut b = mk();
+    b.restore(&mut std::io::Cursor::new(&blob)).unwrap();
+    let second = b.run_windows_solo(40);
+
+    let mut resumed = first;
+    resumed.extend(second);
+    assert!(!all.is_empty(), "network should be active");
+    assert_eq!(all, resumed, "resume must be bit-exact");
+}
+
+#[test]
+fn checkpoint_rejects_mismatched_shapes() {
+    use cortex::decomp::{area_processes_partition, RankStore};
+    use cortex::engine::{EngineOptions, RankEngine};
+
+    let spec = Arc::new(random_spec(200, 20, 18));
+    let part = area_processes_partition(&spec, 1, 18);
+    let store = RankStore::build(&spec, &part.members[0], |_| true, 0, 1);
+    let mut eng = RankEngine::new(
+        Arc::clone(&spec),
+        store,
+        EngineOptions::default(),
+    )
+    .unwrap();
+    let mut blob = Vec::new();
+    eng.checkpoint(&mut blob).unwrap();
+
+    // garbage magic
+    assert!(eng
+        .restore(&mut std::io::Cursor::new(&[0u8; 64][..]))
+        .is_err());
+
+    // different network shape
+    let spec2 = Arc::new(random_spec(300, 20, 18));
+    let part2 = area_processes_partition(&spec2, 1, 18);
+    let store2 = RankStore::build(&spec2, &part2.members[0], |_| true, 0, 1);
+    let mut eng2 = RankEngine::new(
+        Arc::clone(&spec2),
+        store2,
+        EngineOptions::default(),
+    )
+    .unwrap();
+    assert!(eng2.restore(&mut std::io::Cursor::new(&blob)).is_err());
+}

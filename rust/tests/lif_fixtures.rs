@@ -1,0 +1,132 @@
+//! Replay the python-generated LIF reference trajectories against the
+//! native Rust model: the L1 Pallas kernel, the pure-jnp oracle, and the
+//! Rust engine must implement the *same* exact-integration step.
+//!
+//! Fixtures are produced by `make artifacts`
+//! (python/compile/kernels/ref.py → artifacts/fixtures/lif_fixtures.json).
+
+use cortex::model::lif::{step_slice, LifParams, LifState, Propagators};
+use cortex::util::json::Json;
+
+fn load_fixtures() -> Option<Json> {
+    let path = std::path::Path::new("artifacts/fixtures/lif_fixtures.json");
+    if !path.exists() {
+        eprintln!(
+            "SKIP: {} not found — run `make artifacts` first",
+            path.display()
+        );
+        return None;
+    }
+    Some(Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap())
+}
+
+fn params_from(case: &Json) -> (LifParams, f64) {
+    let c = case.get("config").unwrap();
+    let g = |k: &str| c.get(k).unwrap().as_f64().unwrap();
+    (
+        LifParams {
+            tau_m: g("tau_m"),
+            tau_syn_ex: g("tau_syn_ex"),
+            tau_syn_in: g("tau_syn_in"),
+            c_m: g("c_m"),
+            e_l: g("e_l"),
+            v_reset: g("v_reset"),
+            v_th: g("v_th"),
+            t_ref: g("t_ref"),
+            i_ext: g("i_ext"),
+        },
+        g("dt"),
+    )
+}
+
+#[test]
+fn propagators_match_python() {
+    let Some(fx) = load_fixtures() else { return };
+    for case in fx.get("cases").unwrap().as_arr().unwrap() {
+        let (params, dt) = params_from(case);
+        let props = Propagators::new(&params, dt);
+        let p = case.get("propagators").unwrap();
+        let g = |k: &str| p.get(k).unwrap().as_f64().unwrap();
+        let name = case.get("name").unwrap().as_str().unwrap();
+        for (got, want, label) in [
+            (props.p22, g("p22"), "p22"),
+            (props.p11e, g("p11e"), "p11e"),
+            (props.p11i, g("p11i"), "p11i"),
+            (props.p21e, g("p21e"), "p21e"),
+            (props.p21i, g("p21i"), "p21i"),
+            (props.p20, g("p20"), "p20"),
+        ] {
+            assert!(
+                (got - want).abs() <= 1e-15 * want.abs().max(1.0),
+                "case {name}: {label} {got} != {want}"
+            );
+        }
+        assert_eq!(props.ref_steps as f64, g("ref_steps"), "case {name}");
+    }
+}
+
+#[test]
+fn trajectories_replay_exactly() {
+    let Some(fx) = load_fixtures() else { return };
+    for case in fx.get("cases").unwrap().as_arr().unwrap() {
+        let name = case.get("name").unwrap().as_str().unwrap();
+        let (params, dt) = params_from(case);
+        let props = [Propagators::new(&params, dt)];
+        let traj = case.get("trajectory").unwrap();
+        let v = |k: &str| traj.get(k).unwrap().as_f64_vec().unwrap();
+        let series = |k: &str| -> Vec<Vec<f64>> {
+            traj.get(k)
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64_vec().unwrap())
+                .collect()
+        };
+
+        let u0 = v("u0");
+        let n = u0.len();
+        let mut state = LifState::new(n, &props, vec![0; n]);
+        state.u = u0;
+        state.ie = v("ie0");
+        state.ii = v("ii0");
+
+        let in_e = series("in_e");
+        let in_i = series("in_i");
+        let want_u = series("u");
+        let want_ie = series("ie");
+        let want_r = series("refrac");
+        let want_s = series("spiked");
+
+        for t in 0..in_e.len() {
+            let mut spikes = Vec::new();
+            step_slice(
+                &mut state, 0, n, &in_e[t], &in_i[t], &props, &mut spikes,
+            );
+            for i in 0..n {
+                // python wrote f64 through JSON (shortest round-trip
+                // repr), so equality is exact up to the JSON round-trip
+                let close = |a: f64, b: f64| {
+                    (a - b).abs() <= 1e-12 * b.abs().max(1.0)
+                };
+                assert!(
+                    close(state.u[i], want_u[t][i]),
+                    "case {name} step {t} neuron {i}: u {} != {}",
+                    state.u[i],
+                    want_u[t][i]
+                );
+                assert!(close(state.ie[i], want_ie[t][i]), "ie mismatch");
+                assert!(
+                    state.refrac[i] == want_r[t][i],
+                    "case {name} step {t} neuron {i}: refrac"
+                );
+                let spiked = spikes.contains(&(i as u32));
+                assert_eq!(
+                    spiked,
+                    want_s[t][i] != 0.0,
+                    "case {name} step {t} neuron {i}: spike flag"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Runtime integration: load the AOT artifacts (JAX/Pallas → HLO text →
+//! PJRT CPU) and check the compiled kernel agrees with the native Rust
+//! step to f64 round-off, then run a whole simulation on the PJRT
+//! backend and compare against the native backend.
+//!
+//! Requires `make artifacts`; tests skip (with a message) if absent.
+
+use std::sync::Arc;
+
+use cortex::atlas::random_spec;
+use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::engine::{run_simulation, RunConfig};
+use cortex::model::lif::{step_slice, LifParams, LifState, Propagators};
+use cortex::runtime::{HloExecutable, Manifest, PjrtLif};
+use cortex::util::rng::Rng;
+
+fn artifacts() -> Option<&'static std::path::Path> {
+    let p = std::path::Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(dir).unwrap();
+    assert!(!m.lif_sizes.is_empty());
+    let (p22, ..) = m.propagators().unwrap();
+    assert!(p22 > 0.0 && p22 < 1.0);
+}
+
+#[test]
+fn hlo_executable_compiles_on_cpu() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(dir).unwrap();
+    let name = format!("lif_step_n{}", m.lif_sizes[0]);
+    let exe = HloExecutable::load(dir, &name).unwrap();
+    assert_eq!(exe.platform().to_lowercase(), "cpu");
+}
+
+#[test]
+fn pjrt_step_matches_native_step() {
+    let Some(_) = artifacts() else { return };
+    let spec = Arc::new(random_spec(700, 10, 3));
+    let mut pjrt = PjrtLif::load("artifacts", &spec).unwrap();
+
+    let params = LifParams::default();
+    let props = [Propagators::new(&params, 0.1)];
+    let n = 700; // forces padding (block is 512 or 2048)
+    let mut rng = Rng::new(42);
+    let mut native = LifState::new(n, &props, vec![0; n]);
+    let mut accel = LifState::new(n, &props, vec![0; n]);
+    for i in 0..n {
+        let u = params.e_l + rng.range_f64(0.0, 16.0);
+        native.u[i] = u;
+        accel.u[i] = u;
+        let ie = rng.range_f64(0.0, 300.0);
+        native.ie[i] = ie;
+        accel.ie[i] = ie;
+    }
+
+    for step in 0..50 {
+        let in_e: Vec<f64> =
+            (0..n).map(|_| rng.range_f64(0.0, 120.0)).collect();
+        let in_i: Vec<f64> =
+            (0..n).map(|_| -rng.range_f64(0.0, 120.0)).collect();
+        let mut native_spikes = Vec::new();
+        step_slice(
+            &mut native, 0, n, &in_e, &in_i, &props, &mut native_spikes,
+        );
+        let accel_spikes =
+            pjrt.step(&mut accel, &in_e, &in_i).unwrap();
+        assert_eq!(
+            native_spikes, accel_spikes,
+            "spike sets diverged at step {step}"
+        );
+        for i in 0..n {
+            assert!(
+                (native.u[i] - accel.u[i]).abs() < 1e-10,
+                "step {step} neuron {i}: u {} vs {}",
+                native.u[i],
+                accel.u[i]
+            );
+            assert!((native.ie[i] - accel.ie[i]).abs() < 1e-10);
+            assert_eq!(native.refrac[i], accel.refrac[i]);
+        }
+    }
+}
+
+#[test]
+fn pjrt_backend_full_simulation_matches_native() {
+    let Some(_) = artifacts() else { return };
+    let spec = Arc::new(random_spec(300, 30, 5));
+    let cfg = RunConfig {
+        ranks: 1,
+        threads: 1,
+        mapping: MappingKind::AreaProcesses,
+        comm: CommMode::Serialized,
+        backend: DynamicsBackend::Native,
+        steps: 400,
+        record_limit: Some(u32::MAX),
+        verify_ownership: false,
+        artifacts_dir: "artifacts".into(),
+        seed: 77,
+    };
+    let native = run_simulation(&spec, &cfg).unwrap();
+    let mut cfg2 = cfg.clone();
+    cfg2.backend = DynamicsBackend::Pjrt;
+    let accel = run_simulation(&spec, &cfg2).unwrap();
+    assert!(native.total_spikes > 0);
+    assert_eq!(
+        native.raster.events, accel.raster.events,
+        "PJRT and native backends must agree spike-for-spike"
+    );
+}
+
+#[test]
+fn pjrt_rejects_mismatched_parameters() {
+    let Some(_) = artifacts() else { return };
+    let mut spec = random_spec(100, 10, 6);
+    spec.params[0].tau_m = 17.0; // not what the artifact baked
+    let err = PjrtLif::load("artifacts", &spec);
+    assert!(err.is_err(), "must reject mismatched parameters");
+}
