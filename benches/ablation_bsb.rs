@@ -14,7 +14,7 @@ use std::sync::Arc;
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::comm::bsb::{pack, plan_exchange, unpack};
 use cortex::comm::{SpikeMsg, TofuModel};
-use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 
@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
             mapping: MappingKind::AreaProcesses,
             comm: CommMode::Serialized,
             backend: DynamicsBackend::Native,
+            exec: ExecMode::Pool,
             steps,
             record_limit: Some(u32::MAX),
             verify_ownership: false,

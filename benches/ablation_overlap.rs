@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::comm::TofuModel;
-use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 
@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
                 mapping: MappingKind::AreaProcesses,
                 comm,
                 backend: DynamicsBackend::Native,
+                exec: ExecMode::Pool,
                 steps,
                 record_limit: None,
                 verify_ownership: false,

@@ -15,7 +15,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
-use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::table::human_bytes;
 use cortex::metrics::Table;
@@ -76,6 +76,7 @@ fn main() -> anyhow::Result<()> {
                 mapping: MappingKind::AreaProcesses,
                 comm: CommMode::Overlap,
                 backend: DynamicsBackend::Native,
+                exec: ExecMode::Pool,
                 steps,
                 record_limit: None,
                 verify_ownership: false,

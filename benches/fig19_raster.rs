@@ -13,7 +13,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
-use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::table::write_csv;
 use cortex::metrics::Table;
@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
             mapping: MappingKind::AreaProcesses,
             comm: CommMode::Overlap,
             backend: DynamicsBackend::Native,
+            exec: ExecMode::Pool,
             steps,
             record_limit: Some(v1),
             verify_ownership: false,

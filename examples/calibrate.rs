@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
-use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 
@@ -42,6 +42,7 @@ fn main() {
                     mapping: MappingKind::AreaProcesses,
                     comm: CommMode::Serialized,
                     backend: DynamicsBackend::Native,
+                    exec: ExecMode::Pool,
                     steps,
                     record_limit: Some(u32::MAX),
                     verify_ownership: false,

@@ -1,6 +1,6 @@
 use std::sync::Arc;
 use cortex::atlas::random_spec;
-use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 fn main() {
     let which = std::env::args().nth(1).unwrap_or_default();
@@ -9,7 +9,7 @@ fn main() {
         let o = cortex::nest_baseline::run_nest_simulation(&spec, &cortex::nest_baseline::NestRunConfig{ranks:1,threads:1,steps:500,record_limit:None,seed:31});
         println!("nest {} spikes {:.3}s", o.total_spikes, o.wall_seconds);
     } else {
-        let o = run_simulation(&spec, &RunConfig{ranks:1,threads:1,mapping:MappingKind::AreaProcesses,comm:CommMode::Serialized,backend:DynamicsBackend::Native,steps:500,record_limit:None,verify_ownership:false,artifacts_dir:"artifacts".into(),seed:31}).unwrap();
+        let o = run_simulation(&spec, &RunConfig{ranks:1,threads:1,mapping:MappingKind::AreaProcesses,comm:CommMode::Serialized,backend:DynamicsBackend::Native,exec:ExecMode::Pool,steps:500,record_limit:None,verify_ownership:false,artifacts_dir:"artifacts".into(),seed:31}).unwrap();
         println!("cortex {} spikes {:.3}s", o.total_spikes, o.wall_seconds); print!("{}", o.timer_max.report());
     }
 }

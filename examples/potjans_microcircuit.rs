@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use cortex::atlas::potjans::{potjans_spec, POP_NAMES, TARGET_RATES_HZ};
-use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 
@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
         mapping: MappingKind::AreaProcesses,
         comm: CommMode::Overlap,
         backend: DynamicsBackend::Native,
+        exec: ExecMode::Pool,
         steps,
         record_limit: Some(u32::MAX),
         verify_ownership: false,

@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use cortex::atlas::random_spec;
-use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::table::human_bytes;
 
@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
         mapping: MappingKind::AreaProcesses,
         comm: CommMode::Overlap,
         backend: DynamicsBackend::Native,
+        exec: ExecMode::Pool,
         steps: 1000, // 100 ms at dt = 0.1 ms
         record_limit: Some(u32::MAX),
         verify_ownership: true,

@@ -116,6 +116,7 @@ pub fn run_config_of(cfg: &ExperimentConfig) -> RunConfig {
         mapping: cfg.mapping,
         comm: cfg.comm,
         backend: cfg.backend,
+        exec: cfg.exec,
         steps: cfg.steps(),
         record_limit: cfg.record_raster.then_some(cfg.record_limit as u32),
         verify_ownership: false,
@@ -347,6 +348,20 @@ mod tests {
         let cfg = a.experiment().unwrap();
         assert_eq!(cfg.n_neurons, 500);
         assert_eq!(cfg.indegree, 50);
+    }
+
+    #[test]
+    fn exec_mode_flows_into_run_config() {
+        let a = Args::parse(&s(&[
+            "run",
+            "--set",
+            "engine.exec=\"scoped\"",
+        ]))
+        .unwrap();
+        let cfg = a.experiment().unwrap();
+        assert_eq!(cfg.exec, crate::config::ExecMode::Scoped);
+        let rc = run_config_of(&cfg);
+        assert_eq!(rc.exec, crate::config::ExecMode::Scoped);
     }
 
     #[test]

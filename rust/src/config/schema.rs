@@ -53,6 +53,18 @@ pub enum CommMode {
     Serialized,
 }
 
+/// Per-rank compute-thread execution backend (see `engine::workers`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Persistent worker pool: compute threads are created once per rank
+    /// engine, own their state permanently, and are driven through steps
+    /// by a channel protocol (the paper's long-lived compute threads).
+    Pool,
+    /// Ablation fallback: scoped OS threads spawned and joined every
+    /// integration step (the pre-pool behaviour; measures spawn overhead).
+    Scoped,
+}
+
 /// Fully-validated experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -79,6 +91,7 @@ pub struct ExperimentConfig {
     pub mapping: MappingKind,
     pub backend: DynamicsBackend,
     pub comm: CommMode,
+    pub exec: ExecMode,
     pub artifacts_dir: String,
 }
 
@@ -102,6 +115,7 @@ impl Default for ExperimentConfig {
             mapping: MappingKind::AreaProcesses,
             backend: DynamicsBackend::Native,
             comm: CommMode::Overlap,
+            exec: ExecMode::Pool,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -168,6 +182,15 @@ impl ExperimentConfig {
                 &[
                     ("overlap", CommMode::Overlap),
                     ("serialized", CommMode::Serialized),
+                ],
+            )?,
+            exec: parse_enum(
+                doc,
+                "engine.exec",
+                "pool",
+                &[
+                    ("pool", ExecMode::Pool),
+                    ("scoped", ExecMode::Scoped),
                 ],
             )?,
             artifacts_dir: doc.str("engine.artifacts_dir", &d.artifacts_dir)?,
@@ -272,6 +295,18 @@ comm = "serialized"
         assert_eq!(cfg.mapping, MappingKind::RandomEquivalent);
         assert_eq!(cfg.comm, CommMode::Serialized);
         assert_eq!(cfg.steps(), 500);
+    }
+
+    #[test]
+    fn exec_mode_parses_and_defaults_to_pool() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.exec, ExecMode::Pool);
+        let doc = ConfigDoc::parse("[engine]\nexec = \"scoped\"").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.exec, ExecMode::Scoped);
+        let doc = ConfigDoc::parse("[engine]\nexec = \"forked\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 
     #[test]

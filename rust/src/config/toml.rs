@@ -42,18 +42,46 @@ impl Value {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config parse error on line {line}: {msg}")]
     Parse { line: usize, msg: String },
-    #[error("missing key '{0}'")]
     Missing(String),
-    #[error("key '{key}': expected {expected}")]
     Type { key: String, expected: &'static str },
-    #[error("key '{key}': {msg}")]
     Invalid { key: String, msg: String },
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse { line, msg } => {
+                write!(f, "config parse error on line {line}: {msg}")
+            }
+            ConfigError::Missing(key) => write!(f, "missing key '{key}'"),
+            ConfigError::Type { key, expected } => {
+                write!(f, "key '{key}': expected {expected}")
+            }
+            ConfigError::Invalid { key, msg } => {
+                write!(f, "key '{key}': {msg}")
+            }
+            ConfigError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> ConfigError {
+        ConfigError::Io(e)
+    }
 }
 
 /// Parsed document: dotted path → value.

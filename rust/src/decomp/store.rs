@@ -69,6 +69,30 @@ impl ThreadEdges {
     }
 }
 
+/// Owning thread of `local_post` under the contiguous equal split of
+/// `n_posts` posts over `n_threads` threads (`lo_t = ⌊t·n/T⌋`).
+///
+/// O(1) closed-form inverse of the range table: the arithmetic guess
+/// `⌊p·T/n⌋` is exact or one below the owner whenever `n >= T`, and the
+/// correction loops walk the (then possibly empty) ranges otherwise.
+/// Replaces the linear `position()` scan that sat on the per-spike
+/// collection path and on every staged edge during store construction.
+#[inline]
+pub fn owner_of(local_post: u32, n_posts: usize, n_threads: usize) -> ThreadId {
+    debug_assert!(n_threads >= 1);
+    debug_assert!((local_post as usize) < n_posts);
+    let p = local_post as usize;
+    let mut t = (p as u64 * n_threads as u64 / n_posts as u64) as usize;
+    // correct the floor-division guess onto the owning half-open range
+    while (t + 1) * n_posts / n_threads <= p {
+        t += 1;
+    }
+    while t * n_posts / n_threads > p {
+        t -= 1;
+    }
+    t as ThreadId
+}
+
 /// The rank's full data instance.
 #[derive(Clone, Debug)]
 pub struct RankStore {
@@ -113,12 +137,8 @@ impl RankStore {
                 )
             })
             .collect();
-        let thread_of = |local_post: u32| -> ThreadId {
-            thread_ranges
-                .iter()
-                .position(|&(lo, hi)| local_post >= lo && local_post < hi)
-                .expect("post outside thread ranges") as ThreadId
-        };
+        let thread_of =
+            |local_post: u32| -> ThreadId { owner_of(local_post, n_posts, n_threads) };
 
         // generate the indegree sub-graph: all incoming edges of our posts
         let mut edges: Vec<Edge> = Vec::new();
@@ -289,13 +309,17 @@ impl RankStore {
         self.posts.binary_search(&gid).ok().map(|i| i as u32)
     }
 
-    /// Owning thread of a local post index.
+    /// Owning thread of a local post index (O(1) on the equal split).
     #[inline]
     pub fn thread_of(&self, local_post: u32) -> ThreadId {
-        self.thread_ranges
-            .iter()
-            .position(|&(lo, hi)| local_post >= lo && local_post < hi)
-            .expect("post outside thread ranges") as ThreadId
+        owner_of(local_post, self.n_posts(), self.thread_ranges.len())
+    }
+
+    /// Move the per-thread edge stores out (engine construction hands
+    /// each one to its permanently-owning worker; see `engine::workers`).
+    /// Rank-level structure (`posts`, `pres`, ranges, counts) stays.
+    pub fn take_threads(&mut self) -> Vec<ThreadEdges> {
+        std::mem::take(&mut self.threads)
     }
 
     /// Memory accounting for the Fig 18 / Fig 9-10 benches.
@@ -428,6 +452,59 @@ mod tests {
         assert!(m.get("edges") > 0);
         assert!(m.get("posts") > 0);
         assert!(m.total() > m.get("edges"));
+    }
+
+    #[test]
+    fn owner_of_matches_linear_scan() {
+        // the O(1) arithmetic must agree with a scan of the range table
+        // for every post, including degenerate splits (n < threads, where
+        // some ranges are empty)
+        for &(n, threads) in &[
+            (1usize, 1usize),
+            (1, 4),
+            (3, 4),
+            (7, 3),
+            (100, 1),
+            (100, 3),
+            (101, 7),
+            (1000, 13),
+        ] {
+            let ranges: Vec<(u32, u32)> = (0..threads)
+                .map(|t| {
+                    (
+                        (t * n / threads) as u32,
+                        ((t + 1) * n / threads) as u32,
+                    )
+                })
+                .collect();
+            for p in 0..n as u32 {
+                let want = ranges
+                    .iter()
+                    .position(|&(lo, hi)| p >= lo && p < hi)
+                    .expect("post uncovered") as ThreadId;
+                assert_eq!(
+                    owner_of(p, n, threads),
+                    want,
+                    "n={n} threads={threads} p={p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn thread_of_agrees_with_ranges_after_take() {
+        let (_, mut stores) = build_stores(157, 12, 1, 5, 8);
+        let s = &mut stores[0];
+        let ranges = s.thread_ranges.clone();
+        for p in 0..s.n_posts() as u32 {
+            let t = s.thread_of(p) as usize;
+            assert!(p >= ranges[t].0 && p < ranges[t].1);
+        }
+        // taking the thread stores must not break the O(1) lookup
+        let taken = s.take_threads();
+        assert_eq!(taken.len(), 5);
+        assert!(s.threads.is_empty());
+        assert_eq!(s.thread_of(0), owner_of(0, s.n_posts(), ranges.len()));
     }
 
     #[test]

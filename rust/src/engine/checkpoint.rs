@@ -10,6 +10,13 @@
 //! checkpoints small (O(neurons + ring) instead of O(synapses)) except
 //! for plastic weights, which are dynamical and are saved.
 //!
+//! The dynamical state lives in the engine's worker contexts (one per
+//! compute thread; see `engine::workers`), so every section is gathered
+//! across contexts in thread order on save and scattered back on
+//! restore. Because thread ranges tile the rank's posts contiguously,
+//! the gathered byte stream is identical to what the old monolithic
+//! (rank-level) containers produced.
+//!
 //! Consistency contract: checkpoint at a **window boundary, before
 //! `enqueue_remote`** (i.e. right after `run_rank`'s exchange completes
 //! and before the next window starts) so no spikes are in flight.
@@ -56,6 +63,38 @@ fn get_f64s(r: &mut impl Read) -> Result<Vec<f64>> {
     Ok(out)
 }
 
+/// Write a length header followed by each part — the same byte stream
+/// [`put_f64s`] produces for the concatenation.
+fn gather_f64s(w: &mut impl Write, parts: &[&[f64]]) -> Result<()> {
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    put_u64(w, total as u64)?;
+    for part in parts {
+        for &x in *part {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read one [`put_f64s`] section and split it along `spans`.
+fn scatter_f64s(
+    r: &mut impl Read,
+    spans: &[usize],
+) -> Result<Vec<Vec<f64>>> {
+    let all = get_f64s(r)?;
+    let want: usize = spans.iter().sum();
+    if all.len() != want {
+        bail!("checkpoint shape mismatch: {} vs {want}", all.len());
+    }
+    let mut out = Vec::with_capacity(spans.len());
+    let mut off = 0;
+    for &span in spans {
+        out.push(all[off..off + span].to_vec());
+        off += span;
+    }
+    Ok(out)
+}
+
 impl RankEngine {
     /// Serialize the dynamical state (see module docs for the
     /// consistency contract).
@@ -64,12 +103,29 @@ impl RankEngine {
         put_u64(w, self.rank as u64)?;
         put_u64(w, self.step)?;
         put_u64(w, self.total_spikes)?;
-        put_f64s(w, &self.state.u)?;
-        put_f64s(w, &self.state.ie)?;
-        put_f64s(w, &self.state.ii)?;
-        put_f64s(w, &self.state.refrac)?;
-        self.ring_e.save(w)?;
-        self.ring_i.save(w)?;
+        // LIF SoA, gathered across workers in thread order
+        let parts: Vec<&[f64]> =
+            self.ctxs.iter().map(|c| c.state.u.as_slice()).collect();
+        gather_f64s(w, &parts)?;
+        let parts: Vec<&[f64]> =
+            self.ctxs.iter().map(|c| c.state.ie.as_slice()).collect();
+        gather_f64s(w, &parts)?;
+        let parts: Vec<&[f64]> =
+            self.ctxs.iter().map(|c| c.state.ii.as_slice()).collect();
+        gather_f64s(w, &parts)?;
+        let parts: Vec<&[f64]> =
+            self.ctxs.iter().map(|c| c.state.refrac.as_slice()).collect();
+        gather_f64s(w, &parts)?;
+        // rings: worker buffers are post-major rows of the same ring, so
+        // their concatenation is the monolithic ring's buffer
+        put_u64(w, self.ctxs[0].ring_e.len as u64)?;
+        let parts: Vec<&[f64]> =
+            self.ctxs.iter().map(|c| c.ring_e.raw()).collect();
+        gather_f64s(w, &parts)?;
+        put_u64(w, self.ctxs[0].ring_i.len as u64)?;
+        let parts: Vec<&[f64]> =
+            self.ctxs.iter().map(|c| c.ring_i.raw()).collect();
+        gather_f64s(w, &parts)?;
         // pending spikes
         put_u64(w, self.pending.len() as u64)?;
         for &(p, emit) in &self.pending {
@@ -81,11 +137,31 @@ impl RankEngine {
             None => put_u64(w, 0)?,
             Some(s) => {
                 put_u64(w, 1)?;
-                for te in &self.store.threads {
-                    put_f64s(w, &te.weight)?;
+                for ctx in &self.ctxs {
+                    put_f64s(w, &ctx.edges.weight)?;
                 }
                 s.pre_traces.save(w)?;
-                s.post_traces.save(w)?;
+                // post traces (worker-owned): values then last-steps,
+                // each gathered in thread order
+                let parts: Vec<&[f64]> = self
+                    .ctxs
+                    .iter()
+                    .map(|c| c.post_traces.as_ref().expect("stdp").raw().0)
+                    .collect();
+                gather_f64s(w, &parts)?;
+                let total: usize = self
+                    .ctxs
+                    .iter()
+                    .map(|c| c.post_traces.as_ref().expect("stdp").raw().1.len())
+                    .sum();
+                put_u64(w, total as u64)?;
+                for ctx in &self.ctxs {
+                    let (_, last) =
+                        ctx.post_traces.as_ref().expect("stdp").raw();
+                    for &x in last {
+                        put_u64(w, x)?;
+                    }
+                }
             }
         }
         Ok(())
@@ -103,19 +179,45 @@ impl RankEngine {
         }
         self.step = get_u64(r)?;
         self.total_spikes = get_u64(r)?;
-        let n = self.state.len();
-        let load = |xs: Vec<f64>, want: usize| -> Result<Vec<f64>> {
-            if xs.len() != want {
-                bail!("checkpoint shape mismatch: {} vs {want}", xs.len());
+        let spans: Vec<usize> =
+            self.ctxs.iter().map(|c| c.state.len()).collect();
+        for field in 0..4usize {
+            let parts = scatter_f64s(r, &spans)
+                .with_context(|| format!("state field {field}"))?;
+            for (ctx, part) in self.ctxs.iter_mut().zip(parts) {
+                match field {
+                    0 => ctx.state.u = part,
+                    1 => ctx.state.ie = part,
+                    2 => ctx.state.ii = part,
+                    _ => ctx.state.refrac = part,
+                }
             }
-            Ok(xs)
-        };
-        self.state.u = load(get_f64s(r)?, n)?;
-        self.state.ie = load(get_f64s(r)?, n)?;
-        self.state.ii = load(get_f64s(r)?, n)?;
-        self.state.refrac = load(get_f64s(r)?, n)?;
-        self.ring_e.load(r).context("ring_e")?;
-        self.ring_i.load(r).context("ring_i")?;
+        }
+        for chan in 0..2usize {
+            let len = get_u64(r)? as usize;
+            let ring_spans: Vec<usize> = self
+                .ctxs
+                .iter()
+                .map(|c| {
+                    if chan == 0 { c.ring_e.raw().len() } else { c.ring_i.raw().len() }
+                })
+                .collect();
+            if len != self.ctxs[0].ring_e.len {
+                bail!(
+                    "ring length mismatch: {len} vs {}",
+                    self.ctxs[0].ring_e.len
+                );
+            }
+            let parts = scatter_f64s(r, &ring_spans).context("rings")?;
+            for (ctx, part) in self.ctxs.iter_mut().zip(parts) {
+                let buf = if chan == 0 {
+                    ctx.ring_e.raw_mut()
+                } else {
+                    ctx.ring_i.raw_mut()
+                };
+                buf.copy_from_slice(&part);
+            }
+        }
         let np = get_u64(r)? as usize;
         self.pending.clear();
         for _ in 0..np {
@@ -128,15 +230,36 @@ impl RankEngine {
             bail!("checkpoint plasticity flag mismatch");
         }
         if let Some(s) = &mut self.stdp {
-            for te in &mut self.store.threads {
+            for ctx in &mut self.ctxs {
                 let w = get_f64s(r)?;
-                if w.len() != te.weight.len() {
+                if w.len() != ctx.edges.weight.len() {
                     bail!("plastic weight shape mismatch");
                 }
-                te.weight = w;
+                ctx.edges.weight = w;
             }
             s.pre_traces.load(r).context("pre_traces")?;
-            s.post_traces.load(r).context("post_traces")?;
+            let values = scatter_f64s(r, &spans).context("post_traces")?;
+            let total = get_u64(r)? as usize;
+            if total != spans.iter().sum::<usize>() {
+                bail!("post trace shape mismatch");
+            }
+            let mut lasts: Vec<Vec<Step>> = Vec::with_capacity(spans.len());
+            for &span in &spans {
+                let mut part = Vec::with_capacity(span);
+                for _ in 0..span {
+                    part.push(get_u64(r)?);
+                }
+                lasts.push(part);
+            }
+            for ((ctx, value), last) in
+                self.ctxs.iter_mut().zip(values).zip(lasts)
+            {
+                ctx.post_traces
+                    .as_mut()
+                    .expect("stdp")
+                    .raw_restore(value, last)
+                    .map_err(|e| anyhow::anyhow!(e))?;
+            }
         }
         Ok(())
     }
@@ -145,12 +268,8 @@ impl RankEngine {
     /// exchange), window-aligned so the result can be checkpointed and
     /// resumed exactly. Returns emitted spikes as (step, gid).
     pub fn run_windows_solo(&mut self, windows: u64) -> Vec<(Step, u32)> {
-        assert_eq!(
-            self.spec.min_delay_steps >= 1,
-            true,
-            "window size must be positive"
-        );
         let m = self.spec.min_delay_steps as u64;
+        assert!(m >= 1, "window size must be positive");
         let mut events = Vec::new();
         for _ in 0..windows {
             let mut outbox = Vec::new();
@@ -165,25 +284,9 @@ impl RankEngine {
     }
 }
 
-// persistence hooks for the containers (kept here so the main modules
-// stay serialization-free)
-impl super::ring::InputRing {
-    pub fn save(&self, w: &mut impl Write) -> Result<()> {
-        put_u64(w, self.len as u64)?;
-        put_f64s(w, self.raw())
-    }
-
-    pub fn load(&mut self, r: &mut impl Read) -> Result<()> {
-        let len = get_u64(r)? as usize;
-        if len != self.len {
-            bail!("ring length mismatch: {len} vs {}", self.len);
-        }
-        let buf = get_f64s(r)?;
-        self.raw_mut().copy_from_slice(&buf);
-        Ok(())
-    }
-}
-
+// persistence hooks for the pre-trace container (kept here so the main
+// modules stay serialization-free; worker-owned rings and post-traces
+// are gathered/scattered directly by checkpoint/restore above)
 impl crate::model::stdp::TraceSet {
     pub fn save(&self, w: &mut impl Write) -> Result<()> {
         let (value, last) = self.raw();

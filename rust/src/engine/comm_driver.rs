@@ -1,0 +1,105 @@
+//! Spike-exchange driver (paper §III.C): serialized (blocking at window
+//! end) or overlapped via a dedicated communication thread.
+//!
+//! The communication thread is the one standing thread the engine owns
+//! besides its compute worker pool; `run_rank` synchronizes the two at
+//! window boundaries — the pool's workers compute window `k` while the
+//! comm thread exchanges window `k-1`'s spikes (paper §III.C.2).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::comm::{Communicator, SpikePacket};
+use crate::config::CommMode;
+
+/// Spike-exchange driver: one per rank, built by `run_rank`.
+pub(crate) enum CommDriver {
+    Serialized {
+        comm: Box<dyn Communicator>,
+        staged: Option<SpikePacket>,
+    },
+    Overlap {
+        req: Sender<SpikePacket>,
+        resp: Receiver<SpikePacket>,
+        handle: JoinHandle<Box<dyn Communicator>>,
+        in_flight: bool,
+    },
+}
+
+impl CommDriver {
+    pub fn new(comm: Box<dyn Communicator>, mode: CommMode) -> CommDriver {
+        match mode {
+            CommMode::Serialized => {
+                CommDriver::Serialized { comm, staged: None }
+            }
+            CommMode::Overlap => {
+                let (req_tx, req_rx) = channel::<SpikePacket>();
+                let (resp_tx, resp_rx) = channel::<SpikePacket>();
+                let mut comm = comm;
+                let handle = std::thread::spawn(move || {
+                    // the dedicated communication thread: drains exchange
+                    // requests until the engine hangs up
+                    while let Ok(pkt) = req_rx.recv() {
+                        let got = comm.exchange(pkt);
+                        if resp_tx.send(got).is_err() {
+                            break;
+                        }
+                    }
+                    comm
+                });
+                CommDriver::Overlap {
+                    req: req_tx,
+                    resp: resp_rx,
+                    handle,
+                    in_flight: false,
+                }
+            }
+        }
+    }
+
+    /// Submit this window's spikes for exchange.
+    pub fn submit(&mut self, pkt: SpikePacket) {
+        match self {
+            CommDriver::Serialized { comm, staged } => {
+                debug_assert!(staged.is_none());
+                *staged = Some(comm.exchange(pkt));
+            }
+            CommDriver::Overlap { req, in_flight, .. } => {
+                debug_assert!(!*in_flight);
+                req.send(pkt).expect("comm thread died");
+                *in_flight = true;
+            }
+        }
+    }
+
+    /// Receive the previously submitted window's remote spikes.
+    pub fn recv_completed(&mut self) -> SpikePacket {
+        match self {
+            CommDriver::Serialized { staged, .. } => {
+                staged.take().unwrap_or_default()
+            }
+            CommDriver::Overlap { resp, in_flight, .. } => {
+                if *in_flight {
+                    *in_flight = false;
+                    resp.recv().expect("comm thread died")
+                } else {
+                    Vec::new()
+                }
+            }
+        }
+    }
+
+    /// Tear down; returns the communicator for its statistics.
+    pub fn finish(self) -> Box<dyn Communicator> {
+        match self {
+            CommDriver::Serialized { comm, .. } => comm,
+            CommDriver::Overlap { req, resp, handle, in_flight } => {
+                if in_flight {
+                    let _ = resp.recv();
+                }
+                drop(req);
+                handle.join().expect("comm thread panicked")
+            }
+        }
+    }
+}

@@ -9,40 +9,59 @@
 //! engine additionally carries the paper's verification check ("if an
 //! edge or post-vertex is accessed by different threads, Abort").
 //!
-//! Per-step pipeline (paper Fig 17's circulatory dataflow):
-//!   1. **deliver** — every thread walks its delay-sorted edge runs for
+//! # Execution core: the persistent worker pool
+//!
+//! The compute threads are **long-lived** (paper Fig 16: threads run
+//! continuously across the whole simulation, not per step). At
+//! construction, `RankEngine::new` moves every thread's state into a
+//! `workers::WorkerCtx` — edges, LIF slice, ring rows, STDP
+//! post-traces, drives, scratch, spike outbox — and (in
+//! [`ExecMode::Pool`]) spawns one worker thread per context via
+//! `workers::WorkerPool`. Per step, `step_once` transfers each context
+//! plus one shared read-only `workers::StepJob` (pending spikes +
+//! rank-level STDP pre-traces) to its worker over a channel and collects
+//! the contexts back; workers park in `recv` between steps. The
+//! [`ExecMode::Scoped`] fallback runs the same phase kernels on scoped
+//! threads spawned every step — kept as the ablation baseline that measures
+//! exactly the spawn/join overhead the pool removes (the timer's `sync`
+//! phase).
+//!
+//! Per-step pipeline (paper Fig 17's circulatory dataflow, kernels in
+//! `phases`):
+//!   1. **deliver** — every worker walks its delay-sorted edge runs for
 //!      all pending spikes, accumulating weights into ring slots
 //!      `emit + delay` (and applying STDP depression);
-//!   2. **integrate** — every thread consumes its ring slot + Poisson
+//!   2. **integrate** — every worker consumes its ring slot + Poisson
 //!      drive and advances the LIF propagator (or the rank executes the
 //!      AOT PJRT artifact) collecting new spikes;
 //!   3. **plasticity** — spiking posts potentiate their incoming plastic
-//!      edges (thread-owned);
+//!      edges (thread-owned; one kernel shared by both backends);
 //!   4. **exchange** — once per min-delay window, spiking gids are
 //!      broadcast; in [`CommMode::Overlap`] a dedicated communication
-//!      thread runs the exchange while the next window computes.
+//!      thread (`comm_driver`) runs the exchange while the next window
+//!      computes, synchronized with the pool at the window barrier.
 
 pub mod checkpoint;
+mod comm_driver;
+mod phases;
 pub mod ring;
+mod workers;
 
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 
 use crate::atlas::NetworkSpec;
 use crate::comm::{Communicator, LocalCluster, SpikeMsg, SpikePacket};
-use crate::config::{CommMode, DynamicsBackend, MappingKind};
+use crate::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use crate::decomp::{
     area_processes_partition, random_equivalent_partition, Partition,
     RankStore,
 };
 use crate::metrics::memory::{vec_bytes, MemoryBreakdown, MemoryReport};
 use crate::metrics::{PhaseTimer, SpikeRecorder};
-use crate::model::lif::{LifState, Propagators};
-use crate::model::stdp::{StdpParams, TraceSet};
-use crate::model::poisson::PreparedPoisson;
+use crate::model::stdp::TraceSet;
 use crate::{Gid, Step};
-use ring::InputRing;
+use comm_driver::CommDriver;
+use workers::{StdpRank, StepJob, WorkerCtx, WorkerPool};
 
 /// Engine knobs (a validated subset of [`crate::config::ExperimentConfig`]).
 #[derive(Clone, Debug)]
@@ -50,6 +69,8 @@ pub struct EngineOptions {
     pub n_threads: usize,
     pub comm: CommMode,
     pub backend: DynamicsBackend,
+    /// Persistent worker pool vs per-step scoped threads (ablation).
+    pub exec: ExecMode,
     /// Record spikes of gids below this bound (None = no raster).
     pub record_limit: Option<Gid>,
     /// Compile the paper's thread-ownership abort check into the hot loop.
@@ -64,6 +85,7 @@ impl Default for EngineOptions {
             n_threads: 1,
             comm: CommMode::Overlap,
             backend: DynamicsBackend::Native,
+            exec: ExecMode::Pool,
             record_limit: None,
             verify_ownership: false,
             artifacts_dir: "artifacts".into(),
@@ -71,55 +93,45 @@ impl Default for EngineOptions {
     }
 }
 
-/// Plasticity state of one rank.
-struct StdpRank {
-    params: StdpParams,
-    /// Traces of all pres (local + remote) — read-only in parallel phases.
-    pre_traces: TraceSet,
-    /// Traces of owned posts — split per thread.
-    post_traces: TraceSet,
-}
-
 /// One rank's engine.
 pub struct RankEngine {
     pub rank: u16,
     spec: Arc<NetworkSpec>,
+    /// Rank-level structure (posts, pres, ranges); the per-thread edge
+    /// stores were moved into the worker contexts at construction.
     pub store: RankStore,
-    state: LifState,
-    props: Vec<Propagators>,
-    ring_e: InputRing,
-    ring_i: InputRing,
+    /// Worker-owned state, in thread order. Parked here between steps
+    /// (and permanently in scoped/inline mode).
+    ctxs: Vec<WorkerCtx>,
+    /// The persistent compute threads (None ⇒ scoped fallback or 1 thread).
+    pool: Option<WorkerPool>,
     stdp: Option<StdpRank>,
     /// Spikes awaiting delivery: (pre index, emission step).
     pending: Vec<(u32, Step)>,
-    drives: Vec<PreparedPoisson>,
     pub recorder: SpikeRecorder,
     pub timer: PhaseTimer,
     step: Step,
-    opts: EngineOptions,
+    pub opts: EngineOptions,
     pjrt: Option<crate::runtime::PjrtLif>,
-    /// scratch buffers for the PJRT dynamics path
-    scratch_in: (Vec<f64>, Vec<f64>),
-    /// per-thread (in_e, in_i) scratch (no per-step allocation)
-    scratch: Vec<(Vec<f64>, Vec<f64>)>,
     pub total_spikes: u64,
 }
 
 impl RankEngine {
     pub fn new(
         spec: Arc<NetworkSpec>,
-        store: RankStore,
+        mut store: RankStore,
         opts: EngineOptions,
     ) -> anyhow::Result<RankEngine> {
-        let props = spec.propagators();
-        let n = store.n_posts();
-        let pidx: Vec<u8> =
-            store.posts.iter().map(|&g| spec.pidx(g)).collect();
-        let mut state = LifState::new(n, &props, pidx);
-        for (i, &g) in store.posts.iter().enumerate() {
-            state.u[i] = spec.v_init(g);
-        }
-        let ring_len = store.max_delay as usize + 1;
+        let ctxs = workers::build_worker_ctxs(
+            &spec,
+            &mut store,
+            opts.verify_ownership,
+        );
+        assert_eq!(
+            ctxs.len(),
+            opts.n_threads,
+            "EngineOptions::n_threads must match the store's decomposition"
+        );
         let stdp = spec.stdp.map(|params| StdpRank {
             params,
             pre_traces: TraceSet::new(
@@ -127,13 +139,7 @@ impl RankEngine {
                 params.tau_plus_ms,
                 spec.dt_ms,
             ),
-            post_traces: TraceSet::new(n, params.tau_minus_ms, spec.dt_ms),
         });
-        let drives: Vec<PreparedPoisson> = store
-            .posts
-            .iter()
-            .map(|&g| spec.drive(g).prepare(spec.dt_ms))
-            .collect();
         let recorder = match opts.record_limit {
             Some(lim) => SpikeRecorder::new(lim),
             None => SpikeRecorder::disabled(),
@@ -145,38 +151,62 @@ impl RankEngine {
                 &spec,
             )?),
         };
-        let scratch: Vec<(Vec<f64>, Vec<f64>)> = store
-            .thread_ranges
-            .iter()
-            .map(|&(lo, hi)| {
-                let span = (hi - lo) as usize;
-                (vec![0.0; span], vec![0.0; span])
-            })
-            .collect();
+        // the pool pays off only with real parallelism; a single context
+        // runs inline on the rank thread either way
+        let pool = (opts.exec == ExecMode::Pool && ctxs.len() > 1)
+            .then(|| WorkerPool::spawn(ctxs.len(), pjrt.is_none()));
         Ok(RankEngine {
             rank: store.rank,
             spec,
-            ring_e: InputRing::new(n, ring_len.max(2)),
-            ring_i: InputRing::new(n, ring_len.max(2)),
             store,
-            state,
-            props,
+            ctxs,
+            pool,
             stdp,
             pending: Vec::new(),
-            drives,
             recorder,
             timer: PhaseTimer::new(),
             step: 0,
             opts,
             pjrt,
-            scratch_in: (vec![0.0; n], vec![0.0; n]),
-            scratch,
             total_spikes: 0,
         })
     }
 
     pub fn step(&self) -> Step {
         self.step
+    }
+
+    /// Number of compute workers (== decomposition threads).
+    pub fn n_workers(&self) -> usize {
+        self.ctxs.len()
+    }
+
+    /// True when a persistent pool is driving the compute phases.
+    pub fn uses_pool(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Snapshot of the plastic edges as (pre index, local post, delay,
+    /// weight), stably sorted by (pre, post, delay). Because every edge
+    /// lives with the thread owning its post and within-thread runs keep
+    /// generation order, multapse groups preserve their relative order —
+    /// the snapshot is canonical, i.e. comparable across thread counts.
+    pub fn plastic_edges(&self) -> Vec<(u32, u32, u16, f64)> {
+        let mut out = Vec::new();
+        for ctx in &self.ctxs {
+            for ei in 0..ctx.edges.n_edges() {
+                if ctx.edges.plastic.get(ei).copied().unwrap_or(false) {
+                    out.push((
+                        ctx.edges.epre[ei],
+                        ctx.edges.post[ei],
+                        ctx.edges.delay[ei],
+                        ctx.edges.weight[ei],
+                    ));
+                }
+            }
+        }
+        out.sort_by_key(|&(pre, post, delay, _)| (pre, post, delay));
+        out
     }
 
     /// Enqueue spikes received from other ranks (window start).
@@ -194,253 +224,94 @@ impl RankEngine {
     /// One integration step; spiking gids are appended to `outbox`.
     pub fn step_once(&mut self, outbox: &mut SpikePacket) {
         let now = self.step;
-        let n_threads = self.store.threads.len();
-        let pending = std::mem::take(&mut self.pending);
-        let mut worker_spikes: Vec<Vec<u32>> =
-            vec![Vec::new(); n_threads];
-        // per-worker [delivery_ns, integrate_ns] for the phase report
-        let mut worker_ns: Vec<[u64; 2]> = vec![[0, 0]; n_threads];
-
-        // -- phases 1-3: deliver / integrate / plasticity, thread-parallel
         let native = self.pjrt.is_none();
-        {
-            let ranges = &self.store.thread_ranges;
-            let ring_e = self.ring_e.split_mut(ranges);
-            let ring_i = self.ring_i.split_mut(ranges);
-            let (post_traces, stdp_params, pre_traces) = match &mut self.stdp
-            {
-                Some(s) => (
-                    Some(s.post_traces.split_mut(ranges)),
-                    Some(s.params),
-                    Some(&s.pre_traces),
-                ),
-                None => (None, None, None),
-            };
-            let mut post_traces = post_traces;
 
-            // split the LIF state SoA along thread ranges
-            let mut u: &mut [f64] = &mut self.state.u;
-            let mut ie: &mut [f64] = &mut self.state.ie;
-            let mut ii: &mut [f64] = &mut self.state.ii;
-            let mut refrac: &mut [f64] = &mut self.state.refrac;
-            let pidx: &[u8] = &self.state.pidx;
-            let props: &[Propagators] = &self.props;
-            let drives: &[PreparedPoisson] = &self.drives;
-            let pending_ref: &[(u32, Step)] = &pending;
-            let verify = self.opts.verify_ownership;
-            let seed = self.spec.seed;
-            let posts: &[Gid] = &self.store.posts;
+        // move the step's shared read-only state out of the engine …
+        let job = StepJob {
+            now,
+            pending: std::mem::take(&mut self.pending),
+            stdp: self.stdp.take(),
+        };
 
-            std::thread::scope(|scope| {
-                let mut handles = Vec::new();
-                let mut ring_e_iter = ring_e.into_iter();
-                let mut ring_i_iter = ring_i.into_iter();
-                for ((((t, te), spikes_out), phase_ns), scratch_t) in self
-                    .store
-                    .threads
-                    .iter_mut()
-                    .enumerate()
-                    .zip(worker_spikes.iter_mut())
-                    .zip(worker_ns.iter_mut())
-                    .zip(self.scratch.iter_mut())
-                {
-                    let (lo, hi) = ranges[t];
-                    let span = (hi - lo) as usize;
-                    let (u_t, u_rest) = u.split_at_mut(span);
-                    let (ie_t, ie_rest) = ie.split_at_mut(span);
-                    let (ii_t, ii_rest) = ii.split_at_mut(span);
-                    let (r_t, r_rest) = refrac.split_at_mut(span);
-                    u = u_rest;
-                    ie = ie_rest;
-                    ii = ii_rest;
-                    refrac = r_rest;
-                    let mut re = ring_e_iter.next().unwrap();
-                    let mut ri = ring_i_iter.next().unwrap();
-                    let mut pt =
-                        post_traces.as_mut().map(|v| v.remove(0));
-
-                    let mut work = move || {
-                        let t0 = std::time::Instant::now();
-                        // ---- phase 1: delivery ------------------------
-                        // Ring slots advance monotonically within a
-                        // delay-sorted run (paper Fig 12b/15), so the
-                        // wrap is a subtract, not a division per edge.
-                        let ring_len = re.len() as Step;
-                        for &(p, emit) in pending_ref {
-                            let run = te.run(p as usize);
-                            if run.is_empty() {
-                                continue;
-                            }
-                            let mut prev_delay = te.delay[run.start] as Step;
-                            let mut slot =
-                                ((emit + prev_delay) % ring_len) as usize;
-                            for ei in run {
-                                let post = te.post[ei];
-                                if verify && !(post >= lo && post < hi) {
-                                    // the paper's verification: Abort
-                                    panic!(
-                                        "DATA RACE: thread {t} touched \
-                                         post {post} outside [{lo},{hi})"
-                                    );
-                                }
-                                let delay = te.delay[ei] as Step;
-                                debug_assert!(delay >= prev_delay);
-                                slot += (delay - prev_delay) as usize;
-                                while slot >= ring_len as usize {
-                                    slot -= ring_len as usize;
-                                }
-                                prev_delay = delay;
-                                let mut w = te.weight[ei];
-                                if let (Some(params), Some(pt)) =
-                                    (stdp_params.as_ref(), pt.as_ref())
-                                {
-                                    if te.plastic[ei] {
-                                        // depression at (extrapolated)
-                                        // arrival time
-                                        let x = pt.at(post, emit + delay);
-                                        w = params.depress(w, x);
-                                        te.weight[ei] = w;
-                                    }
-                                }
-                                if w >= 0.0 {
-                                    re.add_at(post as usize, slot, w);
-                                } else {
-                                    ri.add_at(post as usize, slot, w);
-                                }
-                            }
+        // -- phases 1-3: deliver / integrate / plasticity ---------------
+        let t_par = std::time::Instant::now();
+        let job = match &self.pool {
+            Some(pool) => pool.run_step(&mut self.ctxs, job),
+            None => {
+                if self.ctxs.len() == 1 {
+                    phases::run_compute(&mut self.ctxs[0], &job, native);
+                } else {
+                    // scoped fallback: spawn/join every step (ablation)
+                    std::thread::scope(|scope| {
+                        for ctx in self.ctxs.iter_mut() {
+                            let job = &job;
+                            scope.spawn(move || {
+                                phases::run_compute(ctx, job, native)
+                            });
                         }
-
-                        phase_ns[0] = t0.elapsed().as_nanos() as u64;
-                        let t1 = std::time::Instant::now();
-
-                        // ---- phase 2: integrate -----------------------
-                        // (a fused ring+drive+LIF single pass was tried
-                        // and measured slower — see EXPERIMENTS.md §Perf)
-                        if native {
-                            let (in_e, in_i) = scratch_t;
-                            let now_slot = re.slot(now);
-                            for i in 0..span {
-                                let post = lo as usize + i;
-                                let mut e = re.take_at(post, now_slot);
-                                let inh = ri.take_at(post, now_slot);
-                                let d = &drives[post];
-                                if !d.is_off() {
-                                    let x =
-                                        d.sample(seed, posts[post], now);
-                                    if x >= 0.0 {
-                                        e += x;
-                                    }
-                                }
-                                in_e[i] = e;
-                                in_i[i] = inh;
-                            }
-                            // step in place over the borrowed slices
-                            step_slices(
-                                u_t, ie_t, ii_t, r_t,
-                                &pidx[lo as usize..hi as usize],
-                                in_e, in_i, props, spikes_out,
-                            );
-
-                            // ---- phase 3: plasticity ------------------
-                            if let (Some(params), Some(pt), Some(pre_tr)) = (
-                                stdp_params.as_ref(),
-                                pt.as_mut(),
-                                pre_traces,
-                            ) {
-                                for &ls in spikes_out.iter() {
-                                    let post = lo + ls;
-                                    // potentiate incoming plastic edges
-                                    let b = ls as usize;
-                                    let r0 = te.plastic_by_post_offsets[b]
-                                        as usize;
-                                    let r1 = te.plastic_by_post_offsets
-                                        [b + 1]
-                                        as usize;
-                                    for k in r0..r1 {
-                                        let ei = te.plastic_by_post_edge[k]
-                                            as usize;
-                                        let x = pre_tr
-                                            .at(te.epre[ei], now);
-                                        te.weight[ei] = params
-                                            .potentiate(te.weight[ei], x);
-                                    }
-                                    pt.bump(post, now);
-                                }
-                            }
-                        } else {
-                            // PJRT backend: threads only deliver; the
-                            // dynamics run below on the rank thread.
-                        }
-                        phase_ns[1] = t1.elapsed().as_nanos() as u64;
-                    };
-                    if n_threads == 1 {
-                        work();
-                    } else {
-                        handles.push(scope.spawn(work));
-                    }
+                    });
                 }
-                for h in handles {
-                    h.join().expect("worker thread panicked");
-                }
-            });
-        }
+                job
+            }
+        };
+        let wall_ns = t_par.elapsed().as_nanos() as u64;
 
-        // -- PJRT dynamics (serial per rank over the AOT artifact) -------
+        // coordination overhead of the parallel section: wall time minus
+        // the busiest worker's own compute — channel round-trip for the
+        // pool, spawn+join for the scoped fallback
+        let busiest = self
+            .ctxs
+            .iter()
+            .map(|c| c.phase_ns[0] + c.phase_ns[1])
+            .max()
+            .unwrap_or(0);
+        self.timer.add("sync", wall_ns.saturating_sub(busiest) as u128);
+
+        // … and reclaim it (all workers have handed their contexts back)
+        let StepJob { pending: mut reclaimed, stdp, .. } = job;
+        reclaimed.clear();
+        self.pending = reclaimed;
+        self.stdp = stdp;
+
+        // -- PJRT dynamics (serial per rank over the AOT artifact) ------
         if !native {
-            let n = self.store.n_posts();
-            let (in_e, in_i) = &mut self.scratch_in;
-            for i in 0..n {
-                let mut e = self.ring_e.take(i, now);
-                let inh = self.ring_i.take(i, now);
-                let d = &self.drives[i];
-                if !d.is_off() {
-                    let x = d.sample(
-                        self.spec.seed,
-                        self.store.posts[i],
-                        now,
-                    );
-                    if x >= 0.0 {
-                        e += x;
+            let t1 = std::time::Instant::now();
+            let pjrt = self.pjrt.as_mut().unwrap();
+            for ctx in &mut self.ctxs {
+                phases::gather_inputs(ctx, now);
+                let spiked = pjrt
+                    .step(&mut ctx.state, &ctx.scratch_e, &ctx.scratch_i)
+                    .expect("pjrt step failed");
+                ctx.spikes.extend(spiked);
+                // plasticity: the same thread-owned kernel as the native
+                // path, run serially on the rank thread
+                if let Some(s) = &self.stdp {
+                    let pt = ctx
+                        .post_traces
+                        .as_mut()
+                        .expect("stdp net without post traces");
+                    for i in 0..ctx.spikes.len() {
+                        let ls = ctx.spikes[i];
+                        phases::potentiate_post(
+                            &mut ctx.edges,
+                            pt,
+                            &s.pre_traces,
+                            &s.params,
+                            ls,
+                            now,
+                        );
                     }
                 }
-                in_e[i] = e;
-                in_i[i] = inh;
             }
-            let spiked = self
-                .pjrt
-                .as_mut()
-                .unwrap()
-                .step(&mut self.state, in_e, in_i)
-                .expect("pjrt step failed");
-            worker_spikes[0].extend(spiked);
-            // plasticity for PJRT backend (serial, still post-owned)
-            if let Some(s) = &mut self.stdp {
-                for &ls in &worker_spikes[0] {
-                    let t = self.store.thread_of(ls) as usize;
-                    let te = &mut self.store.threads[t];
-                    let (lo, _) = self.store.thread_ranges[t];
-                    let b = (ls - lo) as usize;
-                    let r0 = te.plastic_by_post_offsets[b] as usize;
-                    let r1 = te.plastic_by_post_offsets[b + 1] as usize;
-                    for k in r0..r1 {
-                        let ei = te.plastic_by_post_edge[k] as usize;
-                        let x = s.pre_traces.at(te.epre[ei], now);
-                        te.weight[ei] = s.params.potentiate(te.weight[ei], x);
-                    }
-                    s.post_traces.bump(ls, now);
-                }
-            }
+            self.timer.add("integrate", t1.elapsed().as_nanos());
         }
 
-        for ns in &worker_ns {
-            self.timer.add("deliver", ns[0] as u128);
-            self.timer.add("integrate", ns[1] as u128);
-        }
-
-        // -- collect spikes, refill pending, feed outbox ------------------
-        for (t, spikes) in worker_spikes.iter().enumerate() {
-            let lo = if native { self.store.thread_ranges[t].0 } else { 0 };
-            for &ls in spikes {
+        // -- collect spikes, refill pending, feed outbox ----------------
+        for ctx in &self.ctxs {
+            self.timer.add("deliver", ctx.phase_ns[0] as u128);
+            self.timer.add("integrate", ctx.phase_ns[1] as u128);
+            let lo = ctx.lo;
+            for &ls in &ctx.spikes {
                 let local = lo + ls;
                 let gid = self.store.posts[local as usize];
                 self.total_spikes += 1;
@@ -462,152 +333,25 @@ impl RankEngine {
     /// Per-rank heap accounting (the Fig 18 memory panel's quantity).
     pub fn memory(&self) -> MemoryBreakdown {
         let mut m = self.store.memory();
-        m.add("state", self.state.bytes());
-        m.add("rings", self.ring_e.bytes() + self.ring_i.bytes());
-        m.add("drives", vec_bytes(&self.drives));
+        for ctx in &self.ctxs {
+            m.add("edges", ctx.edges.bytes());
+            m.add("state", ctx.state.bytes());
+            m.add("rings", ctx.ring_e.bytes() + ctx.ring_i.bytes());
+            m.add("drives", vec_bytes(&ctx.drives));
+            if let Some(pt) = &ctx.post_traces {
+                m.add("traces", pt.bytes());
+            }
+        }
         if let Some(s) = &self.stdp {
-            m.add("traces", s.pre_traces.bytes() + s.post_traces.bytes());
+            m.add("traces", s.pre_traces.bytes());
         }
         m
     }
 }
 
-/// Advance one thread's state slices (the split-borrow twin of
-/// `model::lif::step_slice`, operating on raw slices).
-#[allow(clippy::too_many_arguments)]
-fn step_slices(
-    u: &mut [f64],
-    ie: &mut [f64],
-    ii: &mut [f64],
-    refrac: &mut [f64],
-    pidx: &[u8],
-    in_e: &[f64],
-    in_i: &[f64],
-    props: &[Propagators],
-    spikes: &mut Vec<u32>,
-) {
-    for i in 0..u.len() {
-        let p = &props[pidx[i] as usize];
-        let (mut u_new, mut r_new);
-        if refrac[i] > 0.0 {
-            u_new = p.v_reset;
-            r_new = refrac[i] - 1.0;
-        } else {
-            u_new = p.e_l
-                + (u[i] - p.e_l) * p.p22
-                + ie[i] * p.p21e
-                + ii[i] * p.p21i
-                + p.i_ext * p.p20;
-            r_new = refrac[i];
-            if u_new >= p.v_th {
-                u_new = p.v_reset;
-                r_new = p.ref_steps as f64;
-                spikes.push(i as u32);
-            }
-        }
-        u[i] = u_new;
-        refrac[i] = r_new;
-        ie[i] = ie[i] * p.p11e + in_e[i];
-        ii[i] = ii[i] * p.p11i + in_i[i];
-    }
-}
-
 // ---------------------------------------------------------------------
-// Window-driven rank loop + communication drivers
+// Window-driven rank loop
 // ---------------------------------------------------------------------
-
-/// Spike-exchange driver: serialized (blocking at window end) or
-/// overlapped via a dedicated communication thread (paper §III.C.2).
-enum CommDriver {
-    Serialized {
-        comm: Box<dyn Communicator>,
-        staged: Option<SpikePacket>,
-    },
-    Overlap {
-        req: Sender<SpikePacket>,
-        resp: Receiver<SpikePacket>,
-        handle: JoinHandle<Box<dyn Communicator>>,
-        in_flight: bool,
-    },
-}
-
-impl CommDriver {
-    fn new(comm: Box<dyn Communicator>, mode: CommMode) -> CommDriver {
-        match mode {
-            CommMode::Serialized => {
-                CommDriver::Serialized { comm, staged: None }
-            }
-            CommMode::Overlap => {
-                let (req_tx, req_rx) = channel::<SpikePacket>();
-                let (resp_tx, resp_rx) = channel::<SpikePacket>();
-                let mut comm = comm;
-                let handle = std::thread::spawn(move || {
-                    // the dedicated communication thread: drains exchange
-                    // requests until the engine hangs up
-                    while let Ok(pkt) = req_rx.recv() {
-                        let got = comm.exchange(pkt);
-                        if resp_tx.send(got).is_err() {
-                            break;
-                        }
-                    }
-                    comm
-                });
-                CommDriver::Overlap {
-                    req: req_tx,
-                    resp: resp_rx,
-                    handle,
-                    in_flight: false,
-                }
-            }
-        }
-    }
-
-    /// Submit this window's spikes for exchange.
-    fn submit(&mut self, pkt: SpikePacket) {
-        match self {
-            CommDriver::Serialized { comm, staged } => {
-                debug_assert!(staged.is_none());
-                *staged = Some(comm.exchange(pkt));
-            }
-            CommDriver::Overlap { req, in_flight, .. } => {
-                debug_assert!(!*in_flight);
-                req.send(pkt).expect("comm thread died");
-                *in_flight = true;
-            }
-        }
-    }
-
-    /// Receive the previously submitted window's remote spikes.
-    fn recv_completed(&mut self) -> SpikePacket {
-        match self {
-            CommDriver::Serialized { staged, .. } => {
-                staged.take().unwrap_or_default()
-            }
-            CommDriver::Overlap { resp, in_flight, .. } => {
-                if *in_flight {
-                    *in_flight = false;
-                    resp.recv().expect("comm thread died")
-                } else {
-                    Vec::new()
-                }
-            }
-        }
-    }
-
-    /// Tear down; returns the communicator for its statistics.
-    fn finish(self) -> Box<dyn Communicator> {
-        match self {
-            CommDriver::Serialized { comm, .. } => comm,
-            CommDriver::Overlap { req, resp, handle, in_flight } => {
-                if in_flight {
-                    let _ = resp.recv();
-                }
-                drop(req);
-                handle.join().expect("comm thread panicked")
-            }
-        }
-    }
-}
 
 /// Result of one rank's run.
 pub struct RankOutput {
@@ -674,6 +418,7 @@ pub struct RunConfig {
     pub mapping: MappingKind,
     pub comm: CommMode,
     pub backend: DynamicsBackend,
+    pub exec: ExecMode,
     pub steps: Step,
     pub record_limit: Option<Gid>,
     pub verify_ownership: bool,
@@ -689,6 +434,7 @@ impl Default for RunConfig {
             mapping: MappingKind::AreaProcesses,
             comm: CommMode::Overlap,
             backend: DynamicsBackend::Native,
+            exec: ExecMode::Pool,
             steps: 1000,
             record_limit: None,
             verify_ownership: false,
@@ -763,6 +509,7 @@ pub fn run_simulation(
                         n_threads: cfg.threads,
                         comm: cfg.comm,
                         backend: cfg.backend,
+                        exec: cfg.exec,
                         record_limit: cfg.record_limit,
                         verify_ownership: cfg.verify_ownership,
                         artifacts_dir: cfg.artifacts_dir.clone(),

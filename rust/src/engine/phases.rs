@@ -1,0 +1,168 @@
+//! The per-step compute phases (paper Fig 17's circulatory dataflow),
+//! each operating on one worker's permanently-owned [`WorkerCtx`]:
+//!
+//! 1. [`deliver`] — walk the thread's delay-sorted edge runs for every
+//!    pending spike, accumulating weights into ring slots `emit + delay`
+//!    (applying STDP depression at extrapolated arrival time);
+//! 2. [`gather_inputs`] + [`integrate`] — consume the rings' due slot
+//!    plus Poisson drive and advance the LIF propagator, collecting new
+//!    spikes;
+//! 3. [`potentiate_post`] — a spiking post potentiates its incoming
+//!    plastic edges. This is the **single** plasticity kernel: the native
+//!    worker path and the engine-side PJRT path both call it (the two
+//!    hand-copied variants of the old monolithic engine are gone).
+//!
+//! Every function here reads shared step state from [`StepJob`] and
+//! writes only through the context it was handed — the mutex-free
+//! ownership discipline is enforced by what the signatures can reach,
+//! plus the paper's optional runtime Abort check (`ctx.verify`).
+
+use std::time::Instant;
+
+use crate::decomp::ThreadEdges;
+use crate::model::lif::step_slice;
+use crate::model::stdp::{StdpParams, TraceSet};
+use crate::Step;
+
+use super::workers::{StdpRank, StepJob, WorkerCtx};
+
+/// Run one worker's share of a step: deliver, then (on the native
+/// backend) integrate and apply plasticity. On the PJRT backend workers
+/// only deliver; the engine thread drives the AOT artifact afterwards.
+pub(crate) fn run_compute(
+    ctx: &mut WorkerCtx,
+    job: &StepJob,
+    native: bool,
+) {
+    ctx.spikes.clear();
+    let t0 = Instant::now();
+    deliver(ctx, job);
+    ctx.phase_ns[0] = t0.elapsed().as_nanos() as u64;
+    let t1 = Instant::now();
+    if native {
+        gather_inputs(ctx, job.now);
+        integrate(ctx);
+        if let Some(stdp) = &job.stdp {
+            plasticity(ctx, stdp, job.now);
+        }
+    }
+    ctx.phase_ns[1] = t1.elapsed().as_nanos() as u64;
+}
+
+/// Phase 1: route every pending spike through this thread's edge runs.
+/// Ring slots advance monotonically within a delay-sorted run (paper
+/// Fig 12b/15), so the wrap is a subtract, not a division per edge.
+fn deliver(ctx: &mut WorkerCtx, job: &StepJob) {
+    let (lo, hi) = (ctx.lo, ctx.hi);
+    let (verify, t) = (ctx.verify, ctx.t);
+    let params = job.stdp.as_ref().map(|s| s.params);
+    let WorkerCtx { edges: te, ring_e, ring_i, post_traces, .. } = ctx;
+    let ring_len = ring_e.len as Step;
+    for &(p, emit) in &job.pending {
+        let run = te.run(p as usize);
+        if run.is_empty() {
+            continue;
+        }
+        let mut prev_delay = te.delay[run.start] as Step;
+        let mut slot = ((emit + prev_delay) % ring_len) as usize;
+        for ei in run {
+            let post = te.post[ei];
+            if verify && !(post >= lo && post < hi) {
+                // the paper's verification: Abort
+                panic!(
+                    "DATA RACE: thread {t} touched post {post} \
+                     outside [{lo},{hi})"
+                );
+            }
+            let delay = te.delay[ei] as Step;
+            debug_assert!(delay >= prev_delay);
+            slot += (delay - prev_delay) as usize;
+            while slot >= ring_len as usize {
+                slot -= ring_len as usize;
+            }
+            prev_delay = delay;
+            let lp = (post - lo) as usize;
+            let mut w = te.weight[ei];
+            if let (Some(params), Some(pt)) =
+                (params.as_ref(), post_traces.as_ref())
+            {
+                if te.plastic[ei] {
+                    // depression at (extrapolated) arrival time
+                    let x = pt.at(lp as u32, emit + delay);
+                    w = params.depress(w, x);
+                    te.weight[ei] = w;
+                }
+            }
+            if w >= 0.0 {
+                ring_e.add_at(lp, slot, w);
+            } else {
+                ring_i.add_at(lp, slot, w);
+            }
+        }
+    }
+}
+
+/// Stage this step's synaptic input: drain the rings' due slot and add
+/// the Poisson drive into the worker's scratch buffers. Shared by the
+/// native integrate phase and the engine-side PJRT path.
+pub(crate) fn gather_inputs(ctx: &mut WorkerCtx, now: Step) {
+    let seed = ctx.seed;
+    let now_slot = ctx.ring_e.slot(now);
+    let WorkerCtx {
+        ring_e, ring_i, drives, posts, scratch_e, scratch_i, ..
+    } = ctx;
+    for i in 0..drives.len() {
+        let mut e = ring_e.take_at(i, now_slot);
+        let inh = ring_i.take_at(i, now_slot);
+        let d = &drives[i];
+        if !d.is_off() {
+            let x = d.sample(seed, posts[i], now);
+            if x >= 0.0 {
+                e += x;
+            }
+        }
+        scratch_e[i] = e;
+        scratch_i[i] = inh;
+    }
+}
+
+/// Phase 2 (native backend): advance the owned LIF block one step.
+/// (A fused ring+drive+LIF single pass was tried and measured slower —
+/// see EXPERIMENTS.md §Perf.)
+fn integrate(ctx: &mut WorkerCtx) {
+    let span = ctx.state.len();
+    let WorkerCtx { state, scratch_e, scratch_i, props, spikes, .. } = ctx;
+    step_slice(state, 0, span, scratch_e, scratch_i, props, spikes);
+}
+
+/// Phase 3 (native backend): potentiate for every spike this worker just
+/// collected.
+fn plasticity(ctx: &mut WorkerCtx, stdp: &StdpRank, now: Step) {
+    let WorkerCtx { edges, post_traces, spikes, .. } = ctx;
+    let pt = post_traces.as_mut().expect("stdp net without post traces");
+    for &ls in spikes.iter() {
+        potentiate_post(edges, pt, &stdp.pre_traces, &stdp.params, ls, now);
+    }
+}
+
+/// A post spike potentiates its incoming plastic edges (thread-owned) and
+/// bumps the post trace. `ls` is the worker-local post index. The single
+/// shared kernel behind both the native and PJRT plasticity paths.
+pub(crate) fn potentiate_post(
+    edges: &mut ThreadEdges,
+    post_traces: &mut TraceSet,
+    pre_traces: &TraceSet,
+    params: &StdpParams,
+    ls: u32,
+    now: Step,
+) {
+    let b = ls as usize;
+    let r0 = edges.plastic_by_post_offsets[b] as usize;
+    let r1 = edges.plastic_by_post_offsets[b + 1] as usize;
+    for k in r0..r1 {
+        let ei = edges.plastic_by_post_edge[k] as usize;
+        let x = pre_traces.at(edges.epre[ei], now);
+        edges.weight[ei] = params.potentiate(edges.weight[ei], x);
+    }
+    post_traces.bump(ls, now);
+}

@@ -2,11 +2,12 @@
 //! Buffer" — the buffer where synaptic interactions park until their
 //! delay elapses).
 //!
-//! Layout is post-major: `buf[post * len + slot]`, so a thread owning a
-//! contiguous local-post range owns a contiguous buffer range — the ring
-//! splits across threads with `split_at_mut`, no sharing, no atomics.
-//! Writes always target slots strictly in the future of the slot being
-//! consumed, because synaptic delays are >= 1 step.
+//! Layout is post-major: `buf[post * len + slot]`. Each compute worker
+//! permanently owns one `InputRing` per channel covering exactly its
+//! local-post range (indices are worker-local; see `engine::workers`) —
+//! no sharing, no atomics. Writes always target slots strictly in the
+//! future of the slot being consumed, because synaptic delays are
+//! >= 1 step.
 
 /// One channel (excitatory or inhibitory) of ring input for `n` posts.
 #[derive(Clone, Debug)]
@@ -41,26 +42,22 @@ impl InputRing {
         std::mem::take(&mut self.buf[idx])
     }
 
-    /// Split into per-thread sub-rings along post ranges
-    /// (`ranges[t] = (lo, hi)` local post bounds).
-    pub fn split_mut<'a>(
-        &'a mut self,
-        ranges: &[(u32, u32)],
-    ) -> Vec<RingSlice<'a>> {
-        let len = self.len;
-        let mut out = Vec::with_capacity(ranges.len());
-        let mut rest: &'a mut [f64] = &mut self.buf;
-        let mut consumed = 0usize;
-        for &(lo, hi) in ranges {
-            assert_eq!(lo as usize * len, consumed, "ranges must tile");
-            let take = (hi - lo) as usize * len;
-            let (head, tail) = rest.split_at_mut(take);
-            consumed += take;
-            rest = tail;
-            out.push(RingSlice { len, post_lo: lo as usize, buf: head });
-        }
-        assert!(rest.is_empty(), "ranges must cover all posts");
-        out
+    /// Accumulate with a precomputed slot — the delivery hot loop derives
+    /// slots incrementally from delay-sorted edge runs (paper Fig 12b)
+    /// instead of dividing per edge. Used on worker-owned rings where
+    /// `post` is already a thread-local index.
+    #[inline]
+    pub fn add_at(&mut self, post: usize, slot: usize, w: f64) {
+        debug_assert!(slot < self.len);
+        self.buf[post * self.len + slot] += w;
+    }
+
+    /// Consume with a precomputed slot (one division per step, not per
+    /// neuron).
+    #[inline]
+    pub fn take_at(&mut self, post: usize, slot: usize) -> f64 {
+        debug_assert!(slot < self.len);
+        std::mem::take(&mut self.buf[post * self.len + slot])
     }
 
     pub fn bytes(&self) -> u64 {
@@ -74,57 +71,6 @@ impl InputRing {
 
     pub fn raw_mut(&mut self) -> &mut [f64] {
         &mut self.buf
-    }
-}
-
-/// A thread's exclusive window onto the ring (posts `[post_lo, ...)`).
-pub struct RingSlice<'a> {
-    len: usize,
-    post_lo: usize,
-    buf: &'a mut [f64],
-}
-
-impl RingSlice<'_> {
-    pub fn len(&self) -> usize {
-        self.len
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len == 0
-    }
-
-    #[inline]
-    pub fn slot(&self, step: u64) -> usize {
-        (step % self.len as u64) as usize
-    }
-
-    #[inline]
-    pub fn add(&mut self, post: usize, due: u64, w: f64) {
-        let slot = self.slot(due);
-        self.add_at(post, slot, w);
-    }
-
-    /// Accumulate with a precomputed slot — the delivery hot loop derives
-    /// slots incrementally from the delay-sorted edge runs (paper Fig 12b)
-    /// instead of dividing per edge.
-    #[inline]
-    pub fn add_at(&mut self, post: usize, slot: usize, w: f64) {
-        debug_assert!(slot < self.len);
-        self.buf[(post - self.post_lo) * self.len + slot] += w;
-    }
-
-    #[inline]
-    pub fn take(&mut self, post: usize, step: u64) -> f64 {
-        let slot = self.slot(step);
-        self.take_at(post, slot)
-    }
-
-    /// Consume with a precomputed slot (one division per step, not per
-    /// neuron).
-    #[inline]
-    pub fn take_at(&mut self, post: usize, slot: usize) -> f64 {
-        debug_assert!(slot < self.len);
-        std::mem::take(&mut self.buf[(post - self.post_lo) * self.len + slot])
     }
 }
 
@@ -150,26 +96,12 @@ mod tests {
     }
 
     #[test]
-    fn split_respects_ownership() {
-        let mut r = InputRing::new(6, 4);
-        {
-            let ranges = [(0u32, 2u32), (2, 5), (5, 6)];
-            let mut parts = r.split_mut(&ranges);
-            parts[0].add(1, 3, 1.0);
-            parts[1].add(2, 3, 2.0);
-            parts[1].add(4, 3, 3.0);
-            parts[2].add(5, 3, 4.0);
-        }
-        assert_eq!(r.take(1, 3), 1.0);
-        assert_eq!(r.take(2, 3), 2.0);
-        assert_eq!(r.take(4, 3), 3.0);
-        assert_eq!(r.take(5, 3), 4.0);
-    }
-
-    #[test]
-    #[should_panic(expected = "tile")]
-    fn split_requires_tiling_ranges() {
-        let mut r = InputRing::new(4, 4);
-        let _ = r.split_mut(&[(0, 1), (2, 4)]);
+    fn precomputed_slot_matches_stepwise_access() {
+        let mut r = InputRing::new(3, 4);
+        let slot = r.slot(7);
+        r.add_at(2, slot, 1.5);
+        r.add(2, 7, 2.5); // same (post, step) through the dividing path
+        assert_eq!(r.take_at(2, slot), 4.0);
+        assert_eq!(r.take(2, 7), 0.0, "take_at must zero the slot");
     }
 }

@@ -1,0 +1,244 @@
+//! Persistent compute workers (paper §III.B: "long-lived compute threads
+//! over thread-owned, provably disjoint state").
+//!
+//! A [`WorkerCtx`] is everything one compute thread touches during the
+//! deliver / integrate / plasticity phases: its [`ThreadEdges`] share of
+//! the indegree sub-graph, its LIF state slice, its rows of both input
+//! rings, its STDP post-traces, its Poisson drives and scratch buffers,
+//! and its spike outbox. The context is built **once** in
+//! `RankEngine::new` — the per-thread data is *moved in* (via
+//! [`RankStore::take_threads`]) instead of being re-borrowed with
+//! `split_at_mut` every step — and thereafter the engine only hands whole
+//! contexts around, never slices.
+//!
+//! [`WorkerPool`] holds the long-lived OS threads. Each step the engine
+//! transfers every context (plus one shared, read-only [`StepJob`]) to
+//! its worker over a channel and receives the contexts back when the
+//! phases are done; workers park in `recv` between steps. Two channel
+//! operations per worker per step replace the spawn/join pair the old
+//! scoped-thread engine paid every 0.1 ms of biological time, and the
+//! ownership transfer is what keeps the hot loop free of any mutex or
+//! atomic: while a worker holds its context, nothing else can reach that
+//! state, by construction.
+//!
+//! The `StepJob` round-trips too: the engine moves the pending-spike list
+//! and the rank-level STDP state (params + read-only pre-traces) into an
+//! `Arc`, every worker drops its clone before handing its context back,
+//! and the engine unwraps the `Arc` to reclaim both — no locks, no
+//! copies, and the borrow checker stays happy across the 'static thread
+//! boundary.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::atlas::NetworkSpec;
+use crate::decomp::{RankStore, ThreadEdges};
+use crate::engine::ring::InputRing;
+use crate::model::lif::{LifState, Propagators};
+use crate::model::poisson::PreparedPoisson;
+use crate::model::stdp::{StdpParams, TraceSet};
+use crate::{Gid, Step};
+
+use super::phases;
+
+/// Rank-level plasticity state: the STDP rule plus the pre-synaptic
+/// traces of **all** sources (local + remote). Pre-traces are read-only
+/// during the parallel phases and updated by the engine thread between
+/// steps, so they ride along in the [`StepJob`] rather than being split.
+pub(crate) struct StdpRank {
+    pub params: StdpParams,
+    pub pre_traces: TraceSet,
+}
+
+/// The read-only state every worker needs for one integration step.
+/// Moved (not copied) out of the engine for the duration of the parallel
+/// phases and reclaimed afterwards.
+pub(crate) struct StepJob {
+    pub now: Step,
+    /// Spikes awaiting delivery: (pre index, emission step).
+    pub pending: Vec<(u32, Step)>,
+    pub stdp: Option<StdpRank>,
+}
+
+/// One compute thread's permanently-owned share of the rank.
+pub(crate) struct WorkerCtx {
+    /// Worker index (== thread id in the decomposition).
+    pub t: usize,
+    /// Owned local-post range `[lo, hi)`.
+    pub lo: u32,
+    pub hi: u32,
+    /// The thread's private (pre, delay)-sorted edge store.
+    pub edges: ThreadEdges,
+    /// Gids of the owned posts (indexed by local offset `i = post - lo`).
+    pub posts: Vec<Gid>,
+    /// LIF state of the owned posts.
+    pub state: LifState,
+    /// Excitatory / inhibitory input rings for the owned posts.
+    pub ring_e: InputRing,
+    pub ring_i: InputRing,
+    /// STDP traces of the owned posts (locally indexed; STDP nets only).
+    pub post_traces: Option<TraceSet>,
+    /// Poisson drives of the owned posts.
+    pub drives: Vec<PreparedPoisson>,
+    /// Propagator table (shared values, owned copy for locality).
+    pub props: Vec<Propagators>,
+    /// Per-step input staging (no per-step allocation).
+    pub scratch_e: Vec<f64>,
+    pub scratch_i: Vec<f64>,
+    /// Local indices (relative to `lo`) of this step's spikes.
+    pub spikes: Vec<u32>,
+    /// [deliver_ns, integrate+plasticity_ns] of the last step.
+    pub phase_ns: [u64; 2],
+    /// Compile the paper's thread-ownership abort check into delivery.
+    pub verify: bool,
+    /// Network seed (Poisson drive hashing).
+    pub seed: u64,
+}
+
+/// Build all worker contexts for a rank, moving the per-thread edge
+/// stores out of `store` and splitting every dynamical container along
+/// the decomposition's thread ranges exactly once.
+pub(crate) fn build_worker_ctxs(
+    spec: &NetworkSpec,
+    store: &mut RankStore,
+    verify: bool,
+) -> Vec<WorkerCtx> {
+    let props = spec.propagators();
+    let ring_len = (store.max_delay as usize + 1).max(2);
+    let thread_edges = store.take_threads();
+    assert!(!thread_edges.is_empty(), "store must have >= 1 thread");
+    let ranges = store.thread_ranges.clone();
+    thread_edges
+        .into_iter()
+        .enumerate()
+        .map(|(t, edges)| {
+            let (lo, hi) = ranges[t];
+            let span = (hi - lo) as usize;
+            let posts: Vec<Gid> =
+                store.posts[lo as usize..hi as usize].to_vec();
+            let pidx: Vec<u8> =
+                posts.iter().map(|&g| spec.pidx(g)).collect();
+            let mut state = LifState::new(span, &props, pidx);
+            for (i, &g) in posts.iter().enumerate() {
+                state.u[i] = spec.v_init(g);
+            }
+            let drives: Vec<PreparedPoisson> = posts
+                .iter()
+                .map(|&g| spec.drive(g).prepare(spec.dt_ms))
+                .collect();
+            let post_traces = spec.stdp.map(|p| {
+                TraceSet::new(span, p.tau_minus_ms, spec.dt_ms)
+            });
+            WorkerCtx {
+                t,
+                lo,
+                hi,
+                edges,
+                posts,
+                state,
+                ring_e: InputRing::new(span, ring_len),
+                ring_i: InputRing::new(span, ring_len),
+                post_traces,
+                drives,
+                props: props.clone(),
+                scratch_e: vec![0.0; span],
+                scratch_i: vec![0.0; span],
+                spikes: Vec::new(),
+                phase_ns: [0, 0],
+                verify,
+                seed: spec.seed,
+            }
+        })
+        .collect()
+}
+
+/// A worker's result: its context back, or the payload of its panic
+/// (the paper's ownership-verification Abort re-raises on the engine
+/// thread).
+type DoneMsg = std::thread::Result<WorkerCtx>;
+
+/// The rank's long-lived compute threads, created once per engine.
+pub(crate) struct WorkerPool {
+    jobs: Vec<Sender<(WorkerCtx, Arc<StepJob>)>>,
+    done_rx: Receiver<DoneMsg>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn spawn(n_workers: usize, native: bool) -> WorkerPool {
+        let (done_tx, done_rx) = channel::<DoneMsg>();
+        let mut jobs = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        for t in 0..n_workers {
+            let (tx, rx) = channel::<(WorkerCtx, Arc<StepJob>)>();
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("cortex-worker-{t}"))
+                .spawn(move || worker_loop(rx, done, native))
+                .expect("failed to spawn compute worker");
+            jobs.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { jobs, done_rx, handles }
+    }
+
+    /// Drive one step: transfer every context (and a shared clone of the
+    /// job) to its worker, collect the contexts back in thread order, and
+    /// reclaim the job. Blocks until all workers finish their phases.
+    pub fn run_step(
+        &self,
+        ctxs: &mut Vec<WorkerCtx>,
+        job: StepJob,
+    ) -> StepJob {
+        let n = self.jobs.len();
+        debug_assert_eq!(ctxs.len(), n);
+        let job = Arc::new(job);
+        for (tx, ctx) in self.jobs.iter().zip(ctxs.drain(..)) {
+            tx.send((ctx, Arc::clone(&job)))
+                .expect("compute worker hung up");
+        }
+        for _ in 0..n {
+            match self.done_rx.recv().expect("compute worker died") {
+                Ok(ctx) => ctxs.push(ctx),
+                Err(panic) => std::panic::resume_unwind(panic),
+            }
+        }
+        // received in completion order; engine-side phases (spike
+        // collection, checkpointing) require deterministic thread order
+        ctxs.sort_unstable_by_key(|c| c.t);
+        Arc::try_unwrap(job)
+            .unwrap_or_else(|_| unreachable!("workers still hold the job"))
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // hang up the job channels; workers fall out of their recv loop
+        self.jobs.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<(WorkerCtx, Arc<StepJob>)>,
+    done: Sender<DoneMsg>,
+    native: bool,
+) {
+    while let Ok((mut ctx, job)) = rx.recv() {
+        let out =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                phases::run_compute(&mut ctx, &job, native);
+                ctx
+            }));
+        // release the shared step state before handing the context back:
+        // the engine unwraps the Arc as soon as all contexts are home
+        drop(job);
+        let failed = out.is_err();
+        if done.send(out).is_err() || failed {
+            break;
+        }
+    }
+}

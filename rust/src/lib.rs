@@ -17,8 +17,10 @@
 //! - [`decomp`] — the paper's §III.A: Area-Processes Mapping, Multisection
 //!   Division with Sampling, Random Equivalent Mapping (baseline), thread
 //!   partitioning and the (thread, delay)-sorted edge layout.
-//! - [`engine`] — the per-rank CORTEX engine: mutex-free thread-level
-//!   delivery (paper §III.B), spike ring buffers, native or PJRT dynamics.
+//! - [`engine`] — the per-rank CORTEX engine: a persistent worker pool of
+//!   long-lived compute threads over permanently-owned disjoint state
+//!   (paper §III.B), mutex-free delivery, spike ring buffers, native or
+//!   PJRT dynamics, windowed overlap exchange, checkpointing.
 //! - [`comm`]   — MPI-like communicator over in-memory ranks, spike
 //!   broadcast with dedicated communication thread (paper §III.C), and a
 //!   Tofu-D network cost model for Fugaku-scale projections.
@@ -28,8 +30,9 @@
 //! - [`runtime`] — XLA/PJRT loading + execution of the AOT artifacts
 //!   produced by `python/compile/aot.py`.
 //! - [`config`], [`metrics`], [`util`], [`cli`] — experiment configuration,
-//!   instrumentation and the from-scratch support substrates (the offline
-//!   registry only carries the `xla` closure).
+//!   instrumentation and the from-scratch support substrates (the build is
+//!   fully offline: `anyhow` and `xla` are vendored path crates under
+//!   `rust/vendor/`, the latter a compile-only PJRT stub).
 
 pub mod atlas;
 pub mod cli;

@@ -1,6 +1,13 @@
-//! Accumulating phase timer: wall-clock nanoseconds per named phase
-//! (delivery / dynamics / comm / plasticity …), the instrument behind the
-//! paper's Fig 18 time panel and EXPERIMENTS.md §Perf.
+//! Accumulating phase timer: wall-clock nanoseconds per named phase, the
+//! instrument behind the paper's Fig 18 time panel and EXPERIMENTS.md
+//! §Perf.
+//!
+//! Phases recorded by the CORTEX engine: `deliver` and `integrate` (per
+//! worker, summed), `sync` (per step: the parallel section's wall time
+//! minus the busiest worker's compute — the coordination overhead of the
+//! execution backend, i.e. the channel round-trip of the persistent pool
+//! or the spawn/join cost of the scoped fallback), `compute` (whole
+//! steps), and `comm_wait` / `comm_submit` (window exchange).
 
 use std::collections::BTreeMap;
 use std::time::Instant;

@@ -123,61 +123,6 @@ impl TraceSet {
         Ok(())
     }
 
-    /// Split into per-thread exclusive windows along index ranges (same
-    /// tiling contract as `InputRing::split_mut`): each compute thread
-    /// owns the traces of the post-neurons it owns.
-    pub fn split_mut<'a>(
-        &'a mut self,
-        ranges: &[(u32, u32)],
-    ) -> Vec<TraceSliceMut<'a>> {
-        let decay = self.decay_per_step;
-        let mut out = Vec::with_capacity(ranges.len());
-        let mut val: &'a mut [f64] = &mut self.value;
-        let mut last: &'a mut [Step] = &mut self.last;
-        let mut consumed = 0usize;
-        for &(lo, hi) in ranges {
-            assert_eq!(lo as usize, consumed, "ranges must tile");
-            let take = (hi - lo) as usize;
-            let (vh, vt) = val.split_at_mut(take);
-            let (lh, lt) = last.split_at_mut(take);
-            val = vt;
-            last = lt;
-            consumed += take;
-            out.push(TraceSliceMut {
-                decay_per_step: decay,
-                lo: lo as usize,
-                value: vh,
-                last: lh,
-            });
-        }
-        assert!(val.is_empty(), "ranges must cover all traces");
-        out
-    }
-}
-
-/// A thread's exclusive window onto a [`TraceSet`]; indices are absolute.
-pub struct TraceSliceMut<'a> {
-    decay_per_step: f64,
-    lo: usize,
-    value: &'a mut [f64],
-    last: &'a mut [Step],
-}
-
-impl TraceSliceMut<'_> {
-    #[inline]
-    pub fn at(&self, i: Gid, step: Step) -> f64 {
-        let i = i as usize - self.lo;
-        let dt = step.saturating_sub(self.last[i]);
-        self.value[i] * self.decay_per_step.powi(dt as i32)
-    }
-
-    #[inline]
-    pub fn bump(&mut self, i: Gid, step: Step) {
-        let v = self.at(i, step) + 1.0;
-        let i = i as usize - self.lo;
-        self.value[i] = v;
-        self.last[i] = step;
-    }
 }
 
 #[cfg(test)]
@@ -240,25 +185,6 @@ mod tests {
         assert!((x - want_x).abs() < 1e-12);
         let w1 = p.potentiate(45.0, x);
         assert!(w1 > 45.0);
-    }
-
-    #[test]
-    fn split_mut_windows_are_exclusive_and_consistent() {
-        let mut t = TraceSet::new(6, 20.0, 0.1);
-        t.bump(1, 10);
-        t.bump(4, 20);
-        {
-            let ranges = [(0u32, 3u32), (3, 6)];
-            let mut parts = t.split_mut(&ranges);
-            assert!((parts[0].at(1, 10) - 1.0).abs() < 1e-15);
-            assert!((parts[1].at(4, 20) - 1.0).abs() < 1e-15);
-            parts[1].bump(5, 30);
-        }
-        assert!((t.at(5, 30) - 1.0).abs() < 1e-15);
-        // slice view decays identically to the owning set
-        let whole = t.at(1, 110);
-        let parts = t.split_mut(&[(0, 6)]);
-        assert_eq!(parts[0].at(1, 110), whole);
     }
 
     #[test]

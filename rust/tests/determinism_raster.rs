@@ -1,0 +1,114 @@
+//! The paper's race-freedom claim, tested head-on (§III.B / §IV.A): the
+//! mutex-free thread-ownership scheme may never let the thread count
+//! change a result. Thread `t` owns its posts' edges, ring rows and
+//! plastic state outright, so per-post delivery order — and therefore
+//! every floating-point sum — is independent of how many workers the
+//! rank runs. We assert byte-identical spike rasters on the Potjans
+//! microcircuit for `threads ∈ {1, 2, 4}` under both exchange modes, and
+//! byte-identical final STDP weights on the plastic hpc_benchmark.
+
+use std::sync::Arc;
+
+use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
+use cortex::atlas::potjans::potjans_spec;
+use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::decomp::{area_processes_partition, RankStore};
+use cortex::engine::{
+    run_simulation, EngineOptions, RankEngine, RunConfig,
+};
+
+#[test]
+fn potjans_raster_identical_across_thread_counts_and_comm_modes() {
+    // ~1600-neuron downscaled microcircuit, 60 ms
+    let spec = Arc::new(potjans_spec(1600.0 / 77_169.0, 23));
+    for comm in [CommMode::Serialized, CommMode::Overlap] {
+        let mut reference = None;
+        for threads in [1usize, 2, 4] {
+            let out = run_simulation(
+                &spec,
+                &RunConfig {
+                    ranks: 2,
+                    threads,
+                    mapping: MappingKind::AreaProcesses,
+                    comm,
+                    backend: DynamicsBackend::Native,
+                    exec: ExecMode::Pool,
+                    steps: 600,
+                    record_limit: Some(u32::MAX),
+                    verify_ownership: true,
+                    artifacts_dir: "artifacts".into(),
+                    seed: 23,
+                },
+            )
+            .unwrap();
+            assert!(
+                out.total_spikes > 0,
+                "microcircuit should be active ({comm:?}, {threads}t)"
+            );
+            if let Some(want) = &reference {
+                assert_eq!(
+                    want, &out.raster.events,
+                    "{comm:?}: {threads} threads changed the raster"
+                );
+            } else {
+                reference = Some(out.raster.events);
+            }
+        }
+    }
+}
+
+#[test]
+fn stdp_weights_identical_across_thread_counts() {
+    // plastic balanced random network, hot enough to move weights fast
+    let spec = Arc::new(hpc_benchmark_spec(
+        &HpcParams {
+            n_neurons: 500,
+            indegree: 100,
+            plastic: true,
+            eta: 0.95,
+            ..Default::default()
+        },
+        29,
+    ));
+    let part = area_processes_partition(&spec, 1, 29);
+    let run = |threads: usize| {
+        let store = RankStore::build(
+            &spec,
+            &part.members[0],
+            |_| true,
+            0,
+            threads,
+        );
+        let mut eng = RankEngine::new(
+            Arc::clone(&spec),
+            store,
+            EngineOptions {
+                n_threads: threads,
+                verify_ownership: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // the default ExecMode::Pool must actually engage the persistent
+        // pool whenever there is real parallelism (a silent fallback to
+        // inline execution would make this test vacuous)
+        assert_eq!(eng.n_workers(), threads);
+        assert_eq!(eng.uses_pool(), threads > 1);
+        let spikes = eng.run_windows_solo(60);
+        (spikes, eng.plastic_edges())
+    };
+    let (spikes1, weights1) = run(1);
+    assert!(!spikes1.is_empty(), "plastic network should be active");
+    assert!(!weights1.is_empty(), "network should have plastic edges");
+    for threads in [2usize, 4] {
+        let (spikes, weights) = run(threads);
+        assert_eq!(
+            spikes1, spikes,
+            "{threads} threads changed the spike train"
+        );
+        assert_eq!(
+            weights1, weights,
+            "{threads} threads changed the final STDP weights"
+        );
+    }
+}

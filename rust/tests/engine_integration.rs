@@ -16,7 +16,7 @@ use std::sync::Arc;
 use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::atlas::random_spec;
-use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::nest_baseline::{run_nest_simulation, NestRunConfig};
 
@@ -27,6 +27,7 @@ fn base_cfg(steps: u64) -> RunConfig {
         mapping: MappingKind::AreaProcesses,
         comm: CommMode::Overlap,
         backend: DynamicsBackend::Native,
+        exec: ExecMode::Pool,
         steps,
         record_limit: Some(u32::MAX),
         verify_ownership: true,
@@ -72,6 +73,27 @@ fn thread_count_does_not_change_results() {
         a.raster.events, b.raster.events,
         "thread partitioning must be result-invariant"
     );
+}
+
+#[test]
+fn pool_equals_scoped_execution() {
+    // the persistent worker pool and the per-step scoped-thread fallback
+    // run the same phase kernels over the same owned state; swapping the
+    // execution backend must not move a single spike
+    let spec = Arc::new(random_spec(400, 40, 9));
+    let mut cfg = base_cfg(300);
+    cfg.threads = 3;
+    let a = run_simulation(&spec, &cfg).unwrap();
+    cfg.exec = ExecMode::Scoped;
+    let b = run_simulation(&spec, &cfg).unwrap();
+    assert!(a.total_spikes > 0);
+    assert_eq!(
+        a.raster.events, b.raster.events,
+        "execution backend must be result-invariant"
+    );
+    // the pool reports its coordination overhead under `sync`
+    assert!(a.timer_max.nanos("sync") > 0);
+    assert!(b.timer_max.nanos("sync") > 0);
 }
 
 #[test]

@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use cortex::atlas::random_spec;
-use cortex::config::{CommMode, DynamicsBackend, MappingKind};
+use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::model::lif::{step_slice, LifParams, LifState, Propagators};
 use cortex::runtime::{HloExecutable, Manifest, PjrtLif};
@@ -101,6 +101,7 @@ fn pjrt_backend_full_simulation_matches_native() {
         mapping: MappingKind::AreaProcesses,
         comm: CommMode::Serialized,
         backend: DynamicsBackend::Native,
+        exec: ExecMode::Pool,
         steps: 400,
         record_limit: Some(u32::MAX),
         verify_ownership: false,
