@@ -36,25 +36,27 @@ fn main() -> anyhow::Result<()> {
         }
     }) / STEPS as f64;
 
-    // AdEx
-    let ap = adex::AdexParams::default();
+    // AdEx (constant suprathreshold drive via i_ext)
+    let ap = adex::AdexParams { i_ext: 600.0, ..Default::default() };
     let mut as_ = adex::AdexState::new(N, &ap);
-    let drive_a = vec![600.0; N];
     let t_adex = time_median(5, || {
         let mut spikes = Vec::new();
         for _ in 0..STEPS {
-            adex::step_slice(&mut as_, 0, N, &drive_a, &ap, dt, &mut spikes);
+            adex::step_slice(
+                &mut as_, 0, N, &zero, &zero, &ap, dt, &mut spikes,
+            );
         }
     }) / STEPS as f64;
 
     // HH (10 sub-steps at dt=0.1 ms)
-    let hp = hh::HhParams::default();
+    let hp = hh::HhParams { i_ext: 8.0, ..Default::default() };
     let mut hs = hh::HhState::new(N);
-    let drive_h = vec![8.0; N];
     let t_hh = time_median(3, || {
         let mut spikes = Vec::new();
         for _ in 0..STEPS {
-            hh::step_slice(&mut hs, 0, N, &drive_h, &hp, dt, &mut spikes);
+            hh::step_slice(
+                &mut hs, 0, N, &zero, &zero, &hp, dt, &mut spikes,
+            );
         }
     }) / STEPS as f64;
 

@@ -8,8 +8,12 @@ fn main() {
     if which == "nest" {
         let o = cortex::nest_baseline::run_nest_simulation(&spec, &cortex::nest_baseline::NestRunConfig{ranks:1,threads:1,steps:500,record_limit:None,seed:31});
         println!("nest {} spikes {:.3}s", o.total_spikes, o.wall_seconds);
+        print!("{}", o.memory.report());
     } else {
         let o = run_simulation(&spec, &RunConfig{ranks:1,threads:1,mapping:MappingKind::AreaProcesses,comm:CommMode::Serialized,backend:DynamicsBackend::Native,exec:ExecMode::Pool,steps:500,record_limit:None,verify_ownership:false,artifacts_dir:"artifacts".into(),seed:31}).unwrap();
         println!("cortex {} spikes {:.3}s", o.total_spikes, o.wall_seconds); print!("{}", o.timer_max.report());
+        // resident-memory breakdown incl. neuron-model state (was
+        // edge-store-only before the dynamics layer accounted it)
+        print!("{}", o.memory.report());
     }
 }

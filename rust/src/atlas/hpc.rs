@@ -8,7 +8,8 @@
 //! ~10 Hz (asynchronous-irregular regime), plus CORTEX's own structural
 //! check that no edge or post-vertex is ever touched by two threads.
 
-use super::{AreaGeometry, ConnRule, NetworkSpec, Population};
+use super::{intern_params, AreaGeometry, ConnRule, NetworkSpec, Population};
+use crate::model::dynamics::ModelParams;
 use crate::model::{LifParams, PoissonDrive, StdpParams};
 
 #[derive(Clone, Debug)]
@@ -24,6 +25,10 @@ pub struct HpcParams {
     pub je_pa: f64,
     /// Enable STDP on E→E.
     pub plastic: bool,
+    /// Neuron models of the E / I populations (default: the published
+    /// all-LIF circuit; the η calibration assumes LIF).
+    pub model_e: ModelParams,
+    pub model_i: ModelParams,
 }
 
 impl Default for HpcParams {
@@ -39,6 +44,8 @@ impl Default for HpcParams {
             g: 6.0,
             je_pa: 45.61,
             plastic: true,
+            model_e: ModelParams::Lif(LifParams::default()),
+            model_i: ModelParams::Lif(LifParams::default()),
         }
     }
 }
@@ -50,7 +57,12 @@ pub fn hpc_benchmark_spec(p: &HpcParams, seed: u64) -> NetworkSpec {
     let ce = p.indegree * 4 / 5;
     let ci = p.indegree - ce;
 
-    let lif = LifParams::default();
+    // the η drive calibration is defined against LIF membrane constants;
+    // non-LIF E populations inherit the same (then merely heuristic) rate
+    let lif = match &p.model_e {
+        ModelParams::Lif(lp) => *lp,
+        _ => LifParams::default(),
+    };
     // Brunel threshold rate: nu_th = theta_rel / (J_psp · CE · tau_m), with
     // the pA→mV PSP conversion of the default neuron (87.8 pA ≈ 0.15 mV).
     let j_psp_mv = p.je_pa * 0.15 / 87.8;
@@ -61,13 +73,17 @@ pub fn hpc_benchmark_spec(p: &HpcParams, seed: u64) -> NetworkSpec {
     let ext_rate_hz = p.eta * nu_th_hz * ce as f64;
     let drive = PoissonDrive::new(ext_rate_hz, p.je_pa);
 
+    let mut params = Vec::new();
+    let pe = intern_params(&mut params, p.model_e);
+    let pi = intern_params(&mut params, p.model_i);
     let populations = vec![
         Population {
             name: "E".into(),
             area: 0,
             first_gid: 0,
             n: ne,
-            params: 0,
+            params: pe,
+            model: p.model_e.model(),
             exc: true,
             drive,
         },
@@ -76,7 +92,8 @@ pub fn hpc_benchmark_spec(p: &HpcParams, seed: u64) -> NetworkSpec {
             area: 0,
             first_gid: ne,
             n: ni,
-            params: 0,
+            params: pi,
+            model: p.model_i.model(),
             exc: false,
             drive,
         },
@@ -120,7 +137,7 @@ pub fn hpc_benchmark_spec(p: &HpcParams, seed: u64) -> NetworkSpec {
         format!("hpc_benchmark-{}", p.n_neurons),
         seed,
         0.1,
-        vec![lif],
+        params,
         populations,
         rules,
         areas,

@@ -20,7 +20,8 @@
 //!   same, citing [30]): each area is an E/I microcircuit with 4:1 ratio,
 //!   inhibition-dominated recurrence, and per-neuron Poisson background.
 
-use super::{AreaGeometry, ConnRule, NetworkSpec, Population};
+use super::{intern_params, AreaGeometry, ConnRule, NetworkSpec, Population};
+use crate::model::dynamics::ModelParams;
 use crate::model::{LifParams, PoissonDrive};
 use crate::util::rng::Rng;
 
@@ -43,6 +44,9 @@ pub struct MarmosetParams {
     pub g: f64,
     /// Background Poisson rate [Hz] per neuron.
     pub bg_rate_hz: f64,
+    /// Neuron models of the E / I populations of every area.
+    pub model_e: ModelParams,
+    pub model_i: ModelParams,
 }
 
 impl Default for MarmosetParams {
@@ -57,6 +61,8 @@ impl Default for MarmosetParams {
             weight_pa: 87.8,
             g: 4.5,
             bg_rate_hz: 7400.0,
+            model_e: ModelParams::Lif(LifParams::default()),
+            model_i: ModelParams::Lif(LifParams::default()),
         }
     }
 }
@@ -91,7 +97,9 @@ pub fn marmoset_spec(p: &MarmosetParams, seed: u64) -> NetworkSpec {
     let total_rel: f64 = rel_size.iter().sum();
 
     // --- populations: E/I per area, sizes normalised to n_neurons ------
-    let params = vec![LifParams::default()];
+    let mut params = Vec::new();
+    let pe = intern_params(&mut params, p.model_e);
+    let pi = intern_params(&mut params, p.model_i);
     let drive = PoissonDrive::new(p.bg_rate_hz, p.weight_pa);
     let mut populations = Vec::with_capacity(2 * p.n_areas);
     let mut next_gid = 0u32;
@@ -107,7 +115,8 @@ pub fn marmoset_spec(p: &MarmosetParams, seed: u64) -> NetworkSpec {
             area: a as u16,
             first_gid: next_gid,
             n: ne,
-            params: 0,
+            params: pe,
+            model: p.model_e.model(),
             exc: true,
             drive,
         });
@@ -117,7 +126,8 @@ pub fn marmoset_spec(p: &MarmosetParams, seed: u64) -> NetworkSpec {
             area: a as u16,
             first_gid: next_gid,
             n: ni,
-            params: 0,
+            params: pi,
+            model: p.model_i.model(),
             exc: false,
             drive,
         });

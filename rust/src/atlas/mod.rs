@@ -18,13 +18,23 @@
 //!   paper's internal-architecture reference [30]),
 //! - [`hpc::hpc_benchmark_spec`] — NEST hpc_benchmark verification network
 //!   (balanced random + STDP),
+//! - [`custom::custom_spec`] — TOML-described populations with
+//!   per-population neuron models (LIF / AdEx / HH / parrot),
 //! - [`random_spec`] — uniform random network for unit tests.
+//!
+//! Every builder fills the spec's **model parameter table**
+//! (`params: Vec<ModelParams>`); populations reference entries by index
+//! and additionally carry their [`NeuronModel`] tag, so mixed circuits
+//! (AdEx excitatory over LIF inhibitory, parrot stimulus relays, …) are
+//! ordinary specs.
 
+pub mod custom;
 pub mod hpc;
 pub mod marmoset;
 pub mod potjans;
 
 use crate::graph::{DiGraph, Edge};
+use crate::model::dynamics::{ModelParams, ModelTables, NeuronModel};
 use crate::model::{LifParams, PoissonDrive, Propagators, StdpParams};
 use crate::util::rng::{hash_stream, Rng};
 use crate::{DelaySteps, Gid};
@@ -43,6 +53,9 @@ pub struct Population {
     pub n: u32,
     /// Index into `NetworkSpec::params`.
     pub params: u8,
+    /// Neuron model this population runs (must match the variant of its
+    /// `params` entry; validated by [`NetworkSpec::new`]).
+    pub model: NeuronModel,
     /// Excitatory (outgoing weights > 0) or inhibitory.
     pub exc: bool,
     pub drive: PoissonDrive,
@@ -90,7 +103,8 @@ pub struct NetworkSpec {
     pub name: String,
     pub seed: u64,
     pub dt_ms: f64,
-    pub params: Vec<LifParams>,
+    /// Model parameter table; populations reference entries by index.
+    pub params: Vec<ModelParams>,
     pub populations: Vec<Population>,
     pub rules: Vec<ConnRule>,
     pub areas: Vec<AreaGeometry>,
@@ -114,7 +128,7 @@ impl NetworkSpec {
         name: impl Into<String>,
         seed: u64,
         dt_ms: f64,
-        params: Vec<LifParams>,
+        params: Vec<ModelParams>,
         populations: Vec<Population>,
         rules: Vec<ConnRule>,
         areas: Vec<AreaGeometry>,
@@ -127,6 +141,12 @@ impl NetworkSpec {
             next += p.n;
             assert!((p.params as usize) < params.len());
             assert!((p.area as usize) < areas.len());
+            assert_eq!(
+                params[p.params as usize].model(),
+                p.model,
+                "population {} model tag disagrees with its params entry",
+                p.name
+            );
         }
         for r in &rules {
             assert!((r.src_pop as usize) < populations.len());
@@ -201,13 +221,15 @@ impl NetworkSpec {
         ]
     }
 
-    /// Deterministic initial membrane potential.
+    /// Deterministic initial membrane potential (around the model's
+    /// resting potential; meaningless-but-harmless for parrot relays).
     pub fn v_init(&self, gid: Gid) -> f64 {
         let p = &self.params
             [self.populations[self.pop_of(gid) as usize].params as usize];
         let mut rng =
             Rng::new(hash_stream(&[self.seed, TAG_VINIT, gid as u64]));
-        p.e_l + rng.range_f64(self.v_init_jitter.0, self.v_init_jitter.1)
+        p.rest_potential()
+            + rng.range_f64(self.v_init_jitter.0, self.v_init_jitter.1)
     }
 
     /// Deterministically generate all incoming edges of `gid`, appending
@@ -273,17 +295,42 @@ impl NetworkSpec {
         self.populations[self.pop_of(gid) as usize].drive
     }
 
-    /// Propagator table for the engine (one entry per parameter set).
-    pub fn propagators(&self) -> Vec<Propagators> {
+    /// LIF propagator table, aligned with the parameter table (non-LIF
+    /// slots hold default-parameter propagators and are never indexed by
+    /// a LIF block).
+    pub fn lif_propagators(&self) -> Vec<Propagators> {
         self.params
             .iter()
-            .map(|p| Propagators::new(p, self.dt_ms))
+            .map(|p| match p {
+                ModelParams::Lif(lp) => Propagators::new(lp, self.dt_ms),
+                _ => Propagators::new(&LifParams::default(), self.dt_ms),
+            })
             .collect()
     }
 
-    /// Propagator index of a neuron.
+    /// The engine's per-worker dispatch tables.
+    pub fn model_tables(&self) -> ModelTables {
+        ModelTables {
+            dt_ms: self.dt_ms,
+            lif_props: self.lif_propagators(),
+            params: self.params.clone(),
+        }
+    }
+
+    /// True when every population runs LIF (the PJRT backend and the
+    /// NEST-style baseline support only this case).
+    pub fn all_lif(&self) -> bool {
+        self.populations.iter().all(|p| p.model == NeuronModel::Lif)
+    }
+
+    /// Parameter-table index of a neuron.
     pub fn pidx(&self, gid: Gid) -> u8 {
         self.populations[self.pop_of(gid) as usize].params
+    }
+
+    /// Neuron model of a gid.
+    pub fn model_of(&self, gid: Gid) -> NeuronModel {
+        self.populations[self.pop_of(gid) as usize].model
     }
 
     /// Upper bound on delays in steps (used to size ring buffers) — scans
@@ -319,12 +366,38 @@ impl NetworkSpec {
     }
 }
 
+/// Intern `p` into a parameter table, returning its index. Identical
+/// entries collapse to one slot, so a builder can offer per-population
+/// models without bloating the table in the homogeneous case.
+pub fn intern_params(params: &mut Vec<ModelParams>, p: ModelParams) -> u8 {
+    if let Some(i) = params.iter().position(|q| *q == p) {
+        return i as u8;
+    }
+    assert!(params.len() < u8::MAX as usize, "parameter table overflow");
+    params.push(p);
+    (params.len() - 1) as u8
+}
+
 /// Uniform random network over one excitatory + one inhibitory population
 /// (unit tests and micro-benches).
 pub fn random_spec(n: usize, indegree: u32, seed: u64) -> NetworkSpec {
+    let lif = ModelParams::Lif(LifParams::default());
+    random_spec_with(n, indegree, seed, lif, lif)
+}
+
+/// [`random_spec`] with explicit neuron models per population type.
+pub fn random_spec_with(
+    n: usize,
+    indegree: u32,
+    seed: u64,
+    model_e: ModelParams,
+    model_i: ModelParams,
+) -> NetworkSpec {
     let ne = (n * 4 / 5) as u32;
     let ni = (n - n * 4 / 5) as u32;
-    let params = vec![LifParams::default()];
+    let mut params = Vec::new();
+    let pe = intern_params(&mut params, model_e);
+    let pi = intern_params(&mut params, model_i);
     let drive = PoissonDrive::new(8000.0, 87.8);
     let populations = vec![
         Population {
@@ -332,7 +405,8 @@ pub fn random_spec(n: usize, indegree: u32, seed: u64) -> NetworkSpec {
             area: 0,
             first_gid: 0,
             n: ne,
-            params: 0,
+            params: pe,
+            model: model_e.model(),
             exc: true,
             drive,
         },
@@ -341,7 +415,8 @@ pub fn random_spec(n: usize, indegree: u32, seed: u64) -> NetworkSpec {
             area: 0,
             first_gid: ne,
             n: ni,
-            params: 0,
+            params: pi,
+            model: model_i.model(),
             exc: false,
             drive,
         },
@@ -443,8 +518,51 @@ mod tests {
         assert_ne!(s.position(42), s.position(43));
         let v = s.v_init(42);
         assert_eq!(v, s.v_init(42));
-        let p = &s.params[0];
+        let ModelParams::Lif(p) = &s.params[0] else { panic!() };
         assert!(v >= p.e_l && v < p.e_l + 5.0);
+    }
+
+    #[test]
+    fn mixed_models_intern_and_tag_consistently() {
+        use crate::model::{AdexParams, HhParams};
+        let adex = ModelParams::Adex(AdexParams::default());
+        let lif = ModelParams::Lif(LifParams::default());
+        let s = random_spec_with(500, 50, 3, adex, lif);
+        assert_eq!(s.params.len(), 2);
+        assert_eq!(s.populations[0].model, NeuronModel::Adex);
+        assert_eq!(s.populations[1].model, NeuronModel::Lif);
+        assert_eq!(s.model_of(0), NeuronModel::Adex);
+        assert_eq!(s.model_of(499), NeuronModel::Lif);
+        assert!(!s.all_lif());
+        assert!(random_spec(500, 50, 3).all_lif());
+        // identical params collapse to one table entry
+        let mut t = Vec::new();
+        assert_eq!(intern_params(&mut t, lif), 0);
+        assert_eq!(intern_params(&mut t, adex), 1);
+        assert_eq!(intern_params(&mut t, lif), 0);
+        assert_eq!(
+            intern_params(&mut t, ModelParams::Hh(HhParams::default())),
+            2
+        );
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "model tag")]
+    fn model_tag_mismatch_rejected() {
+        let mut s = random_spec(100, 10, 1);
+        let mut pops = std::mem::take(&mut s.populations);
+        pops[0].model = NeuronModel::Adex; // params entry is Lif
+        let _ = NetworkSpec::new(
+            "bad",
+            1,
+            0.1,
+            s.params.clone(),
+            pops,
+            s.rules.clone(),
+            s.areas.clone(),
+            None,
+        );
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! indegrees `K = round(ln(1-P) / ln(1 - 1/N_src))` (the paper's NEST
 //! reference uses the same expected-multapse correction).
 
-use super::{AreaGeometry, ConnRule, NetworkSpec, Population};
+use super::{intern_params, AreaGeometry, ConnRule, NetworkSpec, Population};
+use crate::model::dynamics::ModelParams;
 use crate::model::{LifParams, PoissonDrive};
 
 /// Published population sizes (full-scale model, 1 mm² column).
@@ -45,10 +46,39 @@ pub const TARGET_RATES_HZ: [f64; 8] =
 pub const W_PA: f64 = 87.8;
 pub const G: f64 = 4.0;
 
+/// Neuron models of the microcircuit's populations: one base parameter
+/// set for the excitatory layers and one for the inhibitory layers.
+/// Defaults reproduce the published all-LIF circuit; swapping `e` for
+/// AdEx yields the mixed-model variant (adaptation on pyramidal cells
+/// over fast LIF interneurons).
+#[derive(Clone, Copy, Debug)]
+pub struct PotjansModels {
+    pub e: ModelParams,
+    pub i: ModelParams,
+}
+
+impl Default for PotjansModels {
+    fn default() -> Self {
+        let lif = ModelParams::Lif(LifParams::default());
+        PotjansModels { e: lif, i: lif }
+    }
+}
+
 /// Build the microcircuit at `scale` ∈ (0, 1] of the published size.
 /// Indegrees are scaled with population sizes (the "K preserved density"
 /// downscaling of the original paper's supplement).
 pub fn potjans_spec(scale: f64, seed: u64) -> NetworkSpec {
+    potjans_spec_with(scale, seed, &PotjansModels::default())
+}
+
+/// [`potjans_spec`] with explicit neuron models. The downscaling DC
+/// compensation is a LIF-propagator construct and is applied only to
+/// LIF populations; non-LIF populations take their parameters verbatim.
+pub fn potjans_spec_with(
+    scale: f64,
+    seed: u64,
+    models: &PotjansModels,
+) -> NetworkSpec {
     assert!(scale > 0.0 && scale <= 1.0);
 
     // full-scale indegrees and weights, used both for rule construction
@@ -79,17 +109,24 @@ pub fn potjans_spec(scale: f64, seed: u64) -> NetworkSpec {
     // full scale.
     let w_scale = 1.0 / scale.sqrt();
     let tau_syn_s = 0.5e-3;
-    let params: Vec<LifParams> = (0..8)
+    let mut params: Vec<ModelParams> = Vec::new();
+    let pidx: Vec<u8> = (0..8)
         .map(|d| {
             let i_rec_full: f64 = (0..8)
                 .map(|s| {
                     k_full(d, s) * w_of(d, s) * TARGET_RATES_HZ[s] * tau_syn_s
                 })
                 .sum();
-            LifParams {
-                i_ext: (1.0 - scale.sqrt()) * i_rec_full,
-                ..LifParams::default()
-            }
+            let base = if d % 2 == 0 { models.e } else { models.i };
+            let entry = match base {
+                // per-population compensated i_ext (LIF only)
+                ModelParams::Lif(lp) => ModelParams::Lif(LifParams {
+                    i_ext: lp.i_ext + (1.0 - scale.sqrt()) * i_rec_full,
+                    ..lp
+                }),
+                other => other,
+            };
+            intern_params(&mut params, entry)
         })
         .collect();
 
@@ -97,12 +134,14 @@ pub fn potjans_spec(scale: f64, seed: u64) -> NetworkSpec {
     let mut next_gid = 0u32;
     for i in 0..8 {
         let n = ((POP_SIZES[i] as f64 * scale).round() as u32).max(5);
+        let base = if i % 2 == 0 { models.e } else { models.i };
         populations.push(Population {
             name: POP_NAMES[i].into(),
             area: 0,
             first_gid: next_gid,
             n,
-            params: i as u8, // per-population compensated i_ext
+            params: pidx[i],
+            model: base.model(),
             exc: i % 2 == 0,
             // external indegree × per-synapse rate. K_ext is NOT scaled
             // down with the network: downscaling thins the recurrent
@@ -207,10 +246,17 @@ mod tests {
         assert!((find(0, 0).weight_mean - expect).abs() < 1e-9);
     }
 
+    fn lif_i_ext(s: &NetworkSpec, pop: usize) -> f64 {
+        match &s.params[s.populations[pop].params as usize] {
+            ModelParams::Lif(p) => p.i_ext,
+            other => panic!("population {pop} is not LIF: {other:?}"),
+        }
+    }
+
     #[test]
     fn full_scale_has_no_compensation() {
         let s = potjans_spec(1.0, 1);
-        assert!(s.params.iter().all(|p| p.i_ext.abs() < 1e-9));
+        assert!((0..8).all(|d| lif_i_ext(&s, d).abs() < 1e-9));
         let r = s
             .rules
             .iter()
@@ -225,8 +271,35 @@ mod tests {
         // the microcircuit's recurrent mean input is inhibition-dominated
         // in most populations — compensation must inject negative DC
         let negatives =
-            s.params.iter().filter(|p| p.i_ext < 0.0).count();
+            (0..8).filter(|&d| lif_i_ext(&s, d) < 0.0).count();
         assert!(negatives >= 6, "only {negatives} compensated negative");
+    }
+
+    #[test]
+    fn mixed_model_variant_keeps_structure() {
+        use crate::model::AdexParams;
+        let s = potjans_spec_with(
+            0.02,
+            1,
+            &PotjansModels {
+                e: ModelParams::Adex(AdexParams::default()),
+                ..Default::default()
+            },
+        );
+        use crate::model::NeuronModel;
+        for (i, p) in s.populations.iter().enumerate() {
+            let want = if i % 2 == 0 {
+                NeuronModel::Adex
+            } else {
+                NeuronModel::Lif
+            };
+            assert_eq!(p.model, want, "{}", p.name);
+        }
+        // E populations share one AdEx entry; I populations keep their
+        // per-layer compensated LIF entries
+        assert!(s.params.len() >= 2 && s.params.len() <= 5);
+        // same connectivity rules as the all-LIF circuit
+        assert_eq!(s.rules.len(), potjans_spec(0.02, 1).rules.len());
     }
 
     #[test]

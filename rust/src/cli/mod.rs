@@ -12,10 +12,11 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::atlas::custom::{custom_spec, CustomNetParams, CustomPopSpec};
 use crate::atlas::hpc::{hpc_benchmark_spec, HpcParams};
 use crate::atlas::marmoset::{marmoset_spec, MarmosetParams};
-use crate::atlas::potjans::potjans_spec;
-use crate::atlas::{random_spec, NetworkSpec};
+use crate::atlas::potjans::{potjans_spec_with, PotjansModels};
+use crate::atlas::{random_spec_with, NetworkSpec};
 use crate::config::{
     ConfigDoc, EngineKind, ExperimentConfig, NetworkKind,
 };
@@ -78,34 +79,71 @@ impl Args {
     }
 }
 
-/// Instantiate the configured network.
+/// Instantiate the configured network. Every builder receives the
+/// configured neuron models (`network.model[_e|_i]` + `[model.*]`
+/// parameter tables), so AdEx/HH/parrot populations are reachable from
+/// any workload kind.
 pub fn build_spec(cfg: &ExperimentConfig) -> NetworkSpec {
+    let model_e = cfg.model_params(cfg.model_e);
+    let model_i = cfg.model_params(cfg.model_i);
     match cfg.network {
         NetworkKind::Marmoset => marmoset_spec(
             &MarmosetParams {
                 n_neurons: cfg.n_neurons,
                 n_areas: cfg.n_areas,
                 indegree: cfg.indegree as u32,
+                model_e,
+                model_i,
                 ..Default::default()
             },
             cfg.seed,
         ),
         NetworkKind::Potjans => {
             let scale = cfg.n_neurons as f64 / 77_169.0;
-            potjans_spec(scale.min(1.0), cfg.seed)
+            potjans_spec_with(
+                scale.min(1.0),
+                cfg.seed,
+                &PotjansModels { e: model_e, i: model_i },
+            )
         }
         NetworkKind::HpcBenchmark => hpc_benchmark_spec(
             &HpcParams {
                 n_neurons: cfg.n_neurons,
                 indegree: cfg.indegree as u32,
                 plastic: cfg.plastic,
+                model_e,
+                model_i,
                 ..Default::default()
             },
             cfg.seed,
         ),
-        NetworkKind::Random => {
-            random_spec(cfg.n_neurons, cfg.indegree as u32, cfg.seed)
-        }
+        NetworkKind::Random => random_spec_with(
+            cfg.n_neurons,
+            cfg.indegree as u32,
+            cfg.seed,
+            model_e,
+            model_i,
+        ),
+        NetworkKind::Custom => custom_spec(
+            &CustomNetParams {
+                pops: cfg
+                    .custom_pops
+                    .iter()
+                    .map(|cp| CustomPopSpec {
+                        name: cp.name.clone(),
+                        n: cp.n,
+                        exc: cp.exc,
+                        params: cfg.model_params(cp.model),
+                    })
+                    .collect(),
+                indegree: cfg.indegree as u32,
+                weight_pa: cfg.weight_pa,
+                g: cfg.g,
+                bg_rate_hz: cfg.bg_rate_hz,
+                ..Default::default()
+            },
+            cfg.seed,
+        ),
     }
 }
 
@@ -381,5 +419,74 @@ mod tests {
             assert!(spec.n_total() > 0, "{kind}");
             assert!(spec.n_edges() > 0, "{kind}");
         }
+    }
+
+    #[test]
+    fn model_knobs_reach_the_spec() {
+        use crate::model::NeuronModel;
+        // adex E over lif I on the hpc benchmark, AdEx b from [model.adex]
+        let a = Args::parse(&s(&[
+            "run",
+            "--set",
+            "network.kind=\"hpc_benchmark\"",
+            "--set",
+            "network.n_neurons=1000",
+            "--set",
+            "network.indegree=100",
+            "--set",
+            "network.model_e=\"adex\"",
+            "--set",
+            "model.adex.b=99.0",
+        ]))
+        .unwrap();
+        let spec = build_spec(&a.experiment().unwrap());
+        assert_eq!(spec.populations[0].model, NeuronModel::Adex);
+        assert_eq!(spec.populations[1].model, NeuronModel::Lif);
+        let crate::model::ModelParams::Adex(ap) =
+            &spec.params[spec.populations[0].params as usize]
+        else {
+            panic!("E population should be AdEx")
+        };
+        assert_eq!(ap.b, 99.0);
+
+        // hh everywhere on the random network
+        let a = Args::parse(&s(&[
+            "run",
+            "--set",
+            "network.kind=\"random\"",
+            "--set",
+            "network.n_neurons=500",
+            "--set",
+            "network.indegree=50",
+            "--set",
+            "network.model=\"hh\"",
+        ]))
+        .unwrap();
+        let spec = build_spec(&a.experiment().unwrap());
+        assert!(spec
+            .populations
+            .iter()
+            .all(|p| p.model == NeuronModel::Hh));
+    }
+
+    #[test]
+    fn custom_kind_builds_mixed_circuit() {
+        use crate::model::NeuronModel;
+        let a = Args::parse(&s(&[
+            "run",
+            "--set",
+            "network.kind=\"custom\"",
+            "--set",
+            "network.indegree=40",
+            "--set",
+            "network.populations=[\"E:400:adex:e\", \"I:100:lif:i\", \
+             \"S:50:parrot:e\"]",
+        ]))
+        .unwrap();
+        let spec = build_spec(&a.experiment().unwrap());
+        assert_eq!(spec.n_total(), 550);
+        assert_eq!(spec.populations[0].model, NeuronModel::Adex);
+        assert_eq!(spec.populations[2].model, NeuronModel::Parrot);
+        assert!(spec.n_edges() > 0);
     }
 }

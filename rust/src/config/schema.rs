@@ -1,6 +1,9 @@
 //! Typed experiment schema on top of [`ConfigDoc`], with validation.
 
-use super::toml::{ConfigDoc, ConfigError};
+use super::toml::{ConfigDoc, ConfigError, Value};
+use crate::model::{
+    AdexParams, HhParams, LifParams, ModelParams, NeuronModel,
+};
 
 /// Which network builder to instantiate (see `atlas`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -13,6 +16,51 @@ pub enum NetworkKind {
     HpcBenchmark,
     /// Uniform random network (unit tests / micro-benches).
     Random,
+    /// TOML-described populations (`network.populations`), each with its
+    /// own neuron model — see `atlas::custom`.
+    Custom,
+}
+
+/// One `network.populations` descriptor: `"name:count:model:e|i"`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CustomPop {
+    pub name: String,
+    pub n: u32,
+    pub model: NeuronModel,
+    pub exc: bool,
+}
+
+impl CustomPop {
+    pub fn parse(s: &str) -> Result<CustomPop, ConfigError> {
+        let bad = |msg: String| ConfigError::Invalid {
+            key: "network.populations".into(),
+            msg,
+        };
+        let parts: Vec<&str> = s.split(':').collect();
+        let &[name, n, model, ei] = parts.as_slice() else {
+            return Err(bad(format!(
+                "'{s}' is not of the form name:count:model:e|i"
+            )));
+        };
+        let n: u32 = n
+            .parse()
+            .map_err(|_| bad(format!("'{n}' is not a population size")))?;
+        let model = NeuronModel::parse(model).ok_or_else(|| {
+            bad(format!(
+                "unknown model '{model}' (expected lif|adex|hh|parrot)"
+            ))
+        })?;
+        let exc = match ei {
+            "e" | "exc" => true,
+            "i" | "inh" => false,
+            other => {
+                return Err(bad(format!(
+                    "'{other}' must be e|exc or i|inh"
+                )))
+            }
+        };
+        Ok(CustomPop { name: name.to_string(), n, model, exc })
+    }
 }
 
 /// Which simulation engine to run.
@@ -77,6 +125,22 @@ pub struct ExperimentConfig {
     pub n_areas: usize,
     pub indegree: usize,
     pub plastic: bool,
+    /// Neuron model of excitatory / inhibitory populations
+    /// (`network.model` sets both; `network.model_e` / `network.model_i`
+    /// override individually — mixed circuits fall out of that).
+    pub model_e: NeuronModel,
+    pub model_i: NeuronModel,
+    /// `kind = "custom"` population descriptors.
+    pub custom_pops: Vec<CustomPop>,
+    /// Synaptic scaffold knobs of the custom builder.
+    pub weight_pa: f64,
+    pub g: f64,
+    pub bg_rate_hz: f64,
+
+    // [model.lif] / [model.adex] / [model.hh] parameter tables
+    pub lif: LifParams,
+    pub adex: AdexParams,
+    pub hh: HhParams,
 
     // [sim]
     pub dt_ms: f64,
@@ -105,6 +169,15 @@ impl Default for ExperimentConfig {
             n_areas: 8,
             indegree: 250,
             plastic: false,
+            model_e: NeuronModel::Lif,
+            model_i: NeuronModel::Lif,
+            custom_pops: Vec::new(),
+            weight_pa: 87.8,
+            g: 4.0,
+            bg_rate_hz: 8000.0,
+            lif: LifParams::default(),
+            adex: AdexParams::default(),
+            hh: HhParams::default(),
             dt_ms: 0.1,
             sim_ms: 100.0,
             record_raster: false,
@@ -136,12 +209,22 @@ impl ExperimentConfig {
                     ("potjans", NetworkKind::Potjans),
                     ("hpc_benchmark", NetworkKind::HpcBenchmark),
                     ("random", NetworkKind::Random),
+                    ("custom", NetworkKind::Custom),
                 ],
             )?,
             n_neurons: doc.usize("network.n_neurons", d.n_neurons)?,
             n_areas: doc.usize("network.n_areas", d.n_areas)?,
             indegree: doc.usize("network.indegree", d.indegree)?,
             plastic: doc.bool("network.plastic", d.plastic)?,
+            model_e: parse_model(doc, "network.model_e")?,
+            model_i: parse_model(doc, "network.model_i")?,
+            custom_pops: parse_custom_pops(doc)?,
+            weight_pa: doc.f64("network.weight_pa", d.weight_pa)?,
+            g: doc.f64("network.g", d.g)?,
+            bg_rate_hz: doc.f64("network.bg_rate_hz", d.bg_rate_hz)?,
+            lif: lif_params_from(doc)?,
+            adex: adex_params_from(doc)?,
+            hh: hh_params_from(doc)?,
             dt_ms: doc.f64("sim.dt_ms", d.dt_ms)?,
             sim_ms: doc.f64("sim.sim_ms", d.sim_ms)?,
             record_raster: doc.bool("sim.record_raster", d.record_raster)?,
@@ -195,6 +278,25 @@ impl ExperimentConfig {
             )?,
             artifacts_dir: doc.str("engine.artifacts_dir", &d.artifacts_dir)?,
         };
+        // the custom-builder scaffold knobs are not wired into the
+        // parametric builders (which have their own calibrated values) —
+        // reject rather than silently ignore them
+        if cfg.network != NetworkKind::Custom {
+            for key in [
+                "network.populations",
+                "network.weight_pa",
+                "network.g",
+                "network.bg_rate_hz",
+            ] {
+                if doc.get(key).is_some() {
+                    return Err(ConfigError::Invalid {
+                        key: key.into(),
+                        msg: "only used by network.kind = \"custom\""
+                            .into(),
+                    });
+                }
+            }
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -206,8 +308,28 @@ impl ExperimentConfig {
         if self.n_neurons == 0 {
             return bad("network.n_neurons", "must be > 0");
         }
-        if self.indegree >= self.n_neurons {
+        // the custom builder sizes itself from its population list
+        // (multapses make any indegree well-defined); n_neurons-based
+        // bounds apply to the parametric builders only
+        if self.network != NetworkKind::Custom
+            && self.indegree >= self.n_neurons
+        {
             return bad("network.indegree", "must be < n_neurons");
+        }
+        if self.network == NetworkKind::Custom {
+            if self.custom_pops.is_empty() {
+                return bad(
+                    "network.populations",
+                    "kind = \"custom\" needs at least one population \
+                     descriptor (\"name:count:model:e|i\")",
+                );
+            }
+            if self.custom_pops.iter().any(|p| p.n == 0) {
+                return bad("network.populations", "population size 0");
+            }
+        }
+        if self.hh.substeps == 0 {
+            return bad("model.hh.substeps", "must be >= 1");
         }
         if self.n_areas == 0 {
             return bad("network.n_areas", "must be > 0");
@@ -230,6 +352,110 @@ impl ExperimentConfig {
     pub fn steps(&self) -> u64 {
         (self.sim_ms / self.dt_ms).round() as u64
     }
+
+    /// The configured parameter set of a neuron model (the `[model.*]`
+    /// tables with defaults filled in).
+    pub fn model_params(&self, m: NeuronModel) -> ModelParams {
+        match m {
+            NeuronModel::Lif => ModelParams::Lif(self.lif),
+            NeuronModel::Adex => ModelParams::Adex(self.adex),
+            NeuronModel::Hh => ModelParams::Hh(self.hh),
+            NeuronModel::Parrot => ModelParams::Parrot,
+        }
+    }
+}
+
+/// `network.model` sets both population types; `network.model_e` /
+/// `network.model_i` override individually.
+fn parse_model(
+    doc: &ConfigDoc,
+    key: &str,
+) -> Result<NeuronModel, ConfigError> {
+    let both = doc.str("network.model", "lif")?;
+    let s = doc.str(key, &both)?;
+    NeuronModel::parse(&s).ok_or_else(|| ConfigError::Invalid {
+        key: key.into(),
+        msg: format!(
+            "unknown neuron model '{s}' (expected lif|adex|hh|parrot)"
+        ),
+    })
+}
+
+fn parse_custom_pops(
+    doc: &ConfigDoc,
+) -> Result<Vec<CustomPop>, ConfigError> {
+    match doc.get("network.populations") {
+        None => Ok(Vec::new()),
+        Some(Value::Array(items)) => items
+            .iter()
+            .map(|v| {
+                let s = v.as_str().ok_or(ConfigError::Type {
+                    key: "network.populations".into(),
+                    expected: "array of \"name:count:model:e|i\" strings",
+                })?;
+                CustomPop::parse(s)
+            })
+            .collect(),
+        Some(_) => Err(ConfigError::Type {
+            key: "network.populations".into(),
+            expected: "array of \"name:count:model:e|i\" strings",
+        }),
+    }
+}
+
+fn lif_params_from(doc: &ConfigDoc) -> Result<LifParams, ConfigError> {
+    let d = LifParams::default();
+    Ok(LifParams {
+        tau_m: doc.f64("model.lif.tau_m", d.tau_m)?,
+        tau_syn_ex: doc.f64("model.lif.tau_syn_ex", d.tau_syn_ex)?,
+        tau_syn_in: doc.f64("model.lif.tau_syn_in", d.tau_syn_in)?,
+        c_m: doc.f64("model.lif.c_m", d.c_m)?,
+        e_l: doc.f64("model.lif.e_l", d.e_l)?,
+        v_reset: doc.f64("model.lif.v_reset", d.v_reset)?,
+        v_th: doc.f64("model.lif.v_th", d.v_th)?,
+        t_ref: doc.f64("model.lif.t_ref", d.t_ref)?,
+        i_ext: doc.f64("model.lif.i_ext", d.i_ext)?,
+    })
+}
+
+fn adex_params_from(doc: &ConfigDoc) -> Result<AdexParams, ConfigError> {
+    let d = AdexParams::default();
+    Ok(AdexParams {
+        c_m: doc.f64("model.adex.c_m", d.c_m)?,
+        g_l: doc.f64("model.adex.g_l", d.g_l)?,
+        e_l: doc.f64("model.adex.e_l", d.e_l)?,
+        v_t: doc.f64("model.adex.v_t", d.v_t)?,
+        delta_t: doc.f64("model.adex.delta_t", d.delta_t)?,
+        tau_w: doc.f64("model.adex.tau_w", d.tau_w)?,
+        a: doc.f64("model.adex.a", d.a)?,
+        b: doc.f64("model.adex.b", d.b)?,
+        v_reset: doc.f64("model.adex.v_reset", d.v_reset)?,
+        v_peak: doc.f64("model.adex.v_peak", d.v_peak)?,
+        t_ref: doc.f64("model.adex.t_ref", d.t_ref)?,
+        tau_syn_ex: doc.f64("model.adex.tau_syn_ex", d.tau_syn_ex)?,
+        tau_syn_in: doc.f64("model.adex.tau_syn_in", d.tau_syn_in)?,
+        i_ext: doc.f64("model.adex.i_ext", d.i_ext)?,
+    })
+}
+
+fn hh_params_from(doc: &ConfigDoc) -> Result<HhParams, ConfigError> {
+    let d = HhParams::default();
+    Ok(HhParams {
+        c_m: doc.f64("model.hh.c_m", d.c_m)?,
+        g_na: doc.f64("model.hh.g_na", d.g_na)?,
+        g_k: doc.f64("model.hh.g_k", d.g_k)?,
+        g_l: doc.f64("model.hh.g_l", d.g_l)?,
+        e_na: doc.f64("model.hh.e_na", d.e_na)?,
+        e_k: doc.f64("model.hh.e_k", d.e_k)?,
+        e_l: doc.f64("model.hh.e_l", d.e_l)?,
+        v_spike: doc.f64("model.hh.v_spike", d.v_spike)?,
+        substeps: doc.usize("model.hh.substeps", d.substeps as usize)?
+            as u32,
+        tau_syn_ex: doc.f64("model.hh.tau_syn_ex", d.tau_syn_ex)?,
+        tau_syn_in: doc.f64("model.hh.tau_syn_in", d.tau_syn_in)?,
+        i_ext: doc.f64("model.hh.i_ext", d.i_ext)?,
+        syn_scale: doc.f64("model.hh.syn_scale", d.syn_scale)?,
+    })
 }
 
 fn parse_enum<T: Copy>(
@@ -337,5 +563,114 @@ comm = "serialized"
         let doc = ConfigDoc::parse("[engine]\nbackend = \"cuda\"").unwrap();
         let err = ExperimentConfig::from_doc(&doc).unwrap_err();
         assert!(format!("{err}").contains("cuda"));
+    }
+
+    #[test]
+    fn model_knobs_default_to_lif_and_cascade() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.model_e, NeuronModel::Lif);
+        assert_eq!(cfg.model_i, NeuronModel::Lif);
+
+        // network.model sets both …
+        let doc =
+            ConfigDoc::parse("[network]\nmodel = \"adex\"").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.model_e, NeuronModel::Adex);
+        assert_eq!(cfg.model_i, NeuronModel::Adex);
+
+        // … and model_e / model_i override individually (mixed circuit)
+        let doc = ConfigDoc::parse(
+            "[network]\nmodel = \"lif\"\nmodel_e = \"adex\"",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.model_e, NeuronModel::Adex);
+        assert_eq!(cfg.model_i, NeuronModel::Lif);
+
+        let doc =
+            ConfigDoc::parse("[network]\nmodel = \"izhikevich\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn model_parameter_tables_override_defaults() {
+        let doc = ConfigDoc::parse(
+            r#"
+[model.adex]
+b = 120.0
+tau_w = 200.0
+[model.hh]
+substeps = 20
+[model.lif]
+tau_m = 15.0
+"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.adex.b, 120.0);
+        assert_eq!(cfg.adex.tau_w, 200.0);
+        assert_eq!(cfg.adex.a, AdexParams::default().a);
+        assert_eq!(cfg.hh.substeps, 20);
+        assert_eq!(cfg.lif.tau_m, 15.0);
+        let ModelParams::Adex(a) = cfg.model_params(NeuronModel::Adex)
+        else {
+            panic!()
+        };
+        assert_eq!(a.b, 120.0);
+    }
+
+    #[test]
+    fn custom_population_descriptors_parse() {
+        let doc = ConfigDoc::parse(
+            r#"
+[network]
+kind = "custom"
+indegree = 50
+populations = ["E:400:adex:e", "I:100:lif:i", "S:20:parrot:e"]
+"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.network, NetworkKind::Custom);
+        assert_eq!(cfg.custom_pops.len(), 3);
+        assert_eq!(
+            cfg.custom_pops[0],
+            CustomPop {
+                name: "E".into(),
+                n: 400,
+                model: NeuronModel::Adex,
+                exc: true
+            }
+        );
+        assert!(!cfg.custom_pops[1].exc);
+        assert_eq!(cfg.custom_pops[2].model, NeuronModel::Parrot);
+
+        // custom without populations is rejected
+        let doc =
+            ConfigDoc::parse("[network]\nkind = \"custom\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        // custom-scaffold knobs on a parametric builder are rejected
+        // rather than silently ignored
+        for knob in ["g = 8.0", "weight_pa = 50.0", "bg_rate_hz = 1.0"] {
+            let doc = ConfigDoc::parse(&format!("[network]\n{knob}"))
+                .unwrap();
+            assert!(
+                ExperimentConfig::from_doc(&doc).is_err(),
+                "{knob} should be custom-only"
+            );
+        }
+        // frozen-network guard
+        let doc = ConfigDoc::parse("[model.hh]\nsubsteps = 0").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        // malformed descriptor is rejected
+        for bad in
+            ["E:400:adex", "E:x:lif:e", "E:400:foo:e", "E:400:lif:q"]
+        {
+            assert!(
+                CustomPop::parse(bad).is_err(),
+                "descriptor '{bad}' should be rejected"
+            );
+        }
     }
 }

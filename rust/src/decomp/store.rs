@@ -112,6 +112,11 @@ pub struct RankStore {
     /// thread → owned local post range.
     pub thread_ranges: Vec<(u32, u32)>,
     pub max_delay: DelaySteps,
+    /// Analytic heap bytes of the posts' neuron-model state (per-model
+    /// SoA layout × population sizes). Reported by [`Self::memory`]
+    /// until the live state blocks move into the engine's worker
+    /// contexts, which then report their actual bytes.
+    pub state_bytes: u64,
 }
 
 impl RankStore {
@@ -268,6 +273,13 @@ impl RankStore {
             })
             .collect();
 
+        let state_bytes: u64 = posts
+            .iter()
+            .map(|&g| {
+                spec.params[spec.pidx(g) as usize].state_bytes_per_neuron()
+            })
+            .sum();
+
         RankStore {
             rank,
             posts: posts.to_vec(),
@@ -278,6 +290,7 @@ impl RankStore {
             threads,
             thread_ranges,
             max_delay,
+            state_bytes,
         }
     }
 
@@ -322,11 +335,18 @@ impl RankStore {
         std::mem::take(&mut self.threads)
     }
 
-    /// Memory accounting for the Fig 18 / Fig 9-10 benches.
+    /// Memory accounting for the Fig 18 / Fig 9-10 benches. Neuron-model
+    /// state is included analytically while this store still owns the
+    /// per-thread shares; after [`Self::take_threads`] the worker
+    /// contexts own both edges and state and report their actual bytes
+    /// (so `RankEngine::memory` never double-counts).
     pub fn memory(&self) -> MemoryBreakdown {
         let mut m = MemoryBreakdown::new();
         m.add("posts", vec_bytes(&self.posts));
         m.add("pres", vec_bytes(&self.pres));
+        if !self.threads.is_empty() {
+            m.add("state", self.state_bytes);
+        }
         for t in &self.threads {
             m.add("edges", t.bytes());
         }
@@ -451,7 +471,27 @@ mod tests {
         let m = stores[0].memory();
         assert!(m.get("edges") > 0);
         assert!(m.get("posts") > 0);
+        // neuron-model state accounted: LIF = 33 B/neuron
+        assert_eq!(m.get("state"), 33 * stores[0].n_posts() as u64);
         assert!(m.total() > m.get("edges"));
+    }
+
+    #[test]
+    fn state_bytes_follow_population_models() {
+        use crate::atlas::random_spec_with;
+        use crate::model::{AdexParams, LifParams, ModelParams};
+        let spec = random_spec_with(
+            200,
+            20,
+            6,
+            ModelParams::Adex(AdexParams::default()),
+            ModelParams::Lif(LifParams::default()),
+        );
+        let posts: Vec<u32> = (0..200).collect();
+        let store = RankStore::build(&spec, &posts, |_| true, 0, 2);
+        // 160 AdEx × 40 B + 40 LIF × 33 B
+        assert_eq!(store.state_bytes, 160 * 40 + 40 * 33);
+        assert_eq!(store.memory().get("state"), store.state_bytes);
     }
 
     #[test]

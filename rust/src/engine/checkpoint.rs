@@ -3,19 +3,27 @@
 //! paper's runs burn node-hours on Fugaku) needs restartability; the
 //! deterministic substrate makes it exact here.
 //!
-//! The snapshot covers everything that evolves: step counter, LIF state,
-//! both input rings, the pending spike list, plastic weights and STDP
-//! traces. Static structure (the indegree store layout) is *not* saved —
-//! it regenerates deterministically from the spec, which keeps
-//! checkpoints small (O(neurons + ring) instead of O(synapses)) except
-//! for plastic weights, which are dynamical and are saved.
+//! The snapshot covers everything that evolves: step counter, neuron-
+//! model state, both input rings, the pending spike list, plastic
+//! weights and STDP traces. Static structure (the indegree store layout,
+//! LIF pidx tables, HH gate layout) is *not* saved — it regenerates
+//! deterministically from the spec, which keeps checkpoints small
+//! (O(neurons + ring) instead of O(synapses)) except for plastic
+//! weights, which are dynamical and are saved.
+//!
+//! Neuron-model state is serialized as **tagged model segments**: one
+//! section per rank-level population run (posts are gid-sorted, so the
+//! runs are the populations in order), carrying the population index, a
+//! model tag, and the model's evolving f64 fields in a fixed order (see
+//! `PopulationState::field_slices`). Mixed LIF/AdEx/HH/parrot circuits
+//! checkpoint through the same path as homogeneous ones.
 //!
 //! The dynamical state lives in the engine's worker contexts (one per
 //! compute thread; see `engine::workers`), so every section is gathered
 //! across contexts in thread order on save and scattered back on
-//! restore. Because thread ranges tile the rank's posts contiguously,
-//! the gathered byte stream is identical to what the old monolithic
-//! (rank-level) containers produced.
+//! restore. Because thread ranges tile the rank's posts contiguously —
+//! and worker blocks of the same population merge back into one segment
+//! — the byte stream is independent of the thread count.
 //!
 //! Consistency contract: checkpoint at a **window boundary, before
 //! `enqueue_remote`** (i.e. right after `run_rank`'s exchange completes
@@ -31,7 +39,7 @@ use anyhow::{bail, Context, Result};
 use super::RankEngine;
 use crate::Step;
 
-const MAGIC: u64 = 0x434f52_54455831; // "CORTEX1"
+const MAGIC: u64 = 0x434f52_54455832; // "CORTEX2" (tagged model blocks)
 
 fn put_u64(w: &mut impl Write, x: u64) -> Result<()> {
     w.write_all(&x.to_le_bytes())?;
@@ -103,19 +111,37 @@ impl RankEngine {
         put_u64(w, self.rank as u64)?;
         put_u64(w, self.step)?;
         put_u64(w, self.total_spikes)?;
-        // LIF SoA, gathered across workers in thread order
-        let parts: Vec<&[f64]> =
-            self.ctxs.iter().map(|c| c.state.u.as_slice()).collect();
-        gather_f64s(w, &parts)?;
-        let parts: Vec<&[f64]> =
-            self.ctxs.iter().map(|c| c.state.ie.as_slice()).collect();
-        gather_f64s(w, &parts)?;
-        let parts: Vec<&[f64]> =
-            self.ctxs.iter().map(|c| c.state.ii.as_slice()).collect();
-        gather_f64s(w, &parts)?;
-        let parts: Vec<&[f64]> =
-            self.ctxs.iter().map(|c| c.state.refrac.as_slice()).collect();
-        gather_f64s(w, &parts)?;
+        // neuron-model state: tagged per-population segments. Worker
+        // blocks of the same population (split by thread ranges) merge
+        // into one segment, so the bytes are thread-count independent.
+        let mut segs: Vec<(
+            u16,
+            Vec<&crate::model::dynamics::PopulationState>,
+        )> = Vec::new();
+        for ctx in &self.ctxs {
+            for b in &ctx.blocks {
+                match segs.last_mut() {
+                    Some((pop, parts)) if *pop == b.pop => {
+                        parts.push(&b.state)
+                    }
+                    _ => segs.push((b.pop, vec![&b.state])),
+                }
+            }
+        }
+        put_u64(w, segs.len() as u64)?;
+        for (pop, parts) in &segs {
+            put_u64(w, *pop as u64)?;
+            put_u64(w, parts[0].checkpoint_tag())?;
+            put_u64(
+                w,
+                parts.iter().map(|s| s.len()).sum::<usize>() as u64,
+            )?;
+            for f in 0..parts[0].n_fields() {
+                let field_parts: Vec<&[f64]> =
+                    parts.iter().map(|s| s.field_slices()[f]).collect();
+                gather_f64s(w, &field_parts)?;
+            }
+        }
         // rings: worker buffers are post-major rows of the same ring, so
         // their concatenation is the monolithic ring's buffer
         put_u64(w, self.ctxs[0].ring_e.len as u64)?;
@@ -179,17 +205,54 @@ impl RankEngine {
         }
         self.step = get_u64(r)?;
         self.total_spikes = get_u64(r)?;
-        let spans: Vec<usize> =
-            self.ctxs.iter().map(|c| c.state.len()).collect();
-        for field in 0..4usize {
-            let parts = scatter_f64s(r, &spans)
-                .with_context(|| format!("state field {field}"))?;
-            for (ctx, part) in self.ctxs.iter_mut().zip(parts) {
-                match field {
-                    0 => ctx.state.u = part,
-                    1 => ctx.state.ie = part,
-                    2 => ctx.state.ii = part,
-                    _ => ctx.state.refrac = part,
+        // neuron-model state: mirror the save-side segmentation over our
+        // own blocks ((ctx, block) indices per rank-level population run)
+        let mut layout: Vec<(u16, u64, Vec<(usize, usize)>)> = Vec::new();
+        for (ci, ctx) in self.ctxs.iter().enumerate() {
+            for (bi, b) in ctx.blocks.iter().enumerate() {
+                match layout.last_mut() {
+                    Some((pop, _, parts)) if *pop == b.pop => {
+                        parts.push((ci, bi))
+                    }
+                    _ => layout.push((
+                        b.pop,
+                        b.state.checkpoint_tag(),
+                        vec![(ci, bi)],
+                    )),
+                }
+            }
+        }
+        let n_segs = get_u64(r)? as usize;
+        if n_segs != layout.len() {
+            bail!(
+                "checkpoint has {n_segs} model segments, engine has {}",
+                layout.len()
+            );
+        }
+        for (pop, tag, parts) in layout {
+            let f_pop = get_u64(r)?;
+            let f_tag = get_u64(r)?;
+            let f_len = get_u64(r)? as usize;
+            if f_pop != pop as u64 || f_tag != tag {
+                bail!(
+                    "checkpoint segment (pop {f_pop}, tag {f_tag}) does \
+                     not match engine (pop {pop}, tag {tag})"
+                );
+            }
+            let seg_spans: Vec<usize> = parts
+                .iter()
+                .map(|&(ci, bi)| self.ctxs[ci].blocks[bi].state.len())
+                .collect();
+            if f_len != seg_spans.iter().sum::<usize>() {
+                bail!("checkpoint segment length mismatch");
+            }
+            let (c0, b0) = parts[0];
+            let n_fields = self.ctxs[c0].blocks[b0].state.n_fields();
+            for f in 0..n_fields {
+                let vals = scatter_f64s(r, &seg_spans)
+                    .with_context(|| format!("pop {pop} field {f}"))?;
+                for (&(ci, bi), v) in parts.iter().zip(vals) {
+                    self.ctxs[ci].blocks[bi].state.restore_field(f, v);
                 }
             }
         }
@@ -229,6 +292,9 @@ impl RankEngine {
         if has_stdp != self.stdp.is_some() {
             bail!("checkpoint plasticity flag mismatch");
         }
+        // post traces are worker-owned over the full thread span
+        let spans: Vec<usize> =
+            self.ctxs.iter().map(|c| c.span()).collect();
         if let Some(s) = &mut self.stdp {
             for ctx in &mut self.ctxs {
                 let w = get_f64s(r)?;

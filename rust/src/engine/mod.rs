@@ -14,7 +14,8 @@
 //! The compute threads are **long-lived** (paper Fig 16: threads run
 //! continuously across the whole simulation, not per step). At
 //! construction, `RankEngine::new` moves every thread's state into a
-//! `workers::WorkerCtx` — edges, LIF slice, ring rows, STDP
+//! `workers::WorkerCtx` — edges, per-population model state blocks
+//! (LIF / AdEx / HH / parrot via `model::dynamics`), ring rows, STDP
 //! post-traces, drives, scratch, spike outbox — and (in
 //! [`ExecMode::Pool`]) spawns one worker thread per context via
 //! `workers::WorkerPool`. Per step, `step_once` transfers each context
@@ -32,8 +33,9 @@
 //!      all pending spikes, accumulating weights into ring slots
 //!      `emit + delay` (and applying STDP depression);
 //!   2. **integrate** — every worker consumes its ring slot + Poisson
-//!      drive and advances the LIF propagator (or the rank executes the
-//!      AOT PJRT artifact) collecting new spikes;
+//!      drive and advances its population blocks' dynamics, dispatching
+//!      per block on the neuron model (or, on all-LIF networks, the rank
+//!      executes the AOT PJRT artifact), collecting new spikes;
 //!   3. **plasticity** — spiking posts potentiate their incoming plastic
 //!      edges (thread-owned; one kernel shared by both backends);
 //!   4. **exchange** — once per min-delay window, spiking gids are
@@ -58,6 +60,7 @@ use crate::decomp::{
 };
 use crate::metrics::memory::{vec_bytes, MemoryBreakdown, MemoryReport};
 use crate::metrics::{PhaseTimer, SpikeRecorder};
+use crate::model::dynamics::PopulationState;
 use crate::model::stdp::TraceSet;
 use crate::{Gid, Step};
 use comm_driver::CommDriver;
@@ -279,10 +282,30 @@ impl RankEngine {
             let pjrt = self.pjrt.as_mut().unwrap();
             for ctx in &mut self.ctxs {
                 phases::gather_inputs(ctx, now);
-                let spiked = pjrt
-                    .step(&mut ctx.state, &ctx.scratch_e, &ctx.scratch_i)
-                    .expect("pjrt step failed");
-                ctx.spikes.extend(spiked);
+                {
+                    let WorkerCtx {
+                        blocks, scratch_e, scratch_i, spikes, ..
+                    } = &mut *ctx;
+                    for b in blocks.iter_mut() {
+                        let off = b.offset as usize;
+                        let n = b.state.len();
+                        // `PjrtLif::load` already rejected non-LIF specs
+                        let PopulationState::Lif(state) = &mut b.state
+                        else {
+                            unreachable!("pjrt step on non-LIF block")
+                        };
+                        let spiked = pjrt
+                            .step(
+                                state,
+                                &scratch_e[off..off + n],
+                                &scratch_i[off..off + n],
+                            )
+                            .expect("pjrt step failed");
+                        spikes.extend(
+                            spiked.into_iter().map(|s| s + off as u32),
+                        );
+                    }
+                }
                 // plasticity: the same thread-owned kernel as the native
                 // path, run serially on the rank thread
                 if let Some(s) = &self.stdp {
@@ -335,7 +358,7 @@ impl RankEngine {
         let mut m = self.store.memory();
         for ctx in &self.ctxs {
             m.add("edges", ctx.edges.bytes());
-            m.add("state", ctx.state.bytes());
+            m.add("state", ctx.state_bytes());
             m.add("rings", ctx.ring_e.bytes() + ctx.ring_i.bytes());
             m.add("drives", vec_bytes(&ctx.drives));
             if let Some(pt) = &ctx.post_traces {

@@ -5,12 +5,14 @@
 //!    pending spike, accumulating weights into ring slots `emit + delay`
 //!    (applying STDP depression at extrapolated arrival time);
 //! 2. [`gather_inputs`] + [`integrate`] — consume the rings' due slot
-//!    plus Poisson drive and advance the LIF propagator, collecting new
-//!    spikes;
+//!    plus Poisson drive and advance every population block's dynamics
+//!    (model-generic dispatch, one branch per block; LIF / AdEx / HH /
+//!    parrot inner loops stay branch-free SoA), collecting new spikes;
 //! 3. [`potentiate_post`] — a spiking post potentiates its incoming
 //!    plastic edges. This is the **single** plasticity kernel: the native
-//!    worker path and the engine-side PJRT path both call it (the two
-//!    hand-copied variants of the old monolithic engine are gone).
+//!    worker path and the engine-side PJRT path both call it — and it
+//!    keys off the generic spike event, never off model internals, so
+//!    STDP works on any spiking population.
 //!
 //! Every function here reads shared step state from [`StepJob`] and
 //! writes only through the context it was handed — the mutex-free
@@ -20,7 +22,6 @@
 use std::time::Instant;
 
 use crate::decomp::ThreadEdges;
-use crate::model::lif::step_slice;
 use crate::model::stdp::{StdpParams, TraceSet};
 use crate::Step;
 
@@ -126,13 +127,27 @@ pub(crate) fn gather_inputs(ctx: &mut WorkerCtx, now: Step) {
     }
 }
 
-/// Phase 2 (native backend): advance the owned LIF block one step.
-/// (A fused ring+drive+LIF single pass was tried and measured slower —
-/// see EXPERIMENTS.md §Perf.)
+/// Phase 2 (native backend): advance the owned population blocks one
+/// step, dispatching on each block's neuron model. Blocks tile the
+/// worker span in order, so spikes come out ascending by local index —
+/// exactly the order the old single-LIF-block loop produced. (A fused
+/// ring+drive+integrate single pass was tried and measured slower — see
+/// EXPERIMENTS.md §Perf.)
 fn integrate(ctx: &mut WorkerCtx) {
-    let span = ctx.state.len();
-    let WorkerCtx { state, scratch_e, scratch_i, props, spikes, .. } = ctx;
-    step_slice(state, 0, span, scratch_e, scratch_i, props, spikes);
+    let WorkerCtx { blocks, scratch_e, scratch_i, tables, spikes, .. } =
+        ctx;
+    for b in blocks.iter_mut() {
+        let lo = b.offset as usize;
+        let hi = lo + b.state.len();
+        b.state.step_block(
+            &scratch_e[lo..hi],
+            &scratch_i[lo..hi],
+            tables,
+            b.pidx,
+            b.offset,
+            spikes,
+        );
+    }
 }
 
 /// Phase 3 (native backend): potentiate for every spike this worker just

@@ -3,13 +3,21 @@
 //!
 //! A [`WorkerCtx`] is everything one compute thread touches during the
 //! deliver / integrate / plasticity phases: its [`ThreadEdges`] share of
-//! the indegree sub-graph, its LIF state slice, its rows of both input
-//! rings, its STDP post-traces, its Poisson drives and scratch buffers,
-//! and its spike outbox. The context is built **once** in
+//! the indegree sub-graph, its neuron-model state blocks, its rows of
+//! both input rings, its STDP post-traces, its Poisson drives and scratch
+//! buffers, and its spike outbox. The context is built **once** in
 //! `RankEngine::new` — the per-thread data is *moved in* (via
 //! [`RankStore::take_threads`]) instead of being re-borrowed with
 //! `split_at_mut` every step — and thereafter the engine only hands whole
 //! contexts around, never slices.
+//!
+//! Neuron dynamics are model-generic: the worker's contiguous post range
+//! is segmented into [`PopBlock`]s, one per population run, each holding
+//! a [`PopulationState`] (LIF / AdEx / HH / parrot SoA block). The
+//! integrate phase dispatches once per block; the per-model inner loops
+//! stay branch-free. Because a rank's posts are sorted by gid and
+//! populations tile the gid space, a worker holds at most one block per
+//! population and blocks tile the worker span in order.
 //!
 //! [`WorkerPool`] holds the long-lived OS threads. Each step the engine
 //! transfers every context (plus one shared, read-only [`StepJob`]) to
@@ -35,7 +43,7 @@ use std::thread::JoinHandle;
 use crate::atlas::NetworkSpec;
 use crate::decomp::{RankStore, ThreadEdges};
 use crate::engine::ring::InputRing;
-use crate::model::lif::{LifState, Propagators};
+use crate::model::dynamics::{ModelTables, PopulationState};
 use crate::model::poisson::PreparedPoisson;
 use crate::model::stdp::{StdpParams, TraceSet};
 use crate::{Gid, Step};
@@ -61,6 +69,19 @@ pub(crate) struct StepJob {
     pub stdp: Option<StdpRank>,
 }
 
+/// One population's share of a worker span: a contiguous run of posts
+/// from the same population, with its model state block.
+pub(crate) struct PopBlock {
+    /// Population index in the spec.
+    pub pop: u16,
+    /// Parameter-table index (== the population's `params`).
+    pub pidx: u8,
+    /// Block start within the worker span (local offset).
+    pub offset: u32,
+    /// The model-generic SoA state of the block's neurons.
+    pub state: PopulationState,
+}
+
 /// One compute thread's permanently-owned share of the rank.
 pub(crate) struct WorkerCtx {
     /// Worker index (== thread id in the decomposition).
@@ -72,8 +93,9 @@ pub(crate) struct WorkerCtx {
     pub edges: ThreadEdges,
     /// Gids of the owned posts (indexed by local offset `i = post - lo`).
     pub posts: Vec<Gid>,
-    /// LIF state of the owned posts.
-    pub state: LifState,
+    /// Model state of the owned posts, one block per population run,
+    /// tiling `[0, hi - lo)` in order.
+    pub blocks: Vec<PopBlock>,
     /// Excitatory / inhibitory input rings for the owned posts.
     pub ring_e: InputRing,
     pub ring_i: InputRing,
@@ -81,8 +103,8 @@ pub(crate) struct WorkerCtx {
     pub post_traces: Option<TraceSet>,
     /// Poisson drives of the owned posts.
     pub drives: Vec<PreparedPoisson>,
-    /// Propagator table (shared values, owned copy for locality).
-    pub props: Vec<Propagators>,
+    /// Model dispatch tables (shared values, owned copy for locality).
+    pub tables: ModelTables,
     /// Per-step input staging (no per-step allocation).
     pub scratch_e: Vec<f64>,
     pub scratch_i: Vec<f64>,
@@ -96,6 +118,44 @@ pub(crate) struct WorkerCtx {
     pub seed: u64,
 }
 
+impl WorkerCtx {
+    /// Number of owned posts.
+    pub fn span(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+
+    /// Actual heap bytes of the neuron-model state blocks.
+    pub fn state_bytes(&self) -> u64 {
+        self.blocks.iter().map(|b| b.state.bytes()).sum()
+    }
+}
+
+/// Segment a worker's posts into per-population blocks (posts are gid-
+/// sorted and populations tile the gid space, so runs are maximal).
+fn build_blocks(
+    spec: &NetworkSpec,
+    tables: &ModelTables,
+    posts: &[Gid],
+) -> Vec<PopBlock> {
+    let mut blocks = Vec::new();
+    let mut start = 0usize;
+    while start < posts.len() {
+        let pop = spec.pop_of(posts[start]);
+        let mut end = start + 1;
+        while end < posts.len() && spec.pop_of(posts[end]) == pop {
+            end += 1;
+        }
+        let pidx = spec.populations[pop as usize].params;
+        let mut state = PopulationState::new(tables, pidx, end - start);
+        for (i, &g) in posts[start..end].iter().enumerate() {
+            state.set_v_init(i, spec.v_init(g));
+        }
+        blocks.push(PopBlock { pop, pidx, offset: start as u32, state });
+        start = end;
+    }
+    blocks
+}
+
 /// Build all worker contexts for a rank, moving the per-thread edge
 /// stores out of `store` and splitting every dynamical container along
 /// the decomposition's thread ranges exactly once.
@@ -104,7 +164,7 @@ pub(crate) fn build_worker_ctxs(
     store: &mut RankStore,
     verify: bool,
 ) -> Vec<WorkerCtx> {
-    let props = spec.propagators();
+    let tables = spec.model_tables();
     let ring_len = (store.max_delay as usize + 1).max(2);
     let thread_edges = store.take_threads();
     assert!(!thread_edges.is_empty(), "store must have >= 1 thread");
@@ -117,12 +177,11 @@ pub(crate) fn build_worker_ctxs(
             let span = (hi - lo) as usize;
             let posts: Vec<Gid> =
                 store.posts[lo as usize..hi as usize].to_vec();
-            let pidx: Vec<u8> =
-                posts.iter().map(|&g| spec.pidx(g)).collect();
-            let mut state = LifState::new(span, &props, pidx);
-            for (i, &g) in posts.iter().enumerate() {
-                state.u[i] = spec.v_init(g);
-            }
+            let blocks = build_blocks(spec, &tables, &posts);
+            debug_assert_eq!(
+                blocks.iter().map(|b| b.state.len()).sum::<usize>(),
+                span
+            );
             let drives: Vec<PreparedPoisson> = posts
                 .iter()
                 .map(|&g| spec.drive(g).prepare(spec.dt_ms))
@@ -136,12 +195,12 @@ pub(crate) fn build_worker_ctxs(
                 hi,
                 edges,
                 posts,
-                state,
+                blocks,
                 ring_e: InputRing::new(span, ring_len),
                 ring_i: InputRing::new(span, ring_len),
                 post_traces,
                 drives,
-                props: props.clone(),
+                tables: tables.clone(),
                 scratch_e: vec![0.0; span],
                 scratch_i: vec![0.0; span],
                 spikes: Vec::new(),

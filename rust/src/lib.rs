@@ -10,9 +10,13 @@
 //! - [`graph`]  — directed-graph abstraction of SNNs, indegree/outdegree
 //!   sub-graph triplets and their ⊼ / ⊻ algebra (paper §II.A).
 //! - [`atlas`]  — connectome builders: synthetic multi-area "marmoset"
-//!   atlas, Potjans-Diesmann 2014 microcircuit, NEST `hpc_benchmark`.
-//! - [`model`]  — LIF neurons with exact integration (Rotter-Diesmann
-//!   propagators identical to the L1 Pallas kernel), STDP synapses,
+//!   atlas, Potjans-Diesmann 2014 microcircuit, NEST `hpc_benchmark`,
+//!   TOML-described custom circuits — all with per-population neuron
+//!   models.
+//! - [`model`]  — the dynamics layer: LIF with exact integration
+//!   (Rotter-Diesmann propagators identical to the L1 Pallas kernel),
+//!   AdEx, Hodgkin-Huxley and parrot relays behind the enum-dispatched
+//!   [`model::dynamics::PopulationState`] SoA interface; STDP synapses;
 //!   Poisson sources.
 //! - [`decomp`] — the paper's §III.A: Area-Processes Mapping, Multisection
 //!   Division with Sampling, Random Equivalent Mapping (baseline), thread

@@ -2,25 +2,36 @@
 //! 2005 — the paper's ref [22], cited alongside LIF as the lightweight
 //! modeling family its evaluation builds on). Intermediate compute
 //! intensity between LIF and Hodgkin-Huxley; completes the
-//! `ablation_intensity` sweep of the paper's §I.C argument.
+//! `ablation_intensity` sweep of the paper's §I.C argument and, through
+//! the model-generic dynamics layer, runs as a first-class network
+//! population model.
 //!
-//! dV/dt = (-g_L(V-E_L) + g_L·ΔT·exp((V-V_T)/ΔT) - w + I) / C
+//! dV/dt = (-g_L(V-E_L) + g_L·ΔT·exp((V-V_T)/ΔT) - w + I_syn + I_ext) / C
 //! dw/dt = (a(V-E_L) - w) / τ_w ;  on spike: V→V_r, w→w+b
+//!
+//! Synaptic input follows the engine's LIF convention: arriving weights
+//! [pA] land in exponentially-decaying excitatory/inhibitory currents
+//! (`ie`/`ii`, time constants `tau_syn_ex`/`tau_syn_in`), with the same
+//! update order as `lif::step_slice` — membrane first, then current
+//! decay, then this step's input lands (visible from the next step on).
 
 /// AdEx parameters (Brette & Gerstner 2005, regular-spiking defaults).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AdexParams {
-    pub c_m: f64,     // [pF]
-    pub g_l: f64,     // [nS]
-    pub e_l: f64,     // [mV]
-    pub v_t: f64,     // rheobase threshold [mV]
-    pub delta_t: f64, // slope factor [mV]
-    pub tau_w: f64,   // adaptation time constant [ms]
-    pub a: f64,       // subthreshold adaptation [nS]
-    pub b: f64,       // spike-triggered adaptation [pA]
-    pub v_reset: f64, // [mV]
-    pub v_peak: f64,  // numerical spike cutoff [mV]
-    pub t_ref: f64,   // refractory period [ms]
+    pub c_m: f64,        // [pF]
+    pub g_l: f64,        // [nS]
+    pub e_l: f64,        // [mV]
+    pub v_t: f64,        // rheobase threshold [mV]
+    pub delta_t: f64,    // slope factor [mV]
+    pub tau_w: f64,      // adaptation time constant [ms]
+    pub a: f64,          // subthreshold adaptation [nS]
+    pub b: f64,          // spike-triggered adaptation [pA]
+    pub v_reset: f64,    // [mV]
+    pub v_peak: f64,     // numerical spike cutoff [mV]
+    pub t_ref: f64,      // refractory period [ms]
+    pub tau_syn_ex: f64, // excitatory synaptic time constant [ms]
+    pub tau_syn_in: f64, // inhibitory synaptic time constant [ms]
+    pub i_ext: f64,      // constant external current [pA]
 }
 
 impl Default for AdexParams {
@@ -37,6 +48,9 @@ impl Default for AdexParams {
             v_reset: -70.6,
             v_peak: 0.0,
             t_ref: 2.0,
+            tau_syn_ex: 0.5,
+            tau_syn_in: 0.5,
+            i_ext: 0.0,
         }
     }
 }
@@ -47,6 +61,9 @@ pub struct AdexState {
     pub v: Vec<f64>,
     pub w: Vec<f64>,
     pub refrac: Vec<f64>,
+    /// Excitatory / inhibitory synaptic currents [pA].
+    pub ie: Vec<f64>,
+    pub ii: Vec<f64>,
 }
 
 impl AdexState {
@@ -55,6 +72,8 @@ impl AdexState {
             v: vec![p.e_l; n],
             w: vec![0.0; n],
             refrac: vec![0.0; n],
+            ie: vec![0.0; n],
+            ii: vec![0.0; n],
         }
     }
 
@@ -67,19 +86,29 @@ impl AdexState {
     }
 }
 
-/// Advance neurons `[lo, hi)` one step of `dt_ms` with input currents
-/// `i_in` [pA]; local spike indices are appended.
+/// Advance neurons `[lo, hi)` one step of `dt_ms`. `in_e` / `in_i` are
+/// this step's arriving synaptic weights [pA] for the same index range;
+/// local spike indices (relative to `lo`) are appended.
+#[allow(clippy::too_many_arguments)]
 pub fn step_slice(
     state: &mut AdexState,
     lo: usize,
     hi: usize,
-    i_in: &[f64],
+    in_e: &[f64],
+    in_i: &[f64],
     p: &AdexParams,
     dt_ms: f64,
     spikes: &mut Vec<u32>,
 ) {
+    debug_assert!(hi <= state.len());
+    debug_assert_eq!(in_e.len(), hi - lo);
+    debug_assert_eq!(in_i.len(), hi - lo);
     let ref_steps = (p.t_ref / dt_ms).round();
+    let de = (-dt_ms / p.tau_syn_ex).exp();
+    let di = (-dt_ms / p.tau_syn_in).exp();
     for i in lo..hi {
+        let ie = state.ie[i];
+        let ii = state.ii[i];
         if state.refrac[i] > 0.0 {
             state.refrac[i] -= 1.0;
             state.v[i] = p.v_reset;
@@ -87,29 +116,34 @@ pub fn step_slice(
             let w = state.w[i];
             state.w[i] =
                 w + dt_ms * (p.a * (p.v_reset - p.e_l) - w) / p.tau_w;
-            continue;
-        }
-        let v = state.v[i];
-        let w = state.w[i];
-        // exponential term clamped to keep the forward-Euler step finite
-        let exp_arg = ((v - p.v_t) / p.delta_t).min(20.0);
-        let dv = (-p.g_l * (v - p.e_l)
-            + p.g_l * p.delta_t * exp_arg.exp()
-            - w
-            + i_in[i - lo])
-            / p.c_m;
-        let dw = (p.a * (v - p.e_l) - w) / p.tau_w;
-        let mut v_new = v + dt_ms * dv;
-        let w_new = w + dt_ms * dw;
-        if v_new >= p.v_peak {
-            spikes.push((i - lo) as u32);
-            v_new = p.v_reset;
-            state.w[i] = w_new + p.b;
-            state.refrac[i] = ref_steps;
         } else {
-            state.w[i] = w_new;
+            let v = state.v[i];
+            let w = state.w[i];
+            // exponential term clamped to keep the forward-Euler step finite
+            let exp_arg = ((v - p.v_t) / p.delta_t).min(20.0);
+            let dv = (-p.g_l * (v - p.e_l)
+                + p.g_l * p.delta_t * exp_arg.exp()
+                - w
+                + ie
+                + ii
+                + p.i_ext)
+                / p.c_m;
+            let dw = (p.a * (v - p.e_l) - w) / p.tau_w;
+            let mut v_new = v + dt_ms * dv;
+            let w_new = w + dt_ms * dw;
+            if v_new >= p.v_peak {
+                spikes.push((i - lo) as u32);
+                v_new = p.v_reset;
+                state.w[i] = w_new + p.b;
+                state.refrac[i] = ref_steps;
+            } else {
+                state.w[i] = w_new;
+            }
+            state.v[i] = v_new;
         }
-        state.v[i] = v_new;
+        // currents decay, then input lands (LIF ordering)
+        state.ie[i] = ie * de + in_e[i - lo];
+        state.ii[i] = ii * di + in_i[i - lo];
     }
 }
 
@@ -123,7 +157,9 @@ mod tests {
         let mut s = AdexState::new(3, &p);
         let mut spikes = Vec::new();
         for _ in 0..2000 {
-            step_slice(&mut s, 0, 3, &[0.0; 3], &p, 0.1, &mut spikes);
+            step_slice(
+                &mut s, 0, 3, &[0.0; 3], &[0.0; 3], &p, 0.1, &mut spikes,
+            );
         }
         assert!(spikes.is_empty());
         assert!((s.v[0] - p.e_l).abs() < 0.5);
@@ -132,12 +168,12 @@ mod tests {
 
     #[test]
     fn step_current_produces_adapting_train() {
-        let p = AdexParams::default();
+        let p = AdexParams { i_ext: 700.0, ..Default::default() };
         let mut s = AdexState::new(1, &p);
         let mut when = Vec::new();
         for t in 0..20_000 {
             let mut spikes = Vec::new();
-            step_slice(&mut s, 0, 1, &[700.0], &p, 0.1, &mut spikes);
+            step_slice(&mut s, 0, 1, &[0.0], &[0.0], &p, 0.1, &mut spikes);
             if !spikes.is_empty() {
                 when.push(t);
             }
@@ -158,11 +194,11 @@ mod tests {
         let mut s = AdexState::new(1, &p);
         s.v[0] = p.v_peak + 1.0;
         let mut spikes = Vec::new();
-        step_slice(&mut s, 0, 1, &[0.0], &p, 0.1, &mut spikes);
+        step_slice(&mut s, 0, 1, &[0.0], &[0.0], &p, 0.1, &mut spikes);
         assert_eq!(spikes.len(), 1);
         for _ in 0..(p.t_ref / 0.1) as usize {
             let mut sp = Vec::new();
-            step_slice(&mut s, 0, 1, &[1e5], &p, 0.1, &mut sp);
+            step_slice(&mut s, 0, 1, &[1e5], &[0.0], &p, 0.1, &mut sp);
             assert!(sp.is_empty());
             assert_eq!(s.v[0], p.v_reset);
         }
@@ -175,7 +211,7 @@ mod tests {
         s.v[0] = p.v_peak + 1.0;
         let w0 = s.w[0];
         let mut spikes = Vec::new();
-        step_slice(&mut s, 0, 1, &[0.0], &p, 0.1, &mut spikes);
+        step_slice(&mut s, 0, 1, &[0.0], &[0.0], &p, 0.1, &mut spikes);
         assert!(s.w[0] >= w0 + p.b * 0.9);
     }
 
@@ -186,8 +222,52 @@ mod tests {
         s.v[0] = -20.0; // deep into the exponential regime
         let mut spikes = Vec::new();
         for _ in 0..100 {
-            step_slice(&mut s, 0, 1, &[0.0], &p, 0.1, &mut spikes);
+            step_slice(&mut s, 0, 1, &[0.0], &[0.0], &p, 0.1, &mut spikes);
             assert!(s.v[0].is_finite() && s.w[0].is_finite());
         }
+    }
+
+    #[test]
+    fn synaptic_input_lands_after_integration() {
+        // input delivered at step t must not affect v at step t (only t+1)
+        let p = AdexParams::default();
+        let mut a = AdexState::new(1, &p);
+        let mut b = AdexState::new(1, &p);
+        let mut sp = Vec::new();
+        step_slice(&mut a, 0, 1, &[500.0], &[0.0], &p, 0.1, &mut sp);
+        step_slice(&mut b, 0, 1, &[0.0], &[0.0], &p, 0.1, &mut sp);
+        assert_eq!(a.v[0], b.v[0], "v must be unaffected in the same step");
+        assert_ne!(a.ie[0], b.ie[0]);
+        step_slice(&mut a, 0, 1, &[0.0], &[0.0], &p, 0.1, &mut sp);
+        step_slice(&mut b, 0, 1, &[0.0], &[0.0], &p, 0.1, &mut sp);
+        assert!(a.v[0] > b.v[0], "EPSC should depolarise on the next step");
+    }
+
+    #[test]
+    fn sustained_synaptic_bombardment_fires() {
+        let p = AdexParams::default();
+        let mut s = AdexState::new(1, &p);
+        let mut total = 0usize;
+        for _ in 0..5000 {
+            let mut sp = Vec::new();
+            step_slice(&mut s, 0, 1, &[130.0], &[0.0], &p, 0.1, &mut sp);
+            total += sp.len();
+        }
+        // steady EPSC ≈ 130 pA / (1 - e^{-0.2}) ≈ 717 pA, above the
+        // ~630 pA adaptation-corrected rheobase
+        assert!(total >= 2, "only {total} spikes under bombardment");
+    }
+
+    #[test]
+    fn slice_bounds_respected() {
+        let p = AdexParams { i_ext: 1000.0, ..Default::default() };
+        let mut s = AdexState::new(4, &p);
+        let before = s.v.clone();
+        let mut sp = Vec::new();
+        step_slice(&mut s, 1, 3, &[0.0; 2], &[0.0; 2], &p, 0.1, &mut sp);
+        assert_eq!(s.v[0], before[0]);
+        assert_eq!(s.v[3], before[3]);
+        assert_ne!(s.v[1], before[1]);
+        assert_ne!(s.v[2], before[2]);
     }
 }

@@ -1,0 +1,507 @@
+//! Model-generic dynamics layer: heterogeneous neuron populations behind
+//! one enum-dispatched SoA interface.
+//!
+//! The indegree sub-graph decomposition is model-agnostic by design —
+//! thread-owned post blocks can run any point-neuron dynamics without
+//! races — so the execution core should not be hard-wired to LIF. This
+//! module is the seam: a [`PopulationState`] is one contiguous block of
+//! neurons sharing a neuron model (CoreNEURON-style per-mechanism SoA
+//! dispatch: the *outer* loop switches on the model once per block, the
+//! per-model inner loops stay branch-free SoA kernels).
+//!
+//! Supported models:
+//! - [`super::lif`]  — LIF with exact integration (the paper's workload);
+//! - [`super::adex`] — adaptive exponential IF (Brette & Gerstner 2005);
+//! - [`super::hh`]   — Hodgkin-Huxley (high compute intensity, §I.C);
+//! - parrot          — a stateless relay that fires whenever excitatory
+//!   input arrives (stimulus/virtual layers, NEST `parrot_neuron` style).
+//!
+//! Every model consumes the same per-step inputs the engine stages:
+//! the due excitatory/inhibitory ring slots plus Poisson drive
+//! (`in_e`/`in_i`, weights in pA), and reports spikes as local indices
+//! into the worker's span — STDP and spike collection key off that
+//! generic spike event, never off model internals.
+
+use crate::metrics::memory::vec_bytes;
+
+use super::adex::{self, AdexParams, AdexState};
+use super::hh::{self, HhParams, HhState};
+use super::lif::{self, LifParams, LifState, Propagators};
+
+/// Which point-neuron model a population runs (the config-level name).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NeuronModel {
+    Lif,
+    Adex,
+    Hh,
+    Parrot,
+}
+
+impl NeuronModel {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NeuronModel::Lif => "lif",
+            NeuronModel::Adex => "adex",
+            NeuronModel::Hh => "hh",
+            NeuronModel::Parrot => "parrot",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NeuronModel> {
+        match s {
+            "lif" => Some(NeuronModel::Lif),
+            "adex" => Some(NeuronModel::Adex),
+            "hh" => Some(NeuronModel::Hh),
+            "parrot" => Some(NeuronModel::Parrot),
+            _ => None,
+        }
+    }
+}
+
+/// One entry of a network's parameter table: the model plus its
+/// parameters. Populations reference entries by index (`Population::
+/// params`), so mixed circuits are just tables with mixed variants.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ModelParams {
+    Lif(LifParams),
+    Adex(AdexParams),
+    Hh(HhParams),
+    Parrot,
+}
+
+impl ModelParams {
+    pub fn model(&self) -> NeuronModel {
+        match self {
+            ModelParams::Lif(_) => NeuronModel::Lif,
+            ModelParams::Adex(_) => NeuronModel::Adex,
+            ModelParams::Hh(_) => NeuronModel::Hh,
+            ModelParams::Parrot => NeuronModel::Parrot,
+        }
+    }
+
+    /// Resting potential the initial-state jitter is applied around.
+    pub fn rest_potential(&self) -> f64 {
+        match self {
+            ModelParams::Lif(p) => p.e_l,
+            ModelParams::Adex(p) => p.e_l,
+            ModelParams::Hh(_) => hh::V_REST,
+            ModelParams::Parrot => 0.0,
+        }
+    }
+
+    /// Exact per-neuron heap bytes of the model's SoA state (for the
+    /// analytic memory accounting before the live blocks exist).
+    pub fn state_bytes_per_neuron(&self) -> u64 {
+        match self {
+            // u, ie, ii, refrac (f64) + pidx (u8)
+            ModelParams::Lif(_) => 4 * 8 + 1,
+            // v, w, refrac, ie, ii
+            ModelParams::Adex(_) => 5 * 8,
+            // v, m, h, n, v_prev, ie, ii
+            ModelParams::Hh(_) => 7 * 8,
+            ModelParams::Parrot => 0,
+        }
+    }
+}
+
+/// Stateless relay block: fires whenever excitatory input (ring slot +
+/// Poisson drive) arrives this step.
+#[derive(Clone, Debug)]
+pub struct ParrotState {
+    pub n: usize,
+}
+
+/// Read-only dispatch tables every worker carries: the step size, the
+/// LIF propagator table (indexed by params index, like the parameter
+/// table itself) and the parameter table for the direct-parameter models.
+#[derive(Clone, Debug)]
+pub struct ModelTables {
+    pub dt_ms: f64,
+    pub lif_props: Vec<Propagators>,
+    pub params: Vec<ModelParams>,
+}
+
+/// SoA dynamical state of one contiguous block of neurons sharing a
+/// neuron model. The engine's integrate phase walks a worker's blocks
+/// and dispatches once per block; everything inside is branch-free SoA.
+#[derive(Clone, Debug)]
+pub enum PopulationState {
+    Lif(LifState),
+    Adex(AdexState),
+    Hh(HhState),
+    Parrot(ParrotState),
+}
+
+impl PopulationState {
+    /// Fresh resting-state block of `n` neurons of parameter set `pidx`.
+    pub fn new(tables: &ModelTables, pidx: u8, n: usize) -> PopulationState {
+        match &tables.params[pidx as usize] {
+            ModelParams::Lif(_) => PopulationState::Lif(LifState::new(
+                n,
+                &tables.lif_props,
+                vec![pidx; n],
+            )),
+            ModelParams::Adex(p) => {
+                PopulationState::Adex(AdexState::new(n, p))
+            }
+            ModelParams::Hh(_) => PopulationState::Hh(HhState::new(n)),
+            ModelParams::Parrot => {
+                PopulationState::Parrot(ParrotState { n })
+            }
+        }
+    }
+
+    pub fn model(&self) -> NeuronModel {
+        match self {
+            PopulationState::Lif(_) => NeuronModel::Lif,
+            PopulationState::Adex(_) => NeuronModel::Adex,
+            PopulationState::Hh(_) => NeuronModel::Hh,
+            PopulationState::Parrot(_) => NeuronModel::Parrot,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            PopulationState::Lif(s) => s.len(),
+            PopulationState::Adex(s) => s.len(),
+            PopulationState::Hh(s) => s.len(),
+            PopulationState::Parrot(s) => s.n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Heap footprint in bytes.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            PopulationState::Lif(s) => s.bytes(),
+            PopulationState::Adex(s) => {
+                vec_bytes(&s.v)
+                    + vec_bytes(&s.w)
+                    + vec_bytes(&s.refrac)
+                    + vec_bytes(&s.ie)
+                    + vec_bytes(&s.ii)
+            }
+            PopulationState::Hh(s) => {
+                vec_bytes(&s.v)
+                    + vec_bytes(&s.m)
+                    + vec_bytes(&s.h)
+                    + vec_bytes(&s.n)
+                    + vec_bytes(&s.v_prev)
+                    + vec_bytes(&s.ie)
+                    + vec_bytes(&s.ii)
+            }
+            PopulationState::Parrot(_) => 0,
+        }
+    }
+
+    /// Set neuron `i`'s initial membrane potential (no-op for parrots;
+    /// HH gates are re-seeded to their steady state at that voltage).
+    pub fn set_v_init(&mut self, i: usize, v: f64) {
+        match self {
+            PopulationState::Lif(s) => s.u[i] = v,
+            PopulationState::Adex(s) => s.v[i] = v,
+            PopulationState::Hh(s) => hh::init_at(s, i, v),
+            PopulationState::Parrot(_) => {}
+        }
+    }
+
+    /// Advance the whole block one step. `in_e` / `in_i` are this step's
+    /// arriving synaptic input (plus drive) for the block's neurons;
+    /// spikes are appended as indices relative to the worker span
+    /// (`offset` is the block's position within it).
+    pub fn step_block(
+        &mut self,
+        in_e: &[f64],
+        in_i: &[f64],
+        tables: &ModelTables,
+        pidx: u8,
+        offset: u32,
+        spikes: &mut Vec<u32>,
+    ) {
+        let base = spikes.len();
+        match self {
+            PopulationState::Lif(s) => {
+                let n = s.len();
+                lif::step_slice(
+                    s,
+                    0,
+                    n,
+                    in_e,
+                    in_i,
+                    &tables.lif_props,
+                    spikes,
+                );
+            }
+            PopulationState::Adex(s) => {
+                let ModelParams::Adex(p) = &tables.params[pidx as usize]
+                else {
+                    unreachable!("adex block with non-adex params")
+                };
+                let n = s.len();
+                adex::step_slice(
+                    s,
+                    0,
+                    n,
+                    in_e,
+                    in_i,
+                    p,
+                    tables.dt_ms,
+                    spikes,
+                );
+            }
+            PopulationState::Hh(s) => {
+                let ModelParams::Hh(p) = &tables.params[pidx as usize]
+                else {
+                    unreachable!("hh block with non-hh params")
+                };
+                let n = s.len();
+                hh::step_slice(
+                    s,
+                    0,
+                    n,
+                    in_e,
+                    in_i,
+                    p,
+                    tables.dt_ms,
+                    spikes,
+                );
+            }
+            PopulationState::Parrot(s) => {
+                for (i, &e) in in_e.iter().take(s.n).enumerate() {
+                    if e > 0.0 {
+                        spikes.push(i as u32);
+                    }
+                }
+            }
+        }
+        if offset != 0 {
+            for s in &mut spikes[base..] {
+                *s += offset;
+            }
+        }
+    }
+
+    // -- checkpoint views ------------------------------------------------
+    // Static structure (pidx, gate layout) regenerates from the spec;
+    // only the evolving f64 fields are serialized, in a fixed per-model
+    // order behind a model tag.
+
+    pub fn checkpoint_tag(&self) -> u64 {
+        match self {
+            PopulationState::Lif(_) => 1,
+            PopulationState::Adex(_) => 2,
+            PopulationState::Hh(_) => 3,
+            PopulationState::Parrot(_) => 4,
+        }
+    }
+
+    pub fn n_fields(&self) -> usize {
+        self.field_slices().len()
+    }
+
+    /// The evolving fields, in checkpoint order. Must list the same
+    /// fields in the same order as [`Self::field_vecs_mut`]; the
+    /// `checkpoint_fields_round_trip` test writes through one and reads
+    /// through the other to keep the two in sync.
+    pub fn field_slices(&self) -> Vec<&[f64]> {
+        match self {
+            PopulationState::Lif(s) => {
+                vec![&s.u, &s.ie, &s.ii, &s.refrac]
+            }
+            PopulationState::Adex(s) => {
+                vec![&s.v, &s.w, &s.refrac, &s.ie, &s.ii]
+            }
+            PopulationState::Hh(s) => {
+                vec![&s.v, &s.m, &s.h, &s.n, &s.v_prev, &s.ie, &s.ii]
+            }
+            PopulationState::Parrot(_) => Vec::new(),
+        }
+    }
+
+    /// Mutable twin of [`Self::field_slices`] (same fields, same order).
+    fn field_vecs_mut(&mut self) -> Vec<&mut Vec<f64>> {
+        match self {
+            PopulationState::Lif(s) => {
+                vec![&mut s.u, &mut s.ie, &mut s.ii, &mut s.refrac]
+            }
+            PopulationState::Adex(s) => {
+                vec![&mut s.v, &mut s.w, &mut s.refrac, &mut s.ie, &mut s.ii]
+            }
+            PopulationState::Hh(s) => vec![
+                &mut s.v,
+                &mut s.m,
+                &mut s.h,
+                &mut s.n,
+                &mut s.v_prev,
+                &mut s.ie,
+                &mut s.ii,
+            ],
+            PopulationState::Parrot(_) => Vec::new(),
+        }
+    }
+
+    /// Replace field `f` (checkpoint order) with `v`; the caller has
+    /// already validated the length against [`Self::len`].
+    pub fn restore_field(&mut self, f: usize, v: Vec<f64>) {
+        debug_assert_eq!(v.len(), self.len());
+        let mut fields = self.field_vecs_mut();
+        *fields[f] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tables(params: Vec<ModelParams>) -> ModelTables {
+        let dt_ms = 0.1;
+        let lif_props = params
+            .iter()
+            .map(|p| match p {
+                ModelParams::Lif(lp) => Propagators::new(lp, dt_ms),
+                _ => Propagators::new(&LifParams::default(), dt_ms),
+            })
+            .collect();
+        ModelTables { dt_ms, lif_props, params }
+    }
+
+    #[test]
+    fn model_names_round_trip() {
+        for m in [
+            NeuronModel::Lif,
+            NeuronModel::Adex,
+            NeuronModel::Hh,
+            NeuronModel::Parrot,
+        ] {
+            assert_eq!(NeuronModel::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(NeuronModel::parse("izhikevich"), None);
+    }
+
+    #[test]
+    fn lif_dispatch_is_bit_identical_to_direct_call() {
+        let t = tables(vec![ModelParams::Lif(LifParams::default())]);
+        let n = 64;
+        let mut direct = LifState::new(n, &t.lif_props, vec![0; n]);
+        let mut via = PopulationState::new(&t, 0, n);
+        for i in 0..n {
+            direct.u[i] = -65.0 + (i as f64) * 0.3;
+            via.set_v_init(i, -65.0 + (i as f64) * 0.3);
+        }
+        let mut sd = Vec::new();
+        let mut sv = Vec::new();
+        for step in 0..200 {
+            let in_e: Vec<f64> =
+                (0..n).map(|i| ((i * 7 + step) % 11) as f64 * 30.0).collect();
+            let zero = vec![0.0; n];
+            lif::step_slice(
+                &mut direct, 0, n, &in_e, &zero, &t.lif_props, &mut sd,
+            );
+            via.step_block(&in_e, &zero, &t, 0, 0, &mut sv);
+        }
+        assert_eq!(sd, sv, "dispatch changed the spike train");
+        let PopulationState::Lif(s) = &via else { panic!() };
+        assert_eq!(s.u, direct.u);
+        assert_eq!(s.ie, direct.ie);
+        assert_eq!(s.refrac, direct.refrac);
+    }
+
+    #[test]
+    fn spike_offsets_are_applied() {
+        let t = tables(vec![ModelParams::Parrot]);
+        let mut p = PopulationState::new(&t, 0, 4);
+        let mut spikes = Vec::new();
+        p.step_block(
+            &[1.0, 0.0, 2.0, 0.0],
+            &[0.0; 4],
+            &t,
+            0,
+            100,
+            &mut spikes,
+        );
+        assert_eq!(spikes, vec![100, 102]);
+    }
+
+    #[test]
+    fn parrot_relays_only_excitatory_arrivals() {
+        let t = tables(vec![ModelParams::Parrot]);
+        let mut p = PopulationState::new(&t, 0, 3);
+        let mut spikes = Vec::new();
+        // inhibitory input must not fire a relay
+        p.step_block(&[0.0; 3], &[-5.0; 3], &t, 0, 0, &mut spikes);
+        assert!(spikes.is_empty());
+        p.step_block(&[3.0, 0.0, 0.5], &[0.0; 3], &t, 0, 0, &mut spikes);
+        assert_eq!(spikes, vec![0, 2]);
+        assert_eq!(p.bytes(), 0);
+    }
+
+    #[test]
+    fn adex_and_hh_blocks_step_and_spike() {
+        let t = tables(vec![
+            ModelParams::Adex(AdexParams {
+                i_ext: 800.0,
+                ..Default::default()
+            }),
+            ModelParams::Hh(HhParams { i_ext: 10.0, ..Default::default() }),
+        ]);
+        for pidx in [0u8, 1u8] {
+            let mut s = PopulationState::new(&t, pidx, 8);
+            let zero = vec![0.0; 8];
+            let mut spikes = Vec::new();
+            for _ in 0..5000 {
+                s.step_block(&zero, &zero, &t, pidx, 0, &mut spikes);
+            }
+            assert!(
+                !spikes.is_empty(),
+                "{:?} block never fired under suprathreshold drive",
+                s.model()
+            );
+            assert!(spikes.iter().all(|&x| x < 8));
+        }
+    }
+
+    #[test]
+    fn checkpoint_fields_round_trip() {
+        let t = tables(vec![
+            ModelParams::Lif(LifParams::default()),
+            ModelParams::Adex(AdexParams::default()),
+            ModelParams::Hh(HhParams::default()),
+            ModelParams::Parrot,
+        ]);
+        for pidx in 0..4u8 {
+            let mut s = PopulationState::new(&t, pidx, 5);
+            let fields: Vec<Vec<f64>> = s
+                .field_slices()
+                .iter()
+                .map(|f| f.iter().map(|x| x + 1.5).collect())
+                .collect();
+            assert_eq!(fields.len(), s.n_fields());
+            for (f, v) in fields.iter().enumerate() {
+                s.restore_field(f, v.clone());
+            }
+            for (f, v) in fields.iter().enumerate() {
+                assert_eq!(s.field_slices()[f], v.as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn state_bytes_match_layout() {
+        let t = tables(vec![
+            ModelParams::Lif(LifParams::default()),
+            ModelParams::Adex(AdexParams::default()),
+            ModelParams::Hh(HhParams::default()),
+            ModelParams::Parrot,
+        ]);
+        for pidx in 0..4u8 {
+            let n = 16;
+            let s = PopulationState::new(&t, pidx, n);
+            let analytic =
+                t.params[pidx as usize].state_bytes_per_neuron() * n as u64;
+            assert_eq!(s.bytes(), analytic, "{:?}", s.model());
+        }
+    }
+}

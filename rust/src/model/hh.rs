@@ -2,13 +2,23 @@
 //! model of the paper's §I.C discussion: simulations built on HH-class
 //! models show "absolutely better results in scalability" because the
 //! per-neuron arithmetic dwarfs communication; the paper deliberately
-//! evaluates on LIF ("bad cases") instead. This implementation exists to
-//! *quantify* that computation/communication argument on our substrate
-//! (`ablation_intensity` bench) and to extend the framework beyond LIF.
+//! evaluates on LIF ("bad cases") instead. This implementation both
+//! *quantifies* that computation/communication argument on our substrate
+//! (`ablation_intensity` bench) and runs as a first-class network
+//! population model through the model-generic dynamics layer.
 //!
 //! Classic squid-axon parameters, integrated with exponential-Euler on
 //! the gates and forward Euler on the membrane, sub-stepped for
 //! stability at dt = 0.1 ms.
+//!
+//! Synaptic input follows the engine's LIF convention: arriving weights
+//! [pA] land (scaled by `syn_scale` into µA/cm²) in exponentially
+//! decaying excitatory/inhibitory currents held constant across the
+//! sub-steps of one simulator step.
+
+/// Resting potential [mV]; fresh state is seeded here with gates at
+/// their steady state.
+pub const V_REST: f64 = -65.0;
 
 /// HH parameters (classic Hodgkin & Huxley 1952 values, 1 µF/cm² scale).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -24,6 +34,15 @@ pub struct HhParams {
     pub v_spike: f64,
     /// integration sub-steps per simulator step
     pub substeps: u32,
+    /// excitatory / inhibitory synaptic time constants [ms]
+    pub tau_syn_ex: f64,
+    pub tau_syn_in: f64,
+    /// constant external current density [µA/cm²]
+    pub i_ext: f64,
+    /// pA → µA/cm² conversion for network synaptic weights (an implied
+    /// membrane area; 0.02 maps the 87.8 pA reference weight to a
+    /// ~1.8 µA/cm² PSC peak)
+    pub syn_scale: f64,
 }
 
 impl Default for HhParams {
@@ -38,6 +57,10 @@ impl Default for HhParams {
             e_l: -54.387,
             v_spike: 0.0,
             substeps: 10,
+            tau_syn_ex: 0.5,
+            tau_syn_in: 0.5,
+            i_ext: 0.0,
+            syn_scale: 0.02,
         }
     }
 }
@@ -51,18 +74,23 @@ pub struct HhState {
     pub n: Vec<f64>,
     /// previous-step voltage (for upward-crossing spike detection)
     pub v_prev: Vec<f64>,
+    /// Excitatory / inhibitory synaptic current densities [µA/cm²].
+    pub ie: Vec<f64>,
+    pub ii: Vec<f64>,
 }
 
 impl HhState {
-    /// Resting state (v = -65 mV, gates at their steady state).
+    /// Resting state (v = [`V_REST`], gates at their steady state).
     pub fn new(n_neurons: usize) -> Self {
-        let v0 = -65.0;
+        let v0 = V_REST;
         HhState {
             v: vec![v0; n_neurons],
             m: vec![steady(alpha_m(v0), beta_m(v0)); n_neurons],
             h: vec![steady(alpha_h(v0), beta_h(v0)); n_neurons],
             n: vec![steady(alpha_n(v0), beta_n(v0)); n_neurons],
             v_prev: vec![v0; n_neurons],
+            ie: vec![0.0; n_neurons],
+            ii: vec![0.0; n_neurons],
         }
     }
 
@@ -73,6 +101,16 @@ impl HhState {
     pub fn is_empty(&self) -> bool {
         self.v.is_empty()
     }
+}
+
+/// Re-seed neuron `i` at membrane potential `v` with gates at their
+/// steady state for that voltage (used for jittered initial states).
+pub fn init_at(state: &mut HhState, i: usize, v: f64) {
+    state.v[i] = v;
+    state.v_prev[i] = v;
+    state.m[i] = steady(alpha_m(v), beta_m(v));
+    state.h[i] = steady(alpha_h(v), beta_h(v));
+    state.n[i] = steady(alpha_n(v), beta_n(v));
 }
 
 #[inline]
@@ -115,25 +153,34 @@ pub fn beta_n(v: f64) -> f64 {
     0.125 * (-(v + 65.0) / 80.0).exp()
 }
 
-/// Advance neurons `[lo, hi)` by one simulator step of `dt_ms` given the
-/// external/synaptic current density `i_in` [µA/cm²] per neuron; local
-/// indices of spiking neurons (upward threshold crossings) are appended.
+/// Advance neurons `[lo, hi)` by one simulator step of `dt_ms`. `in_e` /
+/// `in_i` are this step's arriving synaptic weights [pA] for the same
+/// index range; local indices of spiking neurons (upward threshold
+/// crossings) are appended.
+#[allow(clippy::too_many_arguments)]
 pub fn step_slice(
     state: &mut HhState,
     lo: usize,
     hi: usize,
-    i_in: &[f64],
+    in_e: &[f64],
+    in_i: &[f64],
     p: &HhParams,
     dt_ms: f64,
     spikes: &mut Vec<u32>,
 ) {
+    debug_assert!(hi <= state.len());
+    debug_assert_eq!(in_e.len(), hi - lo);
+    debug_assert_eq!(in_i.len(), hi - lo);
     let h_dt = dt_ms / p.substeps as f64;
+    let de = (-dt_ms / p.tau_syn_ex).exp();
+    let di = (-dt_ms / p.tau_syn_in).exp();
     for i in lo..hi {
         let mut v = state.v[i];
         let mut m = state.m[i];
         let mut hh = state.h[i];
         let mut n = state.n[i];
-        let i_ext = i_in[i - lo];
+        // synaptic + external drive, constant across the sub-steps
+        let i_drive = p.i_ext + state.ie[i] + state.ii[i];
         for _ in 0..p.substeps {
             // exponential Euler on gates
             let (am, bm) = (alpha_m(v), beta_m(v));
@@ -146,7 +193,7 @@ pub fn step_slice(
             let i_na = p.g_na * m * m * m * hh * (v - p.e_na);
             let i_k = p.g_k * n * n * n * n * (v - p.e_k);
             let i_l = p.g_l * (v - p.e_l);
-            v += h_dt * (i_ext - i_na - i_k - i_l) / p.c_m;
+            v += h_dt * (i_drive - i_na - i_k - i_l) / p.c_m;
         }
         if state.v_prev[i] < p.v_spike && v >= p.v_spike {
             spikes.push((i - lo) as u32);
@@ -156,6 +203,9 @@ pub fn step_slice(
         state.m[i] = m;
         state.h[i] = hh;
         state.n[i] = n;
+        // currents decay, then input lands (LIF ordering)
+        state.ie[i] = state.ie[i] * de + p.syn_scale * in_e[i - lo];
+        state.ii[i] = state.ii[i] * di + p.syn_scale * in_i[i - lo];
     }
 }
 
@@ -170,13 +220,19 @@ fn exp_euler(x: f64, a: f64, b: f64, dt: f64) -> f64 {
 mod tests {
     use super::*;
 
+    fn zeros(n: usize) -> Vec<f64> {
+        vec![0.0; n]
+    }
+
     #[test]
     fn resting_state_is_stable() {
         let p = HhParams::default();
         let mut s = HhState::new(2);
         let mut spikes = Vec::new();
         for _ in 0..1000 {
-            step_slice(&mut s, 0, 2, &[0.0, 0.0], &p, 0.1, &mut spikes);
+            step_slice(
+                &mut s, 0, 2, &zeros(2), &zeros(2), &p, 0.1, &mut spikes,
+            );
         }
         assert!(spikes.is_empty());
         assert!((s.v[0] + 65.0).abs() < 1.0, "drifted to {}", s.v[0]);
@@ -184,12 +240,14 @@ mod tests {
 
     #[test]
     fn suprathreshold_current_fires_tonically() {
-        let p = HhParams::default();
+        let p = HhParams { i_ext: 10.0, ..Default::default() };
         let mut s = HhState::new(1);
         let mut count = 0;
         for _ in 0..5000 {
             let mut spikes = Vec::new();
-            step_slice(&mut s, 0, 1, &[10.0], &p, 0.1, &mut spikes);
+            step_slice(
+                &mut s, 0, 1, &zeros(1), &zeros(1), &p, 0.1, &mut spikes,
+            );
             count += spikes.len();
         }
         // 10 µA/cm² drives ~60-90 Hz tonic firing: 500 ms -> 30-50 spikes
@@ -201,11 +259,13 @@ mod tests {
 
     #[test]
     fn subthreshold_current_does_not_fire() {
-        let p = HhParams::default();
+        let p = HhParams { i_ext: 1.0, ..Default::default() };
         let mut s = HhState::new(1);
         let mut spikes = Vec::new();
         for _ in 0..3000 {
-            step_slice(&mut s, 0, 1, &[1.0], &p, 0.1, &mut spikes);
+            step_slice(
+                &mut s, 0, 1, &zeros(1), &zeros(1), &p, 0.1, &mut spikes,
+            );
         }
         assert!(spikes.is_empty(), "fired {} times", spikes.len());
     }
@@ -213,14 +273,17 @@ mod tests {
     #[test]
     fn action_potential_shape() {
         // peak above +20 mV, afterhyperpolarization below -70 mV
-        let p = HhParams::default();
+        let pulse = HhParams { i_ext: 15.0, ..Default::default() };
+        let rest = HhParams::default();
         let mut s = HhState::new(1);
         let mut vmax = f64::NEG_INFINITY;
         let mut vmin = f64::INFINITY;
         for step in 0..2000 {
-            let i = if (100..150).contains(&step) { 15.0 } else { 0.0 };
+            let p = if (100..150).contains(&step) { &pulse } else { &rest };
             let mut spikes = Vec::new();
-            step_slice(&mut s, 0, 1, &[i], &p, 0.1, &mut spikes);
+            step_slice(
+                &mut s, 0, 1, &zeros(1), &zeros(1), p, 0.1, &mut spikes,
+            );
             vmax = vmax.max(s.v[0]);
             vmin = vmin.min(s.v[0]);
         }
@@ -230,15 +293,51 @@ mod tests {
 
     #[test]
     fn gates_stay_in_unit_interval() {
-        let p = HhParams::default();
+        let hi = HhParams { i_ext: 20.0, ..Default::default() };
+        let lo = HhParams { i_ext: -5.0, ..Default::default() };
         let mut s = HhState::new(1);
         for step in 0..4000 {
-            let i = if step % 200 < 50 { 20.0 } else { -5.0 };
+            let p = if step % 200 < 50 { &hi } else { &lo };
             let mut spikes = Vec::new();
-            step_slice(&mut s, 0, 1, &[i], &p, 0.1, &mut spikes);
+            step_slice(
+                &mut s, 0, 1, &zeros(1), &zeros(1), p, 0.1, &mut spikes,
+            );
             for g in [s.m[0], s.h[0], s.n[0]] {
                 assert!((0.0..=1.0).contains(&g), "gate {g} out of range");
             }
         }
+    }
+
+    #[test]
+    fn synaptic_bombardment_fires_and_input_is_delayed() {
+        let p = HhParams::default();
+        let mut a = HhState::new(1);
+        let mut b = HhState::new(1);
+        let mut sp = Vec::new();
+        // weight lands this step but acts from the next step on
+        step_slice(&mut a, 0, 1, &[500.0], &zeros(1), &p, 0.1, &mut sp);
+        step_slice(&mut b, 0, 1, &zeros(1), &zeros(1), &p, 0.1, &mut sp);
+        assert_eq!(a.v[0], b.v[0]);
+        assert!(a.ie[0] > 0.0);
+        // sustained pA-scale bombardment: steady ie ≈ scale·w/(1-e^{-dt/τ})
+        // = 0.02·100/0.18 ≈ 11 µA/cm² — suprathreshold
+        let mut count = 0usize;
+        for _ in 0..5000 {
+            let mut sp = Vec::new();
+            step_slice(&mut a, 0, 1, &[100.0], &zeros(1), &p, 0.1, &mut sp);
+            count += sp.len();
+        }
+        assert!(count > 5, "only {count} spikes under bombardment");
+    }
+
+    #[test]
+    fn init_at_reseeds_gates() {
+        let mut s = HhState::new(2);
+        init_at(&mut s, 1, -60.0);
+        assert_eq!(s.v[1], -60.0);
+        assert_eq!(s.v_prev[1], -60.0);
+        assert_eq!(s.m[1], steady(alpha_m(-60.0), beta_m(-60.0)));
+        // untouched neuron keeps the resting seed
+        assert_eq!(s.v[0], V_REST);
     }
 }

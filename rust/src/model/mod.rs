@@ -14,19 +14,25 @@
 //!   mapped to ranks/threads. This is what makes CORTEX and the NEST-style
 //!   baseline *spike-exact* comparable (stronger than the paper's
 //!   statistical comparison, where simulator RNGs differ).
-
 //! - [`hh`] / [`adex`] — Hodgkin-Huxley and adaptive-exponential
 //!   neurons: the higher compute-intensity models of the paper's §I.C
 //!   computation/communication-ratio discussion (refs [31], [22]),
-//!   quantified by `benches/ablation_intensity.rs`.
+//!   quantified by `benches/ablation_intensity.rs` and runnable as
+//!   network populations through [`dynamics`].
+//! - [`dynamics`] — the model-generic layer: per-population SoA state
+//!   blocks ([`dynamics::PopulationState`]) behind one enum-dispatched
+//!   interface, so the execution core steps heterogeneous circuits
+//!   (LIF / AdEx / HH / parrot relays) without knowing any model.
 
 pub mod adex;
+pub mod dynamics;
 pub mod hh;
 pub mod lif;
 pub mod poisson;
 pub mod stdp;
 
 pub use adex::{AdexParams, AdexState};
+pub use dynamics::{ModelParams, ModelTables, NeuronModel, PopulationState};
 pub use hh::{HhParams, HhState};
 pub use lif::{LifParams, LifState, Propagators};
 pub use poisson::PoissonDrive;

@@ -98,8 +98,13 @@ impl NestRank {
         n_threads: usize,
         record_limit: Option<Gid>,
     ) -> NestRank {
+        assert!(
+            spec.all_lif(),
+            "the NEST-style baseline models LIF dynamics only; run \
+             non-LIF populations on the CORTEX engine"
+        );
         let n = posts.len();
-        let props = spec.propagators();
+        let props = spec.lif_propagators();
         let pidx: Vec<u8> = posts.iter().map(|&g| spec.pidx(g)).collect();
         let mut state = LifState::new(n, &props, pidx);
         for (i, &g) in posts.iter().enumerate() {
@@ -181,7 +186,7 @@ impl NestRank {
         let now = self.step;
         let pending = std::mem::take(&mut self.pending);
         let n = self.posts.len();
-        let props = self.spec.propagators();
+        let props = self.spec.lif_propagators();
 
         // --- delivery: parallel over spikes, atomic ring accumulation ---
         {

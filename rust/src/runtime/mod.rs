@@ -13,6 +13,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::atlas::NetworkSpec;
+use crate::model::dynamics::ModelParams;
 use crate::model::lif::{LifState, Propagators};
 use crate::util::json::Json;
 
@@ -152,7 +153,7 @@ impl PjrtLif {
         let dir = PathBuf::from(dir);
         let manifest = Manifest::load(&dir)?;
 
-        // compatibility: the artifact bakes exactly one parameter set
+        // compatibility: the artifact bakes exactly one LIF parameter set
         if spec.params.len() != 1 {
             bail!(
                 "PJRT backend supports a single neuron parameter set \
@@ -160,7 +161,14 @@ impl PjrtLif {
                 spec.params.len()
             );
         }
-        let ours = Propagators::new(&spec.params[0], spec.dt_ms);
+        let ModelParams::Lif(lif) = &spec.params[0] else {
+            bail!(
+                "PJRT backend supports LIF dynamics only (network model \
+                 is {:?}); use engine.backend = \"native\"",
+                spec.params[0].model()
+            );
+        };
+        let ours = Propagators::new(lif, spec.dt_ms);
         let (p22, p11e, p11i, p21e, p21i, p20, ref_steps) =
             manifest.propagators()?;
         let close = |a: f64, b: f64| (a - b).abs() <= 1e-12 * b.abs().max(1.0);
@@ -185,7 +193,7 @@ impl PjrtLif {
         Ok(PjrtLif {
             exe,
             n_block,
-            v_reset: spec.params[0].v_reset,
+            v_reset: lif.v_reset,
             ref_steps: ours.ref_steps as f64,
         })
     }

@@ -10,12 +10,15 @@
 use std::sync::Arc;
 
 use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
-use cortex::atlas::potjans::potjans_spec;
+use cortex::atlas::potjans::{
+    potjans_spec, potjans_spec_with, PotjansModels,
+};
 use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::decomp::{area_processes_partition, RankStore};
 use cortex::engine::{
     run_simulation, EngineOptions, RankEngine, RunConfig,
 };
+use cortex::model::{AdexParams, LifParams, ModelParams};
 
 #[test]
 fn potjans_raster_identical_across_thread_counts_and_comm_modes() {
@@ -109,6 +112,81 @@ fn stdp_weights_identical_across_thread_counts() {
         assert_eq!(
             weights1, weights,
             "{threads} threads changed the final STDP weights"
+        );
+    }
+}
+
+#[test]
+fn mixed_model_potjans_deterministic_and_checkpointable() {
+    // AdEx pyramidal layers over LIF interneurons. The constant i_ext on
+    // the AdEx populations sits above rheobase, so the circuit is active
+    // regardless of the Poisson drive's realisation.
+    let spec = Arc::new(potjans_spec_with(
+        1600.0 / 77_169.0,
+        31,
+        &PotjansModels {
+            e: ModelParams::Adex(AdexParams {
+                i_ext: 700.0,
+                ..Default::default()
+            }),
+            i: ModelParams::Lif(LifParams::default()),
+        },
+    ));
+    assert!(!spec.all_lif(), "variant should actually be mixed");
+    let part = area_processes_partition(&spec, 1, 31);
+
+    // run 80 windows, checkpoint, run 80 more; then restore the snapshot
+    // into a FRESH engine and replay the second half
+    let run = |threads: usize| {
+        let mk = || {
+            let store = RankStore::build(
+                &spec,
+                &part.members[0],
+                |_| true,
+                0,
+                threads,
+            );
+            RankEngine::new(
+                Arc::clone(&spec),
+                store,
+                EngineOptions {
+                    n_threads: threads,
+                    verify_ownership: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let mut eng = mk();
+        let first = eng.run_windows_solo(80);
+        let mut blob = Vec::new();
+        eng.checkpoint(&mut blob).unwrap();
+        let second = eng.run_windows_solo(80);
+        drop(eng);
+        let mut resumed = mk();
+        resumed.restore(&mut std::io::Cursor::new(&blob)).unwrap();
+        let replayed = resumed.run_windows_solo(80);
+        assert_eq!(
+            second, replayed,
+            "{threads}t: checkpoint resume diverged on the mixed circuit"
+        );
+        (first, second, blob)
+    };
+
+    let (first1, second1, blob1) = run(1);
+    assert!(!first1.is_empty(), "mixed AdEx/LIF circuit inactive");
+    for threads in [2usize, 4] {
+        let (first, second, blob) = run(threads);
+        assert_eq!(
+            first1, first,
+            "{threads} threads changed the mixed-model raster"
+        );
+        assert_eq!(second1, second);
+        // model segments merge across worker boundaries, so even the
+        // checkpoint byte stream is thread-count independent
+        assert_eq!(
+            blob1, blob,
+            "{threads} threads changed the checkpoint bytes"
         );
     }
 }

@@ -11,6 +11,7 @@ use cortex::atlas::random_spec;
 use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::model::lif::{step_slice, LifParams, LifState, Propagators};
+use cortex::model::ModelParams;
 use cortex::runtime::{HloExecutable, Manifest, PjrtLif};
 use cortex::util::rng::Rng;
 
@@ -123,7 +124,10 @@ fn pjrt_backend_full_simulation_matches_native() {
 fn pjrt_rejects_mismatched_parameters() {
     let Some(_) = artifacts() else { return };
     let mut spec = random_spec(100, 10, 6);
-    spec.params[0].tau_m = 17.0; // not what the artifact baked
+    spec.params[0] = ModelParams::Lif(LifParams {
+        tau_m: 17.0, // not what the artifact baked
+        ..LifParams::default()
+    });
     let err = PjrtLif::load("artifacts", &spec);
     assert!(err.is_err(), "must reject mismatched parameters");
 }
