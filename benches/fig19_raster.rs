@@ -7,17 +7,21 @@
 //! but must agree statistically. Both rasters + their statistics are
 //! emitted.
 //!
+//! The CORTEX side runs on the session facade: a `Simulation` with a
+//! population-filtered spike-raster probe over area V1 (the probe path
+//! the session API replaces ad-hoc `record_limit` fiddling with).
+//!
 //! Run: `cargo bench --bench fig19_raster`
 
 use std::path::Path;
 use std::sync::Arc;
 
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
-use cortex::engine::{run_simulation, RunConfig};
+use cortex::engine::Simulation;
 use cortex::metrics::table::write_csv;
-use cortex::metrics::Table;
+use cortex::metrics::{SpikeRecorder, Table};
 use cortex::nest_baseline::{run_nest_simulation, NestRunConfig};
+use cortex::probe::SpikeRaster;
 
 fn main() -> anyhow::Result<()> {
     let spec = Arc::new(marmoset_spec(
@@ -37,23 +41,25 @@ fn main() -> anyhow::Result<()> {
         .filter(|p| p.area == 0)
         .map(|p| p.n)
         .sum();
+    let v1_pops: Vec<&str> = spec
+        .populations
+        .iter()
+        .filter(|p| p.area == 0)
+        .map(|p| p.name.as_str())
+        .collect();
 
-    let cortex_out = run_simulation(
-        &spec,
-        &RunConfig {
-            ranks: 4,
-            threads: 2,
-            mapping: MappingKind::AreaProcesses,
-            comm: CommMode::Overlap,
-            backend: DynamicsBackend::Native,
-            exec: ExecMode::Pool,
-            steps,
-            record_limit: Some(v1),
-            verify_ownership: false,
-            artifacts_dir: "artifacts".into(),
-            seed: 19,
-        },
-    )?;
+    let mut sim = Simulation::builder(Arc::clone(&spec))
+        .ranks(4)
+        .threads(2)
+        .seed(19)
+        .probe(SpikeRaster::pops("v1", &v1_pops))
+        .build()?;
+    sim.run_for(steps)?;
+    let cortex_raster = SpikeRecorder::from_events(
+        sim.drain("v1")?.into_raster()?,
+    );
+    let cortex_out = sim.finish()?;
+
     let nest_out = run_nest_simulation(
         &spec,
         &NestRunConfig {
@@ -66,10 +72,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     let dir = Path::new("target/bench_out");
-    write_csv(dir, "fig19_raster_cortex", &cortex_out.raster.to_csv(0.1))?;
+    write_csv(dir, "fig19_raster_cortex", &cortex_raster.to_csv(0.1))?;
     write_csv(dir, "fig19_raster_nest", &nest_out.raster.to_csv(0.1))?;
 
-    let a = cortex_out.raster.stats(v1 as usize, 0.1, steps);
+    let a = cortex_raster.stats(v1 as usize, 0.1, steps);
     let b = nest_out.raster.stats(v1 as usize, 0.1, steps);
     let mut table = Table::new(
         "Fig 19 — area V1 raster statistics, CORTEX vs NEST-style baseline",
@@ -94,9 +100,10 @@ fn main() -> anyhow::Result<()> {
     table.emit(dir, "fig19_stats")?;
     println!(
         "rasters: target/bench_out/fig19_raster_{{cortex,nest}}.csv \
-         ({} / {} events)",
-        cortex_out.raster.events.len(),
-        nest_out.raster.events.len()
+         ({} / {} events); cortex wall {:.2}s",
+        cortex_raster.events.len(),
+        nest_out.raster.events.len(),
+        cortex_out.wall_seconds
     );
     Ok(())
 }

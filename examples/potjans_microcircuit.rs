@@ -1,7 +1,8 @@
 //! Potjans-Diesmann 2014 cortical microcircuit — the architecture the
 //! paper derives its areas' internal structure from (ref [30]). Runs the
 //! downscaled column (variance-preserving 1/√scale weights + DC mean
-//! compensation) and compares per-population firing rates against the
+//! compensation) through a `Simulation` session with a per-population
+//! rate probe, and compares the probed firing rates against the
 //! published full-scale spontaneous rates.
 //!
 //! Run: `cargo run --release --example potjans_microcircuit [scale]`
@@ -9,10 +10,10 @@
 
 use std::sync::Arc;
 
-use cortex::atlas::potjans::{potjans_spec, POP_NAMES, TARGET_RATES_HZ};
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
-use cortex::engine::{run_simulation, RunConfig};
+use cortex::atlas::potjans::{potjans_spec, TARGET_RATES_HZ};
+use cortex::engine::Simulation;
 use cortex::metrics::Table;
+use cortex::probe::{PopRates, ProbeData};
 
 fn main() -> anyhow::Result<()> {
     let scale: f64 = std::env::args()
@@ -28,42 +29,32 @@ fn main() -> anyhow::Result<()> {
 
     let sim_ms = 500.0;
     let steps = (sim_ms / spec.dt_ms) as u64;
-    let cfg = RunConfig {
-        ranks: 2,
-        threads: 2,
-        mapping: MappingKind::AreaProcesses,
-        comm: CommMode::Overlap,
-        backend: DynamicsBackend::Native,
-        exec: ExecMode::Pool,
-        steps,
-        record_limit: Some(u32::MAX),
-        verify_ownership: false,
-        artifacts_dir: "artifacts".into(),
-        seed: 7,
-    };
-    let out = run_simulation(&spec, &cfg)?;
+    let mut sim = Simulation::builder(Arc::clone(&spec))
+        .ranks(2)
+        .threads(2)
+        .probe(PopRates::new("rates", steps))
+        .build()?;
+    sim.run_for(steps)?;
+    let rates = sim.drain("rates")?;
+    let out = sim.finish()?;
     println!(
         "simulated {sim_ms} ms in {:.2}s wall, {} spikes",
         out.wall_seconds, out.total_spikes
     );
 
-    let sim_s = sim_ms * 1e-3;
+    let ProbeData::Rates { pops, rows, .. } = rates else {
+        anyhow::bail!("rates probe returned the wrong variant");
+    };
+    let row = &rows.last().expect("one full bin").1;
     let mut table = Table::new(
         "per-population rates (published full-scale target in parens)",
         &["pop", "neurons", "rate_hz", "target_hz"],
     );
     for (i, p) in spec.populations.iter().enumerate() {
-        let count = out
-            .raster
-            .events
-            .iter()
-            .filter(|&&(_, g)| g >= p.first_gid && g < p.first_gid + p.n)
-            .count();
-        let rate = count as f64 / p.n as f64 / sim_s;
         table.row(&[
-            POP_NAMES[i].to_string(),
+            pops[i].clone(),
             p.n.to_string(),
-            format!("{rate:.2}"),
+            format!("{:.2}", row[i]),
             format!("{:.2}", TARGET_RATES_HZ[i]),
         ]);
     }

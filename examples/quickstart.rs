@@ -1,21 +1,25 @@
-//! Quickstart: the smallest complete CORTEX run.
+//! Quickstart: the smallest complete CORTEX session.
 //!
 //! Builds a 2000-neuron balanced random network, decomposes it onto two
 //! simulated ranks with two compute threads each (mutex-free indegree
-//! ownership), simulates 100 ms of biological time with overlapped spike
-//! exchange, and prints activity + performance. If `make artifacts` has
-//! been run, the same network is then re-simulated with neuron dynamics
-//! executed by the AOT-compiled JAX/Pallas kernel via PJRT, and the two
-//! backends are checked to agree spike-for-spike.
+//! ownership), and opens a persistent `Simulation` session: rank
+//! engines and their worker pools are constructed once, then driven
+//! through repeated `run_for` calls with a spike-raster and a
+//! population-rate probe attached. Between calls the session doubles
+//! the excitatory Poisson drive — the rate probe shows the response.
+//! If `make artifacts` has been run, the same network is re-simulated
+//! with neuron dynamics executed by the AOT-compiled JAX/Pallas kernel
+//! via PJRT, and the two backends are checked to agree spike-for-spike.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use std::sync::Arc;
 
 use cortex::atlas::random_spec;
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
-use cortex::engine::{run_simulation, RunConfig};
+use cortex::config::DynamicsBackend;
+use cortex::engine::{run_simulation, RunConfig, Simulation};
 use cortex::metrics::table::human_bytes;
+use cortex::probe::{PopRates, ProbeData, SpikeRaster};
 
 fn main() -> anyhow::Result<()> {
     let spec = Arc::new(random_spec(2000, 200, 42));
@@ -25,24 +29,43 @@ fn main() -> anyhow::Result<()> {
         spec.n_edges()
     );
 
-    let cfg = RunConfig {
-        ranks: 2,
-        threads: 2,
-        mapping: MappingKind::AreaProcesses,
-        comm: CommMode::Overlap,
-        backend: DynamicsBackend::Native,
-        exec: ExecMode::Pool,
-        steps: 1000, // 100 ms at dt = 0.1 ms
-        record_limit: Some(u32::MAX),
-        verify_ownership: true,
-        artifacts_dir: "artifacts".into(),
-        seed: 42,
-    };
-    let out = run_simulation(&spec, &cfg)?;
+    // a persistent session: engines built once, driven repeatedly
+    let mut sim = Simulation::builder(Arc::clone(&spec))
+        .ranks(2)
+        .threads(2)
+        .record_limit(Some(u32::MAX))
+        .verify_ownership(true)
+        .probe(SpikeRaster::all("raster"))
+        .probe(PopRates::new("rates", 500)) // 50 ms bins
+        .build()?;
+
+    sim.run_for(500)?; // 50 ms at dt = 0.1 ms
+    sim.set_poisson("E", 16_000.0, 87.8)?; // double the E drive …
+    sim.run_for(500)?; // … and watch the response
+
+    if let ProbeData::Rates { pops, rows, .. } = sim.drain("rates")? {
+        for (start, rates) in rows {
+            let cells: Vec<String> = pops
+                .iter()
+                .zip(&rates)
+                .map(|(n, hz)| format!("{n} {hz:.1} Hz"))
+                .collect();
+            println!(
+                "t = {:>5.1} ms  {}",
+                start as f64 * spec.dt_ms,
+                cells.join(", ")
+            );
+        }
+    }
+    let events = sim.drain("raster")?.into_raster()?;
+    let out = sim.finish()?;
     let rate = out.total_spikes as f64 / spec.n_total() as f64 / 0.1;
     println!(
-        "native backend : {} spikes in {:.3}s wall ({rate:.2} Hz mean rate)",
-        out.total_spikes, out.wall_seconds
+        "native backend : {} spikes in {:.3}s wall ({rate:.2} Hz mean \
+         rate, {} probed)",
+        out.total_spikes,
+        out.wall_seconds,
+        events.len()
     );
     println!(
         "memory         : max-rank {}, comm {} over {} windows",
@@ -52,16 +75,22 @@ fn main() -> anyhow::Result<()> {
     );
     print!("{}", out.timer_max.report());
 
-    // PJRT backend (needs `make artifacts`)
+    // PJRT backend (needs `make artifacts`); the one-shot wrapper is
+    // the right tool for a fire-and-forget comparison run
     if std::path::Path::new("artifacts/manifest.json").exists() {
-        let mut cfg2 = cfg.clone();
-        cfg2.backend = DynamicsBackend::Pjrt;
-        cfg2.ranks = 1; // one PJRT client
-        cfg2.threads = 1;
-        let mut cfg1 = cfg2.clone();
-        cfg1.backend = DynamicsBackend::Native;
-        let native = run_simulation(&spec, &cfg1)?;
-        let accel = run_simulation(&spec, &cfg2)?;
+        let cfg = RunConfig {
+            ranks: 1,
+            threads: 1,
+            backend: DynamicsBackend::Pjrt,
+            steps: 1000,
+            record_limit: Some(u32::MAX),
+            seed: 42,
+            ..Default::default()
+        };
+        let mut native_cfg = cfg.clone();
+        native_cfg.backend = DynamicsBackend::Native;
+        let native = run_simulation(&spec, &native_cfg)?;
+        let accel = run_simulation(&spec, &cfg)?;
         println!(
             "pjrt backend   : {} spikes in {:.3}s wall \
              (AOT JAX/Pallas lif_step via XLA)",

@@ -197,6 +197,18 @@ impl NetworkSpec {
             .sum()
     }
 
+    /// Indices of every population named `name` (multi-area atlases may
+    /// reuse a name across areas). Used by the session API's name-based
+    /// stimulus and probe targeting.
+    pub fn pops_named(&self, name: &str) -> Vec<u16> {
+        self.populations
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.name == name)
+            .map(|(i, _)| i as u16)
+            .collect()
+    }
+
     /// Population index of a gid (binary search over contiguous ranges).
     pub fn pop_of(&self, gid: Gid) -> u16 {
         let i = self

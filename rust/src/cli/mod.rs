@@ -23,9 +23,10 @@ use crate::config::{
 use crate::decomp::{
     area_processes_partition, random_equivalent_partition, RankStore,
 };
-use crate::engine::{run_simulation, RunConfig};
+use crate::engine::{run_simulation, RunConfig, Simulation};
 use crate::metrics::table::human_bytes;
 use crate::nest_baseline::{run_nest_simulation, NestRunConfig};
+use crate::probe::{PopRates, ProbeData};
 
 /// Parsed command line.
 #[derive(Debug, Default)]
@@ -176,7 +177,15 @@ pub fn cmd_run(args: &Args) -> Result<()> {
     );
     match cfg.engine {
         EngineKind::Cortex => {
-            let out = run_simulation(&spec, &run_config_of(&cfg))?;
+            // the launcher runs on the session facade: persistent rank
+            // engines plus a per-population rate probe over the run
+            let mut sim = Simulation::builder(Arc::clone(&spec))
+                .run_config(&run_config_of(&cfg))
+                .probe(PopRates::new("rates", cfg.steps().max(1)))
+                .build()?;
+            sim.run_for(cfg.steps())?;
+            let rates = sim.drain("rates")?;
+            let out = sim.finish()?;
             let stats = out.raster.stats(
                 spec.n_total(),
                 cfg.dt_ms,
@@ -194,6 +203,19 @@ pub fn cmd_run(args: &Args) -> Result<()> {
                     / spec.n_total() as f64
                     / (cfg.sim_ms * 1e-3)
             );
+            if let ProbeData::Rates { pops, rows, .. } = &rates {
+                if let Some((_, row)) = rows.last() {
+                    let cells: Vec<String> = pops
+                        .iter()
+                        .zip(row)
+                        .map(|(name, hz)| format!("{name} {hz:.2}"))
+                        .collect();
+                    println!(
+                        "per-population rates [Hz]: {}",
+                        cells.join(", ")
+                    );
+                }
+            }
             if cfg.record_raster {
                 println!(
                     "recorded {} events (ISI-CV {:.2}, synchrony {:.2})",

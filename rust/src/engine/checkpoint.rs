@@ -5,7 +5,10 @@
 //!
 //! The snapshot covers everything that evolves: step counter, neuron-
 //! model state, both input rings, the pending spike list, plastic
-//! weights and STDP traces. Static structure (the indegree store layout,
+//! weights, STDP traces — and the session-control state (per-population
+//! Poisson-drive and DC-offset overrides), so a session restored
+//! mid-experiment keeps the stimulus program the user had steered it
+//! to. Static structure (the indegree store layout,
 //! LIF pidx tables, HH gate layout) is *not* saved — it regenerates
 //! deterministically from the spec, which keeps checkpoints small
 //! (O(neurons + ring) instead of O(synapses)) except for plastic
@@ -25,12 +28,14 @@
 //! and worker blocks of the same population merge back into one segment
 //! — the byte stream is independent of the thread count.
 //!
-//! Consistency contract: checkpoint at a **window boundary, before
-//! `enqueue_remote`** (i.e. right after `run_rank`'s exchange completes
-//! and before the next window starts) so no spikes are in flight.
-//! `checkpoint_window` drives a window-aligned run loop for single-rank
-//! engines; multi-rank restart additionally requires replaying the same
-//! window schedule on every rank.
+//! Consistency contract: checkpoint at a **window boundary, with the
+//! boundary's exchange drained into the pending list** so no spikes are
+//! in flight outside the snapshot. The session facade
+//! (`engine::session`) enforces exactly this: `Simulation::checkpoint`
+//! requires a window boundary, drains each rank's in-flight exchange
+//! first, and flags the rank loop so the next window does not receive
+//! twice. [`RankEngine::run_windows_solo`] keeps the same alignment for
+//! single-rank engine-level use.
 
 use std::io::{Read, Write};
 
@@ -39,17 +44,33 @@ use anyhow::{bail, Context, Result};
 use super::RankEngine;
 use crate::Step;
 
-const MAGIC: u64 = 0x434f52_54455832; // "CORTEX2" (tagged model blocks)
+// "CORTEX3": CORTEX2's tagged model blocks plus the per-population
+// stimulus-override section. The bump makes pre-session-API CORTEX2
+// blobs fail the magic check instead of misparsing.
+const MAGIC: u64 = 0x434f52_54455833;
 
-fn put_u64(w: &mut impl Write, x: u64) -> Result<()> {
+// u64 framing is shared with the session-level wrapper
+// (`engine::session`), which prepends its own header to these blobs.
+pub(crate) fn put_u64(w: &mut impl Write, x: u64) -> Result<()> {
     w.write_all(&x.to_le_bytes())?;
     Ok(())
 }
 
-fn get_u64(r: &mut impl Read) -> Result<u64> {
+pub(crate) fn get_u64(r: &mut impl Read) -> Result<u64> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b)?;
     Ok(u64::from_le_bytes(b))
+}
+
+fn put_f64(w: &mut impl Write, x: f64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn get_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
 }
 
 fn put_f64s(w: &mut impl Write, xs: &[f64]) -> Result<()> {
@@ -111,6 +132,17 @@ impl RankEngine {
         put_u64(w, self.rank as u64)?;
         put_u64(w, self.step)?;
         put_u64(w, self.total_spikes)?;
+        // session-control state: per-population stimulus overrides
+        // (Poisson drive + DC offset). Rank-level, so the bytes stay
+        // thread-count independent; restore re-derives the per-worker
+        // drive tables and interned parameter sets from these.
+        let stim = self.stimulus_state();
+        put_u64(w, stim.len() as u64)?;
+        for (drive, dc) in &stim {
+            put_f64(w, drive.rate_hz)?;
+            put_f64(w, drive.weight_pa)?;
+            put_f64(w, *dc)?;
+        }
         // neuron-model state: tagged per-population segments. Worker
         // blocks of the same population (split by thread ranges) merge
         // into one segment, so the bytes are thread-count independent.
@@ -205,6 +237,30 @@ impl RankEngine {
         }
         self.step = get_u64(r)?;
         self.total_spikes = get_u64(r)?;
+        // stimulus overrides: reapply where they differ from the
+        // fresh-built state (a no-op for never-mutated sessions)
+        let n_pops = get_u64(r)? as usize;
+        let current = self.stimulus_state();
+        if n_pops != current.len() {
+            bail!(
+                "checkpoint has {n_pops} populations, engine has {}",
+                current.len()
+            );
+        }
+        for (pop, (cur_drive, cur_dc)) in current.into_iter().enumerate()
+        {
+            let drive = crate::model::poisson::PoissonDrive::new(
+                get_f64(r)?,
+                get_f64(r)?,
+            );
+            let dc = get_f64(r)?;
+            if drive != cur_drive {
+                self.set_pop_poisson(pop as u16, drive)?;
+            }
+            if dc != cur_dc {
+                self.set_pop_dc(pop as u16, dc)?;
+            }
+        }
         // neuron-model state: mirror the save-side segmentation over our
         // own blocks ((ctx, block) indices per rank-level population run)
         let mut layout: Vec<(u16, u64, Vec<(usize, usize)>)> = Vec::new();

@@ -2,9 +2,10 @@
 //! end) or overlapped via a dedicated communication thread.
 //!
 //! The communication thread is the one standing thread the engine owns
-//! besides its compute worker pool; `run_rank` synchronizes the two at
-//! window boundaries — the pool's workers compute window `k` while the
-//! comm thread exchanges window `k-1`'s spikes (paper §III.C.2).
+//! besides its compute worker pool; the session's rank loop
+//! (`engine::session`) synchronizes the two at window boundaries — the
+//! pool's workers compute window `k` while the comm thread exchanges
+//! window `k-1`'s spikes (paper §III.C.2).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -12,7 +13,8 @@ use std::thread::JoinHandle;
 use crate::comm::{Communicator, SpikePacket};
 use crate::config::CommMode;
 
-/// Spike-exchange driver: one per rank, built by `run_rank`.
+/// Spike-exchange driver: one per rank, owned by its session rank
+/// thread (`engine::session::RankRuntime`).
 pub(crate) enum CommDriver {
     Serialized {
         comm: Box<dyn Communicator>,

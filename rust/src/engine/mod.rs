@@ -42,28 +42,38 @@
 //!      broadcast; in [`CommMode::Overlap`] a dedicated communication
 //!      thread (`comm_driver`) runs the exchange while the next window
 //!      computes, synchronized with the pool at the window barrier.
+//!
+//! # Public facade: the simulation session
+//!
+//! The public entry point is the persistent [`Simulation`] session
+//! ([`session`]): rank engines (and their worker pools) are built once,
+//! live on session-owned rank threads, and are driven through repeated
+//! `run_for` calls with probes, mid-run stimulus mutation and
+//! checkpoint/restore in between — extending the worker-pool
+//! ownership-transfer design one level up. [`run_simulation`] is a thin
+//! one-shot wrapper over it.
 
 pub mod checkpoint;
 mod comm_driver;
 mod phases;
 pub mod ring;
+pub mod session;
 mod workers;
+
+pub use session::{Simulation, SimulationBuilder};
 
 use std::sync::Arc;
 
 use crate::atlas::NetworkSpec;
-use crate::comm::{Communicator, LocalCluster, SpikeMsg, SpikePacket};
+use crate::comm::{SpikeMsg, SpikePacket};
 use crate::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
-use crate::decomp::{
-    area_processes_partition, random_equivalent_partition, Partition,
-    RankStore,
-};
+use crate::decomp::{Partition, RankStore};
 use crate::metrics::memory::{vec_bytes, MemoryBreakdown, MemoryReport};
 use crate::metrics::{PhaseTimer, SpikeRecorder};
 use crate::model::dynamics::PopulationState;
+use crate::model::poisson::PoissonDrive;
 use crate::model::stdp::TraceSet;
 use crate::{Gid, Step};
-use comm_driver::CommDriver;
 use workers::{StdpRank, StepJob, WorkerCtx, WorkerPool};
 
 /// Engine knobs (a validated subset of [`crate::config::ExperimentConfig`]).
@@ -74,7 +84,11 @@ pub struct EngineOptions {
     pub backend: DynamicsBackend,
     /// Persistent worker pool vs per-step scoped threads (ablation).
     pub exec: ExecMode,
-    /// Record spikes of gids below this bound (None = no raster).
+    /// Built-in raster: record spikes of gids **below** this bound.
+    /// `None` means the recorder is disabled (see
+    /// [`SpikeRecorder::disabled`]) and no spikes are kept — use
+    /// `Some(u32::MAX)` to record everything, or a [`crate::probe`]
+    /// for filtered recording.
     pub record_limit: Option<Gid>,
     /// Compile the paper's thread-ownership abort check into the hot loop.
     pub verify_ownership: bool,
@@ -117,6 +131,12 @@ pub struct RankEngine {
     pub opts: EngineOptions,
     pjrt: Option<crate::runtime::PjrtLif>,
     pub total_spikes: u64,
+    /// Current external drive per population (starts at the spec's;
+    /// mutated by [`Self::set_pop_poisson`]). Checkpointed.
+    pop_drives: Vec<PoissonDrive>,
+    /// Current DC current offset per population [pA] (starts at 0;
+    /// mutated by [`Self::set_pop_dc`]). Checkpointed.
+    pop_dc: Vec<f64>,
 }
 
 impl RankEngine {
@@ -158,6 +178,9 @@ impl RankEngine {
         // runs inline on the rank thread either way
         let pool = (opts.exec == ExecMode::Pool && ctxs.len() > 1)
             .then(|| WorkerPool::spawn(ctxs.len(), pjrt.is_none()));
+        let pop_drives =
+            spec.populations.iter().map(|p| p.drive).collect();
+        let pop_dc = vec![0.0; spec.populations.len()];
         Ok(RankEngine {
             rank: store.rank,
             spec,
@@ -172,7 +195,13 @@ impl RankEngine {
             opts,
             pjrt,
             total_spikes: 0,
+            pop_drives,
+            pop_dc,
         })
+    }
+
+    pub fn spec(&self) -> &NetworkSpec {
+        &self.spec
     }
 
     pub fn step(&self) -> Step {
@@ -210,6 +239,133 @@ impl RankEngine {
         }
         out.sort_by_key(|&(pre, post, delay, _)| (pre, post, delay));
         out
+    }
+
+    /// [`Self::plastic_edges`] with global gids: (pre gid, post gid,
+    /// delay, weight), canonically sorted. The probe-facing form.
+    /// `pres` and `posts` are ascending in gid, so the index-sorted
+    /// order of [`Self::plastic_edges`] *is* gid order — no re-sort.
+    pub fn plastic_edges_global(&self) -> Vec<(Gid, Gid, u16, f64)> {
+        self.plastic_edges()
+            .into_iter()
+            .map(|(p, lp, delay, w)| {
+                (
+                    self.store.pres[p as usize],
+                    self.store.posts[lp as usize],
+                    delay,
+                    w,
+                )
+            })
+            .collect()
+    }
+
+    /// Membrane potential of `gid`: `Some` iff this rank owns it and its
+    /// model has a membrane (parrot relays don't). Probe observation
+    /// hook — reads thread-owned state between steps, when no worker
+    /// holds it.
+    pub fn voltage_of(&self, gid: Gid) -> Option<f64> {
+        let local = self.store.post_index_of(gid)?;
+        let ctx = self
+            .ctxs
+            .iter()
+            .find(|c| local >= c.lo && local < c.hi)?;
+        let i = (local - ctx.lo) as usize;
+        let bi = ctx
+            .blocks
+            .partition_point(|b| b.offset as usize + b.state.len() <= i);
+        let b = ctx.blocks.get(bi)?;
+        b.state.voltage(i - b.offset as usize)
+    }
+
+    /// Replace population `pop`'s external Poisson drive. Takes effect
+    /// on the next step; the session applies it at window boundaries so
+    /// results stay reproducible from the command schedule.
+    pub fn set_pop_poisson(
+        &mut self,
+        pop: u16,
+        drive: PoissonDrive,
+    ) -> anyhow::Result<()> {
+        let pi = pop as usize;
+        anyhow::ensure!(
+            pi < self.spec.populations.len(),
+            "population index {pop} out of range"
+        );
+        self.pop_drives[pi] = drive;
+        let prep = drive.prepare(self.spec.dt_ms);
+        for ctx in self.ctxs.iter_mut() {
+            let WorkerCtx { blocks, drives, .. } = ctx;
+            for b in blocks.iter().filter(|b| b.pop == pop) {
+                let lo = b.offset as usize;
+                let hi = lo + b.state.len();
+                for d in &mut drives[lo..hi] {
+                    *d = prep;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Set population `pop`'s DC current offset [pA] (0 restores the
+    /// spec's parameters). Implemented by interning an i_ext-shifted
+    /// parameter set into each worker's owned dispatch tables and
+    /// re-pointing the population's blocks at it — the hot loops are
+    /// untouched and a zero offset is bit-identical to never setting
+    /// one. Errors for parrot populations (no membrane current) and on
+    /// the PJRT backend (the AOT artifact bakes its parameters).
+    pub fn set_pop_dc(
+        &mut self,
+        pop: u16,
+        dc_pa: f64,
+    ) -> anyhow::Result<()> {
+        let pi = pop as usize;
+        anyhow::ensure!(
+            pi < self.spec.populations.len(),
+            "population index {pop} out of range"
+        );
+        anyhow::ensure!(
+            self.pjrt.is_none() || dc_pa == 0.0,
+            "DC drive updates are not supported on the PJRT backend \
+             (the AOT artifact bakes its parameters)"
+        );
+        let base = self.spec.params
+            [self.spec.populations[pi].params as usize];
+        let Some(shifted) = base.with_dc(dc_pa) else {
+            anyhow::bail!(
+                "population '{}' runs parrot relays and takes no DC \
+                 current",
+                self.spec.populations[pi].name
+            );
+        };
+        for ctx in self.ctxs.iter_mut() {
+            // worker tables grow in lockstep (every update interns into
+            // all of them), so a full table fails here on the first
+            // context, before any block is re-pointed
+            let Some(pidx) = ctx.tables.intern(shifted) else {
+                anyhow::bail!(
+                    "per-worker parameter table is full (255 distinct \
+                     parameter sets); reuse previous DC values or reset \
+                     offsets to 0 instead of sweeping unboundedly"
+                );
+            };
+            for b in ctx.blocks.iter_mut().filter(|b| b.pop == pop) {
+                b.pidx = pidx;
+                if let PopulationState::Lif(s) = &mut b.state {
+                    s.pidx.fill(pidx);
+                }
+            }
+        }
+        self.pop_dc[pi] = dc_pa;
+        Ok(())
+    }
+
+    /// Current per-population stimulus state (drive, DC offset) — what
+    /// the checkpoint serializes.
+    pub fn stimulus_state(&self) -> Vec<(PoissonDrive, f64)> {
+        self.pop_drives
+            .iter()
+            .copied()
+            .zip(self.pop_dc.iter().copied())
+            .collect()
     }
 
     /// Enqueue spikes received from other ranks (window start).
@@ -373,10 +529,12 @@ impl RankEngine {
 }
 
 // ---------------------------------------------------------------------
-// Window-driven rank loop
+// Per-rank run result + one-shot orchestration (session facade)
 // ---------------------------------------------------------------------
 
-/// Result of one rank's run.
+/// Result of one rank's run, assembled by **moving** the recorder and
+/// timer out of the engine when its session finishes (no terminal
+/// clones).
 pub struct RankOutput {
     pub rank: u16,
     pub recorder: SpikeRecorder,
@@ -385,55 +543,14 @@ pub struct RankOutput {
     pub total_spikes: u64,
     pub comm_bytes: u64,
     pub windows: u64,
-    /// store + engine construction time (not simulation)
+    /// Store + engine construction time (not simulation), measured on
+    /// the rank thread that built the engine.
     pub build_seconds: f64,
 }
 
-/// Drive one rank for `steps` steps with window-batched spike exchange.
-pub fn run_rank(
-    mut engine: RankEngine,
-    comm: Box<dyn Communicator>,
-    mode: CommMode,
-    steps: Step,
-) -> RankOutput {
-    let m = engine.spec.min_delay_steps as Step;
-    let mut driver = CommDriver::new(comm, mode);
-    let mut done: Step = 0;
-    while done < steps {
-        // window start: pick up the previous window's exchange
-        let incoming =
-            engine.timer.time("comm_wait", || driver.recv_completed());
-        engine.enqueue_remote(&incoming);
-
-        let mut outbox = Vec::new();
-        let this_window = m.min(steps - done);
-        for _ in 0..this_window {
-            let t0 = std::time::Instant::now();
-            engine.step_once(&mut outbox);
-            engine.timer.add("compute", t0.elapsed().as_nanos());
-        }
-        done += this_window;
-
-        engine.timer.time("comm_submit", || driver.submit(outbox));
-    }
-    let comm = driver.finish();
-    RankOutput {
-        rank: engine.rank,
-        recorder: engine.recorder.clone(),
-        timer: engine.timer.clone(),
-        memory: engine.memory(),
-        total_spikes: engine.total_spikes,
-        comm_bytes: comm.bytes_sent(),
-        windows: comm.exchanges(),
-        build_seconds: 0.0,
-    }
-}
-
-// ---------------------------------------------------------------------
-// Whole-simulation orchestration
-// ---------------------------------------------------------------------
-
-/// Run options for a full multi-rank simulation.
+/// Run options for a one-shot multi-rank simulation
+/// ([`run_simulation`]); [`SimulationBuilder::run_config`] adopts the
+/// same knobs for a persistent session.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub ranks: usize,
@@ -443,6 +560,9 @@ pub struct RunConfig {
     pub backend: DynamicsBackend,
     pub exec: ExecMode,
     pub steps: Step,
+    /// Built-in raster: record gids below this bound; `None` disables
+    /// recording entirely (documented [`SpikeRecorder::disabled`]
+    /// semantics — use `Some(u32::MAX)` to record everything).
     pub record_limit: Option<Gid>,
     pub verify_ownership: bool,
     pub artifacts_dir: String,
@@ -488,105 +608,18 @@ pub struct RunOutput {
 }
 
 /// Partition the network and run it on `cfg.ranks` simulated ranks.
+///
+/// Since the session API redesign this is a thin compatibility wrapper:
+/// it builds a persistent [`Simulation`], drives it for `cfg.steps`
+/// steps and tears it down. Code that runs repeatedly, attaches probes,
+/// steers stimuli mid-run or checkpoints should hold the [`Simulation`]
+/// itself (`Simulation::builder(spec)` … `build()?` … `run_for(n)?`).
 pub fn run_simulation(
     spec: &Arc<NetworkSpec>,
     cfg: &RunConfig,
 ) -> anyhow::Result<RunOutput> {
-    let partition = Arc::new(match cfg.mapping {
-        MappingKind::AreaProcesses => {
-            area_processes_partition(spec, cfg.ranks, cfg.seed)
-        }
-        MappingKind::RandomEquivalent => {
-            random_equivalent_partition(spec.n_total(), cfg.ranks, cfg.seed)
-        }
-    });
-    let comms = LocalCluster::new(cfg.ranks);
-    // all ranks finish construction before simulation timing starts, so
-    // build and simulation wall-clock separate cleanly (the paper's
-    // Fig 18 reports simulation time)
-    let barrier = Arc::new(std::sync::Barrier::new(cfg.ranks));
-
-    let outputs: Vec<(RankOutput, f64)> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for (r, comm) in comms.into_iter().enumerate() {
-            let spec = Arc::clone(spec);
-            let partition = Arc::clone(&partition);
-            let barrier = Arc::clone(&barrier);
-            let cfg = cfg.clone();
-            handles.push(scope.spawn(
-                move || -> anyhow::Result<(RankOutput, f64)> {
-                let t_build = std::time::Instant::now();
-                let members = &partition.members[r];
-                let rank_of = &partition.rank_of;
-                let store = RankStore::build(
-                    &spec,
-                    members,
-                    |g| rank_of[g as usize] as usize == r,
-                    r as u16,
-                    cfg.threads,
-                );
-                let engine = RankEngine::new(
-                    Arc::clone(&spec),
-                    store,
-                    EngineOptions {
-                        n_threads: cfg.threads,
-                        comm: cfg.comm,
-                        backend: cfg.backend,
-                        exec: cfg.exec,
-                        record_limit: cfg.record_limit,
-                        verify_ownership: cfg.verify_ownership,
-                        artifacts_dir: cfg.artifacts_dir.clone(),
-                    },
-                )?;
-                let build_seconds = t_build.elapsed().as_secs_f64();
-                barrier.wait();
-                let t_sim = std::time::Instant::now();
-                let mut out =
-                    run_rank(engine, Box::new(comm), cfg.comm, cfg.steps);
-                out.build_seconds = build_seconds;
-                Ok((out, t_sim.elapsed().as_secs_f64()))
-            }));
-        }
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("rank thread panicked"))
-            .collect::<anyhow::Result<Vec<_>>>()
-    })?;
-
-    let mut raster = SpikeRecorder::new(
-        cfg.record_limit.unwrap_or(0),
-    );
-    let mut timer_max = PhaseTimer::new();
-    let mut timer_sum = PhaseTimer::new();
-    let mut per_rank_mem = Vec::new();
-    let mut total_spikes = 0;
-    let mut comm_bytes = 0;
-    let mut windows = 0;
-    let mut wall_seconds: f64 = 0.0;
-    let mut build_seconds: f64 = 0.0;
-    for (o, sim_s) in &outputs {
-        raster.merge(&o.recorder);
-        timer_max.merge_max(&o.timer);
-        timer_sum.merge(&o.timer);
-        per_rank_mem.push(o.memory.clone());
-        total_spikes += o.total_spikes;
-        comm_bytes += o.comm_bytes;
-        windows = windows.max(o.windows);
-        wall_seconds = wall_seconds.max(*sim_s);
-        build_seconds = build_seconds.max(o.build_seconds);
-    }
-    raster.events.sort_unstable();
-    Ok(RunOutput {
-        raster,
-        timer_max,
-        timer_sum,
-        memory: MemoryReport::new(per_rank_mem),
-        total_spikes,
-        wall_seconds,
-        build_seconds,
-        comm_bytes,
-        windows,
-        partition: Arc::try_unwrap(partition)
-            .unwrap_or_else(|a| (*a).clone()),
-    })
+    let mut sim =
+        Simulation::builder(Arc::clone(spec)).run_config(cfg).build()?;
+    sim.run_for(cfg.steps)?;
+    sim.finish()
 }

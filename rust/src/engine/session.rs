@@ -1,0 +1,1096 @@
+//! The persistent simulation session — CORTEX's public facade.
+//!
+//! NEST-class usability (repeated `Simulate()` calls, selective
+//! recorders, stimulus steering between calls) on top of the indegree
+//! sub-graph engine: a [`Simulation`] builds every rank engine **once**
+//! — worker pools and communication threads stay alive — and then
+//! answers an arbitrary interleaving of
+//!
+//! * [`Simulation::run_for`] — advance all ranks `n` steps. Splitting a
+//!   run into multiple calls is **bit-identical** to one combined call,
+//!   even mid-window: each rank thread keeps its position inside the
+//!   min-delay exchange window across calls;
+//! * [`Simulation::drain`] — collect a registered [`Probe`]'s
+//!   accumulated data (merged across ranks);
+//! * [`Simulation::set_poisson`] / [`Simulation::set_dc`] — mutate a
+//!   population's external drive; updates are queued and applied at the
+//!   next window boundary on every rank, so results remain a pure
+//!   function of (spec, command schedule);
+//! * [`Simulation::checkpoint`] / [`SimulationBuilder::restore`] —
+//!   snapshot / resume the whole session bit-exactly (built on the
+//!   per-rank CORTEX3 format, wrapped in a session header);
+//! * [`Simulation::finish`] — tear down and merge the classic
+//!   [`RunOutput`].
+//!
+//! # Threading model
+//!
+//! This module extends the PR-1 ownership-transfer design one level up:
+//! each rank's engine is **moved onto a session-owned OS thread** at
+//! build time (previously: scoped threads per `run_simulation` call)
+//! and is driven by a command/response channel pair, exactly like the
+//! engine drives its compute workers. While a rank thread holds its
+//! engine nothing else can reach that state, so the mutex-free
+//! no-data-racing property of the indegree decomposition is preserved
+//! across the whole facade: session ↔ rank ↔ worker communicate by
+//! value over channels only. Probes run on the rank threads and observe
+//! engine state between steps through `&`-references.
+//!
+//! # Window bookkeeping
+//!
+//! The rank loop is step-driven: at each window start it first picks up
+//! the previous window's exchange, applies queued stimulus updates,
+//! then computes `min_delay` steps and submits the window's spikes.
+//! `run_for` may stop mid-window; the partial window continues on the
+//! next call. Checkpoints require a window boundary; the checkpointing
+//! rank drains its in-flight exchange first so the snapshot contains
+//! every spike (the `window_drained` flag keeps the next window from
+//! receiving twice).
+
+use std::io::{Read, Write};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::atlas::NetworkSpec;
+use crate::comm::{Communicator, LocalCluster, SoloComm, SpikePacket};
+use crate::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use crate::decomp::{
+    area_processes_partition, random_equivalent_partition, Partition,
+    RankStore,
+};
+use crate::metrics::memory::MemoryBreakdown;
+use crate::metrics::{MemoryReport, PhaseTimer, SpikeRecorder};
+use crate::model::dynamics::{ModelParams, NeuronModel};
+use crate::model::poisson::PoissonDrive;
+use crate::probe::{Probe, ProbeData, StepView};
+use crate::{Gid, Step};
+
+use super::checkpoint::{get_u64, put_u64};
+use super::comm_driver::CommDriver;
+use super::{
+    EngineOptions, RankEngine, RankOutput, RunConfig, RunOutput,
+};
+
+/// Session checkpoint magic: "CORTEXSS" (a header over per-rank CORTEX3
+/// blobs).
+const SESSION_MAGIC: u64 = 0x434f_5254_4558_5353;
+
+/// Per-rank probe factory: invoked once on every rank thread at build.
+pub type ProbeFactory =
+    Arc<dyn Fn(u16) -> Box<dyn Probe> + Send + Sync>;
+
+struct ProbeReg {
+    name: String,
+    make: ProbeFactory,
+}
+
+/// Configures and constructs a [`Simulation`]. Obtained from
+/// [`Simulation::builder`]; every knob mirrors [`RunConfig`] (and
+/// [`Self::run_config`] adopts one wholesale).
+pub struct SimulationBuilder {
+    spec: Arc<NetworkSpec>,
+    ranks: usize,
+    threads: usize,
+    mapping: MappingKind,
+    comm: CommMode,
+    backend: DynamicsBackend,
+    exec: ExecMode,
+    record_limit: Option<Gid>,
+    verify_ownership: bool,
+    artifacts_dir: String,
+    seed: u64,
+    probes: Vec<ProbeReg>,
+}
+
+impl SimulationBuilder {
+    fn new(spec: Arc<NetworkSpec>) -> SimulationBuilder {
+        let seed = spec.seed;
+        SimulationBuilder {
+            spec,
+            ranks: 1,
+            threads: 1,
+            mapping: MappingKind::AreaProcesses,
+            comm: CommMode::Overlap,
+            backend: DynamicsBackend::Native,
+            exec: ExecMode::Pool,
+            record_limit: None,
+            verify_ownership: false,
+            artifacts_dir: "artifacts".into(),
+            seed,
+            probes: Vec::new(),
+        }
+    }
+
+    pub fn ranks(mut self, n: usize) -> Self {
+        self.ranks = n;
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    pub fn mapping(mut self, m: MappingKind) -> Self {
+        self.mapping = m;
+        self
+    }
+
+    pub fn comm(mut self, c: CommMode) -> Self {
+        self.comm = c;
+        self
+    }
+
+    pub fn backend(mut self, b: DynamicsBackend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    pub fn exec(mut self, e: ExecMode) -> Self {
+        self.exec = e;
+        self
+    }
+
+    /// Built-in raster bound: record gids below the limit; `None` (the
+    /// default) disables the built-in recorder — attach a
+    /// [`crate::probe::SpikeRaster`] for filtered recording instead.
+    pub fn record_limit(mut self, limit: Option<Gid>) -> Self {
+        self.record_limit = limit;
+        self
+    }
+
+    /// Compile the paper's thread-ownership abort check into delivery.
+    pub fn verify_ownership(mut self, on: bool) -> Self {
+        self.verify_ownership = on;
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: &str) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Partition seed (defaults to the spec's network seed).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Adopt every knob of a one-shot [`RunConfig`] (except `steps`,
+    /// which a session supplies per `run_for` call).
+    pub fn run_config(mut self, cfg: &RunConfig) -> Self {
+        self.ranks = cfg.ranks;
+        self.threads = cfg.threads;
+        self.mapping = cfg.mapping;
+        self.comm = cfg.comm;
+        self.backend = cfg.backend;
+        self.exec = cfg.exec;
+        self.record_limit = cfg.record_limit;
+        self.verify_ownership = cfg.verify_ownership;
+        self.artifacts_dir = cfg.artifacts_dir.clone();
+        self.seed = cfg.seed;
+        self
+    }
+
+    /// Register a probe: the configured instance is cloned onto every
+    /// rank thread at build time and later drained (merged) by name.
+    pub fn probe<P>(mut self, probe: P) -> Self
+    where
+        P: Probe + Clone + Sync + 'static,
+    {
+        let name = probe.name().to_string();
+        self.probes.push(ProbeReg {
+            name,
+            make: Arc::new(move |_rank| {
+                Box::new(probe.clone()) as Box<dyn Probe>
+            }),
+        });
+        self
+    }
+
+    /// Register a probe via an explicit per-rank factory (for probes
+    /// that are not `Clone` or want rank-dependent configuration).
+    pub fn probe_with(
+        mut self,
+        name: &str,
+        make: impl Fn(u16) -> Box<dyn Probe> + Send + Sync + 'static,
+    ) -> Self {
+        self.probes.push(ProbeReg {
+            name: name.into(),
+            make: Arc::new(make),
+        });
+        self
+    }
+
+    /// Partition the network, spawn one session-owned thread per rank
+    /// and construct all rank engines (worker pools included) on them.
+    pub fn build(self) -> Result<Simulation> {
+        ensure!(
+            self.ranks >= 1 && self.ranks <= u16::MAX as usize,
+            "ranks must be in 1..=65535"
+        );
+        ensure!(self.threads >= 1, "threads must be >= 1");
+        for (i, p) in self.probes.iter().enumerate() {
+            ensure!(
+                !self.probes[..i].iter().any(|q| q.name == p.name),
+                "duplicate probe name '{}'",
+                p.name
+            );
+        }
+        let spec = self.spec;
+        let partition = Arc::new(match self.mapping {
+            MappingKind::AreaProcesses => {
+                area_processes_partition(&spec, self.ranks, self.seed)
+            }
+            MappingKind::RandomEquivalent => random_equivalent_partition(
+                spec.n_total(),
+                self.ranks,
+                self.seed,
+            ),
+        });
+        let min_delay = spec.min_delay_steps as Step;
+        assert!(min_delay >= 1, "window size must be positive");
+        let factories: Arc<Vec<(String, ProbeFactory)>> = Arc::new(
+            self.probes
+                .into_iter()
+                .map(|p| (p.name, p.make))
+                .collect(),
+        );
+        let probe_names: Vec<String> =
+            factories.iter().map(|(n, _)| n.clone()).collect();
+
+        let comms = LocalCluster::new(self.ranks);
+        let mut links = Vec::with_capacity(self.ranks);
+        for (r, comm) in comms.into_iter().enumerate() {
+            let (cmd_tx, cmd_rx) = channel::<Cmd>();
+            let (resp_tx, resp_rx) = channel::<Resp>();
+            let spec = Arc::clone(&spec);
+            let partition = Arc::clone(&partition);
+            let factories = Arc::clone(&factories);
+            let opts = EngineOptions {
+                n_threads: self.threads,
+                comm: self.comm,
+                backend: self.backend,
+                exec: self.exec,
+                record_limit: self.record_limit,
+                verify_ownership: self.verify_ownership,
+                artifacts_dir: self.artifacts_dir.clone(),
+            };
+            let comm_mode = self.comm;
+            let handle = std::thread::Builder::new()
+                .name(format!("cortex-rank-{r}"))
+                .spawn(move || {
+                    rank_main(
+                        spec,
+                        partition,
+                        r,
+                        opts,
+                        comm_mode,
+                        Box::new(comm),
+                        &factories,
+                        cmd_rx,
+                        resp_tx,
+                    )
+                })
+                .map_err(|e| anyhow!("failed to spawn rank {r}: {e}"))?;
+            links.push(RankLink {
+                cmd: Some(cmd_tx),
+                resp: resp_rx,
+                handle: Some(handle),
+            });
+        }
+
+        let stim_params = spec.params.clone();
+        let mut sim = Simulation {
+            spec,
+            partition,
+            links,
+            probe_names,
+            record_limit: self.record_limit,
+            backend: self.backend,
+            min_delay,
+            steps_done: 0,
+            build_seconds: 0.0,
+            stim_params,
+        };
+        // all ranks report construction (or its failure) before the
+        // session is handed out, so build and simulation time separate
+        // cleanly (the paper's Fig 18 reports simulation time)
+        for r in 0..sim.links.len() {
+            match sim.recv(r)? {
+                Resp::Built { build_seconds } => {
+                    sim.build_seconds = sim.build_seconds.max(build_seconds)
+                }
+                _ => bail!("rank {r}: unexpected response during build"),
+            }
+        }
+        Ok(sim)
+    }
+
+    /// Build the session and load a [`Simulation::checkpoint`] written
+    /// by a session over the same network partition (same spec, ranks,
+    /// mapping, seed). The **thread count may differ** — checkpoint
+    /// bytes are thread-count independent and the restored session
+    /// replays bit-exactly regardless. Stimulus overrides are restored;
+    /// probes start empty.
+    pub fn restore(self, r: &mut impl Read) -> Result<Simulation> {
+        let ranks = self.ranks;
+        if get_u64(r)? != SESSION_MAGIC {
+            bail!("not a CORTEX session checkpoint");
+        }
+        let n_ranks = get_u64(r)? as usize;
+        ensure!(
+            n_ranks == ranks,
+            "checkpoint has {n_ranks} ranks, session is configured \
+             for {ranks}"
+        );
+        let steps_done = get_u64(r)?;
+        let mut blobs = Vec::with_capacity(n_ranks);
+        for _ in 0..n_ranks {
+            let len = get_u64(r)? as usize;
+            let mut blob = vec![0u8; len];
+            r.read_exact(&mut blob)?;
+            blobs.push(blob);
+        }
+        let mut sim = self.build()?;
+        for (rank, blob) in blobs.into_iter().enumerate() {
+            sim.send(rank, Cmd::Restore(blob))?;
+        }
+        for rank in 0..ranks {
+            match sim.recv(rank)? {
+                Resp::Ack => {}
+                _ => bail!("rank {rank}: unexpected restore response"),
+            }
+        }
+        // re-seed the session's parameter-table mirror with the DC
+        // offsets the restored engines interned (every rank holds the
+        // same stimulus state; ask one)
+        sim.send(0, Cmd::StimState)?;
+        match sim.recv(0)? {
+            Resp::Stim(state) => {
+                for (pop, (_drive, dc)) in state.into_iter().enumerate()
+                {
+                    if dc == 0.0 {
+                        continue;
+                    }
+                    let base = sim.spec.params
+                        [sim.spec.populations[pop].params as usize];
+                    if let Some(shifted) = base.with_dc(dc) {
+                        if !sim.stim_params.contains(&shifted) {
+                            sim.stim_params.push(shifted);
+                        }
+                    }
+                }
+            }
+            _ => bail!("rank 0: unexpected stimulus-state response"),
+        }
+        sim.steps_done = steps_done;
+        Ok(sim)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The session handle
+// ---------------------------------------------------------------------
+
+struct RankLink {
+    /// `None` once the session hangs up (teardown).
+    cmd: Option<Sender<Cmd>>,
+    resp: Receiver<Resp>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A live multi-rank simulation: persistent rank engines on
+/// session-owned threads, driven through repeated [`Self::run_for`]
+/// calls. See the [module docs](self) for the guarantees.
+pub struct Simulation {
+    spec: Arc<NetworkSpec>,
+    partition: Arc<Partition>,
+    links: Vec<RankLink>,
+    probe_names: Vec<String>,
+    record_limit: Option<Gid>,
+    backend: DynamicsBackend,
+    min_delay: Step,
+    steps_done: Step,
+    build_seconds: f64,
+    /// Session-side mirror of the ranks' interned parameter tables
+    /// (they all evolve identically: every DC update interns into every
+    /// worker table). Lets `set_dc` reject a would-be table overflow
+    /// here, as a recoverable error, instead of on a rank thread.
+    stim_params: Vec<ModelParams>,
+}
+
+impl Simulation {
+    /// Start configuring a session over `spec`.
+    pub fn builder(spec: Arc<NetworkSpec>) -> SimulationBuilder {
+        SimulationBuilder::new(spec)
+    }
+
+    /// Steps completed so far (across all `run_for` calls, plus a
+    /// restored checkpoint's position).
+    pub fn step(&self) -> Step {
+        self.steps_done
+    }
+
+    /// The network this session simulates.
+    pub fn spec(&self) -> &Arc<NetworkSpec> {
+        &self.spec
+    }
+
+    /// The rank partition the session runs on.
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// Engine-construction wall time (max over ranks).
+    pub fn build_seconds(&self) -> f64 {
+        self.build_seconds
+    }
+
+    /// Advance every rank `steps` integration steps. Repeated calls are
+    /// bit-identical to one combined call.
+    pub fn run_for(&mut self, steps: Step) -> Result<()> {
+        if steps == 0 {
+            return Ok(());
+        }
+        for r in 0..self.links.len() {
+            self.send(r, Cmd::RunFor(steps))?;
+        }
+        for r in 0..self.links.len() {
+            match self.recv(r)? {
+                Resp::Ran => {}
+                _ => bail!("rank {r}: unexpected run response"),
+            }
+        }
+        self.steps_done += steps;
+        Ok(())
+    }
+
+    /// Drain the named probe: every rank moves its accumulated data out
+    /// and the pieces are merged (see [`ProbeData::merge`]).
+    pub fn drain(&mut self, probe: &str) -> Result<ProbeData> {
+        ensure!(
+            self.probe_names.iter().any(|n| n == probe),
+            "no probe named '{probe}' is registered on this session"
+        );
+        for r in 0..self.links.len() {
+            self.send(r, Cmd::Drain(probe.to_string()))?;
+        }
+        let mut merged: Option<ProbeData> = None;
+        for r in 0..self.links.len() {
+            match self.recv(r)? {
+                Resp::Data(d) => {
+                    merged = Some(match merged {
+                        None => *d,
+                        Some(m) => m.merge(*d)?,
+                    })
+                }
+                _ => bail!("rank {r}: unexpected drain response"),
+            }
+        }
+        merged.ok_or_else(|| anyhow!("session has no ranks"))
+    }
+
+    /// Set the external Poisson drive of every population named `pop`
+    /// (applied on all ranks at the next window boundary).
+    pub fn set_poisson(
+        &mut self,
+        pop: &str,
+        rate_hz: f64,
+        weight_pa: f64,
+    ) -> Result<()> {
+        let drive = PoissonDrive::new(rate_hz, weight_pa);
+        for idx in self.pops_named(pop)? {
+            self.stimulus(StimUpdate {
+                pop: idx,
+                kind: StimKind::Poisson(drive),
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Set the DC current offset [pA] of every population named `pop`
+    /// (0 restores the spec's parameters; applied at the next window
+    /// boundary). Errors for parrot populations and on the PJRT
+    /// backend.
+    pub fn set_dc(&mut self, pop: &str, dc_pa: f64) -> Result<()> {
+        ensure!(
+            self.backend == DynamicsBackend::Native || dc_pa == 0.0,
+            "DC drive updates are not supported on the PJRT backend"
+        );
+        let indices = self.pops_named(pop)?;
+        for &idx in &indices {
+            ensure!(
+                self.spec.populations[idx as usize].model
+                    != NeuronModel::Parrot,
+                "population '{pop}' runs parrot relays and takes no DC \
+                 current"
+            );
+        }
+        // mirror the ranks' parameter-table interning so a would-be
+        // overflow is a session-level error, not a rank-thread panic
+        for &idx in &indices {
+            let base = self.spec.params
+                [self.spec.populations[idx as usize].params as usize];
+            let shifted = base
+                .with_dc(dc_pa)
+                .expect("parrot populations rejected above");
+            if !self.stim_params.contains(&shifted) {
+                ensure!(
+                    self.stim_params.len() < u8::MAX as usize,
+                    "parameter table full (255 distinct parameter \
+                     sets); reuse previous DC values or reset offsets \
+                     to 0 instead of sweeping unboundedly"
+                );
+                self.stim_params.push(shifted);
+            }
+        }
+        for idx in indices {
+            self.stimulus(StimUpdate {
+                pop: idx,
+                kind: StimKind::Dc(dc_pa),
+            })?;
+        }
+        Ok(())
+    }
+
+    fn pops_named(&self, pop: &str) -> Result<Vec<u16>> {
+        let indices = self.spec.pops_named(pop);
+        ensure!(
+            !indices.is_empty(),
+            "network '{}' has no population named '{pop}'",
+            self.spec.name
+        );
+        Ok(indices)
+    }
+
+    fn stimulus(&mut self, up: StimUpdate) -> Result<()> {
+        for r in 0..self.links.len() {
+            self.send(r, Cmd::Stimulus(up))?;
+        }
+        for r in 0..self.links.len() {
+            match self.recv(r)? {
+                Resp::Ack => {}
+                _ => bail!("rank {r}: unexpected stimulus response"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot the whole session (all ranks' dynamical state plus
+    /// stimulus overrides; stimulus updates still queued for the next
+    /// boundary are applied first, so the snapshot carries them).
+    /// Requires a window boundary — call after `run_for` totals that
+    /// are a multiple of the spec's `min_delay_steps`. Resume with
+    /// [`SimulationBuilder::restore`].
+    pub fn checkpoint(&mut self, w: &mut impl Write) -> Result<()> {
+        ensure!(
+            self.steps_done % self.min_delay == 0,
+            "checkpoint requires a window boundary (step {} is not a \
+             multiple of min_delay {})",
+            self.steps_done,
+            self.min_delay
+        );
+        for r in 0..self.links.len() {
+            self.send(r, Cmd::Checkpoint)?;
+        }
+        let mut blobs = Vec::with_capacity(self.links.len());
+        for r in 0..self.links.len() {
+            match self.recv(r)? {
+                Resp::Blob(b) => blobs.push(b),
+                _ => bail!("rank {r}: unexpected checkpoint response"),
+            }
+        }
+        put_u64(w, SESSION_MAGIC)?;
+        put_u64(w, self.links.len() as u64)?;
+        put_u64(w, self.steps_done)?;
+        for blob in blobs {
+            put_u64(w, blob.len() as u64)?;
+            w.write_all(&blob)?;
+        }
+        Ok(())
+    }
+
+    /// Per-rank heap accounting, merged (the Fig 18 memory quantity).
+    pub fn memory(&mut self) -> Result<MemoryReport> {
+        for r in 0..self.links.len() {
+            self.send(r, Cmd::Memory)?;
+        }
+        let mut per_rank = Vec::with_capacity(self.links.len());
+        for r in 0..self.links.len() {
+            match self.recv(r)? {
+                Resp::Mem(m) => per_rank.push(*m),
+                _ => bail!("rank {r}: unexpected memory response"),
+            }
+        }
+        Ok(MemoryReport::new(per_rank))
+    }
+
+    /// Tear the session down and merge the classic one-shot
+    /// [`RunOutput`] (raster from the built-in recorder, critical-path
+    /// and aggregate timers, memory, exchange statistics).
+    pub fn finish(mut self) -> Result<RunOutput> {
+        for r in 0..self.links.len() {
+            self.send(r, Cmd::Finish)?;
+        }
+        let mut outputs = Vec::with_capacity(self.links.len());
+        for r in 0..self.links.len() {
+            match self.recv(r)? {
+                Resp::Output(b) => outputs.push(*b),
+                _ => bail!("rank {r}: unexpected finish response"),
+            }
+        }
+        // rank threads have replied and are exiting; reap them now so
+        // teardown errors surface here rather than in Drop
+        for link in &mut self.links {
+            link.cmd = None;
+            if let Some(h) = link.handle.take() {
+                h.join()
+                    .map_err(|_| anyhow!("rank thread panicked"))?;
+            }
+        }
+        // with every rank thread joined the partition Arc is uniquely
+        // held — move it out instead of deep-cloning (rank_of is one
+        // entry per neuron); the swapped-in empty satisfies Drop
+        let partition = std::mem::replace(
+            &mut self.partition,
+            Arc::new(Partition {
+                n_ranks: 0,
+                rank_of: Vec::new(),
+                members: Vec::new(),
+            }),
+        );
+
+        // `None` record limit merges into an explicitly disabled
+        // recorder — "record nothing" is a documented choice here, not
+        // a `gid_limit: 0` accident
+        let mut raster = match self.record_limit {
+            Some(limit) => SpikeRecorder::new(limit),
+            None => SpikeRecorder::disabled(),
+        };
+        let mut timer_max = PhaseTimer::new();
+        let mut timer_sum = PhaseTimer::new();
+        let mut per_rank_mem = Vec::new();
+        let mut total_spikes = 0;
+        let mut comm_bytes = 0;
+        let mut windows = 0;
+        let mut wall_seconds: f64 = 0.0;
+        let mut build_seconds: f64 = 0.0;
+        for (o, sim_s) in &outputs {
+            raster.merge(&o.recorder);
+            timer_max.merge_max(&o.timer);
+            timer_sum.merge(&o.timer);
+            per_rank_mem.push(o.memory.clone());
+            total_spikes += o.total_spikes;
+            comm_bytes += o.comm_bytes;
+            windows = windows.max(o.windows);
+            wall_seconds = wall_seconds.max(*sim_s);
+            build_seconds = build_seconds.max(o.build_seconds);
+        }
+        raster.events.sort_unstable();
+        Ok(RunOutput {
+            raster,
+            timer_max,
+            timer_sum,
+            memory: MemoryReport::new(per_rank_mem),
+            total_spikes,
+            wall_seconds,
+            build_seconds,
+            comm_bytes,
+            windows,
+            partition: Arc::try_unwrap(partition)
+                .unwrap_or_else(|a| (*a).clone()),
+        })
+    }
+
+    fn send(&mut self, r: usize, cmd: Cmd) -> Result<()> {
+        let Some(tx) = self.links[r].cmd.as_ref() else {
+            bail!("rank {r} is already torn down");
+        };
+        if tx.send(cmd).is_err() {
+            let why = self.reap(r);
+            bail!("rank {r} thread is gone{why}");
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, r: usize) -> Result<Resp> {
+        match self.links[r].resp.recv() {
+            Ok(Resp::Err(e)) => bail!("rank {r}: {e}"),
+            Ok(resp) => Ok(resp),
+            Err(_) => {
+                let why = self.reap(r);
+                bail!("rank {r} thread terminated unexpectedly{why}")
+            }
+        }
+    }
+
+    /// Join a dead rank thread and render its panic payload, if any.
+    fn reap(&mut self, r: usize) -> String {
+        self.links[r].cmd = None;
+        let Some(h) = self.links[r].handle.take() else {
+            return String::new();
+        };
+        match h.join() {
+            Ok(()) => String::new(),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| {
+                        payload.downcast_ref::<String>().cloned()
+                    })
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                format!(": {msg}")
+            }
+        }
+    }
+}
+
+impl Drop for Simulation {
+    fn drop(&mut self) {
+        // hang up the command channels; rank threads fall out of their
+        // loop (they park in recv between commands), then reap them
+        for link in &mut self.links {
+            link.cmd = None;
+        }
+        for link in &mut self.links {
+            if let Some(h) = link.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rank-thread protocol and runtime
+// ---------------------------------------------------------------------
+
+enum Cmd {
+    RunFor(Step),
+    Stimulus(StimUpdate),
+    Drain(String),
+    Checkpoint,
+    Restore(Vec<u8>),
+    /// Report the engine's current per-population (drive, DC) state.
+    StimState,
+    Memory,
+    Finish,
+}
+
+#[derive(Clone, Copy)]
+struct StimUpdate {
+    pop: u16,
+    kind: StimKind,
+}
+
+#[derive(Clone, Copy)]
+enum StimKind {
+    Poisson(PoissonDrive),
+    Dc(f64),
+}
+
+enum Resp {
+    Built { build_seconds: f64 },
+    Ran,
+    Ack,
+    Data(Box<ProbeData>),
+    Blob(Vec<u8>),
+    Stim(Vec<(PoissonDrive, f64)>),
+    Mem(Box<MemoryBreakdown>),
+    /// (rank output, total simulation seconds on this rank)
+    Output(Box<(RankOutput, f64)>),
+    Err(String),
+}
+
+/// Everything one rank thread owns: its engine, its exchange driver,
+/// its probes, and its position inside the current exchange window.
+struct RankRuntime {
+    engine: RankEngine,
+    driver: CommDriver,
+    /// Min-delay window length in steps.
+    m: Step,
+    /// Spikes of the window in progress.
+    outbox: SpikePacket,
+    /// Steps completed inside the current window (0 = at a boundary).
+    step_in_window: Step,
+    /// The boundary's exchange was already received (checkpoint/restore
+    /// path); the next window start must not receive again.
+    window_drained: bool,
+    /// Stimulus updates queued for the next window boundary.
+    pending_stim: Vec<StimUpdate>,
+    probes: Vec<(String, Box<dyn Probe>)>,
+    build_seconds: f64,
+    /// Total simulation wall time across `run_for` calls.
+    sim_seconds: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rank_main(
+    spec: Arc<NetworkSpec>,
+    partition: Arc<Partition>,
+    r: usize,
+    opts: EngineOptions,
+    comm_mode: CommMode,
+    comm: Box<dyn Communicator>,
+    factories: &[(String, ProbeFactory)],
+    cmd_rx: Receiver<Cmd>,
+    resp_tx: Sender<Resp>,
+) {
+    let mut rt = match build_runtime(
+        spec, partition, r, opts, comm_mode, comm, factories,
+    ) {
+        Ok(rt) => {
+            let built =
+                Resp::Built { build_seconds: rt.build_seconds };
+            if resp_tx.send(built).is_err() {
+                return;
+            }
+            rt
+        }
+        Err(e) => {
+            let _ = resp_tx.send(Resp::Err(format!("{e}")));
+            return;
+        }
+    };
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            Cmd::Finish => {
+                let out = rt.finish_output();
+                let _ = resp_tx.send(Resp::Output(Box::new(out)));
+                return;
+            }
+            cmd => {
+                if resp_tx.send(rt.handle(cmd)).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn build_runtime(
+    spec: Arc<NetworkSpec>,
+    partition: Arc<Partition>,
+    r: usize,
+    opts: EngineOptions,
+    comm_mode: CommMode,
+    comm: Box<dyn Communicator>,
+    factories: &[(String, ProbeFactory)],
+) -> Result<RankRuntime> {
+    let t_build = Instant::now();
+    let rank_of = &partition.rank_of;
+    let store = RankStore::build(
+        &spec,
+        &partition.members[r],
+        |g| rank_of[g as usize] as usize == r,
+        r as u16,
+        opts.n_threads,
+    );
+    let engine = RankEngine::new(Arc::clone(&spec), store, opts)?;
+    let build_seconds = t_build.elapsed().as_secs_f64();
+    let mut probes: Vec<(String, Box<dyn Probe>)> = factories
+        .iter()
+        .map(|(name, make)| (name.clone(), (make.as_ref())(r as u16)))
+        .collect();
+    // probes validate their configuration against the live network
+    // now, so a bad filter fails build() instead of a rank mid-run
+    let view = StepView::at_rest(&engine);
+    for (name, p) in probes.iter_mut() {
+        p.attach(&view)
+            .map_err(|e| anyhow!("probe '{name}': {e}"))?;
+    }
+    drop(view);
+    Ok(RankRuntime {
+        engine,
+        driver: CommDriver::new(comm, comm_mode),
+        m: spec.min_delay_steps as Step,
+        outbox: Vec::new(),
+        step_in_window: 0,
+        window_drained: false,
+        pending_stim: Vec::new(),
+        probes,
+        build_seconds,
+        sim_seconds: 0.0,
+    })
+}
+
+impl RankRuntime {
+    fn handle(&mut self, cmd: Cmd) -> Resp {
+        match cmd {
+            Cmd::RunFor(steps) => {
+                self.run_for(steps);
+                Resp::Ran
+            }
+            Cmd::Stimulus(up) => {
+                self.pending_stim.push(up);
+                Resp::Ack
+            }
+            Cmd::Drain(name) => {
+                let view = StepView::at_rest(&self.engine);
+                match self
+                    .probes
+                    .iter_mut()
+                    .find(|(n, _)| n == &name)
+                {
+                    Some((_, p)) => Resp::Data(Box::new(p.drain(&view))),
+                    None => Resp::Err(format!("no probe named '{name}'")),
+                }
+            }
+            Cmd::Checkpoint => match self.checkpoint_blob() {
+                Ok(blob) => Resp::Blob(blob),
+                Err(e) => Resp::Err(format!("{e}")),
+            },
+            Cmd::Restore(blob) => match self.restore_blob(&blob) {
+                Ok(()) => Resp::Ack,
+                Err(e) => Resp::Err(format!("{e}")),
+            },
+            Cmd::StimState => Resp::Stim(self.engine.stimulus_state()),
+            Cmd::Memory => Resp::Mem(Box::new(self.engine.memory())),
+            Cmd::Finish => unreachable!("handled by rank_main"),
+        }
+    }
+
+    /// At a window boundary: receive the previous window's exchange
+    /// (unless a checkpoint/restore already did) and apply queued
+    /// stimulus updates.
+    fn window_start(&mut self) {
+        if self.window_drained {
+            self.window_drained = false;
+        } else {
+            let RankRuntime { engine, driver, .. } = self;
+            let incoming =
+                engine.timer.time("comm_wait", || driver.recv_completed());
+            engine.enqueue_remote(&incoming);
+        }
+        self.apply_pending_stim();
+    }
+
+    /// Apply queued stimulus updates to the engine. Only called at
+    /// window boundaries (from `window_start` and `checkpoint_blob`),
+    /// which is what keeps mutation timing reproducible.
+    fn apply_pending_stim(&mut self) {
+        for up in std::mem::take(&mut self.pending_stim) {
+            // the session validated pop index / model / backend
+            let applied = match up.kind {
+                StimKind::Poisson(d) => {
+                    self.engine.set_pop_poisson(up.pop, d)
+                }
+                StimKind::Dc(dc) => self.engine.set_pop_dc(up.pop, dc),
+            };
+            applied.unwrap_or_else(|e| {
+                panic!("stimulus update failed to apply: {e}")
+            });
+        }
+    }
+
+    /// Advance `steps` steps, continuing the current window.
+    fn run_for(&mut self, steps: Step) {
+        let t_run = Instant::now();
+        for _ in 0..steps {
+            if self.step_in_window == 0 {
+                self.window_start();
+            }
+            let now = self.engine.step();
+            let mark = self.outbox.len();
+            let t0 = Instant::now();
+            self.engine.step_once(&mut self.outbox);
+            self.engine.timer.add("compute", t0.elapsed().as_nanos());
+            if !self.probes.is_empty() {
+                let view = StepView::new(
+                    &self.engine,
+                    now,
+                    &self.outbox[mark..],
+                );
+                for (_, p) in self.probes.iter_mut() {
+                    p.on_step(&view);
+                }
+            }
+            self.step_in_window += 1;
+            if self.step_in_window == self.m {
+                let pkt = std::mem::take(&mut self.outbox);
+                let RankRuntime { engine, driver, .. } = self;
+                engine.timer.time("comm_submit", || driver.submit(pkt));
+                self.step_in_window = 0;
+            }
+        }
+        self.sim_seconds += t_run.elapsed().as_secs_f64();
+    }
+
+    /// Serialize the engine at a window boundary, with the boundary's
+    /// exchange drained into the pending list first so no spike is in
+    /// flight outside the snapshot. Queued stimulus updates are applied
+    /// before serializing — they would take effect at this boundary
+    /// anyway (the live session sees the identical schedule), and
+    /// flushing them keeps the snapshot's stimulus section complete.
+    fn checkpoint_blob(&mut self) -> Result<Vec<u8>> {
+        ensure!(
+            self.step_in_window == 0,
+            "checkpoint requires a window boundary"
+        );
+        if !self.window_drained {
+            let RankRuntime { engine, driver, .. } = self;
+            let incoming =
+                engine.timer.time("comm_wait", || driver.recv_completed());
+            engine.enqueue_remote(&incoming);
+            self.window_drained = true;
+        }
+        self.apply_pending_stim();
+        let mut blob = Vec::new();
+        self.engine.checkpoint(&mut blob)?;
+        Ok(blob)
+    }
+
+    /// Load a per-rank blob into the freshly built engine. The snapshot
+    /// was taken post-drain, so the next window must not receive.
+    fn restore_blob(&mut self, blob: &[u8]) -> Result<()> {
+        self.engine.restore(&mut std::io::Cursor::new(blob))?;
+        self.step_in_window = 0;
+        self.window_drained = true;
+        self.outbox.clear();
+        self.pending_stim.clear();
+        Ok(())
+    }
+
+    /// Flush a trailing partial window, tear down the exchange driver
+    /// and **move** the recorder/timer out of the engine into the
+    /// rank's output.
+    fn finish_output(&mut self) -> (RankOutput, f64) {
+        if self.step_in_window != 0 {
+            let pkt = std::mem::take(&mut self.outbox);
+            let RankRuntime { engine, driver, .. } = self;
+            engine.timer.time("comm_submit", || driver.submit(pkt));
+            self.step_in_window = 0;
+        }
+        let driver = std::mem::replace(
+            &mut self.driver,
+            CommDriver::new(
+                Box::new(SoloComm::new()),
+                CommMode::Serialized,
+            ),
+        );
+        let comm = driver.finish();
+        let memory = self.engine.memory();
+        let recorder = std::mem::replace(
+            &mut self.engine.recorder,
+            SpikeRecorder::disabled(),
+        );
+        let timer = std::mem::take(&mut self.engine.timer);
+        (
+            RankOutput {
+                rank: self.engine.rank,
+                recorder,
+                timer,
+                memory,
+                total_spikes: self.engine.total_spikes,
+                comm_bytes: comm.bytes_sent(),
+                windows: comm.exchanges(),
+                build_seconds: self.build_seconds,
+            },
+            self.sim_seconds,
+        )
+    }
+}

@@ -35,6 +35,12 @@
 //! and the engine unwraps the `Arc` to reclaim both — no locks, no
 //! copies, and the borrow checker stays happy across the 'static thread
 //! boundary.
+//!
+//! Since the session API redesign the same ownership-transfer discipline
+//! repeats one level up: the engine itself (pool included) is owned by a
+//! session rank thread (`engine::session`) and driven over channels, so
+//! pools now live for a whole session of repeated `run_for` calls, not
+//! one batch run.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;

@@ -24,7 +24,16 @@
 //! - [`engine`] — the per-rank CORTEX engine: a persistent worker pool of
 //!   long-lived compute threads over permanently-owned disjoint state
 //!   (paper §III.B), mutex-free delivery, spike ring buffers, native or
-//!   PJRT dynamics, windowed overlap exchange, checkpointing.
+//!   PJRT dynamics, windowed overlap exchange, checkpointing — and the
+//!   public facade, the persistent [`engine::Simulation`] session
+//!   (`engine::session`): rank engines built once on session-owned
+//!   threads, repeated `run_for` calls, mid-run stimulus control,
+//!   session-wide checkpoint/restore. [`engine::run_simulation`] is a
+//!   thin one-shot wrapper over it.
+//! - [`probe`]  — pluggable per-rank observers drained through the
+//!   session: spike rasters with gid/population filters, population
+//!   firing rates, membrane-voltage traces, STDP weight snapshots,
+//!   phase-timer streams.
 //! - [`comm`]   — MPI-like communicator over in-memory ranks, spike
 //!   broadcast with dedicated communication thread (paper §III.C), and a
 //!   Tofu-D network cost model for Fugaku-scale projections.
@@ -37,6 +46,35 @@
 //!   instrumentation and the from-scratch support substrates (the build is
 //!   fully offline: `anyhow` and `xla` are vendored path crates under
 //!   `rust/vendor/`, the latter a compile-only PJRT stub).
+//!
+//! # Quickstart: a simulation session
+//!
+//! ```
+//! use std::sync::Arc;
+//! use cortex::atlas::random_spec;
+//! use cortex::engine::Simulation;
+//! use cortex::probe::{PopRates, SpikeRaster};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let spec = Arc::new(random_spec(400, 40, 7));
+//! let mut sim = Simulation::builder(Arc::clone(&spec))
+//!     .ranks(2)
+//!     .threads(2)
+//!     .probe(SpikeRaster::pops("e_raster", &["E"]))
+//!     .probe(PopRates::new("rates", 100))
+//!     .build()?;
+//!
+//! sim.run_for(200)?;                       // 20 ms at dt = 0.1 ms
+//! let before = sim.drain("rates")?;        // per-population Hz, binned
+//! sim.set_poisson("E", 12_000.0, 87.8)?;   // steer the stimulus …
+//! sim.run_for(200)?;                       // … and keep simulating
+//! let after = sim.drain("rates")?;
+//! let raster = sim.drain("e_raster")?.into_raster()?;
+//! let out = sim.finish()?;                 // classic merged RunOutput
+//! # let _ = (before, after, raster, out);
+//! # Ok(())
+//! # }
+//! ```
 
 pub mod atlas;
 pub mod cli;
@@ -48,6 +86,7 @@ pub mod graph;
 pub mod metrics;
 pub mod model;
 pub mod nest_baseline;
+pub mod probe;
 pub mod runtime;
 pub mod util;
 

@@ -7,6 +7,11 @@ use crate::util::stats;
 use crate::{Gid, Step};
 
 /// Records (step, gid) spike events for gids below `gid_limit`.
+///
+/// The engine's `record_limit: Option<Gid>` knob maps onto this as:
+/// `Some(limit)` → [`SpikeRecorder::new`] (use `Some(u32::MAX)` to
+/// record everything), `None` → [`SpikeRecorder::disabled`] — nothing
+/// is recorded. Filtered/structured recording lives in `crate::probe`.
 #[derive(Clone, Debug)]
 pub struct SpikeRecorder {
     pub gid_limit: Gid,
@@ -19,8 +24,16 @@ impl SpikeRecorder {
         SpikeRecorder { gid_limit, events: Vec::new(), enabled: true }
     }
 
+    /// A recorder that keeps nothing — the explicit form of
+    /// "`record_limit: None`" (not a zero gid bound by accident).
     pub fn disabled() -> Self {
         SpikeRecorder { gid_limit: 0, events: Vec::new(), enabled: false }
+    }
+
+    /// Wrap pre-collected events (e.g. a drained raster probe) so the
+    /// [`Self::stats`] / [`Self::to_csv`] helpers apply to them too.
+    pub fn from_events(events: Vec<(Step, Gid)>) -> Self {
+        SpikeRecorder { gid_limit: Gid::MAX, events, enabled: true }
     }
 
     #[inline]

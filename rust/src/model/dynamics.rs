@@ -89,6 +89,29 @@ impl ModelParams {
         }
     }
 
+    /// This parameter set with `dc_pa` added to its constant external
+    /// current — the session API's per-population DC drive (a LIF block
+    /// folds it into its exact-integration propagators, AdEx/HH into
+    /// their `i_ext` term). `None` for parrot relays, which carry no
+    /// membrane current.
+    pub fn with_dc(&self, dc_pa: f64) -> Option<ModelParams> {
+        match *self {
+            ModelParams::Lif(p) => Some(ModelParams::Lif(LifParams {
+                i_ext: p.i_ext + dc_pa,
+                ..p
+            })),
+            ModelParams::Adex(p) => Some(ModelParams::Adex(AdexParams {
+                i_ext: p.i_ext + dc_pa,
+                ..p
+            })),
+            ModelParams::Hh(p) => Some(ModelParams::Hh(HhParams {
+                i_ext: p.i_ext + dc_pa,
+                ..p
+            })),
+            ModelParams::Parrot => None,
+        }
+    }
+
     /// Exact per-neuron heap bytes of the model's SoA state (for the
     /// analytic memory accounting before the live blocks exist).
     pub fn state_bytes_per_neuron(&self) -> u64 {
@@ -119,6 +142,31 @@ pub struct ModelTables {
     pub dt_ms: f64,
     pub lif_props: Vec<Propagators>,
     pub params: Vec<ModelParams>,
+}
+
+impl ModelTables {
+    /// Intern `p`, returning its table index; both tables stay aligned.
+    /// Identical entries collapse (so resetting a session's DC drive to
+    /// zero lands back on the population's original slot, and repeated
+    /// sweeps over the same values cost nothing). Used by the engine's
+    /// mid-run stimulus mutation — per-worker tables are owned copies,
+    /// so interning never races. Returns `None` when the u8-indexed
+    /// table is full (255 distinct parameter sets); callers surface
+    /// that as a recoverable error rather than a panic.
+    pub fn intern(&mut self, p: ModelParams) -> Option<u8> {
+        if let Some(i) = self.params.iter().position(|q| *q == p) {
+            return Some(i as u8);
+        }
+        if self.params.len() >= u8::MAX as usize {
+            return None;
+        }
+        self.lif_props.push(match &p {
+            ModelParams::Lif(lp) => Propagators::new(lp, self.dt_ms),
+            _ => Propagators::new(&LifParams::default(), self.dt_ms),
+        });
+        self.params.push(p);
+        Some((self.params.len() - 1) as u8)
+    }
 }
 
 /// SoA dynamical state of one contiguous block of neurons sharing a
@@ -194,6 +242,17 @@ impl PopulationState {
                     + vec_bytes(&s.ii)
             }
             PopulationState::Parrot(_) => 0,
+        }
+    }
+
+    /// Membrane potential of neuron `i` (`None` for parrot relays, which
+    /// have no membrane). Read-only observation hook for voltage probes.
+    pub fn voltage(&self, i: usize) -> Option<f64> {
+        match self {
+            PopulationState::Lif(s) => Some(s.u[i]),
+            PopulationState::Adex(s) => Some(s.v[i]),
+            PopulationState::Hh(s) => Some(s.v[i]),
+            PopulationState::Parrot(_) => None,
         }
     }
 
@@ -303,7 +362,7 @@ impl PopulationState {
     }
 
     /// The evolving fields, in checkpoint order. Must list the same
-    /// fields in the same order as [`Self::field_vecs_mut`]; the
+    /// fields in the same order as the private `field_vecs_mut`; the
     /// `checkpoint_fields_round_trip` test writes through one and reads
     /// through the other to keep the two in sync.
     pub fn field_slices(&self) -> Vec<&[f64]> {
@@ -461,6 +520,44 @@ mod tests {
             );
             assert!(spikes.iter().all(|&x| x < 8));
         }
+    }
+
+    #[test]
+    fn with_dc_offsets_i_ext_and_interns() {
+        let lif = ModelParams::Lif(LifParams::default());
+        let mut t = tables(vec![lif]);
+        let up = lif.with_dc(120.0).unwrap();
+        let ModelParams::Lif(p) = up else { panic!() };
+        assert_eq!(p.i_ext, 120.0);
+        assert!(ModelParams::Parrot.with_dc(1.0).is_none());
+        // interning the offset params appends to both tables in step …
+        assert_eq!(t.intern(up), Some(1));
+        assert_eq!(t.params.len(), t.lif_props.len());
+        assert_eq!(t.lif_props[1].i_ext, 120.0);
+        // … and resetting to zero lands back on the original slot
+        assert_eq!(t.intern(lif.with_dc(0.0).unwrap()), Some(0));
+        // the u8-indexed table caps at 255 entries, gracefully
+        for i in 0..300 {
+            let q = lif.with_dc(1.0 + i as f64).unwrap();
+            if t.intern(q).is_none() {
+                assert_eq!(t.params.len(), u8::MAX as usize);
+                return;
+            }
+        }
+        panic!("intern never reported a full table");
+    }
+
+    #[test]
+    fn voltage_accessor_reads_membrane() {
+        let t = tables(vec![
+            ModelParams::Lif(LifParams::default()),
+            ModelParams::Parrot,
+        ]);
+        let mut s = PopulationState::new(&t, 0, 3);
+        s.set_v_init(1, -55.5);
+        assert_eq!(s.voltage(1), Some(-55.5));
+        let p = PopulationState::new(&t, 1, 3);
+        assert_eq!(p.voltage(0), None);
     }
 
     #[test]

@@ -1,0 +1,372 @@
+//! Built-in probes: spike rasters, population rates, voltage traces,
+//! STDP weight snapshots, phase timers.
+//!
+//! All are `Clone`, so one configured instance registered on the session
+//! builder replicates across rank threads. All except [`PhaseStream`]
+//! produce bit-identical output for a given network regardless of rank
+//! internals (thread count, exec mode, exchange mode).
+
+use std::collections::BTreeMap;
+
+use crate::{Gid, Step};
+
+use super::{Probe, ProbeData, StepView, WeightSnapshot};
+
+/// Which gids a [`SpikeRaster`] records.
+#[derive(Clone, Debug)]
+pub enum GidFilter {
+    /// Every spike.
+    All,
+    /// Gids strictly below the bound (the engine recorder's semantics).
+    Below(Gid),
+    /// Gids in `[lo, hi)`.
+    Range(Gid, Gid),
+    /// All populations with one of these names (resolved against the
+    /// spec on first use; unknown names panic with a clear message).
+    Pops(Vec<String>),
+}
+
+/// Spike raster with gid/population filters. Drains to
+/// [`ProbeData::Raster`]: sorted `(step, gid)` events.
+#[derive(Clone, Debug)]
+pub struct SpikeRaster {
+    name: String,
+    filter: GidFilter,
+    /// Gid ranges resolved from `GidFilter::Pops` (lazily, needs spec).
+    ranges: Option<Vec<(Gid, Gid)>>,
+    events: Vec<(Step, Gid)>,
+}
+
+impl SpikeRaster {
+    pub fn new(name: &str, filter: GidFilter) -> SpikeRaster {
+        SpikeRaster {
+            name: name.into(),
+            filter,
+            ranges: None,
+            events: Vec::new(),
+        }
+    }
+
+    /// Record every spike.
+    pub fn all(name: &str) -> SpikeRaster {
+        Self::new(name, GidFilter::All)
+    }
+
+    /// Record gids below `limit`.
+    pub fn below(name: &str, limit: Gid) -> SpikeRaster {
+        Self::new(name, GidFilter::Below(limit))
+    }
+
+    /// Record the named populations only.
+    pub fn pops(name: &str, pops: &[&str]) -> SpikeRaster {
+        Self::new(
+            name,
+            GidFilter::Pops(pops.iter().map(|s| s.to_string()).collect()),
+        )
+    }
+
+    /// Resolve a `Pops` filter against the spec (no-op otherwise or if
+    /// already resolved). Unknown names error.
+    fn resolve(&mut self, view: &StepView<'_>) -> anyhow::Result<()> {
+        if self.ranges.is_some() {
+            return Ok(());
+        }
+        if let GidFilter::Pops(names) = &self.filter {
+            let ranges = resolve_pops(names, view)?;
+            self.ranges = Some(ranges);
+        }
+        Ok(())
+    }
+
+    fn passes(&mut self, gid: Gid, view: &StepView<'_>) -> bool {
+        match &self.filter {
+            GidFilter::All => return true,
+            GidFilter::Below(lim) => return gid < *lim,
+            GidFilter::Range(lo, hi) => return gid >= *lo && gid < *hi,
+            GidFilter::Pops(_) => {}
+        }
+        if self.ranges.is_none() {
+            // the session validates via attach() at build time; manual
+            // drivers that skip attach get the resolution (and any
+            // unknown-name error) on first use
+            self.resolve(view).expect("raster probe filter");
+        }
+        self.ranges
+            .as_ref()
+            .map(|rs| rs.iter().any(|&(lo, hi)| gid >= lo && gid < hi))
+            .unwrap_or(false)
+    }
+}
+
+/// Gid ranges of every population matching one of `names` (the same
+/// lookup the session's stimulus targeting uses).
+fn resolve_pops(
+    names: &[String],
+    view: &StepView<'_>,
+) -> anyhow::Result<Vec<(Gid, Gid)>> {
+    let spec = view.spec();
+    let mut out = Vec::new();
+    for name in names {
+        let indices = spec.pops_named(name);
+        anyhow::ensure!(
+            !indices.is_empty(),
+            "filter names unknown population '{name}' (network '{}')",
+            spec.name
+        );
+        for i in indices {
+            let p = &spec.populations[i as usize];
+            out.push((p.first_gid, p.first_gid + p.n));
+        }
+    }
+    Ok(out)
+}
+
+impl Probe for SpikeRaster {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn attach(&mut self, view: &StepView<'_>) -> anyhow::Result<()> {
+        self.resolve(view)
+    }
+
+    fn on_step(&mut self, view: &StepView<'_>) {
+        for m in view.spikes() {
+            if self.passes(m.gid, view) {
+                self.events.push((m.step as Step, m.gid));
+            }
+        }
+    }
+
+    fn drain(&mut self, _view: &StepView<'_>) -> ProbeData {
+        let mut events = std::mem::take(&mut self.events);
+        events.sort_unstable();
+        ProbeData::Raster(events)
+    }
+}
+
+/// Per-population firing rates over fixed time bins. Drains to
+/// [`ProbeData::Rates`].
+///
+/// A row is emitted for every completed bin (including silent ones).
+/// Draining mid-bin flushes the partial bin as a row computed over the
+/// **full** bin width and restarts binning at the current step, so for
+/// clean rows drain at bin boundaries.
+#[derive(Clone, Debug)]
+pub struct PopRates {
+    name: String,
+    bin_steps: Step,
+    bin_start: Step,
+    started: bool,
+    counts: Vec<u64>,
+    pops: Vec<String>,
+    rows: Vec<(Step, Vec<f64>)>,
+}
+
+impl PopRates {
+    /// Rates binned every `bin_steps` integration steps.
+    pub fn new(name: &str, bin_steps: Step) -> PopRates {
+        assert!(bin_steps >= 1, "rate bin must cover at least one step");
+        PopRates {
+            name: name.into(),
+            bin_steps,
+            bin_start: 0,
+            started: false,
+            counts: Vec::new(),
+            pops: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    fn ensure_init(&mut self, view: &StepView<'_>) {
+        if !self.started {
+            let spec = view.spec();
+            self.counts = vec![0; spec.populations.len()];
+            self.pops = spec
+                .populations
+                .iter()
+                .map(|p| p.name.clone())
+                .collect();
+            self.bin_start = view.step();
+            self.started = true;
+        }
+    }
+
+    fn flush_bin(&mut self, view: &StepView<'_>) {
+        let spec = view.spec();
+        let bin_s = self.bin_steps as f64 * spec.dt_ms * 1e-3;
+        let rates: Vec<f64> = self
+            .counts
+            .iter()
+            .zip(&spec.populations)
+            .map(|(&c, p)| c as f64 / (p.n as f64 * bin_s))
+            .collect();
+        self.rows.push((self.bin_start, rates));
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.bin_start += self.bin_steps;
+    }
+}
+
+impl Probe for PopRates {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_step(&mut self, view: &StepView<'_>) {
+        self.ensure_init(view);
+        while view.step() >= self.bin_start + self.bin_steps {
+            self.flush_bin(view);
+        }
+        let spec = view.spec();
+        for m in view.spikes() {
+            self.counts[spec.pop_of(m.gid) as usize] += 1;
+        }
+    }
+
+    fn drain(&mut self, view: &StepView<'_>) -> ProbeData {
+        self.ensure_init(view);
+        while view.step() >= self.bin_start + self.bin_steps {
+            self.flush_bin(view);
+        }
+        if view.step() > self.bin_start {
+            // partial trailing bin
+            self.flush_bin(view);
+        }
+        self.bin_start = view.step();
+        ProbeData::Rates {
+            bin_steps: self.bin_steps,
+            pops: self.pops.clone(),
+            rows: std::mem::take(&mut self.rows),
+        }
+    }
+}
+
+/// Sampled membrane-voltage traces of selected gids. Drains to
+/// [`ProbeData::Traces`]. Each gid is recorded by the one rank that owns
+/// it; gids of voltage-free models (parrot) or outside the network yield
+/// no trace.
+#[derive(Clone, Debug)]
+pub struct VoltageTrace {
+    name: String,
+    every: Step,
+    samples: Vec<(Gid, Vec<(Step, f64)>)>,
+}
+
+impl VoltageTrace {
+    /// Sample each of `gids` every `every` steps.
+    pub fn new(name: &str, gids: &[Gid], every: Step) -> VoltageTrace {
+        assert!(every >= 1, "sampling interval must be >= 1 step");
+        VoltageTrace {
+            name: name.into(),
+            every,
+            samples: gids.iter().map(|&g| (g, Vec::new())).collect(),
+        }
+    }
+}
+
+impl Probe for VoltageTrace {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_step(&mut self, view: &StepView<'_>) {
+        if view.step() % self.every != 0 {
+            return;
+        }
+        for (gid, buf) in &mut self.samples {
+            if let Some(v) = view.voltage(*gid) {
+                buf.push((view.step(), v));
+            }
+        }
+    }
+
+    fn drain(&mut self, _view: &StepView<'_>) -> ProbeData {
+        let mut out = Vec::new();
+        for (gid, buf) in &mut self.samples {
+            if !buf.is_empty() {
+                out.push((*gid, std::mem::take(buf)));
+            }
+        }
+        ProbeData::Traces(out)
+    }
+}
+
+/// STDP weight snapshots. Drains to [`ProbeData::Weights`]; every drain
+/// appends a snapshot of the current weights, and [`Self::every`] adds
+/// periodic mid-run snapshots on top.
+#[derive(Clone, Debug)]
+pub struct WeightSnapshots {
+    name: String,
+    every: Option<Step>,
+    snaps: Vec<WeightSnapshot>,
+}
+
+impl WeightSnapshots {
+    /// Snapshot at drain time only.
+    pub fn new(name: &str) -> WeightSnapshots {
+        WeightSnapshots { name: name.into(), every: None, snaps: Vec::new() }
+    }
+
+    /// Additionally snapshot every `steps` steps.
+    pub fn every(mut self, steps: Step) -> WeightSnapshots {
+        assert!(steps >= 1, "snapshot interval must be >= 1 step");
+        self.every = Some(steps);
+        self
+    }
+}
+
+impl Probe for WeightSnapshots {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_step(&mut self, view: &StepView<'_>) {
+        if let Some(k) = self.every {
+            if view.step() % k == 0 {
+                self.snaps.push((view.step(), view.plastic_edges()));
+            }
+        }
+    }
+
+    fn drain(&mut self, view: &StepView<'_>) -> ProbeData {
+        let mut snaps = std::mem::take(&mut self.snaps);
+        snaps.push((view.step(), view.plastic_edges()));
+        ProbeData::Weights(snaps)
+    }
+}
+
+/// Phase-timer stream: each drain reports every phase's wall-clock
+/// seconds accumulated since the previous drain, tagged by rank. Drains
+/// to [`ProbeData::Phases`]. Wall clock — **not** deterministic.
+#[derive(Clone, Debug)]
+pub struct PhaseStream {
+    name: String,
+    last: BTreeMap<String, f64>,
+}
+
+impl PhaseStream {
+    pub fn new(name: &str) -> PhaseStream {
+        PhaseStream { name: name.into(), last: BTreeMap::new() }
+    }
+}
+
+impl Probe for PhaseStream {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn on_step(&mut self, _view: &StepView<'_>) {}
+
+    fn drain(&mut self, view: &StepView<'_>) -> ProbeData {
+        let mut rows = Vec::new();
+        for (phase, secs) in view.timer().phases() {
+            let prev = self.last.get(phase).copied().unwrap_or(0.0);
+            let delta = secs - prev;
+            if delta > 0.0 {
+                rows.push((view.rank(), phase.to_string(), delta));
+            }
+            self.last.insert(phase.to_string(), secs);
+        }
+        ProbeData::Phases(rows)
+    }
+}

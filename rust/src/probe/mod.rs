@@ -1,0 +1,249 @@
+//! Pluggable observation: the session API's recording layer.
+//!
+//! A [`Probe`] is a per-rank observer that a [`crate::engine::Simulation`]
+//! session instantiates on **every rank thread** at build time. After each
+//! integration step the rank loop hands its probes a read-only
+//! [`StepView`] — the step number, the spikes the rank just emitted, and
+//! accessor methods into the rank's engine state (membrane voltages,
+//! plastic weights, phase timers). Between `run_for` calls the session
+//! drains a probe by name: each rank moves its accumulated data out over
+//! its response channel and the session merges the per-rank pieces into
+//! one [`ProbeData`].
+//!
+//! This design preserves the engine's no-data-racing property (paper
+//! §III.B): a probe lives on exactly one rank thread, observes only that
+//! rank's state through `&`-references, and communicates with the session
+//! exclusively by value over channels — no probe ever holds a lock or a
+//! shared mutable reference into the simulation.
+//!
+//! Determinism: everything a [`StepView`] exposes except the phase timer
+//! is a deterministic function of the simulation state, so the built-in
+//! spike/rate/voltage/weight probes produce bit-identical output across
+//! thread counts, exec modes and exchange modes (asserted in
+//! `rust/tests/session_api.rs`). The [`builtin::PhaseStream`] probe
+//! reports wall-clock times and is the deliberate exception.
+//!
+//! Built-ins live in [`builtin`]: spike rasters with gid/population
+//! filters, per-population firing rates, sampled membrane-voltage traces,
+//! STDP weight snapshots, and a phase-timer stream.
+
+pub mod builtin;
+
+pub use builtin::{
+    GidFilter, PhaseStream, PopRates, SpikeRaster, VoltageTrace,
+    WeightSnapshots,
+};
+
+use crate::atlas::NetworkSpec;
+use crate::comm::SpikeMsg;
+use crate::engine::RankEngine;
+use crate::metrics::PhaseTimer;
+use crate::{Gid, Step};
+
+/// A per-rank observer plugged into a simulation session.
+///
+/// Implementations must be `Send` (they live on the rank thread) and are
+/// usually `Clone` so one instance registered on the builder can be
+/// replicated per rank (see `SimulationBuilder::probe`).
+pub trait Probe: Send {
+    /// Registration name; the session drains the probe by this name.
+    fn name(&self) -> &str;
+
+    /// Called once when the probe is installed on its rank thread (the
+    /// engine exists; no steps have run on it yet). Resolve and
+    /// validate configuration against the network here — an error
+    /// fails `SimulationBuilder::build` with a clear message instead
+    /// of surfacing mid-run.
+    fn attach(&mut self, _view: &StepView<'_>) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Observe one completed integration step.
+    fn on_step(&mut self, view: &StepView<'_>);
+
+    /// Move the accumulated data out (the probe keeps running and starts
+    /// accumulating afresh). `view` is at-rest: `view.spikes()` is empty
+    /// but engine state is accessible for drain-time snapshots.
+    fn drain(&mut self, view: &StepView<'_>) -> ProbeData;
+}
+
+/// Read-only view of one rank handed to probes after each step (and, with
+/// no spikes, at drain time).
+pub struct StepView<'a> {
+    engine: &'a RankEngine,
+    step: Step,
+    spikes: &'a [SpikeMsg],
+}
+
+impl<'a> StepView<'a> {
+    /// View of the step that just completed. `spikes` are the spikes this
+    /// rank emitted during it (all of them — independent of the engine's
+    /// raster `record_limit`).
+    pub fn new(
+        engine: &'a RankEngine,
+        step: Step,
+        spikes: &'a [SpikeMsg],
+    ) -> StepView<'a> {
+        StepView { engine, step, spikes }
+    }
+
+    /// At-rest view (drain time): no step events, state accessible.
+    pub fn at_rest(engine: &'a RankEngine) -> StepView<'a> {
+        StepView { engine, step: engine.step(), spikes: &[] }
+    }
+
+    /// The step this view describes (at drain time: steps completed).
+    pub fn step(&self) -> Step {
+        self.step
+    }
+
+    /// Spikes this rank emitted during the step.
+    pub fn spikes(&self) -> &[SpikeMsg] {
+        self.spikes
+    }
+
+    pub fn rank(&self) -> u16 {
+        self.engine.rank
+    }
+
+    pub fn spec(&self) -> &NetworkSpec {
+        self.engine.spec()
+    }
+
+    /// Membrane potential of `gid`, if this rank owns it and its model
+    /// has one (parrot relays do not).
+    pub fn voltage(&self, gid: Gid) -> Option<f64> {
+        self.engine.voltage_of(gid)
+    }
+
+    /// This rank's plastic edges as (pre gid, post gid, delay, weight),
+    /// canonically sorted — comparable across thread counts.
+    pub fn plastic_edges(&self) -> Vec<WeightEdge> {
+        self.engine.plastic_edges_global()
+    }
+
+    /// The rank's accumulating phase timer (wall clock — the one
+    /// non-deterministic quantity a probe can observe).
+    pub fn timer(&self) -> &PhaseTimer {
+        &self.engine.timer
+    }
+}
+
+/// One plastic edge as probes report it: (pre gid, post gid, delay
+/// steps, weight pA).
+pub type WeightEdge = (Gid, Gid, u16, f64);
+/// One weight snapshot: the step it was taken at, plus every plastic
+/// edge, canonically sorted.
+pub type WeightSnapshot = (Step, Vec<WeightEdge>);
+
+/// Typed payload a probe hands back on drain. Per-rank pieces of the same
+/// variant merge into one session-level value via [`ProbeData::merge`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProbeData {
+    /// Spike events (step, gid), sorted.
+    Raster(Vec<(Step, Gid)>),
+    /// Per-population firing rates: one row per time bin,
+    /// `(bin start step, rate in Hz per population)`. Rates are averaged
+    /// over each population's **global** size, so per-rank partial rows
+    /// sum to the population rate on merge.
+    Rates {
+        bin_steps: Step,
+        pops: Vec<String>,
+        rows: Vec<(Step, Vec<f64>)>,
+    },
+    /// Sampled membrane-voltage traces per gid: (gid, [(step, mV)]).
+    Traces(Vec<(Gid, Vec<(Step, f64)>)>),
+    /// Plastic-weight snapshots: (step, [(pre, post, delay, weight)]),
+    /// canonically sorted within each snapshot.
+    Weights(Vec<WeightSnapshot>),
+    /// Phase-timer deltas since the previous drain:
+    /// (rank, phase, seconds).
+    Phases(Vec<(u16, String, f64)>),
+    /// Free-form lines (escape hatch for custom probes).
+    Lines(Vec<String>),
+}
+
+impl ProbeData {
+    /// Merge another rank's piece of the same probe into this one.
+    /// Variants must match (they do, for pieces of one probe).
+    pub fn merge(self, other: ProbeData) -> anyhow::Result<ProbeData> {
+        use ProbeData::*;
+        Ok(match (self, other) {
+            (Raster(mut a), Raster(b)) => {
+                a.extend(b);
+                a.sort_unstable();
+                Raster(a)
+            }
+            (
+                Rates { bin_steps, pops, rows: mut a },
+                Rates { bin_steps: b_bin, pops: b_pops, rows: b },
+            ) => {
+                anyhow::ensure!(
+                    bin_steps == b_bin && pops == b_pops && a.len() == b.len(),
+                    "rate probe pieces disagree on binning"
+                );
+                for (ra, rb) in a.iter_mut().zip(b) {
+                    anyhow::ensure!(
+                        ra.0 == rb.0,
+                        "rate probe pieces disagree on bin starts"
+                    );
+                    for (x, y) in ra.1.iter_mut().zip(rb.1) {
+                        *x += y;
+                    }
+                }
+                Rates { bin_steps, pops, rows: a }
+            }
+            (Traces(mut a), Traces(b)) => {
+                a.extend(b);
+                a.sort_by_key(|(g, _)| *g);
+                Traces(a)
+            }
+            (Weights(mut a), Weights(b)) => {
+                anyhow::ensure!(
+                    a.len() == b.len(),
+                    "weight probe pieces disagree on snapshot count"
+                );
+                for (sa, sb) in a.iter_mut().zip(b) {
+                    anyhow::ensure!(
+                        sa.0 == sb.0,
+                        "weight probe pieces disagree on snapshot steps"
+                    );
+                    sa.1.extend(sb.1);
+                    sa.1.sort_by_key(|&(pre, post, delay, _)| {
+                        (pre, post, delay)
+                    });
+                }
+                Weights(a)
+            }
+            (Phases(mut a), Phases(b)) => {
+                a.extend(b);
+                Phases(a)
+            }
+            (Lines(mut a), Lines(b)) => {
+                a.extend(b);
+                Lines(a)
+            }
+            _ => anyhow::bail!("probe data variants differ across ranks"),
+        })
+    }
+
+    /// Convenience: unwrap a [`ProbeData::Raster`].
+    pub fn into_raster(self) -> anyhow::Result<Vec<(Step, Gid)>> {
+        match self {
+            ProbeData::Raster(v) => Ok(v),
+            other => anyhow::bail!(
+                "expected raster probe data, got {other:?}"
+            ),
+        }
+    }
+
+    /// Convenience: unwrap [`ProbeData::Weights`].
+    pub fn into_weights(self) -> anyhow::Result<Vec<WeightSnapshot>> {
+        match self {
+            ProbeData::Weights(v) => Ok(v),
+            other => anyhow::bail!(
+                "expected weight probe data, got {other:?}"
+            ),
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! Session-API determinism (the acceptance bar of the API redesign):
+//!
+//! * `run_for(a); run_for(b)` is **bit-identical** to `run_for(a+b)` —
+//!   even when `a` stops mid-window — across thread counts 1/2/4 and
+//!   both exchange modes (the rank threads keep their window position
+//!   across calls);
+//! * probe outputs (raster, per-population rates, voltage traces, STDP
+//!   weights) are bit-identical across thread counts;
+//! * a session checkpointed mid-run — including after mid-run stimulus
+//!   mutation — restores into a fresh session that replays the tail
+//!   bit-exactly, at any thread count;
+//! * `run_simulation` (now a thin wrapper over the session) still
+//!   produces the same rasters as driving the session by hand.
+
+use std::sync::Arc;
+
+use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
+use cortex::atlas::potjans::potjans_spec;
+use cortex::atlas::random_spec;
+use cortex::config::CommMode;
+use cortex::engine::{run_simulation, RunConfig, Simulation};
+use cortex::probe::{
+    PopRates, ProbeData, SpikeRaster, VoltageTrace, WeightSnapshots,
+};
+
+fn base_cfg(steps: u64, threads: usize, comm: CommMode) -> RunConfig {
+    RunConfig {
+        ranks: 2,
+        threads,
+        comm,
+        steps,
+        record_limit: Some(u32::MAX),
+        verify_ownership: true,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn split_run_for_matches_one_shot_across_threads_and_comm_modes() {
+    let spec = Arc::new(random_spec(400, 40, 11));
+    for comm in [CommMode::Overlap, CommMode::Serialized] {
+        let reference =
+            run_simulation(&spec, &base_cfg(600, 2, comm)).unwrap();
+        assert!(reference.total_spikes > 0, "network should be active");
+        for threads in [1usize, 2, 4] {
+            let mut sim = Simulation::builder(Arc::clone(&spec))
+                .run_config(&base_cfg(600, threads, comm))
+                .probe(SpikeRaster::all("raster"))
+                .build()
+                .unwrap();
+            // split mid-window on purpose (min_delay = 2 steps): the
+            // second call must continue the partial window
+            sim.run_for(251).unwrap();
+            let mut probed = sim
+                .drain("raster")
+                .unwrap()
+                .into_raster()
+                .unwrap();
+            sim.run_for(349).unwrap();
+            probed.extend(
+                sim.drain("raster").unwrap().into_raster().unwrap(),
+            );
+            let out = sim.finish().unwrap();
+            assert_eq!(
+                reference.raster.events, out.raster.events,
+                "{comm:?}/{threads}t: split run_for changed the raster"
+            );
+            assert_eq!(
+                reference.raster.events, probed,
+                "{comm:?}/{threads}t: raster probe diverged from the \
+                 built-in recorder"
+            );
+        }
+    }
+}
+
+#[test]
+fn split_run_preserves_stdp_weights_across_threads() {
+    let spec = Arc::new(hpc_benchmark_spec(
+        &HpcParams {
+            n_neurons: 500,
+            indegree: 100,
+            plastic: true,
+            eta: 0.95,
+            ..Default::default()
+        },
+        29,
+    ));
+    let run = |threads: usize, splits: &[u64]| {
+        let mut sim = Simulation::builder(Arc::clone(&spec))
+            .ranks(1)
+            .threads(threads)
+            .verify_ownership(true)
+            .probe(WeightSnapshots::new("w"))
+            .probe(SpikeRaster::all("raster"))
+            .build()
+            .unwrap();
+        for &s in splits {
+            sim.run_for(s).unwrap();
+        }
+        let weights =
+            sim.drain("w").unwrap().into_weights().unwrap();
+        let raster =
+            sim.drain("raster").unwrap().into_raster().unwrap();
+        let (step, final_weights) = weights.into_iter().last().unwrap();
+        assert_eq!(step, splits.iter().sum::<u64>());
+        (raster, final_weights)
+    };
+    let (r1, w1) = run(1, &[120]);
+    assert!(!r1.is_empty(), "plastic network should be active");
+    assert!(!w1.is_empty(), "network should have plastic edges");
+    for threads in [2usize, 4] {
+        let (r, w) = run(threads, &[120]);
+        assert_eq!(r1, r, "{threads}t changed the spike train");
+        assert_eq!(w1, w, "{threads}t changed the final STDP weights");
+    }
+    // odd split points exercise mid-window continuation
+    let (rs, ws) = run(2, &[37, 83]);
+    assert_eq!(r1, rs, "split run_for changed the raster");
+    assert_eq!(w1, ws, "split run_for changed the final STDP weights");
+}
+
+#[test]
+fn probe_outputs_deterministic_across_thread_counts() {
+    // ~1600-neuron downscaled microcircuit, 30 ms
+    let spec = Arc::new(potjans_spec(1600.0 / 77_169.0, 23));
+    let run = |threads: usize| {
+        let mut sim = Simulation::builder(Arc::clone(&spec))
+            .ranks(2)
+            .threads(threads)
+            .verify_ownership(true)
+            .probe(SpikeRaster::pops("l23", &["L23E", "L23I"]))
+            .probe(PopRates::new("rates", 100))
+            .probe(VoltageTrace::new("vm", &[0, 5, 10], 10))
+            .build()
+            .unwrap();
+        sim.run_for(300).unwrap();
+        (
+            sim.drain("l23").unwrap(),
+            sim.drain("rates").unwrap(),
+            sim.drain("vm").unwrap(),
+        )
+    };
+    let (l23_1, rates1, vm1) = run(1);
+    let ProbeData::Rates { rows, pops, .. } = &rates1 else {
+        panic!("rates probe returned the wrong variant")
+    };
+    assert_eq!(rows.len(), 3, "300 steps at bin 100 = 3 rows");
+    assert_eq!(pops.len(), spec.populations.len());
+    let ProbeData::Traces(traces) = &vm1 else {
+        panic!("voltage probe returned the wrong variant")
+    };
+    assert_eq!(traces.len(), 3);
+    assert!(traces.iter().all(|(_, s)| s.len() == 30));
+    for threads in [2usize, 4] {
+        let (l23, rates, vm) = run(threads);
+        assert_eq!(l23_1, l23, "{threads}t changed the L2/3 raster");
+        assert_eq!(rates1, rates, "{threads}t changed the rates");
+        assert_eq!(vm1, vm, "{threads}t changed the voltage traces");
+    }
+}
+
+#[test]
+fn checkpoint_restore_mid_session_is_bit_identical() {
+    let spec = Arc::new(random_spec(400, 40, 13));
+    // session A: run, steer the stimulus, checkpoint at a window
+    // boundary, keep going
+    let mut a = Simulation::builder(Arc::clone(&spec))
+        .ranks(2)
+        .threads(2)
+        .record_limit(Some(u32::MAX))
+        .verify_ownership(true)
+        .build()
+        .unwrap();
+    a.run_for(200).unwrap();
+    a.set_dc("E", 150.0).unwrap();
+    a.set_poisson("I", 9_000.0, 87.8).unwrap();
+    a.run_for(100).unwrap();
+    // queued but not yet applied at checkpoint time: the snapshot must
+    // carry it (it takes effect at this very boundary either way)
+    a.set_poisson("E", 10_000.0, 87.8).unwrap();
+    let mut blob = Vec::new();
+    a.checkpoint(&mut blob).unwrap();
+    a.run_for(300).unwrap();
+    let out_a = a.finish().unwrap();
+    assert!(out_a.total_spikes > 0);
+    let tail_a: Vec<(u64, u32)> = out_a
+        .raster
+        .events
+        .iter()
+        .copied()
+        .filter(|&(t, _)| t >= 300)
+        .collect();
+    assert!(!tail_a.is_empty(), "tail should be active");
+
+    // restored sessions replay the tail bit-exactly — the checkpoint
+    // bytes are thread-count independent, so restore at 4 threads too
+    for threads in [2usize, 4] {
+        let mut b = Simulation::builder(Arc::clone(&spec))
+            .ranks(2)
+            .threads(threads)
+            .record_limit(Some(u32::MAX))
+            .verify_ownership(true)
+            .restore(&mut std::io::Cursor::new(&blob))
+            .unwrap();
+        assert_eq!(b.step(), 300);
+        b.run_for(300).unwrap();
+        let out_b = b.finish().unwrap();
+        assert_eq!(
+            tail_a, out_b.raster.events,
+            "{threads}t: restored session diverged from the original"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_requires_window_boundary() {
+    let spec = Arc::new(random_spec(200, 20, 5));
+    let mut sim = Simulation::builder(Arc::clone(&spec))
+        .ranks(1)
+        .threads(1)
+        .build()
+        .unwrap();
+    sim.run_for(3).unwrap(); // min_delay = 2 → mid-window
+    let mut blob = Vec::new();
+    assert!(sim.checkpoint(&mut blob).is_err());
+    sim.run_for(1).unwrap();
+    sim.checkpoint(&mut blob).unwrap();
+    assert!(!blob.is_empty());
+}
+
+#[test]
+fn stimulus_mutation_changes_activity_and_stays_deterministic() {
+    let spec = Arc::new(random_spec(400, 40, 17));
+    let run = |threads: usize| {
+        let mut sim = Simulation::builder(Arc::clone(&spec))
+            .ranks(2)
+            .threads(threads)
+            .verify_ownership(true)
+            .probe(PopRates::new("rates", 200))
+            .build()
+            .unwrap();
+        sim.run_for(200).unwrap();
+        sim.set_poisson("E", 16_000.0, 87.8).unwrap(); // double it
+        sim.run_for(200).unwrap();
+        sim.set_poisson("E", 0.0, 0.0).unwrap(); // and switch it off
+        sim.run_for(200).unwrap();
+        let ProbeData::Rates { rows, pops, .. } =
+            sim.drain("rates").unwrap()
+        else {
+            panic!("rates probe returned the wrong variant")
+        };
+        (pops, rows)
+    };
+    let (pops, rows) = run(2);
+    let e = pops.iter().position(|n| n == "E").unwrap();
+    assert_eq!(rows.len(), 3);
+    assert!(
+        rows[1].1[e] > rows[0].1[e],
+        "doubling the E drive should raise the E rate \
+         ({} vs {})",
+        rows[1].1[e],
+        rows[0].1[e]
+    );
+    assert!(
+        rows[2].1[e] < rows[1].1[e],
+        "removing the E drive should lower the E rate"
+    );
+    // the full (commands × windows) schedule is thread-count invariant
+    let (_, rows4) = run(4);
+    assert_eq!(rows, rows4);
+}
+
+#[test]
+fn bad_targets_are_rejected() {
+    let spec = Arc::new(random_spec(200, 20, 3));
+    let mut sim = Simulation::builder(Arc::clone(&spec))
+        .ranks(1)
+        .threads(1)
+        .build()
+        .unwrap();
+    assert!(sim.set_poisson("NOPE", 1000.0, 10.0).is_err());
+    assert!(sim.set_dc("NOPE", 5.0).is_err());
+    assert!(sim.drain("unregistered").is_err());
+    // the session keeps working after a rejected command
+    sim.run_for(10).unwrap();
+    sim.finish().unwrap();
+
+    // a typo'd probe filter fails at build(), not on a rank mid-run
+    let err = Simulation::builder(Arc::clone(&spec))
+        .probe(SpikeRaster::pops("bad", &["NOPE"]))
+        .build();
+    assert!(err.is_err());
+}
