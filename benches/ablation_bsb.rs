@@ -65,9 +65,9 @@ fn main() -> anyhow::Result<()> {
             });
             idx += 1;
         }
-        let packed = pack(w_start as u32, &buf);
+        let packed = pack(w_start as u32, &buf)?;
         // round-trip sanity on live data
-        assert_eq!(unpack(w_start as u32, &packed).len(), buf.len());
+        assert_eq!(unpack(w_start as u32, &packed)?.len(), buf.len());
         naive_bytes += buf.len() as u64 * 8;
         packed_bytes += packed.len() as u64;
         windows += 1;

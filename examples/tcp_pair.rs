@@ -1,0 +1,128 @@
+//! Two-rank distributed runtime demo: the same downscaled Potjans
+//! microcircuit run (a) as one process with two in-memory ranks and
+//! (b) as a two-endpoint TCP cluster exchanging BSB frames over real
+//! localhost sockets — then the rasters are diffed, which must be
+//! **bit-identical** (the distributed-runtime acceptance criterion;
+//! `rust/tests/comm_wire.rs` asserts the same under `cargo test`).
+//!
+//! The two TCP endpoints live on threads here so the example is
+//! self-contained; `cortex launch --ranks 2` runs the identical
+//! exchange across OS processes.
+//!
+//! Run: `cargo run --release --example tcp_pair [sim_ms]`
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use cortex::atlas::potjans::potjans_spec;
+use cortex::comm::{Communicator, TcpComm};
+use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::engine::{run_simulation, RunConfig, Simulation};
+
+const SEED: u64 = 23;
+
+fn main() -> anyhow::Result<()> {
+    let sim_ms: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50.0);
+    let steps = (sim_ms / 0.1).round() as u64;
+    let spec = Arc::new(potjans_spec(1600.0 / 77_169.0, SEED));
+    println!(
+        "network '{}': {} neurons, {} synapses — {sim_ms} ms",
+        spec.name,
+        spec.n_total(),
+        spec.n_edges()
+    );
+
+    // (a) reference: both ranks in-process over channel transport
+    let local = run_simulation(
+        &spec,
+        &RunConfig {
+            ranks: 2,
+            threads: 2,
+            mapping: MappingKind::AreaProcesses,
+            comm: CommMode::Overlap,
+            backend: DynamicsBackend::Native,
+            exec: ExecMode::Pool,
+            steps,
+            record_limit: Some(u32::MAX),
+            verify_ownership: false,
+            artifacts_dir: "artifacts".into(),
+            seed: SEED,
+        },
+    )?;
+    println!(
+        "local transport : {} spikes in {:.3}s",
+        local.total_spikes, local.wall_seconds
+    );
+
+    // (b) the same two ranks as a TCP cluster on ephemeral ports
+    let listeners: Vec<TcpListener> = (0..2)
+        .map(|_| TcpListener::bind("127.0.0.1:0"))
+        .collect::<Result<_, _>>()?;
+    let peers: Vec<String> = listeners
+        .iter()
+        .map(|l| Ok(l.local_addr()?.to_string()))
+        .collect::<anyhow::Result<_>>()?;
+    println!("tcp transport   : peers {}", peers.join(", "));
+    let handles: Vec<_> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(rank, listener)| {
+            let spec = Arc::clone(&spec);
+            let peers = peers.clone();
+            thread::spawn(move || -> anyhow::Result<Vec<(u64, u32)>> {
+                let endpoint = TcpComm::join_with_listener(
+                    rank as u16,
+                    listener,
+                    &peers,
+                    Duration::from_secs(30),
+                )?;
+                let mut sim = Simulation::builder(spec)
+                    .ranks(2)
+                    .threads(2)
+                    .comm(CommMode::Overlap)
+                    .record_limit(Some(u32::MAX))
+                    .seed(SEED)
+                    .transport_with(move |_| {
+                        Ok(vec![(
+                            rank,
+                            Box::new(endpoint)
+                                as Box<dyn Communicator>,
+                        )])
+                    })
+                    .build()?;
+                sim.run_for(steps)?;
+                let out = sim.finish()?;
+                println!(
+                    "  rank {rank}: {} spikes, {} exchanged over {} \
+                     windows",
+                    out.total_spikes, out.comm_bytes, out.windows
+                );
+                Ok(out.raster.events)
+            })
+        })
+        .collect();
+    let mut merged = Vec::new();
+    for h in handles {
+        merged.extend(
+            h.join().expect("rank thread panicked")?,
+        );
+    }
+    merged.sort_unstable();
+
+    anyhow::ensure!(
+        merged == local.raster.events,
+        "rasters diverged: local {} events, tcp {} events",
+        local.raster.events.len(),
+        merged.len()
+    );
+    println!(
+        "rasters bit-identical across transports ({} events)",
+        merged.len()
+    );
+    Ok(())
+}

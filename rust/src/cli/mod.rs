@@ -3,14 +3,26 @@
 //!
 //! ```text
 //! cortex run       [--config F] [--set k=v]...   run an experiment
+//!                  [--rank I --peers H:P,...]    … as one TCP cluster rank
+//!                  [--raster-out FILE]           … dumping the spike raster
+//! cortex launch    --ranks N [--config F] ...    spawn an N-process TCP
+//!                  [--port-base P]               cluster on localhost
 //! cortex verify    [--config F] [--set k=v]...   paper §IV.A verification
 //! cortex partition [--config F] [--set k=v]...   inspect the decomposition
 //! cortex info      [--artifacts DIR]             PJRT artifact report
 //! ```
+//!
+//! The distributed runtime: `cortex launch --ranks N` spawns N copies of
+//! this binary, each running `cortex run --rank i --peers <list>`; the
+//! peers flag switches the session onto the TCP transport
+//! (`engine.transport = "tcp"`), where every process hosts one rank and
+//! exchanges BSB-packed spike frames over sockets. The same flags work
+//! by hand across real hosts — give every process the same rank-ordered
+//! `--peers` list and a distinct `--rank`.
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::atlas::custom::{custom_spec, CustomNetParams, CustomPopSpec};
 use crate::atlas::hpc::{hpc_benchmark_spec, HpcParams};
@@ -18,12 +30,12 @@ use crate::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use crate::atlas::potjans::{potjans_spec_with, PotjansModels};
 use crate::atlas::{random_spec_with, NetworkSpec};
 use crate::config::{
-    ConfigDoc, EngineKind, ExperimentConfig, NetworkKind,
+    CommTransport, ConfigDoc, EngineKind, ExperimentConfig, NetworkKind,
 };
 use crate::decomp::{
     area_processes_partition, random_equivalent_partition, RankStore,
 };
-use crate::engine::{run_simulation, RunConfig, Simulation};
+use crate::engine::{run_simulation, RunConfig, Simulation, Transport};
 use crate::metrics::table::human_bytes;
 use crate::nest_baseline::{run_nest_simulation, NestRunConfig};
 use crate::probe::{PopRates, ProbeData};
@@ -35,17 +47,33 @@ pub struct Args {
     pub config_path: Option<String>,
     pub overrides: Vec<String>,
     pub artifacts_dir: String,
+    /// `--rank I` — the global rank this process hosts (TCP transport).
+    pub rank: Option<u16>,
+    /// `--peers H:P,H:P,...` — rank-ordered cluster addresses; its
+    /// presence switches the run onto the TCP transport.
+    pub peers: Option<String>,
+    /// `--ranks N` — cluster size for `cortex launch`.
+    pub ranks: Option<usize>,
+    /// `--port-base P` — first localhost port `cortex launch` assigns.
+    pub port_base: u16,
+    /// `--raster-out FILE` — dump the merged spike raster as
+    /// "step gid" lines (TCP ranks write `FILE.r<rank>`).
+    pub raster_out: Option<String>,
 }
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
         let mut args = Args {
             artifacts_dir: "artifacts".into(),
+            port_base: 29600,
             ..Default::default()
         };
         let mut it = argv.iter().peekable();
         let Some(sub) = it.next() else {
-            bail!("usage: cortex <run|verify|partition|info> [options]");
+            bail!(
+                "usage: cortex <run|launch|verify|partition|info> \
+                 [options]"
+            );
         };
         args.subcommand = sub.clone();
         while let Some(a) = it.next() {
@@ -64,6 +92,46 @@ impl Args {
                     args.artifacts_dir =
                         it.next().context("--artifacts needs a dir")?.clone();
                 }
+                "--rank" => {
+                    args.rank = Some(
+                        it.next()
+                            .context("--rank needs a rank index")?
+                            .parse()
+                            .context("--rank must be an integer")?,
+                    );
+                }
+                "--peers" => {
+                    args.peers = Some(
+                        it.next()
+                            .context(
+                                "--peers needs a comma-separated \
+                                 host:port list",
+                            )?
+                            .clone(),
+                    );
+                }
+                "--ranks" => {
+                    args.ranks = Some(
+                        it.next()
+                            .context("--ranks needs a count")?
+                            .parse()
+                            .context("--ranks must be an integer")?,
+                    );
+                }
+                "--port-base" => {
+                    args.port_base = it
+                        .next()
+                        .context("--port-base needs a port")?
+                        .parse()
+                        .context("--port-base must be a port number")?;
+                }
+                "--raster-out" => {
+                    args.raster_out = Some(
+                        it.next()
+                            .context("--raster-out needs a path")?
+                            .clone(),
+                    );
+                }
                 other => bail!("unknown argument '{other}'"),
             }
         }
@@ -76,6 +144,34 @@ impl Args {
             None => ConfigDoc::parse("")?,
         };
         doc.apply_overrides(&self.overrides)?;
+        // --peers / --rank translate into the equivalent config keys;
+        // a peers list implies the TCP transport and fixes the rank
+        // count, so one flag is enough to join a cluster
+        let mut synth = Vec::new();
+        if let Some(peers) = &self.peers {
+            let quoted: Vec<String> = peers
+                .split(',')
+                .map(|s| {
+                    let s = s.trim();
+                    // the list is spliced into a TOML override below —
+                    // reject anything that could escape the string
+                    // literal (no host:port contains a quote or
+                    // backslash; IPv6 brackets are fine inside one)
+                    ensure!(
+                        !s.is_empty() && !s.contains(['"', '\\']),
+                        "invalid peer address '{s}'"
+                    );
+                    Ok(format!("\"{s}\""))
+                })
+                .collect::<Result<_>>()?;
+            synth.push("engine.transport=\"tcp\"".to_string());
+            synth.push(format!("engine.peers=[{}]", quoted.join(", ")));
+            synth.push(format!("engine.ranks={}", quoted.len()));
+        }
+        if let Some(r) = self.rank {
+            synth.push(format!("engine.rank={r}"));
+        }
+        doc.apply_overrides(&synth)?;
         Ok(ExperimentConfig::from_doc(&doc)?)
     }
 }
@@ -179,8 +275,27 @@ pub fn cmd_run(args: &Args) -> Result<()> {
         EngineKind::Cortex => {
             // the launcher runs on the session facade: persistent rank
             // engines plus a per-population rate probe over the run
+            let transport = match cfg.transport {
+                CommTransport::Local => Transport::Local,
+                CommTransport::Tcp => {
+                    let rank = cfg.tcp_rank.context(
+                        "engine.transport = \"tcp\" needs --rank (or \
+                         engine.rank): the global rank this process \
+                         hosts",
+                    )?;
+                    println!(
+                        "rank {rank}: joining a {}-rank TCP cluster",
+                        cfg.peers.len()
+                    );
+                    Transport::Tcp {
+                        rank: rank as u16,
+                        peers: cfg.peers.clone(),
+                    }
+                }
+            };
             let mut sim = Simulation::builder(Arc::clone(&spec))
                 .run_config(&run_config_of(&cfg))
+                .transport(transport)
                 .probe(PopRates::new("rates", cfg.steps().max(1)))
                 .build()?;
             sim.run_for(cfg.steps())?;
@@ -231,6 +346,17 @@ pub fn cmd_run(args: &Args) -> Result<()> {
             );
             println!("--- phase times (critical path) ---");
             print!("{}", out.timer_max.report());
+            if let Some(path) = &args.raster_out {
+                // TCP ranks each dump their own shard; `sort -n` over
+                // the concatenation reproduces a single-process dump
+                let path = match (cfg.transport, cfg.tcp_rank) {
+                    (CommTransport::Tcp, Some(r)) => {
+                        format!("{path}.r{r}")
+                    }
+                    _ => path.clone(),
+                };
+                write_raster(&path, &out.raster.events)?;
+            }
         }
         EngineKind::NestBaseline => {
             let out = run_nest_simulation(
@@ -254,8 +380,98 @@ pub fn cmd_run(args: &Args) -> Result<()> {
                 human_bytes(out.memory.max_rank_bytes()),
             );
             print!("{}", out.timer_max.report());
+            if let Some(path) = &args.raster_out {
+                write_raster(path, &out.raster.events)?;
+            }
         }
     }
+    Ok(())
+}
+
+/// Dump a spike raster as "step gid" lines (already (step, gid)-sorted
+/// by the merge) — the format the distributed smoke test diffs.
+fn write_raster(path: &str, events: &[(u64, u32)]) -> Result<()> {
+    use std::fmt::Write;
+    let mut s = String::with_capacity(events.len() * 12);
+    for (step, gid) in events {
+        let _ = writeln!(s, "{step} {gid}");
+    }
+    std::fs::write(path, s)
+        .with_context(|| format!("writing raster to {path}"))?;
+    println!("raster written to {path} ({} events)", events.len());
+    Ok(())
+}
+
+/// `cortex launch` — spawn an N-process TCP cluster on localhost: rank
+/// i runs `cortex run --rank i --peers 127.0.0.1:base,...` with the
+/// parent's config/overrides forwarded verbatim. Exits non-zero if any
+/// rank does.
+pub fn cmd_launch(args: &Args) -> Result<()> {
+    let cfg = args.experiment()?;
+    let n = args.ranks.unwrap_or(cfg.ranks);
+    ensure!(
+        (1..=1024).contains(&n),
+        "launch supports 1..=1024 ranks, got {n}"
+    );
+    ensure!(
+        args.port_base as usize + n <= u16::MAX as usize,
+        "--port-base {} leaves no room for {n} ports",
+        args.port_base
+    );
+    let peers: Vec<String> = (0..n)
+        .map(|i| format!("127.0.0.1:{}", args.port_base as usize + i))
+        .collect();
+    let peers_arg = peers.join(",");
+    let exe = std::env::current_exe()
+        .context("cannot locate the cortex binary")?;
+    println!("launching {n} rank processes: {peers_arg}");
+    let mut children = Vec::with_capacity(n);
+    for r in 0..n {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("run")
+            .arg("--rank")
+            .arg(r.to_string())
+            .arg("--peers")
+            .arg(&peers_arg);
+        if let Some(c) = &args.config_path {
+            cmd.arg("--config").arg(c);
+        }
+        for s in &args.overrides {
+            cmd.arg("--set").arg(s);
+        }
+        if args.artifacts_dir != "artifacts" {
+            cmd.arg("--artifacts").arg(&args.artifacts_dir);
+        }
+        if let Some(p) = &args.raster_out {
+            cmd.arg("--raster-out").arg(p);
+        }
+        match cmd.spawn() {
+            Ok(child) => children.push((r, child)),
+            Err(e) => {
+                // don't leak the ranks already launched — they would sit
+                // in their join loop for the full TCP timeout with no
+                // parent to reap them
+                for (_, mut child) in children {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+                return Err(anyhow::Error::from(e)
+                    .context(format!("spawning rank {r}")));
+            }
+        }
+    }
+    let mut failed = false;
+    for (r, mut child) in children {
+        let status = child
+            .wait()
+            .with_context(|| format!("waiting for rank {r}"))?;
+        if !status.success() {
+            eprintln!("rank {r} exited with {status}");
+            failed = true;
+        }
+    }
+    ensure!(!failed, "one or more rank processes failed");
+    println!("all {n} ranks completed");
     Ok(())
 }
 
@@ -355,12 +571,13 @@ pub fn main_with(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.subcommand.as_str() {
         "run" => cmd_run(&args),
+        "launch" => cmd_launch(&args),
         "verify" => cmd_verify(&args),
         "partition" => cmd_partition(&args),
         "info" => cmd_info(&args),
         other => bail!(
             "unknown subcommand '{other}' \
-             (expected run|verify|partition|info)"
+             (expected run|launch|verify|partition|info)"
         ),
     }
 }
@@ -393,6 +610,52 @@ mod tests {
         assert!(Args::parse(&s(&[])).is_err());
         assert!(Args::parse(&s(&["run", "--config"])).is_err());
         assert!(Args::parse(&s(&["run", "--bogus"])).is_err());
+        assert!(Args::parse(&s(&["run", "--rank", "x"])).is_err());
+        assert!(Args::parse(&s(&["launch", "--ranks"])).is_err());
+    }
+
+    #[test]
+    fn distributed_flags_parse_and_reach_the_config() {
+        let a = Args::parse(&s(&[
+            "run",
+            "--rank",
+            "1",
+            "--peers",
+            "127.0.0.1:7100, 127.0.0.1:7101",
+            "--raster-out",
+            "/tmp/r.txt",
+        ]))
+        .unwrap();
+        assert_eq!(a.rank, Some(1));
+        assert_eq!(a.raster_out.as_deref(), Some("/tmp/r.txt"));
+        let cfg = a.experiment().unwrap();
+        assert_eq!(cfg.transport, CommTransport::Tcp);
+        assert_eq!(cfg.tcp_rank, Some(1));
+        assert_eq!(cfg.ranks, 2);
+        assert_eq!(
+            cfg.peers,
+            vec![
+                "127.0.0.1:7100".to_string(),
+                "127.0.0.1:7101".to_string()
+            ]
+        );
+
+        let a = Args::parse(&s(&[
+            "launch",
+            "--ranks",
+            "3",
+            "--port-base",
+            "31000",
+        ]))
+        .unwrap();
+        assert_eq!(a.ranks, Some(3));
+        assert_eq!(a.port_base, 31000);
+        // launch itself stays on the local transport (children get
+        // --peers)
+        assert_eq!(
+            a.experiment().unwrap().transport,
+            CommTransport::Local
+        );
     }
 
     #[test]

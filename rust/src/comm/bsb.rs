@@ -19,11 +19,70 @@
 //!   emitted, `seal` the window, `drain` the remote spikes, matching the
 //!   dedicated-communication-thread usage of §III.C.2.
 //!
-//! The transport stays the in-memory [`Communicator`]; what changes is
-//! the wire volume and message count, both of which are measured and
-//! projected at Fugaku scale by `ablation_bsb`.
+//! Since the TCP rank runtime ([`crate::comm::tcp`]) this codec is the
+//! **actual on-the-wire format** between OS processes, which makes it a
+//! trust boundary: decoding is fully fallible ([`CodecError`]) and never
+//! panics on truncated, bit-flipped or adversarial input. A window
+//! exchange travels as one [`encode_frame`] payload — varint window
+//! counter, varint window start, then the packed spike list — inside a
+//! length-prefixed frame written by the transport.
+
+use std::fmt;
 
 use super::{SpikeMsg, SpikePacket};
+
+/// Longest legal varint: 10 bytes carry 70 payload bits; a u64 needs
+/// exactly that when every byte is a continuation.
+const MAX_VARINT_BYTES: usize = 10;
+
+/// A malformed wire payload. Every decoding path returns this instead of
+/// panicking — over a socket the peer's bytes are untrusted input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// The buffer ended mid-varint or before the declared spike count
+    /// was decoded.
+    Truncated,
+    /// A varint ran past 10 bytes / shifted beyond 63 bits.
+    VarintOverflow,
+    /// A decoded delta pushed a step or gid outside the 32-bit domain.
+    ValueOverflow,
+    /// The declared spike count disagrees with the frame length (bytes
+    /// left over after the last spike).
+    LengthMismatch { declared: u64, used: usize, len: usize },
+    /// A spike predates the window it is being packed into
+    /// (encode-side validation).
+    SpikeBeforeWindow { step: u32, window_start: u32 },
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Truncated => {
+                write!(f, "truncated spike packet")
+            }
+            CodecError::VarintOverflow => {
+                write!(f, "varint exceeds 64 bits")
+            }
+            CodecError::ValueOverflow => {
+                write!(f, "decoded step/gid outside the 32-bit domain")
+            }
+            CodecError::LengthMismatch { declared, used, len } => write!(
+                f,
+                "spike count disagrees with frame length \
+                 ({declared} spikes declared, {used} of {len} bytes used)"
+            ),
+            CodecError::SpikeBeforeWindow { step, window_start } => {
+                write!(
+                    f,
+                    "spike at step {step} predates window start \
+                     {window_start}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
 
 /// Varint (LEB128) encode.
 #[inline]
@@ -39,62 +98,177 @@ fn put_varint(out: &mut Vec<u8>, mut x: u64) {
     }
 }
 
-/// Varint decode; advances `pos`.
+/// Varint decode; advances `pos`. Fallible: a buffer that ends
+/// mid-varint is [`CodecError::Truncated`], a varint longer than
+/// [`MAX_VARINT_BYTES`] or carrying bits past 63 is
+/// [`CodecError::VarintOverflow`].
 #[inline]
-fn get_varint(buf: &[u8], pos: &mut usize) -> u64 {
+fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64, CodecError> {
     let mut x = 0u64;
-    let mut shift = 0;
-    loop {
-        let b = buf[*pos];
+    let mut shift = 0u32;
+    for _ in 0..MAX_VARINT_BYTES {
+        let b = *buf.get(*pos).ok_or(CodecError::Truncated)?;
         *pos += 1;
-        x |= ((b & 0x7f) as u64) << shift;
+        let low = (b & 0x7f) as u64;
+        // the 10th byte (shift 63) may only contribute the final bit
+        if shift == 63 && low > 1 {
+            return Err(CodecError::VarintOverflow);
+        }
+        x |= low << shift;
         if b & 0x80 == 0 {
-            return x;
+            return Ok(x);
         }
         shift += 7;
     }
+    Err(CodecError::VarintOverflow)
 }
 
 /// Pack one window's spikes: sorted by (step, gid), step stored as
 /// offset from `window_start`, gids delta-encoded per step group.
-pub fn pack(window_start: u32, spikes: &[SpikeMsg]) -> Vec<u8> {
+/// Errors with [`CodecError::SpikeBeforeWindow`] if any spike predates
+/// the window — that would underflow the step offset and poison the
+/// whole packet.
+pub fn pack(
+    window_start: u32,
+    spikes: &[SpikeMsg],
+) -> Result<Vec<u8>, CodecError> {
+    let mut out = Vec::with_capacity(spikes.len() + 8);
+    pack_into(window_start, spikes, &mut out)?;
+    Ok(out)
+}
+
+/// [`pack`] appending to an existing buffer (frame assembly).
+fn pack_into(
+    window_start: u32,
+    spikes: &[SpikeMsg],
+    out: &mut Vec<u8>,
+) -> Result<(), CodecError> {
     let mut sorted: Vec<(u32, u32)> =
         spikes.iter().map(|m| (m.step, m.gid)).collect();
     sorted.sort_unstable();
-    let mut out = Vec::with_capacity(sorted.len() + 8);
-    put_varint(&mut out, sorted.len() as u64);
+    if let Some(&(step, _)) = sorted.first() {
+        if step < window_start {
+            return Err(CodecError::SpikeBeforeWindow {
+                step,
+                window_start,
+            });
+        }
+    }
+    put_varint(out, sorted.len() as u64);
     let mut prev_step = window_start;
     let mut prev_gid = 0u32;
     for (step, gid) in sorted {
         let dstep = step - prev_step;
-        put_varint(&mut out, dstep as u64);
+        put_varint(out, dstep as u64);
         if dstep > 0 {
             prev_gid = 0; // gid deltas restart per step group
         }
-        put_varint(&mut out, (gid - prev_gid) as u64);
+        put_varint(out, (gid - prev_gid) as u64);
         prev_step = step;
         prev_gid = gid;
     }
-    out
+    Ok(())
 }
 
-/// Unpack (inverse of [`pack`]).
-pub fn unpack(window_start: u32, buf: &[u8]) -> SpikePacket {
+/// Unpack (inverse of [`pack`]). Fully fallible: truncated buffers,
+/// overlong varints, deltas escaping the 32-bit domain and packets
+/// whose declared spike count disagrees with the frame length are all
+/// [`CodecError`]s, never panics.
+pub fn unpack(
+    window_start: u32,
+    buf: &[u8],
+) -> Result<SpikePacket, CodecError> {
     let mut pos = 0usize;
-    let n = get_varint(buf, &mut pos) as usize;
-    let mut out = Vec::with_capacity(n);
-    let mut step = window_start;
-    let mut gid = 0u32;
+    let out = unpack_at(window_start, buf, &mut pos)?;
+    if pos != buf.len() {
+        return Err(CodecError::LengthMismatch {
+            declared: out.len() as u64,
+            used: pos,
+            len: buf.len(),
+        });
+    }
+    Ok(out)
+}
+
+/// Decode a packed spike list starting at `*pos`; advances `pos` past
+/// it (does not require it to reach the end of `buf`).
+fn unpack_at(
+    window_start: u32,
+    buf: &[u8],
+    pos: &mut usize,
+) -> Result<SpikePacket, CodecError> {
+    let n = get_varint(buf, pos)?;
+    // every spike costs at least 2 bytes (one varint each for dstep and
+    // dgid) — a declared count beyond that bound can never be satisfied,
+    // so reject it before allocating anything proportional to it
+    let remaining = (buf.len() - *pos) as u64;
+    if n.saturating_mul(2) > remaining {
+        return Err(CodecError::Truncated);
+    }
+    let mut out = Vec::with_capacity(n as usize);
+    let mut step = window_start as u64;
+    let mut gid = 0u64;
     for _ in 0..n {
-        let dstep = get_varint(buf, &mut pos) as u32;
-        step += dstep;
+        let dstep = get_varint(buf, pos)?;
+        step = step
+            .checked_add(dstep)
+            .ok_or(CodecError::ValueOverflow)?;
+        if step > u32::MAX as u64 {
+            return Err(CodecError::ValueOverflow);
+        }
         if dstep > 0 {
             gid = 0;
         }
-        gid += get_varint(buf, &mut pos) as u32;
-        out.push(SpikeMsg { gid, step });
+        let dgid = get_varint(buf, pos)?;
+        gid =
+            gid.checked_add(dgid).ok_or(CodecError::ValueOverflow)?;
+        if gid > u32::MAX as u64 {
+            return Err(CodecError::ValueOverflow);
+        }
+        out.push(SpikeMsg { gid: gid as u32, step: step as u32 });
     }
-    out
+    Ok(out)
+}
+
+/// Encode one window-exchange frame payload (the unit the TCP transport
+/// length-prefixes): varint window counter, varint window start, packed
+/// spikes. The window start is derived from the packet itself (minimum
+/// spike step; 0 when empty), so frames are self-describing and
+/// independent of the receiver's step bookkeeping.
+pub fn encode_frame(
+    window: u64,
+    spikes: &[SpikeMsg],
+) -> Result<Vec<u8>, CodecError> {
+    let start = spikes.iter().map(|m| m.step).min().unwrap_or(0);
+    let mut out = Vec::with_capacity(spikes.len() + 16);
+    put_varint(&mut out, window);
+    put_varint(&mut out, start as u64);
+    pack_into(start, spikes, &mut out)?;
+    Ok(out)
+}
+
+/// Decode a frame payload produced by [`encode_frame`]: returns the
+/// embedded window counter and the spikes. The caller is responsible
+/// for checking the counter against its own window position (see
+/// [`crate::comm::CommError::WindowMismatch`]).
+pub fn decode_frame(
+    buf: &[u8],
+) -> Result<(u64, SpikePacket), CodecError> {
+    let mut pos = 0usize;
+    let window = get_varint(buf, &mut pos)?;
+    let start = get_varint(buf, &mut pos)?;
+    if start > u32::MAX as u64 {
+        return Err(CodecError::ValueOverflow);
+    }
+    let spikes = unpack_at(start as u32, buf, &mut pos)?;
+    if pos != buf.len() {
+        return Err(CodecError::LengthMismatch {
+            declared: spikes.len() as u64,
+            used: pos,
+            len: buf.len(),
+        });
+    }
+    Ok((window, spikes))
 }
 
 /// Message-count/volume model of one window exchange among `ranks`.
@@ -183,9 +357,37 @@ mod tests {
         }
         let mut pos = 0;
         for &v in &values {
-            assert_eq!(get_varint(&buf, &mut pos), v);
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
         }
         assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn varint_truncation_and_overflow_are_errors() {
+        // ends mid-varint
+        let mut pos = 0;
+        assert_eq!(
+            get_varint(&[0x80, 0x80], &mut pos),
+            Err(CodecError::Truncated)
+        );
+        // 10 continuation bytes: shifted past 63 bits
+        let mut pos = 0;
+        assert_eq!(
+            get_varint(&[0xff; 11], &mut pos),
+            Err(CodecError::VarintOverflow)
+        );
+        // 10th byte may carry only the final bit
+        let mut buf = vec![0x80u8; 9];
+        buf.push(0x01);
+        let mut pos = 0;
+        assert_eq!(get_varint(&buf, &mut pos).unwrap(), 1u64 << 63);
+        let mut buf = vec![0x80u8; 9];
+        buf.push(0x02);
+        let mut pos = 0;
+        assert_eq!(
+            get_varint(&buf, &mut pos),
+            Err(CodecError::VarintOverflow)
+        );
     }
 
     #[test]
@@ -194,8 +396,8 @@ mod tests {
         for case in 0..50 {
             let start = case * 20;
             let spikes = window(&mut rng, start, 15, (case % 7) as usize * 13);
-            let buf = pack(start, &spikes);
-            let mut got = unpack(start, &buf);
+            let buf = pack(start, &spikes).unwrap();
+            let mut got = unpack(start, &buf).unwrap();
             let mut want = spikes.clone();
             want.sort_unstable_by_key(|m| (m.step, m.gid));
             got.sort_unstable_by_key(|m| (m.step, m.gid));
@@ -204,11 +406,70 @@ mod tests {
     }
 
     #[test]
+    fn frame_roundtrip_carries_the_window_counter() {
+        let mut rng = Rng::new(11);
+        for w in 0..20u64 {
+            let start = (w * 15) as u32 + 3;
+            let spikes = window(&mut rng, start, 15, (w % 5) as usize * 9);
+            let frame = encode_frame(w, &spikes).unwrap();
+            let (got_w, mut got) = decode_frame(&frame).unwrap();
+            assert_eq!(got_w, w);
+            let mut want = spikes.clone();
+            want.sort_unstable_by_key(|m| (m.step, m.gid));
+            got.sort_unstable_by_key(|m| (m.step, m.gid));
+            assert_eq!(got, want, "window {w}");
+        }
+    }
+
+    #[test]
+    fn pack_rejects_spike_before_window() {
+        let spikes = [SpikeMsg { gid: 1, step: 50 }];
+        assert_eq!(
+            pack(100, &spikes),
+            Err(CodecError::SpikeBeforeWindow {
+                step: 50,
+                window_start: 100
+            })
+        );
+    }
+
+    #[test]
+    fn unpack_rejects_trailing_bytes() {
+        let spikes = [SpikeMsg { gid: 3, step: 8 }];
+        let mut buf = pack(8, &spikes).unwrap();
+        buf.push(0x00);
+        assert!(matches!(
+            unpack(8, &buf),
+            Err(CodecError::LengthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn unpack_rejects_absurd_spike_count() {
+        // declares u64::MAX spikes in a 1-byte body: must error without
+        // attempting the allocation
+        let mut buf = Vec::new();
+        put_varint(&mut buf, u64::MAX);
+        buf.push(0x00);
+        assert_eq!(unpack(0, &buf), Err(CodecError::Truncated));
+    }
+
+    #[test]
+    fn unpack_rejects_value_overflow() {
+        // one spike whose dstep overflows u32 from window_start 0
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 1);
+        put_varint(&mut buf, (u32::MAX as u64) + 1);
+        put_varint(&mut buf, 0);
+        assert_eq!(unpack(0, &buf), Err(CodecError::ValueOverflow));
+    }
+
+    #[test]
     fn packing_beats_naive_wire_format() {
         let mut rng = Rng::new(9);
         // dense-ish window: 2000 spikes from 100k neurons over 15 steps
         let spikes = window(&mut rng, 1000, 15, 2000);
-        let packed = pack(1000, &spikes).len() as f64;
+        let packed = pack(1000, &spikes).unwrap().len() as f64;
         let naive = (spikes.len() * 8) as f64;
         assert!(
             packed < 0.5 * naive,
@@ -218,9 +479,13 @@ mod tests {
 
     #[test]
     fn empty_window() {
-        let buf = pack(7, &[]);
+        let buf = pack(7, &[]).unwrap();
         assert!(buf.len() <= 2);
-        assert!(unpack(7, &buf).is_empty());
+        assert!(unpack(7, &buf).unwrap().is_empty());
+        let frame = encode_frame(42, &[]).unwrap();
+        let (w, spikes) = decode_frame(&frame).unwrap();
+        assert_eq!(w, 42);
+        assert!(spikes.is_empty());
     }
 
     #[test]

@@ -4,12 +4,15 @@
 //!
 //! Window alignment is structural: each rank sends exactly one packet per
 //! window to every peer and channels are FIFO per (src, dst) pair, so the
-//! k-th receive from a peer is always that peer's window-k packet (the
-//! embedded window counter is asserted in debug builds).
+//! k-th receive from a peer is always that peer's window-k packet. The
+//! embedded window counter is nevertheless **verified on every receive**
+//! — in release builds too — and a mismatch is a returned
+//! [`CommError::WindowMismatch`], not a silently consumed stale packet;
+//! the TCP transport relies on the same contract across real sockets.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
-use super::{Communicator, SpikePacket, SPIKE_WIRE_BYTES};
+use super::{CommError, Communicator, SpikePacket, SPIKE_WIRE_BYTES};
 
 struct Packet {
     window: u64,
@@ -75,7 +78,10 @@ impl Communicator for LocalComm {
         self.size
     }
 
-    fn exchange(&mut self, local: SpikePacket) -> SpikePacket {
+    fn exchange(
+        &mut self,
+        local: SpikePacket,
+    ) -> Result<SpikePacket, CommError> {
         let window = self.window;
         self.window += 1;
         // broadcast to all peers
@@ -83,8 +89,8 @@ impl Communicator for LocalComm {
             if let Some(tx) = &self.to_peer[dst] {
                 self.bytes_sent +=
                     local.len() as u64 * SPIKE_WIRE_BYTES;
-                // peer hung up (e.g. panicked): ignore, the join will
-                // surface the real error
+                // peer hung up (e.g. errored out): ignore here, the
+                // receive below reports the lost peer
                 let _ = tx.send(Packet { window, spikes: local.clone() });
             }
         }
@@ -94,21 +100,24 @@ impl Communicator for LocalComm {
             if let Some(rx) = &self.from_peer[src] {
                 match rx.recv() {
                     Ok(p) => {
-                        debug_assert_eq!(
-                            p.window, window,
-                            "window misalignment {} vs {}",
-                            p.window, window
-                        );
+                        if p.window != window {
+                            return Err(CommError::WindowMismatch {
+                                got: p.window,
+                                want: window,
+                            });
+                        }
                         all.extend(p.spikes);
                     }
-                    Err(_) => panic!(
-                        "rank {} lost peer {src} during window {window}",
-                        self.rank
-                    ),
+                    Err(_) => {
+                        return Err(CommError::PeerLost {
+                            peer: src as u16,
+                            window,
+                        })
+                    }
                 }
             }
         }
-        all
+        Ok(all)
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -137,7 +146,7 @@ mod tests {
                         gid: c.rank() as u32 * 10,
                         step: 1,
                     }];
-                    let mut got = c.exchange(mine);
+                    let mut got = c.exchange(mine).unwrap();
                     got.sort_by_key(|m| m.gid);
                     got
                 })
@@ -164,7 +173,7 @@ mod tests {
                             gid: c.rank() as u32,
                             step: w,
                         }];
-                        let got = c.exchange(mine);
+                        let got = c.exchange(mine).unwrap();
                         sums.push(got[0].step);
                     }
                     sums
@@ -185,7 +194,7 @@ mod tests {
             .map(|mut c| {
                 thread::spawn(move || {
                     let spikes = vec![SpikeMsg { gid: 0, step: 0 }; 5];
-                    c.exchange(spikes);
+                    c.exchange(spikes).unwrap();
                     c.bytes_sent()
                 })
             })
@@ -197,9 +206,25 @@ mod tests {
     }
 
     #[test]
+    fn lost_peer_is_an_error_not_a_panic() {
+        let mut comms = LocalCluster::new(2);
+        let b = comms.pop().unwrap();
+        let mut a = comms.pop().unwrap();
+        drop(b); // peer 1 is gone before the first window
+        let err = a.exchange(Vec::new()).unwrap_err();
+        assert!(
+            matches!(err, CommError::PeerLost { peer: 1, window: 0 }),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
     fn single_rank_cluster_is_trivial() {
         let mut comms = LocalCluster::new(1);
         let mut c = comms.pop().unwrap();
-        assert!(c.exchange(vec![SpikeMsg { gid: 1, step: 0 }]).is_empty());
+        assert!(c
+            .exchange(vec![SpikeMsg { gid: 1, step: 0 }])
+            .unwrap()
+            .is_empty());
     }
 }

@@ -1,19 +1,29 @@
 //! Inter-rank communication (paper §III.C).
 //!
-//! The paper runs MPI ranks over Fugaku's Tofu-D; here ranks are OS
-//! threads wired by in-memory channels behind the same interface an MPI
-//! backend would implement ([`Communicator`]). What the algorithm
-//! exchanges — spiking pre-synaptic gids, once per min-delay window —
-//! and what overlaps what is identical; only the transport differs.
-//! [`netmodel`] carries Tofu-D constants to project measured message
-//! volumes onto Fugaku-scale communication times.
+//! The paper runs MPI ranks over Fugaku's Tofu-D; here a rank is either
+//! an OS thread wired by in-memory channels ([`local::LocalComm`]) or an
+//! OS **process** wired by TCP sockets ([`tcp::TcpComm`]) — both behind
+//! the same interface an MPI backend would implement
+//! ([`Communicator`]). What the algorithm exchanges — spiking
+//! pre-synaptic gids, once per min-delay window — and what overlaps
+//! what is identical; only the transport differs. On the wire the
+//! payload is the [`bsb`] packed format (varint delta coding plus an
+//! embedded window counter), which makes the codec a trust boundary:
+//! every decode is fallible and every exchange returns a [`CommError`]
+//! instead of panicking when a peer misbehaves. [`netmodel`] carries
+//! Tofu-D constants to project measured message volumes onto
+//! Fugaku-scale communication times.
 
 pub mod bsb;
 pub mod local;
 pub mod netmodel;
+pub mod tcp;
 
 pub use local::LocalCluster;
 pub use netmodel::TofuModel;
+pub use tcp::TcpComm;
+
+use std::fmt;
 
 use crate::Gid;
 
@@ -27,6 +37,74 @@ pub struct SpikeMsg {
 /// Payload of one window exchange.
 pub type SpikePacket = Vec<SpikeMsg>;
 
+/// A failed window exchange. Recoverable at the session layer (the
+/// rank loop surfaces it as an error response instead of poisoning the
+/// process) — malformed or misaligned wire traffic must never panic.
+#[derive(Debug)]
+pub enum CommError {
+    /// The peer's payload failed to decode (truncated / bit-flipped /
+    /// adversarial bytes).
+    Codec(bsb::CodecError),
+    /// The embedded window counter disagrees with this rank's window
+    /// position — a stale or reordered packet that must not be consumed.
+    WindowMismatch { got: u64, want: u64 },
+    /// A peer hung up (its channel closed / its process died)
+    /// mid-simulation.
+    PeerLost { peer: u16, window: u64 },
+    /// A length-prefixed frame announces a size beyond the sanity bound.
+    FrameTooLarge { bytes: usize, limit: usize },
+    /// The dedicated communication thread is gone (overlap mode).
+    Shutdown,
+    /// Transport-level I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::Codec(e) => write!(f, "malformed spike frame: {e}"),
+            CommError::WindowMismatch { got, want } => write!(
+                f,
+                "window misalignment: peer sent window {got}, \
+                 expected {want}"
+            ),
+            CommError::PeerLost { peer, window } => {
+                write!(f, "lost peer rank {peer} during window {window}")
+            }
+            CommError::FrameTooLarge { bytes, limit } => write!(
+                f,
+                "frame of {bytes} bytes exceeds the {limit}-byte bound"
+            ),
+            CommError::Shutdown => {
+                write!(f, "communication thread terminated")
+            }
+            CommError::Io(e) => write!(f, "transport I/O error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CommError::Codec(e) => Some(e),
+            CommError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<bsb::CodecError> for CommError {
+    fn from(e: bsb::CodecError) -> CommError {
+        CommError::Codec(e)
+    }
+}
+
+impl From<std::io::Error> for CommError {
+    fn from(e: std::io::Error) -> CommError {
+        CommError::Io(e)
+    }
+}
+
 /// MPI-like collective interface for one rank. `Send` so each rank's
 /// endpoint can live on its own thread (or be handed to a dedicated
 /// communication thread, paper §III.C.2).
@@ -36,8 +114,13 @@ pub trait Communicator: Send {
 
     /// Allgather-style spike broadcast: contribute this rank's spikes for
     /// the current window, receive every other rank's. Blocking; one call
-    /// per rank per window, in window order.
-    fn exchange(&mut self, local: SpikePacket) -> SpikePacket;
+    /// per rank per window, in window order. Window misalignment, peer
+    /// loss and malformed wire input surface as [`CommError`]s — an
+    /// endpoint that has returned an error must not be reused.
+    fn exchange(
+        &mut self,
+        local: SpikePacket,
+    ) -> Result<SpikePacket, CommError>;
 
     /// Total payload bytes this rank has sent so far (for the network
     /// cost model).
@@ -74,9 +157,12 @@ impl Communicator for SoloComm {
     fn size(&self) -> usize {
         1
     }
-    fn exchange(&mut self, _local: SpikePacket) -> SpikePacket {
+    fn exchange(
+        &mut self,
+        _local: SpikePacket,
+    ) -> Result<SpikePacket, CommError> {
         self.count += 1;
-        Vec::new()
+        Ok(Vec::new())
     }
     fn bytes_sent(&self) -> u64 {
         0
@@ -94,7 +180,7 @@ mod tests {
     fn solo_comm_echoes_nothing() {
         let mut c = SoloComm::new();
         assert_eq!(c.size(), 1);
-        let got = c.exchange(vec![SpikeMsg { gid: 1, step: 2 }]);
+        let got = c.exchange(vec![SpikeMsg { gid: 1, step: 2 }]).unwrap();
         assert!(got.is_empty());
         assert_eq!(c.exchanges(), 1);
     }

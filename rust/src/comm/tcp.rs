@@ -1,0 +1,628 @@
+//! TCP rank runtime: ranks are OS **processes**, the transport is a full
+//! mesh of TCP streams, and the [`bsb`] packed format is the actual
+//! on-the-wire protocol — the paper's Spikes Broadcast collective
+//! carried over real sockets instead of in-memory channels.
+//!
+//! # Cluster formation
+//!
+//! Every rank knows the full rank-ordered address list (`peers[r]` is
+//! rank r's listen address). Rank `i` binds `peers[i]`, dials every
+//! lower rank (retrying until that peer's listener is up, bounded by a
+//! deadline) and accepts one connection from every higher rank. Each
+//! stream opens with a fixed 14-byte handshake — magic, wire version,
+//! sender rank, cluster size — validated on both ends, so a stray or
+//! mis-configured process is rejected before any simulation traffic.
+//!
+//! # Exchange protocol
+//!
+//! One `exchange` call sends one **length-prefixed frame** (4-byte LE
+//! length, then a [`bsb::encode_frame`] payload: varint window counter,
+//! varint window start, packed spikes) to every peer and blocks reading
+//! exactly one frame back from each, concatenating payloads in rank
+//! order — the same send-to-all / receive-from-all collective
+//! [`super::local::LocalComm`] performs, with the same deterministic
+//! concatenation order, so rasters are bit-identical across the two
+//! transports. The embedded window counter is verified on **every**
+//! receive; a stale frame, a truncated or bit-flipped payload, or an
+//! oversized length prefix each surface as a [`CommError`] — never a
+//! panic — and the endpoint is considered poisoned afterwards.
+//!
+//! Streams run with `TCP_NODELAY` (one small latency-critical frame per
+//! window per peer, the paper's §III.C traffic shape). Frames are
+//! written to every peer before any is read; per-window spike payloads
+//! are orders of magnitude below kernel socket buffers, so the
+//! all-write-then-all-read pattern cannot deadlock at the scales the
+//! in-memory engine reaches on one host.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::{bsb, CommError, Communicator, SpikePacket};
+
+/// Handshake magic: "CORTEXTC" as LE bytes.
+const HANDSHAKE_MAGIC: u64 = 0x4354_5845_5452_4f43;
+
+/// Bump when the frame layout changes; both ends must agree.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Sanity bound on one frame's payload (64 MiB ≈ tens of millions of
+/// packed spikes per window per rank — far beyond anything a real
+/// window produces). A length prefix above this is treated as
+/// corruption, not honored with an allocation.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Poll interval while dialing a peer that is not listening yet.
+const RETRY_EVERY: Duration = Duration::from_millis(50);
+
+/// Frames up to this size are written to all peers inline before any
+/// read — they fit comfortably inside default kernel socket buffers, so
+/// the write side can never block on a peer that is itself still
+/// writing. Larger frames (hundreds of thousands of packed spikes in
+/// one window) are pushed from a helper thread instead, with this
+/// thread draining reads concurrently, so a mesh of mutually-writing
+/// ranks degrades to an error or completes rather than deadlocking.
+const INLINE_WRITE_BYTES: usize = 1 << 18;
+
+/// One rank's endpoint of a TCP cluster.
+pub struct TcpComm {
+    rank: u16,
+    size: usize,
+    /// streams[r] connects to rank r (self slot `None`).
+    streams: Vec<Option<TcpStream>>,
+    window: u64,
+    bytes_sent: u64,
+}
+
+impl TcpComm {
+    /// Join a cluster of `peers.len()` ranks as rank `rank`: bind
+    /// `peers[rank]` and connect the full mesh. Blocks until every peer
+    /// is connected and validated, or `timeout` expires.
+    pub fn join(
+        rank: u16,
+        peers: &[String],
+        timeout: Duration,
+    ) -> Result<TcpComm> {
+        ensure!(!peers.is_empty(), "peer list is empty");
+        ensure!(
+            (rank as usize) < peers.len(),
+            "rank {rank} does not index the {}-entry peer list",
+            peers.len()
+        );
+        let addr = &peers[rank as usize];
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("rank {rank} binding {addr}"))?;
+        Self::join_with_listener(rank, listener, peers, timeout)
+    }
+
+    /// [`Self::join`] over a listener the caller already bound — lets
+    /// tests and launchers use ephemeral (`:0`) ports: bind first,
+    /// collect the real addresses into `peers`, then join.
+    pub fn join_with_listener(
+        rank: u16,
+        listener: TcpListener,
+        peers: &[String],
+        timeout: Duration,
+    ) -> Result<TcpComm> {
+        let size = peers.len();
+        ensure!(size >= 1, "peer list is empty");
+        ensure!(
+            size <= u16::MAX as usize,
+            "cluster size {size} exceeds 65535 ranks"
+        );
+        ensure!(
+            (rank as usize) < size,
+            "rank {rank} does not index the {size}-entry peer list"
+        );
+        let deadline = Instant::now() + timeout;
+        let mut streams: Vec<Option<TcpStream>> =
+            (0..size).map(|_| None).collect();
+
+        // dial every lower rank (it was launched no later than us and
+        // is — or will be — listening); retry until the deadline
+        for dst in 0..rank as usize {
+            let stream = connect_retry(&peers[dst], deadline)
+                .with_context(|| {
+                    format!("rank {rank} dialing rank {dst}")
+                })?;
+            prepare(&stream, deadline)?;
+            write_hello(&stream, rank, size)?;
+            let peer = read_hello(&stream, size).with_context(|| {
+                format!("rank {rank} handshaking with rank {dst}")
+            })?;
+            ensure!(
+                peer as usize == dst,
+                "address {} answered as rank {peer}, expected rank {dst} \
+                 — peer list mismatch",
+                peers[dst]
+            );
+            stream.set_read_timeout(None)?;
+            streams[dst] = Some(stream);
+        }
+
+        // accept one connection from every higher rank
+        listener.set_nonblocking(true)?;
+        let mut missing = size - 1 - rank as usize;
+        while missing > 0 {
+            match listener.accept() {
+                Ok((stream, addr)) => {
+                    // a failed hello here (port scanner, health check,
+                    // stray process, line noise) drops the connection
+                    // and keeps accepting — only a *validated* cortex
+                    // peer can hard-fail the join. The hello read is
+                    // capped at 2 s so a silent stray cannot stall the
+                    // queue behind it for the whole join timeout.
+                    let hello = (|| -> Result<u16> {
+                        stream.set_nonblocking(false)?;
+                        stream.set_nodelay(true)?;
+                        let left = deadline
+                            .checked_duration_since(Instant::now())
+                            .filter(|d| !d.is_zero())
+                            .unwrap_or(Duration::from_millis(1));
+                        stream.set_read_timeout(Some(
+                            left.min(Duration::from_secs(2)),
+                        ))?;
+                        read_hello(&stream, size)
+                    })();
+                    let peer = match hello {
+                        Ok(p) => p,
+                        Err(e) => {
+                            eprintln!(
+                                "rank {rank}: rejecting a stray \
+                                 connection from {addr}: {e:#}"
+                            );
+                            continue;
+                        }
+                    };
+                    ensure!(
+                        (peer as usize) > (rank as usize)
+                            && (peer as usize) < size,
+                        "unexpected connection from rank {peer}"
+                    );
+                    ensure!(
+                        streams[peer as usize].is_none(),
+                        "duplicate connection from rank {peer}"
+                    );
+                    write_hello(&stream, rank, size)?;
+                    stream.set_read_timeout(None)?;
+                    streams[peer as usize] = Some(stream);
+                    missing -= 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    ensure!(
+                        Instant::now() < deadline,
+                        "rank {rank} timed out waiting for {missing} \
+                         peer connection(s)"
+                    );
+                    std::thread::sleep(RETRY_EVERY);
+                }
+                Err(e) => {
+                    return Err(anyhow!(
+                        "rank {rank} accepting a peer: {e}"
+                    ))
+                }
+            }
+        }
+        Ok(TcpComm { rank, size, streams, window: 0, bytes_sent: 0 })
+    }
+
+    /// Receive-from-all: read exactly one length-prefixed frame from
+    /// every peer, verify its embedded window counter, and concatenate
+    /// the payloads in rank order (the exact order
+    /// [`super::local::LocalComm`]'s channel gather produces).
+    fn gather(
+        &mut self,
+        window: u64,
+    ) -> Result<SpikePacket, CommError> {
+        let mut all = Vec::new();
+        for src in 0..self.size {
+            let Some(stream) = self.streams[src].as_mut() else {
+                continue;
+            };
+            let mut len = [0u8; 4];
+            stream.read_exact(&mut len).map_err(|e| {
+                if e.kind() == ErrorKind::UnexpectedEof {
+                    CommError::PeerLost { peer: src as u16, window }
+                } else {
+                    CommError::Io(e)
+                }
+            })?;
+            let len = u32::from_le_bytes(len) as usize;
+            if len > MAX_FRAME_BYTES {
+                return Err(CommError::FrameTooLarge {
+                    bytes: len,
+                    limit: MAX_FRAME_BYTES,
+                });
+            }
+            let mut buf = vec![0u8; len];
+            stream.read_exact(&mut buf).map_err(|e| {
+                if e.kind() == ErrorKind::UnexpectedEof {
+                    CommError::PeerLost { peer: src as u16, window }
+                } else {
+                    CommError::Io(e)
+                }
+            })?;
+            let (got_window, spikes) = bsb::decode_frame(&buf)?;
+            if got_window != window {
+                return Err(CommError::WindowMismatch {
+                    got: got_window,
+                    want: window,
+                });
+            }
+            all.extend(spikes);
+        }
+        Ok(all)
+    }
+}
+
+/// Dial `addr`, retrying while the peer's listener is not up yet.
+fn connect_retry(addr: &str, deadline: Instant) -> Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    bail!("connecting to {addr}: {e}");
+                }
+                std::thread::sleep(RETRY_EVERY);
+            }
+        }
+    }
+}
+
+/// Per-stream setup: no Nagle batching (one latency-critical frame per
+/// window), bounded reads during the handshake.
+fn prepare(stream: &TcpStream, deadline: Instant) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let left = deadline
+        .checked_duration_since(Instant::now())
+        .filter(|d| !d.is_zero())
+        .unwrap_or(Duration::from_millis(1));
+    stream.set_read_timeout(Some(left))?;
+    Ok(())
+}
+
+fn write_hello(
+    mut stream: &TcpStream,
+    rank: u16,
+    size: usize,
+) -> Result<()> {
+    let mut hello = [0u8; 14];
+    hello[0..8].copy_from_slice(&HANDSHAKE_MAGIC.to_le_bytes());
+    hello[8..10].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    hello[10..12].copy_from_slice(&rank.to_le_bytes());
+    hello[12..14].copy_from_slice(&(size as u16).to_le_bytes());
+    stream.write_all(&hello)?;
+    Ok(())
+}
+
+/// Read and validate a peer's hello; returns its rank.
+fn read_hello(mut stream: &TcpStream, size: usize) -> Result<u16> {
+    let mut hello = [0u8; 14];
+    stream.read_exact(&mut hello)?;
+    let magic = u64::from_le_bytes(hello[0..8].try_into().unwrap());
+    ensure!(
+        magic == HANDSHAKE_MAGIC,
+        "bad handshake magic {magic:#018x} — not a cortex rank"
+    );
+    let version =
+        u16::from_le_bytes(hello[8..10].try_into().unwrap());
+    ensure!(
+        version == WIRE_VERSION,
+        "wire version mismatch: peer speaks v{version}, \
+         this build speaks v{WIRE_VERSION}"
+    );
+    let rank = u16::from_le_bytes(hello[10..12].try_into().unwrap());
+    let peer_size =
+        u16::from_le_bytes(hello[12..14].try_into().unwrap()) as usize;
+    ensure!(
+        peer_size == size,
+        "cluster size mismatch: peer expects {peer_size} ranks, \
+         this rank expects {size}"
+    );
+    Ok(rank)
+}
+
+impl Communicator for TcpComm {
+    fn rank(&self) -> u16 {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn exchange(
+        &mut self,
+        local: SpikePacket,
+    ) -> Result<SpikePacket, CommError> {
+        let window = self.window;
+        self.window += 1;
+        let frame = bsb::encode_frame(window, &local)?;
+        if frame.len() > MAX_FRAME_BYTES {
+            return Err(CommError::FrameTooLarge {
+                bytes: frame.len(),
+                limit: MAX_FRAME_BYTES,
+            });
+        }
+        let len = (frame.len() as u32).to_le_bytes();
+        if frame.len() <= INLINE_WRITE_BYTES {
+            // the steady state: send-to-all, then receive-from-all
+            for dst in 0..self.size {
+                if let Some(stream) = self.streams[dst].as_mut() {
+                    stream.write_all(&len)?;
+                    stream.write_all(&frame)?;
+                    self.bytes_sent += (4 + frame.len()) as u64;
+                }
+            }
+            return self.gather(window);
+        }
+        // a frame this large could fill both directions' socket buffers
+        // while every rank is still in its write loop; write on dup'd
+        // handles from a helper thread so reads drain concurrently
+        let mut writers: Vec<TcpStream> = Vec::new();
+        for s in self.streams.iter().flatten() {
+            writers.push(s.try_clone()?);
+        }
+        self.bytes_sent +=
+            writers.len() as u64 * (4 + frame.len()) as u64;
+        let frame = &frame;
+        let len = &len;
+        std::thread::scope(|scope| {
+            let writer =
+                scope.spawn(move || -> Result<(), CommError> {
+                    let mut writers = writers;
+                    for s in writers.iter_mut() {
+                        s.write_all(len)?;
+                        s.write_all(frame)?;
+                    }
+                    Ok(())
+                });
+            let got = self.gather(window);
+            let wrote =
+                writer.join().expect("writer thread panicked");
+            wrote.and(got)
+        })
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.bytes_sent
+    }
+
+    fn exchanges(&self) -> u64 {
+        self.window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::SpikeMsg;
+    use std::thread;
+
+    /// Bind ephemeral listeners, join all ranks concurrently.
+    fn cluster(n: usize) -> Vec<TcpComm> {
+        let listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let peers: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        let handles: Vec<_> = listeners
+            .into_iter()
+            .enumerate()
+            .map(|(r, l)| {
+                let peers = peers.clone();
+                thread::spawn(move || {
+                    TcpComm::join_with_listener(
+                        r as u16,
+                        l,
+                        &peers,
+                        Duration::from_secs(10),
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        let mut comms: Vec<TcpComm> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        comms.sort_by_key(|c| c.rank());
+        comms
+    }
+
+    #[test]
+    fn allgather_three_ranks_over_sockets() {
+        let comms = cluster(3);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    for w in 0..5u32 {
+                        let mine = vec![SpikeMsg {
+                            gid: c.rank() as u32 * 10,
+                            step: w,
+                        }];
+                        got.push(c.exchange(mine).unwrap());
+                    }
+                    assert_eq!(c.exchanges(), 5);
+                    assert!(c.bytes_sent() > 0);
+                    (c.rank(), got)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, windows) = h.join().unwrap();
+            for (w, got) in windows.into_iter().enumerate() {
+                assert_eq!(got.len(), 2, "rank {rank} window {w}");
+                for m in &got {
+                    assert_ne!(m.gid, rank as u32 * 10);
+                    assert_eq!(m.step, w as u32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn window_mismatch_is_an_error_on_both_sides() {
+        let mut comms = cluster(2);
+        let mut b = comms.pop().unwrap();
+        let mut a = comms.pop().unwrap();
+        a.window = 3; // desynchronize rank 0
+        let ha = thread::spawn(move || a.exchange(Vec::new()));
+        let hb = thread::spawn(move || b.exchange(Vec::new()));
+        let ea = ha.join().unwrap().unwrap_err();
+        let eb = hb.join().unwrap().unwrap_err();
+        assert!(
+            matches!(ea, CommError::WindowMismatch { got: 0, want: 3 }),
+            "rank 0: {ea}"
+        );
+        assert!(
+            matches!(eb, CommError::WindowMismatch { got: 3, want: 0 }),
+            "rank 1: {eb}"
+        );
+    }
+
+    #[test]
+    fn garbage_frame_is_a_codec_error_not_a_panic() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dial = thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (srv, _) = listener.accept().unwrap();
+        let mut peer = dial.join().unwrap();
+        // a hand-built endpoint wired straight to the fake peer
+        let mut comm = TcpComm {
+            rank: 0,
+            size: 2,
+            streams: vec![None, Some(srv)],
+            window: 0,
+            bytes_sent: 0,
+        };
+        // 16 bytes of 0xff: the embedded window varint overflows
+        let garbage = [0xffu8; 16];
+        peer.write_all(&(garbage.len() as u32).to_le_bytes()).unwrap();
+        peer.write_all(&garbage).unwrap();
+        let err = comm.exchange(Vec::new()).unwrap_err();
+        assert!(matches!(err, CommError::Codec(_)), "{err}");
+    }
+
+    #[test]
+    fn truncated_stream_is_peer_lost_not_a_panic() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dial = thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (srv, _) = listener.accept().unwrap();
+        let mut peer = dial.join().unwrap();
+        let mut comm = TcpComm {
+            rank: 0,
+            size: 2,
+            streams: vec![None, Some(srv)],
+            window: 0,
+            bytes_sent: 0,
+        };
+        // announce 100 bytes, deliver 3, hang up mid-frame
+        peer.write_all(&100u32.to_le_bytes()).unwrap();
+        peer.write_all(&[1, 2, 3]).unwrap();
+        drop(peer);
+        let err = comm.exchange(Vec::new()).unwrap_err();
+        assert!(
+            matches!(err, CommError::PeerLost { peer: 1, window: 0 }),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dial = thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (srv, _) = listener.accept().unwrap();
+        let mut peer = dial.join().unwrap();
+        let mut comm = TcpComm {
+            rank: 0,
+            size: 2,
+            streams: vec![None, Some(srv)],
+            window: 0,
+            bytes_sent: 0,
+        };
+        peer.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let err = comm.exchange(Vec::new()).unwrap_err();
+        assert!(matches!(err, CommError::FrameTooLarge { .. }), "{err}");
+    }
+
+    #[test]
+    fn stray_connection_is_rejected_join_times_out_without_peer() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let peers = vec![
+            listener.local_addr().unwrap().to_string(),
+            "127.0.0.1:1".to_string(), // never dialed by rank 0
+        ];
+        let addr = listener.local_addr().unwrap();
+        let fake = thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&[0u8; 14]).unwrap(); // zero magic
+            s
+        });
+        // the stray is dropped (not fatal); with no real rank 1 the
+        // join then runs out its deadline
+        let err = TcpComm::join_with_listener(
+            0,
+            listener,
+            &peers,
+            Duration::from_secs(2),
+        )
+        .unwrap_err();
+        let _ = fake.join().unwrap();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("timed out"), "unexpected error: {msg}");
+    }
+
+    #[test]
+    fn tcp_exchange_matches_local_exchange() {
+        use crate::comm::LocalCluster;
+        // identical per-rank spike schedules through both transports
+        let spikes_of = |rank: u16, w: u32| -> Vec<SpikeMsg> {
+            (0..(rank as u32 + w) % 4)
+                .map(|i| SpikeMsg {
+                    gid: rank as u32 * 1000 + i,
+                    step: w * 10 + i,
+                })
+                .collect()
+        };
+        let windows = 6u32;
+        let run = |mut comms: Vec<Box<dyn Communicator>>| -> Vec<Vec<SpikeMsg>> {
+            let handles: Vec<_> = comms
+                .drain(..)
+                .map(|mut c| {
+                    thread::spawn(move || {
+                        let mut per_rank = Vec::new();
+                        for w in 0..windows {
+                            let mut got = c
+                                .exchange(spikes_of(c.rank(), w))
+                                .unwrap();
+                            got.sort_unstable_by_key(|m| (m.step, m.gid));
+                            per_rank.push(got);
+                        }
+                        (c.rank(), per_rank)
+                    })
+                })
+                .collect();
+            let mut outs: Vec<(u16, Vec<Vec<SpikeMsg>>)> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            outs.sort_by_key(|(r, _)| *r);
+            outs.into_iter().flat_map(|(_, v)| v).collect()
+        };
+        let local: Vec<Box<dyn Communicator>> = LocalCluster::new(3)
+            .into_iter()
+            .map(|c| Box::new(c) as Box<dyn Communicator>)
+            .collect();
+        let tcp: Vec<Box<dyn Communicator>> = cluster(3)
+            .into_iter()
+            .map(|c| Box::new(c) as Box<dyn Communicator>)
+            .collect();
+        assert_eq!(run(local), run(tcp));
+    }
+}

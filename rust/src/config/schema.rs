@@ -91,6 +91,16 @@ pub enum DynamicsBackend {
     Pjrt,
 }
 
+/// Inter-rank transport (`engine.transport`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommTransport {
+    /// All ranks in one process, in-memory channels (the default).
+    Local,
+    /// One rank per OS process, BSB frames over TCP sockets
+    /// (`cortex launch` / `cortex run --rank i --peers ...`).
+    Tcp,
+}
+
 /// Spike-exchange mode (paper §III.C).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommMode {
@@ -157,6 +167,14 @@ pub struct ExperimentConfig {
     pub comm: CommMode,
     pub exec: ExecMode,
     pub artifacts_dir: String,
+    /// Inter-rank transport: in-process channels or TCP processes.
+    pub transport: CommTransport,
+    /// Global rank this process hosts (`engine.rank` / `--rank`;
+    /// TCP transport only).
+    pub tcp_rank: Option<usize>,
+    /// Rank-ordered listen addresses of the TCP cluster
+    /// (`engine.peers` / `--peers`); must have exactly `ranks` entries.
+    pub peers: Vec<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -190,6 +208,9 @@ impl Default for ExperimentConfig {
             comm: CommMode::Overlap,
             exec: ExecMode::Pool,
             artifacts_dir: "artifacts".into(),
+            transport: CommTransport::Local,
+            tcp_rank: None,
+            peers: Vec::new(),
         }
     }
 }
@@ -277,6 +298,17 @@ impl ExperimentConfig {
                 ],
             )?,
             artifacts_dir: doc.str("engine.artifacts_dir", &d.artifacts_dir)?,
+            transport: parse_enum(
+                doc,
+                "engine.transport",
+                "local",
+                &[
+                    ("local", CommTransport::Local),
+                    ("tcp", CommTransport::Tcp),
+                ],
+            )?,
+            tcp_rank: parse_tcp_rank(doc)?,
+            peers: parse_peers(doc)?,
         };
         // the custom-builder scaffold knobs are not wired into the
         // parametric builders (which have their own calibrated values) —
@@ -346,6 +378,41 @@ impl ExperimentConfig {
         if self.threads == 0 {
             return bad("engine.threads", "must be > 0");
         }
+        if self.transport == CommTransport::Tcp {
+            if self.peers.is_empty() {
+                return bad(
+                    "engine.peers",
+                    "tcp transport needs a rank-ordered \"host:port\" \
+                     address list",
+                );
+            }
+            if self.peers.len() != self.ranks {
+                return bad(
+                    "engine.peers",
+                    "must list exactly engine.ranks addresses",
+                );
+            }
+            if let Some(r) = self.tcp_rank {
+                if r >= self.peers.len() {
+                    return bad(
+                        "engine.rank",
+                        "must index the engine.peers list",
+                    );
+                }
+            }
+            if self.engine == EngineKind::NestBaseline {
+                return bad(
+                    "engine.transport",
+                    "nest_baseline supports only the local transport",
+                );
+            }
+        } else if self.tcp_rank.is_some() || !self.peers.is_empty() {
+            return bad(
+                "engine.rank",
+                "engine.rank / engine.peers are only used with \
+                 engine.transport = \"tcp\"",
+            );
+        }
         Ok(())
     }
 
@@ -379,6 +446,44 @@ fn parse_model(
             "unknown neuron model '{s}' (expected lif|adex|hh|parrot)"
         ),
     })
+}
+
+/// `engine.rank` — optional (the launcher's parent config omits it and
+/// each spawned process supplies its own via `--rank`).
+fn parse_tcp_rank(
+    doc: &ConfigDoc,
+) -> Result<Option<usize>, ConfigError> {
+    match doc.get("engine.rank") {
+        None => Ok(None),
+        Some(v) => v
+            .as_i64()
+            .filter(|x| *x >= 0)
+            .map(|x| Some(x as usize))
+            .ok_or(ConfigError::Type {
+                key: "engine.rank".into(),
+                expected: "non-negative integer",
+            }),
+    }
+}
+
+/// `engine.peers` — rank-ordered `"host:port"` strings.
+fn parse_peers(doc: &ConfigDoc) -> Result<Vec<String>, ConfigError> {
+    match doc.get("engine.peers") {
+        None => Ok(Vec::new()),
+        Some(Value::Array(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_str().map(str::to_string).ok_or(ConfigError::Type {
+                    key: "engine.peers".into(),
+                    expected: "array of \"host:port\" strings",
+                })
+            })
+            .collect(),
+        Some(_) => Err(ConfigError::Type {
+            key: "engine.peers".into(),
+            expected: "array of \"host:port\" strings",
+        }),
+    }
 }
 
 fn parse_custom_pops(
@@ -556,6 +661,61 @@ comm = "serialized"
                 "expected error for {k}={v}"
             );
         }
+    }
+
+    #[test]
+    fn tcp_transport_parses_and_validates() {
+        // defaults to local
+        let doc = ConfigDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.transport, CommTransport::Local);
+        assert_eq!(cfg.tcp_rank, None);
+        assert!(cfg.peers.is_empty());
+
+        // a complete tcp config
+        let doc = ConfigDoc::parse(
+            r#"
+[engine]
+transport = "tcp"
+ranks = 2
+rank = 1
+peers = ["127.0.0.1:7001", "127.0.0.1:7002"]
+"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.transport, CommTransport::Tcp);
+        assert_eq!(cfg.tcp_rank, Some(1));
+        assert_eq!(cfg.peers.len(), 2);
+
+        // tcp without peers is rejected
+        let doc =
+            ConfigDoc::parse("[engine]\ntransport = \"tcp\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        // peer-count / rank-count mismatch is rejected
+        let doc = ConfigDoc::parse(
+            "[engine]\ntransport = \"tcp\"\nranks = 3\n\
+             peers = [\"a:1\", \"b:2\"]",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        // rank outside the peer list is rejected
+        let doc = ConfigDoc::parse(
+            "[engine]\ntransport = \"tcp\"\nranks = 2\nrank = 7\n\
+             peers = [\"a:1\", \"b:2\"]",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        // tcp-only keys on the local transport are rejected
+        let doc = ConfigDoc::parse("[engine]\nrank = 0").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        // nest_baseline cannot run distributed
+        let doc = ConfigDoc::parse(
+            "[engine]\nkind = \"nest_baseline\"\ntransport = \"tcp\"\n\
+             ranks = 2\npeers = [\"a:1\", \"b:2\"]",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 
     #[test]

@@ -6,11 +6,18 @@
 //! (`engine::session`) synchronizes the two at window boundaries — the
 //! pool's workers compute window `k` while the comm thread exchanges
 //! window `k-1`'s spikes (paper §III.C.2).
+//!
+//! Exchange failures ([`CommError`]: window misalignment, malformed
+//! wire frames, lost peers) propagate through [`CommDriver::submit`] /
+//! [`CommDriver::recv_completed`] as errors — in overlap mode the
+//! communication thread forwards the error over its response channel
+//! and exits, so a poisoned transport surfaces on the rank loop instead
+//! of panicking a detached thread.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
-use crate::comm::{Communicator, SpikePacket};
+use crate::comm::{CommError, Communicator, SpikePacket};
 use crate::config::CommMode;
 
 /// Spike-exchange driver: one per rank, owned by its session rank
@@ -22,7 +29,7 @@ pub(crate) enum CommDriver {
     },
     Overlap {
         req: Sender<SpikePacket>,
-        resp: Receiver<SpikePacket>,
+        resp: Receiver<Result<SpikePacket, CommError>>,
         handle: JoinHandle<Box<dyn Communicator>>,
         in_flight: bool,
     },
@@ -36,14 +43,18 @@ impl CommDriver {
             }
             CommMode::Overlap => {
                 let (req_tx, req_rx) = channel::<SpikePacket>();
-                let (resp_tx, resp_rx) = channel::<SpikePacket>();
+                let (resp_tx, resp_rx) =
+                    channel::<Result<SpikePacket, CommError>>();
                 let mut comm = comm;
                 let handle = std::thread::spawn(move || {
                     // the dedicated communication thread: drains exchange
-                    // requests until the engine hangs up
+                    // requests until the engine hangs up or the transport
+                    // errors out (the error is forwarded, then the thread
+                    // exits — its endpoint is poisoned)
                     while let Ok(pkt) = req_rx.recv() {
                         let got = comm.exchange(pkt);
-                        if resp_tx.send(got).is_err() {
+                        let failed = got.is_err();
+                        if resp_tx.send(got).is_err() || failed {
                             break;
                         }
                     }
@@ -59,33 +70,41 @@ impl CommDriver {
         }
     }
 
-    /// Submit this window's spikes for exchange.
-    pub fn submit(&mut self, pkt: SpikePacket) {
+    /// Submit this window's spikes for exchange. In serialized mode the
+    /// exchange happens here (and its failure surfaces here); in
+    /// overlap mode failures surface on the matching
+    /// [`Self::recv_completed`].
+    pub fn submit(&mut self, pkt: SpikePacket) -> Result<(), CommError> {
         match self {
             CommDriver::Serialized { comm, staged } => {
                 debug_assert!(staged.is_none());
-                *staged = Some(comm.exchange(pkt));
+                *staged = Some(comm.exchange(pkt)?);
+                Ok(())
             }
             CommDriver::Overlap { req, in_flight, .. } => {
                 debug_assert!(!*in_flight);
-                req.send(pkt).expect("comm thread died");
+                req.send(pkt).map_err(|_| CommError::Shutdown)?;
                 *in_flight = true;
+                Ok(())
             }
         }
     }
 
     /// Receive the previously submitted window's remote spikes.
-    pub fn recv_completed(&mut self) -> SpikePacket {
+    pub fn recv_completed(&mut self) -> Result<SpikePacket, CommError> {
         match self {
             CommDriver::Serialized { staged, .. } => {
-                staged.take().unwrap_or_default()
+                Ok(staged.take().unwrap_or_default())
             }
             CommDriver::Overlap { resp, in_flight, .. } => {
                 if *in_flight {
                     *in_flight = false;
-                    resp.recv().expect("comm thread died")
+                    match resp.recv() {
+                        Ok(r) => r,
+                        Err(_) => Err(CommError::Shutdown),
+                    }
                 } else {
-                    Vec::new()
+                    Ok(Vec::new())
                 }
             }
         }

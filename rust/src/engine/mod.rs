@@ -60,7 +60,9 @@ pub mod ring;
 pub mod session;
 mod workers;
 
-pub use session::{Simulation, SimulationBuilder};
+pub use session::{
+    Simulation, SimulationBuilder, Transport, TransportFactory,
+};
 
 use std::sync::Arc;
 

@@ -22,6 +22,22 @@
 //! * [`Simulation::finish`] — tear down and merge the classic
 //!   [`RunOutput`].
 //!
+//! # Transports
+//!
+//! The session is transport-agnostic: the builder takes a [`Transport`]
+//! (or an arbitrary [`TransportFactory`] via
+//! [`SimulationBuilder::transport_with`]) that wires each rank's
+//! [`Communicator`] endpoint. With [`Transport::Local`] (the default)
+//! every rank lives in this process on in-memory channels; with
+//! [`Transport::Tcp`] this process hosts **one** rank of a
+//! multi-process cluster and the session drives just that rank — every
+//! process runs the same spec/seed/partition, so their per-rank rasters
+//! are bit-identical to the corresponding ranks of a local-transport
+//! run. `run_for`, `drain`, stimulus mutation and `finish` work
+//! identically (drained probe data covers the ranks this process
+//! hosts); session-wide checkpoint/restore requires the local
+//! transport.
+//!
 //! # Threading model
 //!
 //! This module extends the PR-1 ownership-transfer design one level up:
@@ -55,7 +71,9 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::atlas::NetworkSpec;
-use crate::comm::{Communicator, LocalCluster, SoloComm, SpikePacket};
+use crate::comm::{
+    Communicator, LocalCluster, SoloComm, SpikePacket, TcpComm,
+};
 use crate::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
 use crate::decomp::{
     area_processes_partition, random_equivalent_partition, Partition,
@@ -82,6 +100,74 @@ const SESSION_MAGIC: u64 = 0x434f_5254_4558_5353;
 pub type ProbeFactory =
     Arc<dyn Fn(u16) -> Box<dyn Probe> + Send + Sync>;
 
+/// Wires the communicator endpoints for the ranks **this process**
+/// hosts. Called once at `build()` with the total rank count; returns
+/// `(global rank, endpoint)` pairs — one per locally hosted rank. Every
+/// endpoint must span all `ranks` (`Communicator::size`) and report the
+/// matching `Communicator::rank`.
+pub type TransportFactory = Box<
+    dyn FnOnce(usize) -> Result<Vec<(usize, Box<dyn Communicator>)>>
+        + Send,
+>;
+
+/// How the session's ranks are wired together (see
+/// [`SimulationBuilder::transport`]).
+pub enum Transport {
+    /// All ranks in this process, connected by in-memory channels
+    /// (the default).
+    Local,
+    /// This process hosts exactly one rank of a TCP cluster:
+    /// `peers[r]` is rank r's listen address, `rank` indexes it, and
+    /// the builder's rank count must equal `peers.len()`. Joining
+    /// blocks until the full mesh is connected (bounded by
+    /// [`Transport::TCP_JOIN_TIMEOUT`]).
+    Tcp { rank: u16, peers: Vec<String> },
+    /// Bring-your-own endpoints (tests, future transports).
+    Custom(TransportFactory),
+}
+
+impl Transport {
+    /// How long a TCP rank waits for its peers at `build()`.
+    pub const TCP_JOIN_TIMEOUT: std::time::Duration =
+        std::time::Duration::from_secs(60);
+
+    fn endpoints(
+        self,
+        ranks: usize,
+    ) -> Result<Vec<(usize, Box<dyn Communicator>)>> {
+        match self {
+            Transport::Local => Ok(LocalCluster::new(ranks)
+                .into_iter()
+                .enumerate()
+                .map(|(r, c)| (r, Box::new(c) as Box<dyn Communicator>))
+                .collect()),
+            Transport::Tcp { rank, peers } => {
+                ensure!(
+                    peers.len() == ranks,
+                    "TCP transport lists {} peers but the session is \
+                     configured for {ranks} ranks",
+                    peers.len()
+                );
+                ensure!(
+                    (rank as usize) < ranks,
+                    "TCP rank {rank} does not index the {ranks}-rank \
+                     peer list"
+                );
+                let comm = TcpComm::join(
+                    rank,
+                    &peers,
+                    Self::TCP_JOIN_TIMEOUT,
+                )?;
+                Ok(vec![(
+                    rank as usize,
+                    Box::new(comm) as Box<dyn Communicator>,
+                )])
+            }
+            Transport::Custom(f) => f(ranks),
+        }
+    }
+}
+
 struct ProbeReg {
     name: String,
     make: ProbeFactory,
@@ -103,6 +189,7 @@ pub struct SimulationBuilder {
     artifacts_dir: String,
     seed: u64,
     probes: Vec<ProbeReg>,
+    transport: Transport,
 }
 
 impl SimulationBuilder {
@@ -121,6 +208,7 @@ impl SimulationBuilder {
             artifacts_dir: "artifacts".into(),
             seed,
             probes: Vec::new(),
+            transport: Transport::Local,
         }
     }
 
@@ -176,6 +264,30 @@ impl SimulationBuilder {
     /// Partition seed (defaults to the spec's network seed).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Select how ranks are wired ([`Transport::Local`] by default).
+    /// With [`Transport::Tcp`] this process hosts a single rank of a
+    /// multi-process cluster; `build()` blocks until the mesh connects.
+    pub fn transport(mut self, t: Transport) -> Self {
+        self.transport = t;
+        self
+    }
+
+    /// Install an arbitrary [`TransportFactory`] — full control over
+    /// the endpoints this process hosts (pre-bound listeners in tests,
+    /// alternative transports).
+    pub fn transport_with(
+        mut self,
+        f: impl FnOnce(
+                usize,
+            )
+                -> Result<Vec<(usize, Box<dyn Communicator>)>>
+            + Send
+            + 'static,
+    ) -> Self {
+        self.transport = Transport::Custom(Box::new(f));
         self
     }
 
@@ -262,9 +374,38 @@ impl SimulationBuilder {
         let probe_names: Vec<String> =
             factories.iter().map(|(n, _)| n.clone()).collect();
 
-        let comms = LocalCluster::new(self.ranks);
-        let mut links = Vec::with_capacity(self.ranks);
-        for (r, comm) in comms.into_iter().enumerate() {
+        // wire the transport: (global rank, endpoint) for every rank
+        // this process hosts — all of them (local) or one (tcp)
+        let n_ranks = self.ranks;
+        let endpoints = self.transport.endpoints(n_ranks)?;
+        ensure!(
+            !endpoints.is_empty(),
+            "transport produced no local ranks"
+        );
+        let mut seen = vec![false; n_ranks];
+        for (r, comm) in &endpoints {
+            ensure!(
+                *r < n_ranks,
+                "transport produced rank {r}, session is configured \
+                 for {n_ranks} ranks"
+            );
+            ensure!(!seen[*r], "transport produced rank {r} twice");
+            seen[*r] = true;
+            ensure!(
+                comm.size() == n_ranks,
+                "endpoint for rank {r} spans {} ranks, session is \
+                 configured for {n_ranks}",
+                comm.size()
+            );
+            ensure!(
+                comm.rank() as usize == *r,
+                "endpoint for rank {r} reports rank {}",
+                comm.rank()
+            );
+        }
+
+        let mut links = Vec::with_capacity(endpoints.len());
+        for (r, comm) in endpoints {
             let (cmd_tx, cmd_rx) = channel::<Cmd>();
             let (resp_tx, resp_rx) = channel::<Resp>();
             let spec = Arc::clone(&spec);
@@ -289,7 +430,7 @@ impl SimulationBuilder {
                         r,
                         opts,
                         comm_mode,
-                        Box::new(comm),
+                        comm,
                         &factories,
                         cmd_rx,
                         resp_tx,
@@ -297,6 +438,7 @@ impl SimulationBuilder {
                 })
                 .map_err(|e| anyhow!("failed to spawn rank {r}: {e}"))?;
             links.push(RankLink {
+                rank: r,
                 cmd: Some(cmd_tx),
                 resp: resp_rx,
                 handle: Some(handle),
@@ -308,6 +450,7 @@ impl SimulationBuilder {
             spec,
             partition,
             links,
+            n_ranks,
             probe_names,
             record_limit: self.record_limit,
             backend: self.backend,
@@ -356,6 +499,12 @@ impl SimulationBuilder {
             blobs.push(blob);
         }
         let mut sim = self.build()?;
+        ensure!(
+            sim.links.len() == ranks,
+            "restore requires the local transport (this process hosts \
+             {} of {ranks} ranks)",
+            sim.links.len()
+        );
         for (rank, blob) in blobs.into_iter().enumerate() {
             sim.send(rank, Cmd::Restore(blob))?;
         }
@@ -397,6 +546,8 @@ impl SimulationBuilder {
 // ---------------------------------------------------------------------
 
 struct RankLink {
+    /// Global rank this link drives (== index for the local transport).
+    rank: usize,
     /// `None` once the session hangs up (teardown).
     cmd: Option<Sender<Cmd>>,
     resp: Receiver<Resp>,
@@ -409,7 +560,11 @@ struct RankLink {
 pub struct Simulation {
     spec: Arc<NetworkSpec>,
     partition: Arc<Partition>,
+    /// One link per rank **this process** hosts (all ranks on the local
+    /// transport, a single rank on TCP).
     links: Vec<RankLink>,
+    /// Total cluster rank count (across all processes).
+    n_ranks: usize,
     probe_names: Vec<String>,
     record_limit: Option<Gid>,
     backend: DynamicsBackend,
@@ -459,10 +614,13 @@ impl Simulation {
         for r in 0..self.links.len() {
             self.send(r, Cmd::RunFor(steps))?;
         }
-        for r in 0..self.links.len() {
-            match self.recv(r)? {
+        for (r, res) in self.recv_each().into_iter().enumerate() {
+            match res? {
                 Resp::Ran => {}
-                _ => bail!("rank {r}: unexpected run response"),
+                _ => bail!(
+                    "rank {}: unexpected run response",
+                    self.links[r].rank
+                ),
             }
         }
         self.steps_done += steps;
@@ -480,15 +638,18 @@ impl Simulation {
             self.send(r, Cmd::Drain(probe.to_string()))?;
         }
         let mut merged: Option<ProbeData> = None;
-        for r in 0..self.links.len() {
-            match self.recv(r)? {
+        for (r, res) in self.recv_each().into_iter().enumerate() {
+            match res? {
                 Resp::Data(d) => {
                     merged = Some(match merged {
                         None => *d,
                         Some(m) => m.merge(*d)?,
                     })
                 }
-                _ => bail!("rank {r}: unexpected drain response"),
+                _ => bail!(
+                    "rank {}: unexpected drain response",
+                    self.links[r].rank
+                ),
             }
         }
         merged.ok_or_else(|| anyhow!("session has no ranks"))
@@ -571,10 +732,13 @@ impl Simulation {
         for r in 0..self.links.len() {
             self.send(r, Cmd::Stimulus(up))?;
         }
-        for r in 0..self.links.len() {
-            match self.recv(r)? {
+        for (r, res) in self.recv_each().into_iter().enumerate() {
+            match res? {
                 Resp::Ack => {}
-                _ => bail!("rank {r}: unexpected stimulus response"),
+                _ => bail!(
+                    "rank {}: unexpected stimulus response",
+                    self.links[r].rank
+                ),
             }
         }
         Ok(())
@@ -588,6 +752,13 @@ impl Simulation {
     /// [`SimulationBuilder::restore`].
     pub fn checkpoint(&mut self, w: &mut impl Write) -> Result<()> {
         ensure!(
+            self.links.len() == self.n_ranks,
+            "session checkpoint requires every rank in-process \
+             (local transport); this process hosts {} of {} ranks",
+            self.links.len(),
+            self.n_ranks
+        );
+        ensure!(
             self.steps_done % self.min_delay == 0,
             "checkpoint requires a window boundary (step {} is not a \
              multiple of min_delay {})",
@@ -598,10 +769,13 @@ impl Simulation {
             self.send(r, Cmd::Checkpoint)?;
         }
         let mut blobs = Vec::with_capacity(self.links.len());
-        for r in 0..self.links.len() {
-            match self.recv(r)? {
+        for (r, res) in self.recv_each().into_iter().enumerate() {
+            match res? {
                 Resp::Blob(b) => blobs.push(b),
-                _ => bail!("rank {r}: unexpected checkpoint response"),
+                _ => bail!(
+                    "rank {}: unexpected checkpoint response",
+                    self.links[r].rank
+                ),
             }
         }
         put_u64(w, SESSION_MAGIC)?;
@@ -620,10 +794,13 @@ impl Simulation {
             self.send(r, Cmd::Memory)?;
         }
         let mut per_rank = Vec::with_capacity(self.links.len());
-        for r in 0..self.links.len() {
-            match self.recv(r)? {
+        for (r, res) in self.recv_each().into_iter().enumerate() {
+            match res? {
                 Resp::Mem(m) => per_rank.push(*m),
-                _ => bail!("rank {r}: unexpected memory response"),
+                _ => bail!(
+                    "rank {}: unexpected memory response",
+                    self.links[r].rank
+                ),
             }
         }
         Ok(MemoryReport::new(per_rank))
@@ -637,10 +814,13 @@ impl Simulation {
             self.send(r, Cmd::Finish)?;
         }
         let mut outputs = Vec::with_capacity(self.links.len());
-        for r in 0..self.links.len() {
-            match self.recv(r)? {
+        for (r, res) in self.recv_each().into_iter().enumerate() {
+            match res? {
                 Resp::Output(b) => outputs.push(*b),
-                _ => bail!("rank {r}: unexpected finish response"),
+                _ => bail!(
+                    "rank {}: unexpected finish response",
+                    self.links[r].rank
+                ),
             }
         }
         // rank threads have replied and are exiting; reap them now so
@@ -706,24 +886,38 @@ impl Simulation {
         })
     }
 
+    /// Receive one response from **every** link before acting on any of
+    /// them. A rank's failure must not leave sibling responses
+    /// undrained — the command/response streams would desynchronize and
+    /// pair the next command with a stale response.
+    fn recv_each(&mut self) -> Vec<Result<Resp>> {
+        let mut v = Vec::with_capacity(self.links.len());
+        for r in 0..self.links.len() {
+            v.push(self.recv(r));
+        }
+        v
+    }
+
     fn send(&mut self, r: usize, cmd: Cmd) -> Result<()> {
+        let rank = self.links[r].rank;
         let Some(tx) = self.links[r].cmd.as_ref() else {
-            bail!("rank {r} is already torn down");
+            bail!("rank {rank} is already torn down");
         };
         if tx.send(cmd).is_err() {
             let why = self.reap(r);
-            bail!("rank {r} thread is gone{why}");
+            bail!("rank {rank} thread is gone{why}");
         }
         Ok(())
     }
 
     fn recv(&mut self, r: usize) -> Result<Resp> {
+        let rank = self.links[r].rank;
         match self.links[r].resp.recv() {
-            Ok(Resp::Err(e)) => bail!("rank {r}: {e}"),
+            Ok(Resp::Err(e)) => bail!("rank {rank}: {e}"),
             Ok(resp) => Ok(resp),
             Err(_) => {
                 let why = self.reap(r);
-                bail!("rank {r} thread terminated unexpectedly{why}")
+                bail!("rank {rank} thread terminated unexpectedly{why}")
             }
         }
     }
@@ -822,6 +1016,13 @@ struct RankRuntime {
     window_drained: bool,
     /// Stimulus updates queued for the next window boundary.
     pending_stim: Vec<StimUpdate>,
+    /// Set when the transport errored. The exchange stream is desynced
+    /// from that point on, so every further simulation command must
+    /// fail loudly instead of silently running without remote spikes
+    /// (the overlap driver's `in_flight` flag was consumed by the
+    /// failed receive — a retried window would otherwise get an empty
+    /// packet and "succeed").
+    poisoned: Option<String>,
     probes: Vec<(String, Box<dyn Probe>)>,
     build_seconds: f64,
     /// Total simulation wall time across `run_for` calls.
@@ -859,8 +1060,11 @@ fn rank_main(
     while let Ok(cmd) = cmd_rx.recv() {
         match cmd {
             Cmd::Finish => {
-                let out = rt.finish_output();
-                let _ = resp_tx.send(Resp::Output(Box::new(out)));
+                let resp = match rt.finish_output() {
+                    Ok(out) => Resp::Output(Box::new(out)),
+                    Err(e) => Resp::Err(format!("{e:#}")),
+                };
+                let _ = resp_tx.send(resp);
                 return;
             }
             cmd => {
@@ -912,6 +1116,7 @@ fn build_runtime(
         step_in_window: 0,
         window_drained: false,
         pending_stim: Vec::new(),
+        poisoned: None,
         probes,
         build_seconds,
         sim_seconds: 0.0,
@@ -920,11 +1125,25 @@ fn build_runtime(
 
 impl RankRuntime {
     fn handle(&mut self, cmd: Cmd) -> Resp {
-        match cmd {
-            Cmd::RunFor(steps) => {
-                self.run_for(steps);
-                Resp::Ran
+        // a poisoned transport refuses everything that would advance or
+        // snapshot the simulation (teardown still works)
+        if let Some(why) = &self.poisoned {
+            if matches!(cmd, Cmd::RunFor(_) | Cmd::Checkpoint) {
+                return Resp::Err(format!(
+                    "transport poisoned by an earlier exchange \
+                     failure: {why}"
+                ));
             }
+        }
+        match cmd {
+            Cmd::RunFor(steps) => match self.run_for(steps) {
+                Ok(()) => Resp::Ran,
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    self.poisoned = Some(msg.clone());
+                    Resp::Err(msg)
+                }
+            },
             Cmd::Stimulus(up) => {
                 self.pending_stim.push(up);
                 Resp::Ack
@@ -956,17 +1175,20 @@ impl RankRuntime {
 
     /// At a window boundary: receive the previous window's exchange
     /// (unless a checkpoint/restore already did) and apply queued
-    /// stimulus updates.
-    fn window_start(&mut self) {
+    /// stimulus updates. Exchange failures (window misalignment,
+    /// malformed wire frames, lost peers) propagate as errors.
+    fn window_start(&mut self) -> Result<()> {
         if self.window_drained {
             self.window_drained = false;
         } else {
             let RankRuntime { engine, driver, .. } = self;
-            let incoming =
-                engine.timer.time("comm_wait", || driver.recv_completed());
+            let incoming = engine
+                .timer
+                .time("comm_wait", || driver.recv_completed())?;
             engine.enqueue_remote(&incoming);
         }
         self.apply_pending_stim();
+        Ok(())
     }
 
     /// Apply queued stimulus updates to the engine. Only called at
@@ -988,11 +1210,11 @@ impl RankRuntime {
     }
 
     /// Advance `steps` steps, continuing the current window.
-    fn run_for(&mut self, steps: Step) {
+    fn run_for(&mut self, steps: Step) -> Result<()> {
         let t_run = Instant::now();
         for _ in 0..steps {
             if self.step_in_window == 0 {
-                self.window_start();
+                self.window_start()?;
             }
             let now = self.engine.step();
             let mark = self.outbox.len();
@@ -1013,11 +1235,14 @@ impl RankRuntime {
             if self.step_in_window == self.m {
                 let pkt = std::mem::take(&mut self.outbox);
                 let RankRuntime { engine, driver, .. } = self;
-                engine.timer.time("comm_submit", || driver.submit(pkt));
+                engine
+                    .timer
+                    .time("comm_submit", || driver.submit(pkt))?;
                 self.step_in_window = 0;
             }
         }
         self.sim_seconds += t_run.elapsed().as_secs_f64();
+        Ok(())
     }
 
     /// Serialize the engine at a window boundary, with the boundary's
@@ -1032,9 +1257,21 @@ impl RankRuntime {
             "checkpoint requires a window boundary"
         );
         if !self.window_drained {
-            let RankRuntime { engine, driver, .. } = self;
-            let incoming =
-                engine.timer.time("comm_wait", || driver.recv_completed());
+            let RankRuntime { engine, driver, poisoned, .. } = self;
+            let incoming = match engine
+                .timer
+                .time("comm_wait", || driver.recv_completed())
+            {
+                Ok(incoming) => incoming,
+                Err(e) => {
+                    // unlike a missed-boundary error (benign, the
+                    // session can retry later), a failed drain desyncs
+                    // the exchange stream for good
+                    let msg = format!("{e}");
+                    *poisoned = Some(msg.clone());
+                    return Err(anyhow!(msg));
+                }
+            };
             engine.enqueue_remote(&incoming);
             self.window_drained = true;
         }
@@ -1058,11 +1295,13 @@ impl RankRuntime {
     /// Flush a trailing partial window, tear down the exchange driver
     /// and **move** the recorder/timer out of the engine into the
     /// rank's output.
-    fn finish_output(&mut self) -> (RankOutput, f64) {
+    fn finish_output(&mut self) -> Result<(RankOutput, f64)> {
         if self.step_in_window != 0 {
             let pkt = std::mem::take(&mut self.outbox);
             let RankRuntime { engine, driver, .. } = self;
-            engine.timer.time("comm_submit", || driver.submit(pkt));
+            engine
+                .timer
+                .time("comm_submit", || driver.submit(pkt))?;
             self.step_in_window = 0;
         }
         let driver = std::mem::replace(
@@ -1079,7 +1318,7 @@ impl RankRuntime {
             SpikeRecorder::disabled(),
         );
         let timer = std::mem::take(&mut self.engine.timer);
-        (
+        Ok((
             RankOutput {
                 rank: self.engine.rank,
                 recorder,
@@ -1091,6 +1330,6 @@ impl RankRuntime {
                 build_seconds: self.build_seconds,
             },
             self.sim_seconds,
-        )
+        ))
     }
 }

@@ -34,9 +34,12 @@
 //!   session: spike rasters with gid/population filters, population
 //!   firing rates, membrane-voltage traces, STDP weight snapshots,
 //!   phase-timer streams.
-//! - [`comm`]   — MPI-like communicator over in-memory ranks, spike
-//!   broadcast with dedicated communication thread (paper §III.C), and a
-//!   Tofu-D network cost model for Fugaku-scale projections.
+//! - [`comm`]   — MPI-like communicator over in-memory ranks **or TCP
+//!   sockets between OS processes** (`cortex launch` / `cortex run
+//!   --rank`), spike broadcast with dedicated communication thread
+//!   (paper §III.C), the fallible BSB wire codec (varint delta coding,
+//!   window-counter verification), and a Tofu-D network cost model for
+//!   Fugaku-scale projections.
 //! - [`nest_baseline`] — a NEST-style reference engine embodying the design
 //!   choices the paper compares against (random distribution, atomic
 //!   delivery, serialized exchange).

@@ -363,9 +363,12 @@ pub fn run_nest_simulation(
                     }
                     done += win;
                     // blocking exchange — no overlap in the baseline
+                    // (in-memory channels; errors mean a sibling rank
+                    // thread died, which the join below also surfaces)
                     incoming = rank
                         .timer
-                        .time("comm_wait", || comm.exchange(outbox));
+                        .time("comm_wait", || comm.exchange(outbox))
+                        .expect("window exchange failed");
                 }
                 (
                     rank,
