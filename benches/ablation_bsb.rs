@@ -14,7 +14,7 @@ use std::sync::Arc;
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::comm::bsb::{pack, plan_exchange, unpack};
 use cortex::comm::{SpikeMsg, TofuModel};
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 
@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
             comm: CommMode::Serialized,
             backend: DynamicsBackend::Native,
             exec: ExecMode::Pool,
+            build: BuildMode::TwoPass,
             steps,
             record_limit: Some(u32::MAX),
             verify_ownership: false,

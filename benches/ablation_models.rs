@@ -19,7 +19,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use cortex::atlas::potjans::{potjans_spec_with, PotjansModels};
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 use cortex::model::dynamics::{ModelParams, ModelTables, PopulationState};
@@ -140,6 +140,7 @@ fn main() -> anyhow::Result<()> {
                 comm: CommMode::Overlap,
                 backend: DynamicsBackend::Native,
                 exec: ExecMode::Pool,
+                build: BuildMode::TwoPass,
                 steps: 600,
                 record_limit: None,
                 verify_ownership: false,

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::comm::TofuModel;
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 
@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
                 comm,
                 backend: DynamicsBackend::Native,
                 exec: ExecMode::Pool,
+                build: BuildMode::TwoPass,
                 steps,
                 record_limit: None,
                 verify_ownership: false,

@@ -19,7 +19,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use cortex::atlas::random_spec;
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 use cortex::nest_baseline::{run_nest_simulation, NestRunConfig};
@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
         comm: CommMode::Serialized,
         backend: DynamicsBackend::Native,
         exec,
+        build: BuildMode::TwoPass,
         steps,
         record_limit: Some(u32::MAX),
         verify_ownership: false,

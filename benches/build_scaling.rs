@@ -1,0 +1,186 @@
+//! **Build-phase scaling** — the construction-time counterpart of
+//! `fig18_scaling`: wall time and *peak* memory of materialising each
+//! rank's indegree sub-graph, two-pass streaming builder vs the serial
+//! staging ablation, on the same marmoset spec family Fig 18 sweeps.
+//!
+//! The paper reports network-construction time separately from
+//! simulation time (§V), and its maximum-problem-size argument only
+//! holds if construction — not just steady state — fits in a rank's
+//! memory share. This bench asserts the streaming builder's analytic
+//! peak stays ≤ 1.5× the final store (the staging path holds ~3×), and
+//! records the trajectory in `target/bench_out/BENCH_build.json`
+//! (`n_edges`, `build_seconds`, `peak_bytes`, ...) so CI tracks
+//! construction numbers alongside simulation ones.
+//!
+//! Run: `cargo bench --bench build_scaling` (size-factor list as argv
+//! to override, e.g. `-- 0.25 0.5`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
+use cortex::decomp::{area_processes_partition, RankStore};
+use cortex::metrics::table::human_bytes;
+use cortex::metrics::Table;
+use cortex::util::json::Json;
+
+const BASE_NEURONS: usize = 8_000;
+const INDEGREE: u32 = 250;
+const RANKS: usize = 4;
+const THREADS: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    let sizes: Vec<f64> = {
+        let cli: Vec<f64> = std::env::args()
+            .skip(1)
+            .filter_map(|a| a.parse().ok())
+            .collect();
+        if cli.is_empty() {
+            vec![0.5, 1.0]
+        } else {
+            cli
+        }
+    };
+
+    let mut table = Table::new(
+        "build scaling — two-pass streaming vs serial staging builder",
+        &[
+            "size",
+            "neurons",
+            "synapses",
+            "build_s",
+            "serial_s",
+            "peak",
+            "serial_peak",
+            "peak/final",
+            "serial/final",
+        ],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    for &s in &sizes {
+        let n = (BASE_NEURONS as f64 * s) as usize;
+        let spec = Arc::new(marmoset_spec(
+            &MarmosetParams {
+                n_neurons: n,
+                n_areas: 8,
+                indegree: INDEGREE.min((n / 4) as u32),
+                ..Default::default()
+            },
+            20240710,
+        ));
+        let part = area_processes_partition(&spec, RANKS, 1);
+
+        let mut build_s: f64 = 0.0;
+        let mut serial_s: f64 = 0.0;
+        let mut peak = 0u64;
+        let mut serial_peak = 0u64;
+        let mut final_bytes = 0u64;
+        let mut n_edges = 0u64;
+        // worst per-rank ratio (ranks are imbalanced; max-peak and
+        // max-final can come from different ranks, so the ratio of the
+        // maxima is not any rank's actual ratio)
+        let mut ratio: f64 = 0.0;
+        let mut serial_ratio: f64 = 0.0;
+        for r in 0..RANKS {
+            let rank_of = part.rank_of.clone();
+            let t0 = Instant::now();
+            let store = RankStore::build(
+                &spec,
+                &part.members[r],
+                move |g| rank_of[g as usize] as usize == r,
+                r as u16,
+                THREADS,
+            );
+            build_s = build_s.max(t0.elapsed().as_secs_f64());
+
+            let rank_of = part.rank_of.clone();
+            let t1 = Instant::now();
+            let serial = RankStore::build_serial(
+                &spec,
+                &part.members[r],
+                move |g| rank_of[g as usize] as usize == r,
+                r as u16,
+                THREADS,
+            );
+            serial_s = serial_s.max(t1.elapsed().as_secs_f64());
+
+            assert!(
+                store.same_graph(&serial),
+                "size {s} rank {r}: builders disagree"
+            );
+            let m = store.memory();
+            let fin =
+                m.get("posts") + m.get("pres") + m.get("edges");
+            // the acceptance bound: streaming construction must never
+            // need more than ~1.5× the store it is building
+            assert!(
+                store.build.peak_bytes as f64
+                    <= 1.5 * fin as f64 + 65536.0,
+                "size {s} rank {r}: peak {} exceeds 1.5× final {fin}",
+                store.build.peak_bytes
+            );
+            peak = peak.max(store.build.peak_bytes);
+            serial_peak = serial_peak.max(serial.build.peak_bytes);
+            final_bytes = final_bytes.max(fin);
+            ratio = ratio
+                .max(store.build.peak_bytes as f64 / fin as f64);
+            serial_ratio = serial_ratio
+                .max(serial.build.peak_bytes as f64 / fin as f64);
+            n_edges += store.n_edges();
+        }
+
+        table.row(&[
+            format!("{s}"),
+            spec.n_total().to_string(),
+            n_edges.to_string(),
+            format!("{build_s:.3}"),
+            format!("{serial_s:.3}"),
+            human_bytes(peak),
+            human_bytes(serial_peak),
+            format!("{ratio:.2}x"),
+            format!("{serial_ratio:.2}x"),
+        ]);
+
+        let mut row = BTreeMap::new();
+        row.insert("size".into(), Json::Num(s));
+        row.insert(
+            "n_neurons".into(),
+            Json::Num(spec.n_total() as f64),
+        );
+        row.insert("n_edges".into(), Json::Num(n_edges as f64));
+        row.insert("build_seconds".into(), Json::Num(build_s));
+        row.insert(
+            "serial_build_seconds".into(),
+            Json::Num(serial_s),
+        );
+        row.insert("peak_bytes".into(), Json::Num(peak as f64));
+        row.insert(
+            "serial_peak_bytes".into(),
+            Json::Num(serial_peak as f64),
+        );
+        row.insert(
+            "final_bytes".into(),
+            Json::Num(final_bytes as f64),
+        );
+        row.insert("peak_over_final".into(), Json::Num(ratio));
+        row.insert(
+            "serial_peak_over_final".into(),
+            Json::Num(serial_ratio),
+        );
+        rows.push(Json::Obj(row));
+    }
+
+    table.emit(Path::new("target/bench_out"), "build_scaling")?;
+    let out_dir = Path::new("target/bench_out");
+    std::fs::create_dir_all(out_dir)?;
+    let json = Json::Arr(rows).to_string_pretty();
+    std::fs::write(out_dir.join("BENCH_build.json"), json)?;
+    println!(
+        "wrote target/bench_out/BENCH_build.json; streaming peak stays \
+         ≤1.5× the final store where the staging builder holds ~3×.\n"
+    );
+    Ok(())
+}

@@ -15,7 +15,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::table::human_bytes;
 use cortex::metrics::Table;
@@ -77,6 +77,7 @@ fn main() -> anyhow::Result<()> {
                 comm: CommMode::Overlap,
                 backend: DynamicsBackend::Native,
                 exec: ExecMode::Pool,
+                build: BuildMode::TwoPass,
                 steps,
                 record_limit: None,
                 verify_ownership: false,

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 
@@ -43,6 +43,7 @@ fn main() {
                     comm: CommMode::Serialized,
                     backend: DynamicsBackend::Native,
                     exec: ExecMode::Pool,
+                    build: BuildMode::TwoPass,
                     steps,
                     record_limit: Some(u32::MAX),
                     verify_ownership: false,

@@ -17,7 +17,7 @@
 use std::sync::Arc;
 
 use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
         comm: CommMode::Overlap,
         backend: DynamicsBackend::Native,
         exec: ExecMode::Pool,
+        build: BuildMode::TwoPass,
         steps,
         record_limit: Some(u32::MAX),
         verify_ownership: true, // the paper's Abort-on-foreign-access

@@ -1,6 +1,6 @@
 use std::sync::Arc;
 use cortex::atlas::random_spec;
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig};
 fn main() {
     let which = std::env::args().nth(1).unwrap_or_default();
@@ -10,7 +10,7 @@ fn main() {
         println!("nest {} spikes {:.3}s", o.total_spikes, o.wall_seconds);
         print!("{}", o.memory.report());
     } else {
-        let o = run_simulation(&spec, &RunConfig{ranks:1,threads:1,mapping:MappingKind::AreaProcesses,comm:CommMode::Serialized,backend:DynamicsBackend::Native,exec:ExecMode::Pool,steps:500,record_limit:None,verify_ownership:false,artifacts_dir:"artifacts".into(),seed:31}).unwrap();
+        let o = run_simulation(&spec, &RunConfig{ranks:1,threads:1,mapping:MappingKind::AreaProcesses,comm:CommMode::Serialized,backend:DynamicsBackend::Native,exec:ExecMode::Pool,build:BuildMode::TwoPass,steps:500,record_limit:None,verify_ownership:false,artifacts_dir:"artifacts".into(),seed:31}).unwrap();
         println!("cortex {} spikes {:.3}s", o.total_spikes, o.wall_seconds); print!("{}", o.timer_max.report());
         // resident-memory breakdown incl. neuron-model state (was
         // edge-store-only before the dynamics layer accounted it)

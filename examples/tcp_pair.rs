@@ -18,7 +18,7 @@ use std::time::Duration;
 
 use cortex::atlas::potjans::potjans_spec;
 use cortex::comm::{Communicator, TcpComm};
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::engine::{run_simulation, RunConfig, Simulation};
 
 const SEED: u64 = 23;
@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
             comm: CommMode::Overlap,
             backend: DynamicsBackend::Native,
             exec: ExecMode::Pool,
+            build: BuildMode::TwoPass,
             steps,
             record_limit: Some(u32::MAX),
             verify_ownership: false,

@@ -120,6 +120,10 @@ pub struct NetworkSpec {
     pub min_delay_steps: DelaySteps,
     /// Per-rule cache: rules targeting each population (built lazily).
     rules_by_dst: Vec<Vec<u32>>,
+    /// (src_pop, dst_pop) → any plastic rule connects the pair. Replaces
+    /// the O(rules) scan [`Self::edge_plastic`] used to do per edge — the
+    /// store builders query this once per generated edge.
+    plastic_pairs: Vec<bool>,
 }
 
 impl NetworkSpec {
@@ -163,6 +167,12 @@ impl NetworkSpec {
         for (i, r) in rules.iter().enumerate() {
             rules_by_dst[r.dst_pop as usize].push(i as u32);
         }
+        let n_pops = populations.len();
+        let mut plastic_pairs = vec![false; n_pops * n_pops];
+        for r in rules.iter().filter(|r| r.plastic) {
+            plastic_pairs
+                [r.src_pop as usize * n_pops + r.dst_pop as usize] = true;
+        }
         NetworkSpec {
             name: name.into(),
             seed,
@@ -175,6 +185,7 @@ impl NetworkSpec {
             v_init_jitter: (0.0, 5.0),
             min_delay_steps: 2,
             rules_by_dst,
+            plastic_pairs,
         }
     }
 
@@ -244,10 +255,18 @@ impl NetworkSpec {
             + rng.range_f64(self.v_init_jitter.0, self.v_init_jitter.1)
     }
 
-    /// Deterministically generate all incoming edges of `gid`, appending
-    /// to `out`. This is the constructive indegree sub-graph: a rank calls
-    /// it only for the gids it owns.
-    pub fn in_edges(&self, gid: Gid, out: &mut Vec<Edge>) {
+    /// Deterministically generate all incoming edges of `gid`, calling
+    /// `f(edge, src_pop)` for each without materialising any list. This
+    /// is the constructive indegree sub-graph in streaming form: the
+    /// two-pass store builder visits a post's edges twice (count, then
+    /// fill) and never holds them in bulk. The source-population index
+    /// rides along because the visitor knows it for free (edges are
+    /// generated per rule) and it keys the plasticity lookup.
+    pub fn for_each_in_edge(
+        &self,
+        gid: Gid,
+        mut f: impl FnMut(Edge, u16),
+    ) {
         let dst_pop = self.pop_of(gid);
         let max_delay_steps = u16::MAX as f64;
         for &ri in &self.rules_by_dst[dst_pop as usize] {
@@ -287,19 +306,30 @@ impl NetworkSpec {
                 let delay = ((d_ms / self.dt_ms).round() as f64)
                     .clamp(self.min_delay_steps as f64, max_delay_steps)
                     as DelaySteps;
-                out.push(Edge { pre, post: gid, weight, delay });
+                f(Edge { pre, post: gid, weight, delay }, r.src_pop);
             }
         }
+    }
+
+    /// [`Self::for_each_in_edge`] in `Vec`-appending form (small
+    /// networks, the serial ablation builder, tests).
+    pub fn in_edges(&self, gid: Gid, out: &mut Vec<Edge>) {
+        self.for_each_in_edge(gid, |e, _| out.push(e));
     }
 
     /// Is the rule feeding this edge plastic? Recomputed from (pre, post)
     /// population types — only used by plastic networks.
     pub fn edge_plastic(&self, pre: Gid, post: Gid) -> bool {
-        let sp = self.pop_of(pre) as usize;
-        let dp = self.pop_of(post) as usize;
-        self.rules
-            .iter()
-            .any(|r| r.src_pop as usize == sp && r.dst_pop as usize == dp && r.plastic)
+        self.pair_plastic(self.pop_of(pre), self.pop_of(post))
+    }
+
+    /// Does any plastic rule connect `src_pop → dst_pop`? O(1) via the
+    /// table precomputed in [`Self::new`]; the hot query of store
+    /// construction on plastic networks.
+    #[inline]
+    pub fn pair_plastic(&self, src_pop: u16, dst_pop: u16) -> bool {
+        self.plastic_pairs
+            [src_pop as usize * self.populations.len() + dst_pop as usize]
     }
 
     /// External drive of a neuron.
@@ -574,6 +604,57 @@ mod tests {
             s.rules.clone(),
             s.areas.clone(),
             None,
+        );
+    }
+
+    #[test]
+    fn visitor_and_vec_forms_agree() {
+        let s = random_spec(400, 40, 5);
+        let mut collected = Vec::new();
+        let mut src_pops = Vec::new();
+        s.for_each_in_edge(123, |e, sp| {
+            collected.push(e);
+            src_pops.push(sp);
+        });
+        let mut via_vec = Vec::new();
+        s.in_edges(123, &mut via_vec);
+        assert_eq!(collected, via_vec);
+        // the visitor's source-population index is the edge's actual
+        // source population
+        for (e, &sp) in collected.iter().zip(&src_pops) {
+            assert_eq!(s.pop_of(e.pre), sp);
+        }
+    }
+
+    #[test]
+    fn pair_plastic_table_matches_rule_scan() {
+        use crate::atlas::hpc::{hpc_benchmark_spec, HpcParams};
+        let s = hpc_benchmark_spec(
+            &HpcParams {
+                n_neurons: 200,
+                indegree: 40,
+                plastic: true,
+                ..Default::default()
+            },
+            5,
+        );
+        let n_pops = s.populations.len() as u16;
+        let mut any = false;
+        for sp in 0..n_pops {
+            for dp in 0..n_pops {
+                let want = s.rules.iter().any(|r| {
+                    r.src_pop == sp && r.dst_pop == dp && r.plastic
+                });
+                assert_eq!(s.pair_plastic(sp, dp), want);
+                any |= want;
+            }
+        }
+        assert!(any, "hpc_benchmark should have a plastic pair");
+        // edge_plastic goes through the same table
+        let e_gid = s.populations[0].first_gid;
+        assert_eq!(
+            s.edge_plastic(e_gid, e_gid),
+            s.pair_plastic(0, 0)
         );
     }
 

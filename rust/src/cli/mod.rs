@@ -252,6 +252,7 @@ pub fn run_config_of(cfg: &ExperimentConfig) -> RunConfig {
         comm: cfg.comm,
         backend: cfg.backend,
         exec: cfg.exec,
+        build: cfg.build,
         steps: cfg.steps(),
         record_limit: cfg.record_raster.then_some(cfg.record_limit as u32),
         verify_ownership: false,
@@ -527,27 +528,69 @@ pub fn cmd_partition(args: &Args) -> Result<()> {
         cfg.ranks,
         part.imbalance()
     );
+    for r in 0..cfg.ranks {
+        if part.members[r].is_empty() {
+            // an empty post range is legal (more ranks than an area
+            // has neurons) but usually a sizing mistake — warn, don't
+            // panic; the store builders handle it
+            println!(
+                "warning: rank {r} owns zero posts — consider fewer \
+                 ranks or a different mapping"
+            );
+        }
+    }
     println!(
-        "{:>5} {:>8} {:>10} {:>10} {:>12} {:>12}",
-        "rank", "posts", "pres", "remote", "edges", "memory"
+        "{:>5} {:>8} {:>10} {:>10} {:>12} {:>12} {:>12} \
+         {:>9} {:>9} {:>9}",
+        "rank",
+        "posts",
+        "pres",
+        "remote",
+        "edges",
+        "memory",
+        "build_peak",
+        "count_ms",
+        "merge_ms",
+        "fill_ms"
     );
     for r in 0..cfg.ranks {
         let rank_of = part.rank_of.clone();
-        let store = RankStore::build(
-            &spec,
-            &part.members[r],
-            move |g| rank_of[g as usize] as usize == r,
-            r as u16,
-            cfg.threads,
-        );
+        let is_local =
+            move |g: u32| rank_of[g as usize] as usize == r;
+        // honour engine.build so the ablation's peak/timings are
+        // inspectable from here too
+        let store = match cfg.build {
+            crate::config::BuildMode::TwoPass => RankStore::build(
+                &spec,
+                &part.members[r],
+                is_local,
+                r as u16,
+                cfg.threads,
+            ),
+            crate::config::BuildMode::Serial => {
+                RankStore::build_serial(
+                    &spec,
+                    &part.members[r],
+                    is_local,
+                    r as u16,
+                    cfg.threads,
+                )
+            }
+        };
+        let b = store.build;
         println!(
-            "{:>5} {:>8} {:>10} {:>10} {:>12} {:>12}",
+            "{:>5} {:>8} {:>10} {:>10} {:>12} {:>12} {:>12} \
+             {:>9.2} {:>9.2} {:>9.2}",
             r,
             store.n_posts(),
             store.n_pres(),
             store.n_remote_pres(),
             store.n_edges(),
-            human_bytes(store.memory().total())
+            human_bytes(store.memory().total()),
+            human_bytes(b.peak_bytes),
+            b.count_ns as f64 * 1e-6,
+            b.merge_ns as f64 * 1e-6,
+            b.fill_ns as f64 * 1e-6,
         );
     }
     Ok(())
@@ -685,6 +728,25 @@ mod tests {
         assert_eq!(cfg.exec, crate::config::ExecMode::Scoped);
         let rc = run_config_of(&cfg);
         assert_eq!(rc.exec, crate::config::ExecMode::Scoped);
+    }
+
+    #[test]
+    fn build_mode_flows_into_run_config() {
+        use crate::config::BuildMode;
+        let a = Args::parse(&s(&[
+            "run",
+            "--set",
+            "engine.build=\"serial\"",
+        ]))
+        .unwrap();
+        let cfg = a.experiment().unwrap();
+        assert_eq!(cfg.build, BuildMode::Serial);
+        assert_eq!(run_config_of(&cfg).build, BuildMode::Serial);
+        let a = Args::parse(&s(&["run"])).unwrap();
+        assert_eq!(
+            run_config_of(&a.experiment().unwrap()).build,
+            BuildMode::TwoPass
+        );
     }
 
     #[test]

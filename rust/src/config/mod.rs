@@ -10,7 +10,7 @@ mod schema;
 mod toml;
 
 pub use schema::{
-    CommMode, CommTransport, CustomPop, DynamicsBackend, EngineKind,
-    ExecMode, ExperimentConfig, MappingKind, NetworkKind,
+    BuildMode, CommMode, CommTransport, CustomPop, DynamicsBackend,
+    EngineKind, ExecMode, ExperimentConfig, MappingKind, NetworkKind,
 };
 pub use toml::{ConfigDoc, ConfigError, Value};

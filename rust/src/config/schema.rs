@@ -123,6 +123,17 @@ pub enum ExecMode {
     Scoped,
 }
 
+/// Store-construction pipeline (`engine.build`, see `decomp::store`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BuildMode {
+    /// Two-pass thread-parallel builder streaming edges straight into
+    /// each thread's exact-capacity CSR (~1.5× final store at peak).
+    TwoPass,
+    /// Ablation fallback: the single-threaded staging builder (holds
+    /// three edge copies at peak; measures what streaming removes).
+    Serial,
+}
+
 /// Fully-validated experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -166,6 +177,7 @@ pub struct ExperimentConfig {
     pub backend: DynamicsBackend,
     pub comm: CommMode,
     pub exec: ExecMode,
+    pub build: BuildMode,
     pub artifacts_dir: String,
     /// Inter-rank transport: in-process channels or TCP processes.
     pub transport: CommTransport,
@@ -207,6 +219,7 @@ impl Default for ExperimentConfig {
             backend: DynamicsBackend::Native,
             comm: CommMode::Overlap,
             exec: ExecMode::Pool,
+            build: BuildMode::TwoPass,
             artifacts_dir: "artifacts".into(),
             transport: CommTransport::Local,
             tcp_rank: None,
@@ -295,6 +308,15 @@ impl ExperimentConfig {
                 &[
                     ("pool", ExecMode::Pool),
                     ("scoped", ExecMode::Scoped),
+                ],
+            )?,
+            build: parse_enum(
+                doc,
+                "engine.build",
+                "two_pass",
+                &[
+                    ("two_pass", BuildMode::TwoPass),
+                    ("serial", BuildMode::Serial),
                 ],
             )?,
             artifacts_dir: doc.str("engine.artifacts_dir", &d.artifacts_dir)?,
@@ -637,6 +659,20 @@ comm = "serialized"
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.exec, ExecMode::Scoped);
         let doc = ConfigDoc::parse("[engine]\nexec = \"forked\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn build_mode_parses_and_defaults_to_two_pass() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.build, BuildMode::TwoPass);
+        let doc =
+            ConfigDoc::parse("[engine]\nbuild = \"serial\"").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.build, BuildMode::Serial);
+        let doc =
+            ConfigDoc::parse("[engine]\nbuild = \"staged\"").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 

@@ -21,7 +21,10 @@ pub mod store;
 
 pub use area_map::area_processes_partition;
 pub use random_map::random_equivalent_partition;
-pub use store::{RankStore, ThreadEdges};
+pub use store::{
+    BuildPart, BuildRunner, BuildStats, BuildTask, RankStore,
+    ThreadEdges, ThreadRunner,
+};
 
 use crate::{Gid, RankId};
 

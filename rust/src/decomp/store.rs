@@ -14,14 +14,48 @@
 //!   according to their delays and the corresponding threads"). During
 //!   delivery a thread walks just its own run for each spiking pre:
 //!   every write lands in thread-owned state — no mutex, no atomic.
+//!
+//! # Construction: the two-pass streaming builder
+//!
+//! The paper's maximum-problem-size claim requires a rank to build its
+//! sub-graph in memory proportional to its own share. Because thread
+//! ownership is a pure function of the post gid (contiguous post-range
+//! split) and [`NetworkSpec::for_each_in_edge`] generates edges *per
+//! post*, each thread can generate exactly its own edges, twice,
+//! independently and deterministically:
+//!
+//! 1. **count** (parallel) — every thread streams its posts' edges,
+//!    recording only each source gid; the scratch is sorted and
+//!    run-length-encoded into a sorted-unique `(source, count)` table.
+//! 2. **merge** (serial, O(pres·threads)) — the per-thread source
+//!    tables are k-way-merged into the rank's `pres` array (replacing
+//!    the old sort+dedup over all edges), and each thread's exact CSR
+//!    `offsets` plus a thread-local → rank pre-index remap fall out of
+//!    the same walk.
+//! 3. **fill** (parallel) — every thread re-streams its edges straight
+//!    into its exact-capacity CSR arrays via a cursor per pre, then
+//!    delay-sorts each run in place (stably, so multapse ties keep
+//!    generation order and results are bit-identical to the serial
+//!    ablation builder at any thread count).
+//!
+//! Peak construction memory is the final CSR plus ~4 bytes/edge of
+//! transient scratch (≤ ~1.5× the final store), where the serial
+//! staging builder holds three edge copies (~3×). Both builders report
+//! analytic [`BuildStats`] (per-phase nanoseconds + peak bytes); the
+//! engine runs the parallel passes on its persistent worker pool via
+//! the [`BuildRunner`] seam.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use crate::atlas::NetworkSpec;
 use crate::graph::Edge;
 use crate::metrics::memory::{vec_bytes, MemoryBreakdown};
+use crate::util::bitset::BitSet;
 use crate::{DelaySteps, Gid, ThreadId};
 
 /// One compute thread's private share of the rank's indegree sub-graph.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ThreadEdges {
     /// CSR offsets over the rank's `pres` array: edges of pre `p` owned by
     /// this thread live at `post[offsets[p]..offsets[p+1]]`, delay-sorted.
@@ -30,8 +64,9 @@ pub struct ThreadEdges {
     pub post: Vec<u32>,
     pub weight: Vec<f64>,
     pub delay: Vec<DelaySteps>,
-    /// Plastic-edge marker (present only for STDP networks).
-    pub plastic: Vec<bool>,
+    /// Plastic-edge markers, one bit per edge (empty — zero bytes — for
+    /// non-STDP networks; an empty [`BitSet`] reads as all-false).
+    pub plastic: BitSet,
     /// Pre index of each edge (present only for STDP networks, where the
     /// potentiation path walks a post's incoming edges and needs their
     /// sources' traces).
@@ -56,7 +91,7 @@ impl ThreadEdges {
             + vec_bytes(&self.post)
             + vec_bytes(&self.weight)
             + vec_bytes(&self.delay)
-            + vec_bytes(&self.plastic)
+            + self.plastic.bytes()
             + vec_bytes(&self.epre)
             + vec_bytes(&self.plastic_by_post_offsets)
             + vec_bytes(&self.plastic_by_post_edge)
@@ -77,9 +112,16 @@ impl ThreadEdges {
 /// correction loops walk the (then possibly empty) ranges otherwise.
 /// Replaces the linear `position()` scan that sat on the per-spike
 /// collection path and on every staged edge during store construction.
+///
+/// A rank may own **zero** posts (more ranks than an area has neurons);
+/// every range is then empty and thread 0 is the conventional owner —
+/// the early return keeps the arithmetic from dividing by zero.
 #[inline]
 pub fn owner_of(local_post: u32, n_posts: usize, n_threads: usize) -> ThreadId {
     debug_assert!(n_threads >= 1);
+    if n_posts == 0 {
+        return 0;
+    }
     debug_assert!((local_post as usize) < n_posts);
     let p = local_post as usize;
     let mut t = (p as u64 * n_threads as u64 / n_posts as u64) as usize;
@@ -91,6 +133,276 @@ pub fn owner_of(local_post: u32, n_posts: usize, n_threads: usize) -> ThreadId {
         t -= 1;
     }
     t as ThreadId
+}
+
+/// Contiguous equal split of `n_posts` local posts over `n_threads`.
+fn split_ranges(n_posts: usize, n_threads: usize) -> Vec<(u32, u32)> {
+    (0..n_threads)
+        .map(|t| {
+            (
+                (t * n_posts / n_threads) as u32,
+                ((t + 1) * n_posts / n_threads) as u32,
+            )
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Two-pass build pipeline
+// ---------------------------------------------------------------------
+
+/// Per-phase wall time and analytic peak heap of one store construction.
+/// Surfaced through the engine's `PhaseTimer` (`build_count` /
+/// `build_merge` / `build_fill`), `cortex partition`, and the
+/// `build_scaling` bench.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BuildStats {
+    /// Pass 1: streaming edge generation + source counting.
+    pub count_ns: u64,
+    /// K-way source-table merge + CSR offset/remap derivation.
+    pub merge_ns: u64,
+    /// Pass 2: streaming fill into the exact-capacity CSR + delay sort.
+    pub fill_ns: u64,
+    /// Analytic peak heap bytes held at any point during construction
+    /// (the build-time counterpart of the Fig 9-10 memory argument).
+    pub peak_bytes: u64,
+}
+
+/// Pass-1 result of one thread: its posts' sources, sorted unique, with
+/// per-source edge counts.
+pub struct CountPart {
+    upres: Vec<Gid>,
+    ucounts: Vec<u32>,
+    n_edges: u64,
+    max_delay: DelaySteps,
+    peak_bytes: u64,
+}
+
+/// What one build task returns (count or fill, by pass).
+pub enum BuildPart {
+    Count(CountPart),
+    Fill { edges: ThreadEdges, peak_bytes: u64 },
+}
+
+/// A unit of build work for one thread. Tasks own their inputs
+/// (`Arc`-shared spec and posts), so any executor with `'static`
+/// workers — notably the engine's persistent pool — can run them.
+pub type BuildTask = Box<dyn FnOnce() -> BuildPart + Send + 'static>;
+
+/// Executes one build pass: runs the indexed tasks (one per thread) to
+/// completion and returns their results **in task order**. Implemented
+/// by the engine's `WorkerPool` (so construction parallelises across
+/// the same threads that later step) and by [`ThreadRunner`].
+pub trait BuildRunner {
+    fn run(&self, tasks: Vec<BuildTask>) -> Vec<BuildPart>;
+}
+
+/// Default runner outside a live engine (CLI inspection, tests,
+/// benches): one OS thread per task, joined in order.
+pub struct ThreadRunner;
+
+impl BuildRunner for ThreadRunner {
+    fn run(&self, tasks: Vec<BuildTask>) -> Vec<BuildPart> {
+        if tasks.len() == 1 {
+            return tasks.into_iter().map(|t| t()).collect();
+        }
+        let handles: Vec<_> =
+            tasks.into_iter().map(std::thread::spawn).collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(part) => part,
+                // re-raise with the original payload (an invariant
+                // message like the fill pass's) instead of flattening
+                // it into "Any { .. }"
+                Err(panic) => std::panic::resume_unwind(panic),
+            })
+            .collect()
+    }
+}
+
+/// Pass 1 for one thread: stream the owned posts' edges, keeping only
+/// each source gid, then sort + run-length-encode. The 4-byte-per-edge
+/// scratch is the pass's entire footprint.
+fn count_pass(spec: &NetworkSpec, posts: &[Gid]) -> CountPart {
+    let mut srcs: Vec<Gid> = Vec::new();
+    let mut max_delay: DelaySteps = 1;
+    for &gid in posts {
+        spec.for_each_in_edge(gid, |e, _| {
+            srcs.push(e.pre);
+            if e.delay > max_delay {
+                max_delay = e.delay;
+            }
+        });
+    }
+    let n_edges = srcs.len() as u64;
+    let scratch_bytes = vec_bytes(&srcs); // capacity incl. growth slack
+    srcs.sort_unstable();
+    // count the uniques first so the RLE tables allocate exactly once
+    // — no doubling growth, no shrink copy, and the analytic peak
+    // below is the true high-water mark of this pass
+    let n_unique = srcs.windows(2).filter(|w| w[0] != w[1]).count()
+        + usize::from(!srcs.is_empty());
+    let mut upres: Vec<Gid> = Vec::with_capacity(n_unique);
+    let mut ucounts: Vec<u32> = Vec::with_capacity(n_unique);
+    for &g in &srcs {
+        if upres.last() == Some(&g) {
+            *ucounts.last_mut().unwrap() += 1;
+        } else {
+            upres.push(g);
+            ucounts.push(1);
+        }
+    }
+    debug_assert_eq!(upres.len(), n_unique);
+    let peak_bytes =
+        scratch_bytes + vec_bytes(&upres) + vec_bytes(&ucounts);
+    CountPart { upres, ucounts, n_edges, max_delay, peak_bytes }
+}
+
+/// Pass 2 for one thread: re-stream the owned posts' edges directly
+/// into the exact-capacity CSR (cursor per pre), then stably delay-sort
+/// each run in place. `offsets` is the prefix-summed CSR from the
+/// merge; `upres`/`remap` translate a source gid to its rank-wide pre
+/// index without touching the shared `pres` table.
+#[allow(clippy::too_many_arguments)]
+fn fill_pass(
+    spec: &NetworkSpec,
+    posts: &[Gid],
+    lo: u32,
+    hi: u32,
+    offsets: Vec<u32>,
+    remap: Vec<u32>,
+    upres: Vec<Gid>,
+    plastic_net: bool,
+) -> BuildPart {
+    let n_e = *offsets.last().expect("offsets never empty") as usize;
+    let n_pres = offsets.len() - 1;
+    let mut cursor = offsets.clone();
+    let mut post = vec![0u32; n_e];
+    let mut weight = vec![0.0f64; n_e];
+    let mut delay: Vec<DelaySteps> = vec![0; n_e];
+    let mut plastic =
+        if plastic_net { BitSet::zeros(n_e) } else { BitSet::new() };
+    let mut epre: Vec<u32> =
+        if plastic_net { vec![0; n_e] } else { Vec::new() };
+
+    for lp in lo..hi {
+        let gid = posts[lp as usize];
+        let dst_pop = spec.pop_of(gid);
+        spec.for_each_in_edge(gid, |e, src_pop| {
+            let j = upres
+                .binary_search(&e.pre)
+                .expect("pass 2 saw a source pass 1 did not");
+            let p = remap[j] as usize;
+            let k = cursor[p] as usize;
+            cursor[p] += 1;
+            post[k] = lp;
+            weight[k] = e.weight;
+            delay[k] = e.delay;
+            if plastic_net {
+                epre[k] = p as u32;
+                if spec.pair_plastic(src_pop, dst_pop) {
+                    plastic.set(k, true);
+                }
+            }
+        });
+    }
+    debug_assert!(
+        (0..n_pres).all(|p| cursor[p] == offsets[p + 1]),
+        "pass 2 edge counts disagree with pass 1"
+    );
+
+    // Delay-sort every pre run, stably: within a (pre, delay) group the
+    // arrival order above *is* generation order, so the layout matches
+    // the serial builder's stable (pre, delay) sort bit for bit.
+    let mut perm: Vec<u32> = Vec::new();
+    let mut s32: Vec<u32> = Vec::new();
+    let mut sf: Vec<f64> = Vec::new();
+    let mut s16: Vec<DelaySteps> = Vec::new();
+    let mut sb: Vec<bool> = Vec::new();
+    for p in 0..n_pres {
+        let r = offsets[p] as usize..offsets[p + 1] as usize;
+        if r.len() <= 1
+            || delay[r.clone()].windows(2).all(|w| w[0] <= w[1])
+        {
+            continue;
+        }
+        perm.clear();
+        perm.extend(r.clone().map(|i| i as u32));
+        perm.sort_by_key(|&i| delay[i as usize]); // stable
+        s16.clear();
+        s16.extend(perm.iter().map(|&i| delay[i as usize]));
+        delay[r.clone()].copy_from_slice(&s16);
+        s32.clear();
+        s32.extend(perm.iter().map(|&i| post[i as usize]));
+        post[r.clone()].copy_from_slice(&s32);
+        sf.clear();
+        sf.extend(perm.iter().map(|&i| weight[i as usize]));
+        weight[r.clone()].copy_from_slice(&sf);
+        if plastic_net {
+            s32.clear();
+            s32.extend(perm.iter().map(|&i| epre[i as usize]));
+            epre[r.clone()].copy_from_slice(&s32);
+            sb.clear();
+            sb.extend(perm.iter().map(|&i| plastic.get(i as usize)));
+            for (o, &b) in r.clone().zip(sb.iter()) {
+                plastic.set(o, b);
+            }
+        }
+    }
+
+    // plastic-by-post CSR (potentiation path), from the final layout
+    let span = (hi - lo) as usize;
+    let (pbp_off, pbp_edge) = if plastic_net {
+        let mut off = vec![0u32; span + 1];
+        for ei in 0..n_e {
+            if plastic.get(ei) {
+                off[(post[ei] - lo) as usize + 1] += 1;
+            }
+        }
+        for i in 0..span {
+            off[i + 1] += off[i];
+        }
+        let mut cur = off.clone();
+        let mut idx = vec![0u32; off[span] as usize];
+        for (ei, &po) in post.iter().enumerate() {
+            if plastic.get(ei) {
+                let b = (po - lo) as usize;
+                idx[cur[b] as usize] = ei as u32;
+                cur[b] += 1;
+            }
+        }
+        (off, idx)
+    } else {
+        (Vec::new(), Vec::new())
+    };
+
+    let peak_bytes = vec_bytes(&offsets)
+        + vec_bytes(&cursor)
+        + vec_bytes(&remap)
+        + vec_bytes(&upres)
+        + vec_bytes(&post)
+        + vec_bytes(&weight)
+        + vec_bytes(&delay)
+        + plastic.bytes()
+        + vec_bytes(&epre)
+        + 2 * vec_bytes(&pbp_off)
+        + vec_bytes(&pbp_edge);
+    BuildPart::Fill {
+        edges: ThreadEdges {
+            offsets,
+            post,
+            weight,
+            delay,
+            plastic,
+            epre,
+            plastic_by_post_offsets: pbp_off,
+            plastic_by_post_edge: pbp_edge,
+            post_lo: lo,
+            post_hi: hi,
+        },
+        peak_bytes,
+    }
 }
 
 /// The rank's full data instance.
@@ -117,12 +429,222 @@ pub struct RankStore {
     /// until the live state blocks move into the engine's worker
     /// contexts, which then report their actual bytes.
     pub state_bytes: u64,
+    /// How this store's construction went (timings + peak memory).
+    pub build: BuildStats,
 }
 
 impl RankStore {
-    /// Build the store for `rank`, generating exactly the rank's own
-    /// indegree sub-graph from the deterministic spec (no global state).
+    /// Build the store for `rank` with the two-pass streaming pipeline,
+    /// its passes spread over transient OS threads. Inside a live
+    /// engine use [`Self::build_with`] and hand in the worker pool.
     pub fn build(
+        spec: &Arc<NetworkSpec>,
+        posts: &[Gid],
+        is_local: impl Fn(Gid) -> bool,
+        rank: u16,
+        n_threads: usize,
+    ) -> RankStore {
+        Self::build_with(spec, posts, is_local, rank, n_threads, &ThreadRunner)
+    }
+
+    /// Two-pass parallel construction on an arbitrary [`BuildRunner`]
+    /// (the engine passes its persistent `WorkerPool`, so construction
+    /// parallelises across the same threads that later step). Produces
+    /// contents bit-identical to [`Self::build_serial`] at any thread
+    /// count.
+    pub fn build_with(
+        spec: &Arc<NetworkSpec>,
+        posts: &[Gid],
+        is_local: impl Fn(Gid) -> bool,
+        rank: u16,
+        n_threads: usize,
+        runner: &dyn BuildRunner,
+    ) -> RankStore {
+        assert!(n_threads >= 1);
+        let n_posts = posts.len();
+        let plastic_net = spec.stdp.is_some();
+        let thread_ranges = split_ranges(n_posts, n_threads);
+        let posts_arc: Arc<Vec<Gid>> = Arc::new(posts.to_vec());
+        let posts_bytes = vec_bytes(&posts_arc);
+
+        // ---- pass 1: count (parallel) --------------------------------
+        let t0 = Instant::now();
+        let tasks: Vec<BuildTask> = thread_ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                let spec = Arc::clone(spec);
+                let posts = Arc::clone(&posts_arc);
+                Box::new(move || {
+                    BuildPart::Count(count_pass(
+                        &spec,
+                        &posts[lo as usize..hi as usize],
+                    ))
+                }) as BuildTask
+            })
+            .collect();
+        let counts: Vec<CountPart> = runner
+            .run(tasks)
+            .into_iter()
+            .map(|p| match p {
+                BuildPart::Count(c) => c,
+                BuildPart::Fill { .. } => {
+                    unreachable!("count pass returned a fill part")
+                }
+            })
+            .collect();
+        let count_ns = t0.elapsed().as_nanos() as u64;
+        let count_peak: u64 =
+            posts_bytes + counts.iter().map(|c| c.peak_bytes).sum::<u64>();
+
+        // ---- merge (serial) ------------------------------------------
+        // k-way merge of the sorted-unique per-thread source tables,
+        // run twice: a counting sweep sizes `pres` exactly (no growth,
+        // no shrink copy — the analytic peak stays honest), then the
+        // fill sweep writes it
+        let t1 = Instant::now();
+        let k = counts.len();
+        let merge_sweep = |mut emit: Option<&mut Vec<Gid>>| -> usize {
+            let mut heads = vec![0usize; k];
+            let mut merged = 0usize;
+            loop {
+                let mut min: Option<Gid> = None;
+                for t in 0..k {
+                    if let Some(&g) = counts[t].upres.get(heads[t]) {
+                        min = Some(match min {
+                            None => g,
+                            Some(m) => m.min(g),
+                        });
+                    }
+                }
+                let Some(g) = min else { break };
+                if let Some(out) = emit.as_mut() {
+                    out.push(g);
+                }
+                merged += 1;
+                for t in 0..k {
+                    if counts[t].upres.get(heads[t]) == Some(&g) {
+                        heads[t] += 1;
+                    }
+                }
+            }
+            merged
+        };
+        let n_pres = merge_sweep(None);
+        let mut pres: Vec<Gid> = Vec::with_capacity(n_pres);
+        merge_sweep(Some(&mut pres));
+        let n_local_pres =
+            pres.iter().filter(|&&g| is_local(g)).count();
+        let max_delay = counts
+            .iter()
+            .map(|c| c.max_delay)
+            .fold(1, DelaySteps::max);
+
+        // per-thread exact CSR offsets + thread-local → rank pre remap
+        let mut n_local_edges = 0u64;
+        let mut n_remote_edges = 0u64;
+        let mut upres_bytes = 0u64;
+        let mut table_bytes = 0u64;
+        let mut per_thread: Vec<(Vec<u32>, Vec<u32>)> =
+            Vec::with_capacity(k);
+        for c in &counts {
+            let mut offsets = vec![0u32; n_pres + 1];
+            let mut remap = vec![0u32; c.upres.len()];
+            let mut i = 0usize;
+            for (j, (&g, &cnt)) in
+                c.upres.iter().zip(&c.ucounts).enumerate()
+            {
+                while pres[i] != g {
+                    i += 1;
+                }
+                remap[j] = i as u32;
+                offsets[i + 1] = cnt;
+                if is_local(g) {
+                    n_local_edges += cnt as u64;
+                } else {
+                    n_remote_edges += cnt as u64;
+                }
+            }
+            for i in 0..n_pres {
+                offsets[i + 1] += offsets[i];
+            }
+            upres_bytes +=
+                vec_bytes(&c.upres) + vec_bytes(&c.ucounts);
+            table_bytes += vec_bytes(&offsets) + vec_bytes(&remap);
+            per_thread.push((offsets, remap));
+        }
+        debug_assert_eq!(
+            counts.iter().map(|c| c.n_edges).sum::<u64>(),
+            n_local_edges + n_remote_edges,
+            "per-source counts disagree with the edge totals"
+        );
+        let merge_ns = t1.elapsed().as_nanos() as u64;
+        let merge_peak = posts_bytes
+            + upres_bytes
+            + vec_bytes(&pres)
+            + table_bytes;
+
+        // ---- pass 2: fill (parallel) ---------------------------------
+        let t2 = Instant::now();
+        let pres_bytes = vec_bytes(&pres);
+        let tasks: Vec<BuildTask> = counts
+            .into_iter()
+            .zip(per_thread)
+            .zip(&thread_ranges)
+            .map(|((c, (offsets, remap)), &(lo, hi))| {
+                let spec = Arc::clone(spec);
+                let posts = Arc::clone(&posts_arc);
+                Box::new(move || {
+                    fill_pass(
+                        &spec, &posts, lo, hi, offsets, remap, c.upres,
+                        plastic_net,
+                    )
+                }) as BuildTask
+            })
+            .collect();
+        let mut fill_peak = posts_bytes + pres_bytes;
+        let threads: Vec<ThreadEdges> = runner
+            .run(tasks)
+            .into_iter()
+            .map(|p| match p {
+                BuildPart::Fill { edges, peak_bytes } => {
+                    fill_peak += peak_bytes;
+                    edges
+                }
+                BuildPart::Count(_) => {
+                    unreachable!("fill pass returned a count part")
+                }
+            })
+            .collect();
+        let fill_ns = t2.elapsed().as_nanos() as u64;
+
+        let state_bytes = model_state_bytes(spec, posts);
+        let posts = Arc::try_unwrap(posts_arc)
+            .unwrap_or_else(|a| (*a).clone());
+        RankStore {
+            rank,
+            posts,
+            pres,
+            n_local_pres,
+            n_local_edges,
+            n_remote_edges,
+            threads,
+            thread_ranges,
+            max_delay,
+            state_bytes,
+            build: BuildStats {
+                count_ns,
+                merge_ns,
+                fill_ns,
+                peak_bytes: count_peak.max(merge_peak).max(fill_peak),
+            },
+        }
+    }
+
+    /// The single-threaded staging builder, kept as the ablation path:
+    /// it materialises the full edge list, re-stages it per thread and
+    /// only then lays out the CSR — three edge copies at peak, built
+    /// serially. [`Self::build`] produces bit-identical contents.
+    pub fn build_serial(
         spec: &NetworkSpec,
         posts: &[Gid],
         is_local: impl Fn(Gid) -> bool,
@@ -132,31 +654,29 @@ impl RankStore {
         assert!(n_threads >= 1);
         let n_posts = posts.len();
         let plastic_net = spec.stdp.is_some();
+        let posts_bytes = (n_posts * std::mem::size_of::<Gid>()) as u64;
 
-        // thread ranges: contiguous equal split of local posts
-        let thread_ranges: Vec<(u32, u32)> = (0..n_threads)
-            .map(|t| {
-                (
-                    (t * n_posts / n_threads) as u32,
-                    ((t + 1) * n_posts / n_threads) as u32,
-                )
-            })
-            .collect();
+        let thread_ranges = split_ranges(n_posts, n_threads);
         let thread_of =
             |local_post: u32| -> ThreadId { owner_of(local_post, n_posts, n_threads) };
 
         // generate the indegree sub-graph: all incoming edges of our posts
+        let t0 = Instant::now();
         let mut edges: Vec<Edge> = Vec::new();
         for &gid in posts {
             spec.in_edges(gid, &mut edges);
         }
+        let count_ns = t0.elapsed().as_nanos() as u64;
+        let edges_bytes = vec_bytes(&edges);
 
         // pres = sorted unique sources
+        let t1 = Instant::now();
         let mut pres: Vec<Gid> = edges.iter().map(|e| e.pre).collect();
         pres.sort_unstable();
         pres.dedup();
         pres.shrink_to_fit(); // dedup leaves the pre-dedup capacity
         let n_local_pres = pres.iter().filter(|&&p| is_local(p)).count();
+        let merge_ns = t1.elapsed().as_nanos() as u64;
 
         let pre_index = |gid: Gid| -> u32 {
             pres.binary_search(&gid).expect("pre not in table") as u32
@@ -170,6 +690,7 @@ impl RankStore {
         let mut max_delay: DelaySteps = 1;
 
         // (thread, pre, delay)-sorted staging: one bucket per thread
+        let t2 = Instant::now();
         struct Staged {
             pre: u32,
             post: u32,
@@ -197,6 +718,8 @@ impl RankStore {
             });
         }
         drop(edges);
+        let staged_bytes: u64 =
+            staged.iter().map(vec_bytes).sum::<u64>();
 
         let threads: Vec<ThreadEdges> = staged
             .into_iter()
@@ -220,10 +743,16 @@ impl RankStore {
                 let weight: Vec<f64> = st.iter().map(|s| s.weight).collect();
                 let delay: Vec<DelaySteps> =
                     st.iter().map(|s| s.delay).collect();
-                let plastic: Vec<bool> = if plastic_net {
-                    st.iter().map(|s| s.plastic).collect()
+                let plastic = if plastic_net {
+                    let mut bits = BitSet::zeros(st.len());
+                    for (i, s) in st.iter().enumerate() {
+                        if s.plastic {
+                            bits.set(i, true);
+                        }
+                    }
+                    bits
                 } else {
-                    Vec::new()
+                    BitSet::new()
                 };
                 let epre: Vec<u32> = if plastic_net {
                     st.iter().map(|s| s.pre).collect()
@@ -272,14 +801,17 @@ impl RankStore {
                 }
             })
             .collect();
+        let fill_ns = t2.elapsed().as_nanos() as u64;
+        let final_bytes: u64 =
+            threads.iter().map(|t| t.bytes()).sum::<u64>();
+        // three copies at peak: the global edge list coexists with the
+        // staging buckets, and the buckets with the growing CSR
+        let peak_bytes = posts_bytes
+            + vec_bytes(&pres)
+            + (edges_bytes + staged_bytes)
+                .max(staged_bytes + final_bytes);
 
-        let state_bytes: u64 = posts
-            .iter()
-            .map(|&g| {
-                spec.params[spec.pidx(g) as usize].state_bytes_per_neuron()
-            })
-            .sum();
-
+        let state_bytes = model_state_bytes(spec, posts);
         RankStore {
             rank,
             posts: posts.to_vec(),
@@ -291,7 +823,25 @@ impl RankStore {
             thread_ranges,
             max_delay,
             state_bytes,
+            build: BuildStats { count_ns, merge_ns, fill_ns, peak_bytes },
         }
+    }
+
+    /// True when the two stores describe the identical sub-graph — every
+    /// field the engine consumes compared exactly (build statistics are
+    /// timing-dependent and ignored). The contract between
+    /// [`Self::build`] and [`Self::build_serial`].
+    pub fn same_graph(&self, other: &RankStore) -> bool {
+        self.rank == other.rank
+            && self.posts == other.posts
+            && self.pres == other.pres
+            && self.n_local_pres == other.n_local_pres
+            && self.n_local_edges == other.n_local_edges
+            && self.n_remote_edges == other.n_remote_edges
+            && self.threads == other.threads
+            && self.thread_ranges == other.thread_ranges
+            && self.max_delay == other.max_delay
+            && self.state_bytes == other.state_bytes
     }
 
     pub fn n_posts(&self) -> usize {
@@ -339,7 +889,9 @@ impl RankStore {
     /// state is included analytically while this store still owns the
     /// per-thread shares; after [`Self::take_threads`] the worker
     /// contexts own both edges and state and report their actual bytes
-    /// (so `RankEngine::memory` never double-counts).
+    /// (so `RankEngine::memory` never double-counts). The transient
+    /// construction peak is attached as a gauge — reported next to the
+    /// components, never summed into the steady-state total.
     pub fn memory(&self) -> MemoryBreakdown {
         let mut m = MemoryBreakdown::new();
         m.add("posts", vec_bytes(&self.posts));
@@ -350,13 +902,25 @@ impl RankStore {
         for t in &self.threads {
             m.add("edges", t.bytes());
         }
+        m.set_gauge("build_peak", self.build.peak_bytes);
         m
     }
+}
+
+/// Analytic heap bytes of the posts' neuron-model state.
+fn model_state_bytes(spec: &NetworkSpec, posts: &[Gid]) -> u64 {
+    posts
+        .iter()
+        .map(|&g| {
+            spec.params[spec.pidx(g) as usize].state_bytes_per_neuron()
+        })
+        .sum()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::atlas::hpc::{hpc_benchmark_spec, HpcParams};
     use crate::atlas::random_spec;
     use crate::decomp::random_equivalent_partition;
     use crate::util::proptest_lite::property;
@@ -367,8 +931,8 @@ mod tests {
         ranks: usize,
         threads: usize,
         seed: u64,
-    ) -> (crate::atlas::NetworkSpec, Vec<RankStore>) {
-        let spec = random_spec(n, k, seed);
+    ) -> (Arc<crate::atlas::NetworkSpec>, Vec<RankStore>) {
+        let spec = Arc::new(random_spec(n, k, seed));
         let part = random_equivalent_partition(n, ranks, seed);
         let stores = (0..ranks)
             .map(|r| {
@@ -474,19 +1038,26 @@ mod tests {
         // neuron-model state accounted: LIF = 33 B/neuron
         assert_eq!(m.get("state"), 33 * stores[0].n_posts() as u64);
         assert!(m.total() > m.get("edges"));
+        // the construction peak rides along as a gauge, excluded from
+        // the steady-state total
+        assert!(m.gauge("build_peak") > 0);
+        assert_eq!(
+            m.total(),
+            m.components().map(|(_, b)| b).sum::<u64>()
+        );
     }
 
     #[test]
     fn state_bytes_follow_population_models() {
         use crate::atlas::random_spec_with;
         use crate::model::{AdexParams, LifParams, ModelParams};
-        let spec = random_spec_with(
+        let spec = Arc::new(random_spec_with(
             200,
             20,
             6,
             ModelParams::Adex(AdexParams::default()),
             ModelParams::Lif(LifParams::default()),
-        );
+        ));
         let posts: Vec<u32> = (0..200).collect();
         let store = RankStore::build(&spec, &posts, |_| true, 0, 2);
         // 160 AdEx × 40 B + 40 LIF × 33 B
@@ -532,6 +1103,36 @@ mod tests {
     }
 
     #[test]
+    fn owner_of_zero_posts_returns_thread_zero() {
+        // regression: `owner_of` divided by `n_posts`; a rank owning
+        // zero posts (more ranks than an area has neurons) must answer
+        // thread 0 instead of dividing by zero
+        for threads in [1usize, 2, 7] {
+            assert_eq!(owner_of(0, 0, threads), 0);
+        }
+    }
+
+    #[test]
+    fn empty_rank_builds_and_answers() {
+        // a rank with an empty post range must build (both pipelines),
+        // report zeros, and keep thread_of total
+        let spec = Arc::new(random_spec(50, 5, 11));
+        let par = RankStore::build(&spec, &[], |_| false, 3, 4);
+        let ser = RankStore::build_serial(&spec, &[], |_| false, 3, 4);
+        assert!(par.same_graph(&ser));
+        assert_eq!(par.n_posts(), 0);
+        assert_eq!(par.n_pres(), 0);
+        assert_eq!(par.n_edges(), 0);
+        assert_eq!(par.threads.len(), 4);
+        assert!(par
+            .thread_ranges
+            .iter()
+            .all(|&(lo, hi)| lo == 0 && hi == 0));
+        assert_eq!(par.thread_of(0), 0);
+        assert!(par.memory().total() < 1024);
+    }
+
+    #[test]
     fn thread_of_agrees_with_ranges_after_take() {
         let (_, mut stores) = build_stores(157, 12, 1, 5, 8);
         let s = &mut stores[0];
@@ -545,6 +1146,126 @@ mod tests {
         assert_eq!(taken.len(), 5);
         assert!(s.threads.is_empty());
         assert_eq!(s.thread_of(0), owner_of(0, s.n_posts(), ranges.len()));
+    }
+
+    #[test]
+    fn parallel_builder_matches_serial_field_for_field() {
+        // the acceptance contract: the two-pass streaming builder and
+        // the staging ablation builder produce bit-identical stores at
+        // 1/2/4 threads, on plain and plastic networks
+        let plain = Arc::new(random_spec(300, 30, 9));
+        let plastic = Arc::new(hpc_benchmark_spec(
+            &HpcParams {
+                n_neurons: 240,
+                indegree: 60,
+                plastic: true,
+                ..Default::default()
+            },
+            9,
+        ));
+        for spec in [&plain, &plastic] {
+            assert_eq!(
+                spec.stdp.is_some(),
+                Arc::ptr_eq(spec, &plastic)
+            );
+            let n = spec.n_total();
+            for ranks in [1usize, 3] {
+                let part = random_equivalent_partition(n, ranks, 9);
+                for threads in [1usize, 2, 4] {
+                    for r in 0..ranks {
+                        let rank_of = part.rank_of.clone();
+                        let is_local = move |g: Gid| {
+                            rank_of[g as usize] as usize == r
+                        };
+                        let par = RankStore::build(
+                            spec,
+                            &part.members[r],
+                            is_local,
+                            r as u16,
+                            threads,
+                        );
+                        let rank_of = part.rank_of.clone();
+                        let ser = RankStore::build_serial(
+                            spec,
+                            &part.members[r],
+                            move |g| rank_of[g as usize] as usize == r,
+                            r as u16,
+                            threads,
+                        );
+                        assert!(
+                            par.same_graph(&ser),
+                            "builder divergence: {} ranks={ranks} \
+                             threads={threads} rank={r}",
+                            spec.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plastic_markers_are_bit_packed() {
+        let spec = Arc::new(hpc_benchmark_spec(
+            &HpcParams {
+                n_neurons: 200,
+                indegree: 50,
+                plastic: true,
+                ..Default::default()
+            },
+            13,
+        ));
+        let posts: Vec<u32> = (0..spec.n_total() as u32).collect();
+        let store = RankStore::build(&spec, &posts, |_| true, 0, 2);
+        let mut marked = 0usize;
+        for te in &store.threads {
+            let n = te.n_edges();
+            assert_eq!(te.plastic.len(), n);
+            // one bit per edge, not one byte
+            assert!(te.plastic.bytes() <= (n as u64 / 8) + 8);
+            assert_eq!(te.epre.len(), n);
+            marked += te.plastic.count_ones();
+        }
+        assert!(marked > 0, "hpc_benchmark must have plastic E→E edges");
+
+        // non-plastic networks allocate nothing for the markers
+        let plain = Arc::new(random_spec(200, 20, 13));
+        let store = RankStore::build(&plain, &posts[..200], |_| true, 0, 2);
+        for te in &store.threads {
+            assert!(te.plastic.is_empty());
+            assert_eq!(te.plastic.bytes(), 0);
+            assert!(te.epre.is_empty());
+        }
+    }
+
+    #[test]
+    fn build_stats_populated_and_peak_bounded() {
+        let (_, stores) = build_stores(400, 60, 1, 4, 14);
+        let s = &stores[0];
+        let b = s.build;
+        assert!(b.count_ns > 0 && b.fill_ns > 0);
+        let final_bytes = s.memory().get("posts")
+            + s.memory().get("pres")
+            + s.memory().get("edges");
+        assert!(b.peak_bytes >= final_bytes);
+        // the headline bound: streaming construction stays under ~1.5×
+        // the final store (the serial path holds ~3×)
+        assert!(
+            b.peak_bytes as f64 <= 1.5 * final_bytes as f64 + 4096.0,
+            "peak {} vs final {final_bytes}",
+            b.peak_bytes
+        );
+        let ser = RankStore::build_serial(
+            &Arc::new(random_spec(400, 60, 14)),
+            &s.posts,
+            |_| true,
+            0,
+            4,
+        );
+        assert!(
+            ser.build.peak_bytes > b.peak_bytes,
+            "staging builder should peak higher than streaming"
+        );
     }
 
     #[test]
@@ -571,6 +1292,46 @@ mod tests {
                     if *te.offsets.last().unwrap() as usize != te.post.len() {
                         return Err("csr tail mismatch".into());
                     }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_parallel_equals_serial() {
+        // proptest-style sweep of the bit-identity contract across
+        // network shapes, rank counts and thread counts
+        property("two-pass == serial", 12, |g| {
+            let n = g.usize(40..250);
+            let k = g.u32(1..20.min(n as u32));
+            let ranks = g.usize(1..4);
+            let threads = [1usize, 2, 4][g.usize(0..3)];
+            let seed = g.case as u64 + 90;
+            let spec = Arc::new(random_spec(n, k, seed));
+            let part = random_equivalent_partition(n, ranks, seed);
+            for r in 0..ranks {
+                let rank_of = part.rank_of.clone();
+                let par = RankStore::build(
+                    &spec,
+                    &part.members[r],
+                    move |g| rank_of[g as usize] as usize == r,
+                    r as u16,
+                    threads,
+                );
+                let rank_of = part.rank_of.clone();
+                let ser = RankStore::build_serial(
+                    &spec,
+                    &part.members[r],
+                    move |g| rank_of[g as usize] as usize == r,
+                    r as u16,
+                    threads,
+                );
+                if !par.same_graph(&ser) {
+                    return Err(format!(
+                        "divergence at n={n} k={k} ranks={ranks} \
+                         threads={threads} rank={r}"
+                    ));
                 }
             }
             Ok(())

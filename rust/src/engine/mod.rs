@@ -68,7 +68,9 @@ use std::sync::Arc;
 
 use crate::atlas::NetworkSpec;
 use crate::comm::{SpikeMsg, SpikePacket};
-use crate::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use crate::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind,
+};
 use crate::decomp::{Partition, RankStore};
 use crate::metrics::memory::{vec_bytes, MemoryBreakdown, MemoryReport};
 use crate::metrics::{PhaseTimer, SpikeRecorder};
@@ -86,6 +88,9 @@ pub struct EngineOptions {
     pub backend: DynamicsBackend,
     /// Persistent worker pool vs per-step scoped threads (ablation).
     pub exec: ExecMode,
+    /// Two-pass streaming store construction vs the serial staging
+    /// builder (ablation; see `decomp::store`).
+    pub build: BuildMode,
     /// Built-in raster: record spikes of gids **below** this bound.
     /// `None` means the recorder is disabled (see
     /// [`SpikeRecorder::disabled`]) and no spikes are kept — use
@@ -105,6 +110,7 @@ impl Default for EngineOptions {
             comm: CommMode::Overlap,
             backend: DynamicsBackend::Native,
             exec: ExecMode::Pool,
+            build: BuildMode::TwoPass,
             record_limit: None,
             verify_ownership: false,
             artifacts_dir: "artifacts".into(),
@@ -142,10 +148,79 @@ pub struct RankEngine {
 }
 
 impl RankEngine {
+    /// Build rank `r`'s whole engine from the spec and partition:
+    /// store construction **and** execution share the same threads. In
+    /// [`ExecMode::Pool`] the persistent worker pool is spawned first
+    /// and the two-pass builder's count/fill passes run on it (each
+    /// worker constructs the edge share it will later step); otherwise
+    /// the builder uses transient threads. [`BuildMode::Serial`] keeps
+    /// the staging builder as the ablation path.
+    pub fn build(
+        spec: Arc<NetworkSpec>,
+        partition: &Partition,
+        r: usize,
+        opts: EngineOptions,
+    ) -> anyhow::Result<RankEngine> {
+        let posts = &partition.members[r];
+        // borrow, don't clone: is_local is only consulted on this
+        // thread (the builders' serial merge phase), and rank_of is
+        // O(n_total) — a per-rank copy would be untracked build memory
+        let rank_of = &partition.rank_of;
+        let is_local = move |g: Gid| rank_of[g as usize] as usize == r;
+        let use_pool = opts.exec == ExecMode::Pool && opts.n_threads > 1;
+        let native = opts.backend == DynamicsBackend::Native;
+        let (store, pool) = match opts.build {
+            BuildMode::Serial => (
+                RankStore::build_serial(
+                    &spec,
+                    posts,
+                    is_local,
+                    r as u16,
+                    opts.n_threads,
+                ),
+                None,
+            ),
+            BuildMode::TwoPass if use_pool => {
+                let pool = WorkerPool::spawn(opts.n_threads, native);
+                let store = RankStore::build_with(
+                    &spec,
+                    posts,
+                    is_local,
+                    r as u16,
+                    opts.n_threads,
+                    &pool,
+                );
+                (store, Some(pool))
+            }
+            BuildMode::TwoPass => (
+                RankStore::build(
+                    &spec,
+                    posts,
+                    is_local,
+                    r as u16,
+                    opts.n_threads,
+                ),
+                None,
+            ),
+        };
+        Self::with_store_and_pool(spec, store, opts, pool)
+    }
+
+    /// Construct the engine around an externally built store (tests,
+    /// ablations). Spawns its own pool when one is warranted.
     pub fn new(
+        spec: Arc<NetworkSpec>,
+        store: RankStore,
+        opts: EngineOptions,
+    ) -> anyhow::Result<RankEngine> {
+        Self::with_store_and_pool(spec, store, opts, None)
+    }
+
+    fn with_store_and_pool(
         spec: Arc<NetworkSpec>,
         mut store: RankStore,
         opts: EngineOptions,
+        pool: Option<WorkerPool>,
     ) -> anyhow::Result<RankEngine> {
         let ctxs = workers::build_worker_ctxs(
             &spec,
@@ -177,9 +252,21 @@ impl RankEngine {
             )?),
         };
         // the pool pays off only with real parallelism; a single context
-        // runs inline on the rank thread either way
-        let pool = (opts.exec == ExecMode::Pool && ctxs.len() > 1)
-            .then(|| WorkerPool::spawn(ctxs.len(), pjrt.is_none()));
+        // runs inline on the rank thread either way. `build` may hand in
+        // the pool that already ran the construction passes.
+        let pool = pool.or_else(|| {
+            (opts.exec == ExecMode::Pool && ctxs.len() > 1)
+                .then(|| WorkerPool::spawn(ctxs.len(), pjrt.is_none()))
+        });
+        // per-phase construction cost lands in the same timer as the
+        // simulation phases (perfprobe / `cortex partition` report it)
+        let mut timer = PhaseTimer::new();
+        let b = store.build;
+        if b.count_ns + b.merge_ns + b.fill_ns > 0 {
+            timer.add("build_count", b.count_ns as u128);
+            timer.add("build_merge", b.merge_ns as u128);
+            timer.add("build_fill", b.fill_ns as u128);
+        }
         let pop_drives =
             spec.populations.iter().map(|p| p.drive).collect();
         let pop_dc = vec![0.0; spec.populations.len()];
@@ -192,7 +279,7 @@ impl RankEngine {
             stdp,
             pending: Vec::new(),
             recorder,
-            timer: PhaseTimer::new(),
+            timer,
             step: 0,
             opts,
             pjrt,
@@ -229,7 +316,7 @@ impl RankEngine {
         let mut out = Vec::new();
         for ctx in &self.ctxs {
             for ei in 0..ctx.edges.n_edges() {
-                if ctx.edges.plastic.get(ei).copied().unwrap_or(false) {
+                if ctx.edges.plastic.get(ei) {
                     out.push((
                         ctx.edges.epre[ei],
                         ctx.edges.post[ei],
@@ -561,6 +648,9 @@ pub struct RunConfig {
     pub comm: CommMode,
     pub backend: DynamicsBackend,
     pub exec: ExecMode,
+    /// Store construction pipeline (two-pass streaming vs serial
+    /// staging ablation).
+    pub build: BuildMode,
     pub steps: Step,
     /// Built-in raster: record gids below this bound; `None` disables
     /// recording entirely (documented [`SpikeRecorder::disabled`]
@@ -580,6 +670,7 @@ impl Default for RunConfig {
             comm: CommMode::Overlap,
             backend: DynamicsBackend::Native,
             exec: ExecMode::Pool,
+            build: BuildMode::TwoPass,
             steps: 1000,
             record_limit: None,
             verify_ownership: false,

@@ -87,7 +87,7 @@ fn deliver(ctx: &mut WorkerCtx, job: &StepJob) {
             if let (Some(params), Some(pt)) =
                 (params.as_ref(), post_traces.as_ref())
             {
-                if te.plastic[ei] {
+                if te.plastic.get(ei) {
                     // depression at (extrapolated) arrival time
                     let x = pt.at(lp as u32, emit + delay);
                     w = params.depress(w, x);

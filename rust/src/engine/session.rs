@@ -74,10 +74,11 @@ use crate::atlas::NetworkSpec;
 use crate::comm::{
     Communicator, LocalCluster, SoloComm, SpikePacket, TcpComm,
 };
-use crate::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use crate::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind,
+};
 use crate::decomp::{
     area_processes_partition, random_equivalent_partition, Partition,
-    RankStore,
 };
 use crate::metrics::memory::MemoryBreakdown;
 use crate::metrics::{MemoryReport, PhaseTimer, SpikeRecorder};
@@ -184,6 +185,7 @@ pub struct SimulationBuilder {
     comm: CommMode,
     backend: DynamicsBackend,
     exec: ExecMode,
+    build: BuildMode,
     record_limit: Option<Gid>,
     verify_ownership: bool,
     artifacts_dir: String,
@@ -203,6 +205,7 @@ impl SimulationBuilder {
             comm: CommMode::Overlap,
             backend: DynamicsBackend::Native,
             exec: ExecMode::Pool,
+            build: BuildMode::TwoPass,
             record_limit: None,
             verify_ownership: false,
             artifacts_dir: "artifacts".into(),
@@ -239,6 +242,13 @@ impl SimulationBuilder {
 
     pub fn exec(mut self, e: ExecMode) -> Self {
         self.exec = e;
+        self
+    }
+
+    /// Select the store-construction pipeline (two-pass streaming by
+    /// default; [`BuildMode::Serial`] keeps the staging ablation).
+    pub fn build_mode(mut self, b: BuildMode) -> Self {
+        self.build = b;
         self
     }
 
@@ -300,6 +310,7 @@ impl SimulationBuilder {
         self.comm = cfg.comm;
         self.backend = cfg.backend;
         self.exec = cfg.exec;
+        self.build = cfg.build;
         self.record_limit = cfg.record_limit;
         self.verify_ownership = cfg.verify_ownership;
         self.artifacts_dir = cfg.artifacts_dir.clone();
@@ -416,6 +427,7 @@ impl SimulationBuilder {
                 comm: self.comm,
                 backend: self.backend,
                 exec: self.exec,
+                build: self.build,
                 record_limit: self.record_limit,
                 verify_ownership: self.verify_ownership,
                 artifacts_dir: self.artifacts_dir.clone(),
@@ -1086,15 +1098,10 @@ fn build_runtime(
     factories: &[(String, ProbeFactory)],
 ) -> Result<RankRuntime> {
     let t_build = Instant::now();
-    let rank_of = &partition.rank_of;
-    let store = RankStore::build(
-        &spec,
-        &partition.members[r],
-        |g| rank_of[g as usize] as usize == r,
-        r as u16,
-        opts.n_threads,
-    );
-    let engine = RankEngine::new(Arc::clone(&spec), store, opts)?;
+    // store construction runs on the engine's own worker pool (two-pass
+    // streaming builder) — the rank thread only orchestrates
+    let engine =
+        RankEngine::build(Arc::clone(&spec), &partition, r, opts)?;
     let build_seconds = t_build.elapsed().as_secs_f64();
     let mut probes: Vec<(String, Box<dyn Probe>)> = factories
         .iter()

@@ -47,7 +47,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::atlas::NetworkSpec;
-use crate::decomp::{RankStore, ThreadEdges};
+use crate::decomp::{
+    BuildPart, BuildRunner, BuildTask, RankStore, ThreadEdges,
+};
 use crate::engine::ring::InputRing;
 use crate::model::dynamics::{ModelTables, PopulationState};
 use crate::model::poisson::PreparedPoisson;
@@ -218,14 +220,37 @@ pub(crate) fn build_worker_ctxs(
         .collect()
 }
 
-/// A worker's result: its context back, or the payload of its panic
-/// (the paper's ownership-verification Abort re-raises on the engine
+/// One unit of work for a pooled thread: a simulation step over its
+/// context, or a store-construction task (`decomp::store`'s build
+/// passes run on the same threads that later step — the pool exists
+/// before the contexts it will eventually own).
+///
+/// The `Step` variant is deliberately unboxed: it crosses the channel
+/// once per worker per step, and the context move is the whole point
+/// of the ownership-transfer design — an indirection here would put an
+/// allocation on the hot path to quiet a size-difference lint.
+#[allow(clippy::large_enum_variant)]
+enum Job {
+    Step(WorkerCtx, Arc<StepJob>),
+    Build(BuildTask),
+}
+
+/// A worker's answer, by job kind. Build results carry the worker index
+/// because completions arrive over one shared channel in any order.
+#[allow(clippy::large_enum_variant)]
+enum Done {
+    Step(WorkerCtx),
+    Build(usize, BuildPart),
+}
+
+/// A worker's result: its answer, or the payload of its panic (the
+/// paper's ownership-verification Abort re-raises on the engine
 /// thread).
-type DoneMsg = std::thread::Result<WorkerCtx>;
+type DoneMsg = std::thread::Result<Done>;
 
 /// The rank's long-lived compute threads, created once per engine.
 pub(crate) struct WorkerPool {
-    jobs: Vec<Sender<(WorkerCtx, Arc<StepJob>)>>,
+    jobs: Vec<Sender<Job>>,
     done_rx: Receiver<DoneMsg>,
     handles: Vec<JoinHandle<()>>,
 }
@@ -236,11 +261,11 @@ impl WorkerPool {
         let mut jobs = Vec::with_capacity(n_workers);
         let mut handles = Vec::with_capacity(n_workers);
         for t in 0..n_workers {
-            let (tx, rx) = channel::<(WorkerCtx, Arc<StepJob>)>();
+            let (tx, rx) = channel::<Job>();
             let done = done_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("cortex-worker-{t}"))
-                .spawn(move || worker_loop(rx, done, native))
+                .spawn(move || worker_loop(t, rx, done, native))
                 .expect("failed to spawn compute worker");
             jobs.push(tx);
             handles.push(handle);
@@ -260,12 +285,15 @@ impl WorkerPool {
         debug_assert_eq!(ctxs.len(), n);
         let job = Arc::new(job);
         for (tx, ctx) in self.jobs.iter().zip(ctxs.drain(..)) {
-            tx.send((ctx, Arc::clone(&job)))
+            tx.send(Job::Step(ctx, Arc::clone(&job)))
                 .expect("compute worker hung up");
         }
         for _ in 0..n {
             match self.done_rx.recv().expect("compute worker died") {
-                Ok(ctx) => ctxs.push(ctx),
+                Ok(Done::Step(ctx)) => ctxs.push(ctx),
+                Ok(Done::Build(..)) => {
+                    unreachable!("build result during a step")
+                }
                 Err(panic) => std::panic::resume_unwind(panic),
             }
         }
@@ -274,6 +302,45 @@ impl WorkerPool {
         ctxs.sort_unstable_by_key(|c| c.t);
         Arc::try_unwrap(job)
             .unwrap_or_else(|_| unreachable!("workers still hold the job"))
+    }
+
+    /// Run one build pass on the pool: task `t` executes on worker `t`
+    /// (the thread that will own the resulting state), results return
+    /// in task order. Blocks until every task completes; a task panic
+    /// re-raises here after all siblings have reported, so the done
+    /// channel never desynchronizes from the next step.
+    pub fn run_build(&self, tasks: Vec<BuildTask>) -> Vec<BuildPart> {
+        let n = self.jobs.len();
+        assert_eq!(tasks.len(), n, "one build task per worker");
+        for (tx, task) in self.jobs.iter().zip(tasks) {
+            tx.send(Job::Build(task)).expect("compute worker hung up");
+        }
+        let mut out: Vec<Option<BuildPart>> =
+            (0..n).map(|_| None).collect();
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..n {
+            match self.done_rx.recv().expect("compute worker died") {
+                Ok(Done::Build(t, part)) => out[t] = Some(part),
+                Ok(Done::Step(_)) => {
+                    unreachable!("step result during a build pass")
+                }
+                Err(p) => {
+                    panic.get_or_insert(p);
+                }
+            }
+        }
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+        out.into_iter()
+            .map(|o| o.expect("worker skipped its build task"))
+            .collect()
+    }
+}
+
+impl BuildRunner for WorkerPool {
+    fn run(&self, tasks: Vec<BuildTask>) -> Vec<BuildPart> {
+        self.run_build(tasks)
     }
 }
 
@@ -288,19 +355,31 @@ impl Drop for WorkerPool {
 }
 
 fn worker_loop(
-    rx: Receiver<(WorkerCtx, Arc<StepJob>)>,
+    t: usize,
+    rx: Receiver<Job>,
     done: Sender<DoneMsg>,
     native: bool,
 ) {
-    while let Ok((mut ctx, job)) = rx.recv() {
-        let out =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                phases::run_compute(&mut ctx, &job, native);
-                ctx
-            }));
-        // release the shared step state before handing the context back:
-        // the engine unwraps the Arc as soon as all contexts are home
-        drop(job);
+    while let Ok(job) = rx.recv() {
+        let out: DoneMsg = match job {
+            Job::Step(mut ctx, job) => {
+                let res = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        phases::run_compute(&mut ctx, &job, native);
+                        ctx
+                    }),
+                );
+                // release the shared step state before handing the
+                // context back: the engine unwraps the Arc as soon as
+                // all contexts are home
+                drop(job);
+                res.map(Done::Step)
+            }
+            Job::Build(task) => std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(task),
+            )
+            .map(|part| Done::Build(t, part)),
+        };
         let failed = out.is_err();
         if done.send(out).is_err() || failed {
             break;

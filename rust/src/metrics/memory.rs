@@ -8,10 +8,15 @@
 
 use std::collections::BTreeMap;
 
-/// A breakdown of one rank's memory by component.
+/// A breakdown of one rank's memory by component, plus non-additive
+/// **gauges**: quantities reported alongside the components but never
+/// summed into [`Self::total`] — e.g. the transient peak a store held
+/// during construction, which coexisted with nothing else in the
+/// steady-state breakdown.
 #[derive(Clone, Debug, Default)]
 pub struct MemoryBreakdown {
     components: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, u64>,
 }
 
 impl MemoryBreakdown {
@@ -23,6 +28,14 @@ impl MemoryBreakdown {
         *self.components.entry(component).or_insert(0) += bytes;
     }
 
+    /// Record a gauge; repeated settings keep the maximum (a rank's
+    /// build peak is the max over its stores' peaks).
+    pub fn set_gauge(&mut self, name: &'static str, bytes: u64) {
+        let e = self.gauges.entry(name).or_insert(0);
+        *e = (*e).max(bytes);
+    }
+
+    /// Steady-state total: the sum of the components (gauges excluded).
     pub fn total(&self) -> u64 {
         self.components.values().sum()
     }
@@ -31,8 +44,16 @@ impl MemoryBreakdown {
         self.components.get(component).copied().unwrap_or(0)
     }
 
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
     pub fn components(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
         self.components.iter().map(|(k, v)| (*k, *v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.gauges.iter().map(|(k, v)| (*k, *v))
     }
 }
 
@@ -84,6 +105,13 @@ impl MemoryReport {
                     v as f64 / 1024.0
                 ));
             }
+            for (k, v) in b.gauges() {
+                // '~' marks a transient gauge, excluded from the total
+                out.push_str(&format!(
+                    "    ~{k:<19} {:>10.2} KiB\n",
+                    v as f64 / 1024.0
+                ));
+            }
         }
         out.push_str(&format!(
             "max-rank {:.2} MiB, imbalance {:.3}\n",
@@ -112,6 +140,21 @@ mod tests {
         assert_eq!(b.total(), 1700);
         assert_eq!(b.get("edges"), 1500);
         assert_eq!(b.get("nothing"), 0);
+    }
+
+    #[test]
+    fn gauges_report_but_never_sum() {
+        let mut b = MemoryBreakdown::new();
+        b.add("edges", 1000);
+        b.set_gauge("build_peak", 5000);
+        b.set_gauge("build_peak", 3000); // keeps the max
+        assert_eq!(b.total(), 1000);
+        assert_eq!(b.gauge("build_peak"), 5000);
+        assert_eq!(b.gauge("missing"), 0);
+        assert_eq!(b.gauges().count(), 1);
+        let r = MemoryReport::new(vec![b]);
+        assert_eq!(r.max_rank_bytes(), 1000);
+        assert!(r.report().contains("~build_peak"));
     }
 
     #[test]

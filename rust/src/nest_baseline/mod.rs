@@ -111,35 +111,37 @@ impl NestRank {
             state.u[i] = spec.v_init(g);
         }
         // global-CSR edge store: every source gid gets a slot, mirroring
-        // NEST's full node table per rank
+        // NEST's full node table per rank. Built by streaming the
+        // deterministic edge generator twice (count, then fill into the
+        // exact-capacity arrays) — the baseline keeps its *modelled*
+        // per-synapse overheads but no longer holds a transient copy of
+        // the whole edge list on top of them.
         let n_total = spec.n_total();
-        let mut edges = Vec::new();
-        for &g in posts {
-            spec.in_edges(g, &mut edges);
-        }
-        let post_index = |gid: Gid| -> u32 {
-            posts.binary_search(&gid).unwrap() as u32
-        };
         let mut max_delay = 1u16;
         let mut counts = vec![0u32; n_total + 1];
-        for e in &edges {
-            counts[e.pre as usize + 1] += 1;
-            max_delay = max_delay.max(e.delay);
+        for &g in posts {
+            spec.for_each_in_edge(g, |e, _| {
+                counts[e.pre as usize + 1] += 1;
+                max_delay = max_delay.max(e.delay);
+            });
         }
         for i in 0..n_total {
             counts[i + 1] += counts[i];
         }
         let offsets = counts.clone();
         let mut cursor = counts;
-        let mut e_post = vec![0u32; edges.len()];
-        let mut e_weight = vec![0.0f64; edges.len()];
-        let mut e_delay = vec![0u16; edges.len()];
-        for e in &edges {
-            let k = cursor[e.pre as usize] as usize;
-            cursor[e.pre as usize] += 1;
-            e_post[k] = post_index(e.post);
-            e_weight[k] = e.weight;
-            e_delay[k] = e.delay;
+        let n_edges = offsets[n_total] as usize;
+        let mut e_post = vec![0u32; n_edges];
+        let mut e_weight = vec![0.0f64; n_edges];
+        let mut e_delay = vec![0u16; n_edges];
+        for (li, &g) in posts.iter().enumerate() {
+            spec.for_each_in_edge(g, |e, _| {
+                let k = cursor[e.pre as usize] as usize;
+                cursor[e.pre as usize] += 1;
+                e_post[k] = li as u32;
+                e_weight[k] = e.weight;
+                e_delay[k] = e.delay;
+            });
         }
         let ring_len = max_delay as usize + 1;
         let mk_ring = || -> Vec<AtomicU64> {

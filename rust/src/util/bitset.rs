@@ -1,0 +1,110 @@
+//! Compact bit vector for per-edge boolean markers.
+//!
+//! The edge stores mark STDP-plastic edges. A `Vec<bool>` spends a full
+//! byte per edge — at hpc_benchmark indegrees that is as large as the
+//! delay array. This fixed-size bitset packs 64 markers per word, and an
+//! **empty** set doubles as "no marker anywhere": non-plastic networks
+//! keep a zero-allocation `BitSet::new()` whose `get` is always `false`,
+//! instead of allocating a vector of `false`s through `Default`.
+
+/// Fixed-length packed bit vector (64 bits per word).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSet {
+    /// The empty set: zero heap, every `get` answers `false`.
+    pub fn new() -> BitSet {
+        BitSet::default()
+    }
+
+    /// `len` bits, all zero.
+    pub fn zeros(len: usize) -> BitSet {
+        BitSet { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bit `i`; out-of-range reads answer `false`, so the empty set is
+    /// the natural representation of "nothing is marked".
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        if i >= self.len {
+            return false;
+        }
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.len, "bit {i} out of range (len {})", self.len);
+        let mask = 1u64 << (i % 64);
+        if v {
+            self.words[i / 64] |= mask;
+        } else {
+            self.words[i / 64] &= !mask;
+        }
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Exact heap bytes (what the allocator holds).
+    pub fn bytes(&self) -> u64 {
+        (self.words.capacity() * std::mem::size_of::<u64>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_set_answers_false_everywhere() {
+        let b = BitSet::new();
+        assert!(b.is_empty());
+        assert_eq!(b.bytes(), 0);
+        assert!(!b.get(0));
+        assert!(!b.get(1_000_000));
+        assert_eq!(b.count_ones(), 0);
+    }
+
+    #[test]
+    fn set_get_roundtrip_across_word_boundaries() {
+        let mut b = BitSet::zeros(130);
+        for i in [0usize, 1, 63, 64, 65, 127, 128, 129] {
+            assert!(!b.get(i));
+            b.set(i, true);
+            assert!(b.get(i), "bit {i}");
+        }
+        assert_eq!(b.count_ones(), 8);
+        b.set(64, false);
+        assert!(!b.get(64));
+        assert_eq!(b.count_ones(), 7);
+        // out-of-range reads stay false
+        assert!(!b.get(130));
+    }
+
+    #[test]
+    fn bytes_are_compact() {
+        let b = BitSet::zeros(1024);
+        // 1024 bits = 16 words = 128 bytes (vs 1024 for Vec<bool>)
+        assert_eq!(b.bytes(), 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn set_checks_bounds() {
+        let mut b = BitSet::zeros(10);
+        b.set(10, true);
+    }
+}

@@ -3,6 +3,7 @@
 //! reader/writer, and a property-based-testing harness.
 
 pub mod bench;
+pub mod bitset;
 pub mod json;
 pub mod proptest_lite;
 pub mod rng;

@@ -13,7 +13,7 @@ use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
 use cortex::atlas::potjans::{
     potjans_spec, potjans_spec_with, PotjansModels,
 };
-use cortex::config::{CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
 use cortex::decomp::{area_processes_partition, RankStore};
 use cortex::engine::{
     run_simulation, EngineOptions, RankEngine, RunConfig,
@@ -36,6 +36,7 @@ fn potjans_raster_identical_across_thread_counts_and_comm_modes() {
                     comm,
                     backend: DynamicsBackend::Native,
                     exec: ExecMode::Pool,
+                    build: BuildMode::TwoPass,
                     steps: 600,
                     record_limit: Some(u32::MAX),
                     verify_ownership: true,
@@ -52,6 +53,46 @@ fn potjans_raster_identical_across_thread_counts_and_comm_modes() {
                 assert_eq!(
                     want, &out.raster.events,
                     "{comm:?}: {threads} threads changed the raster"
+                );
+            } else {
+                reference = Some(out.raster.events);
+            }
+        }
+    }
+}
+
+#[test]
+fn build_pipelines_produce_identical_rasters() {
+    // the two-pass streaming builder vs the serial staging ablation:
+    // same spec, same partition — the realised network, and therefore
+    // the full raster, must be bit-identical at every thread count
+    let spec = Arc::new(potjans_spec(1200.0 / 77_169.0, 37));
+    let mut reference = None;
+    for build in [BuildMode::Serial, BuildMode::TwoPass] {
+        for threads in [1usize, 2, 4] {
+            let out = run_simulation(
+                &spec,
+                &RunConfig {
+                    ranks: 2,
+                    threads,
+                    mapping: MappingKind::AreaProcesses,
+                    comm: CommMode::Overlap,
+                    backend: DynamicsBackend::Native,
+                    exec: ExecMode::Pool,
+                    build,
+                    steps: 400,
+                    record_limit: Some(u32::MAX),
+                    verify_ownership: true,
+                    artifacts_dir: "artifacts".into(),
+                    seed: 37,
+                },
+            )
+            .unwrap();
+            assert!(out.total_spikes > 0, "{build:?} {threads}t inactive");
+            if let Some(want) = &reference {
+                assert_eq!(
+                    want, &out.raster.events,
+                    "{build:?} at {threads} threads changed the raster"
                 );
             } else {
                 reference = Some(out.raster.events);
