@@ -14,7 +14,10 @@ use std::sync::Arc;
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::comm::bsb::{pack, plan_exchange, unpack};
 use cortex::comm::{SpikeMsg, TofuModel};
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 
@@ -40,6 +43,7 @@ fn main() -> anyhow::Result<()> {
             backend: DynamicsBackend::Native,
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
+            integrate: IntegrateMode::Vector,
             steps,
             record_limit: Some(u32::MAX),
             verify_ownership: false,

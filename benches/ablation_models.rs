@@ -1,31 +1,44 @@
-//! **Dynamics-dispatch ablation** — the model-generic layer must be
-//! free for the paper's workload: a LIF-only circuit stepped through the
-//! enum-dispatched `PopulationState` blocks has to produce *bit-identical*
-//! results to the direct `lif::step_slice` fast path (the seed engine's
-//! hard-wired loop), at ≤ 2% overhead. AdEx / HH rows quantify what the
-//! heterogeneity buys in compute intensity (paper §I.C).
+//! **Dynamics-dispatch + kernel-formulation ablation** — two claims:
 //!
-//! Two levels:
-//! 1. kernel: N LIF neurons driven with identical synthetic input via
-//!    the direct call vs the dispatch — asserts identical spike trains
-//!    and bit-identical final state, reports the overhead;
-//! 2. engine: the downscaled Potjans microcircuit (pure LIF, the
-//!    acceptance workload) through the full pool execution core, plus
-//!    AdEx-E and HH-E variants of the same circuit for throughput.
+//! 1. the model-generic layer must be free for the paper's workload: a
+//!    LIF-only circuit stepped through the enum-dispatched
+//!    `PopulationState` blocks has to produce *bit-identical* results to
+//!    the direct `lif::step_slice` fast path, at ≤ 2% overhead;
+//! 2. the branch-free vector kernels (`engine.integrate = "vector"`,
+//!    the default) must be bit-identical to the scalar ablation on
+//!    every model — and measurably faster on LIF, the paper's
+//!    communication-bound "bad case" where per-neuron arithmetic is
+//!    the entire native compute phase.
+//!
+//! Three levels:
+//! * kernel dispatch: N LIF neurons, direct call vs dispatch — asserts
+//!   identical spike trains and bit-identical final state;
+//! * kernel formulation: per-model scalar vs vector ns/neuron-step with
+//!   bit-identity asserted on spikes and state, recorded in
+//!   `target/bench_out/BENCH_step.json` for CI tracking;
+//! * engine: the downscaled Potjans microcircuit per neuron model
+//!   through the full pool execution core, both kernel formulations,
+//!   rasters asserted identical, per-model ns/neuron-step from the
+//!   engine's own integrate phase timers.
 //!
 //! Run: `cargo bench --bench ablation_models`
 
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
 use cortex::atlas::potjans::{potjans_spec_with, PotjansModels};
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
-use cortex::engine::{run_simulation, RunConfig};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
+use cortex::engine::{integrate_rates, run_simulation, RunConfig};
 use cortex::metrics::Table;
 use cortex::model::dynamics::{ModelParams, ModelTables, PopulationState};
 use cortex::model::lif::{self, LifParams, LifState, Propagators};
-use cortex::model::{AdexParams, HhParams};
+use cortex::model::{adex, hh, AdexParams, HhParams};
 use cortex::util::bench::time_median;
+use cortex::util::json::Json;
 
 const N: usize = 4096;
 const STEPS: usize = 200;
@@ -67,12 +80,22 @@ fn main() -> anyhow::Result<()> {
     let t_via = time_median(7, || {
         for step in 0..STEPS {
             let in_e = synth_input(step);
-            via.step_block(&in_e, &zero, &tables, 0, 0, &mut spikes_via);
+            via.step_block(
+                &in_e,
+                &zero,
+                &tables,
+                0,
+                0,
+                IntegrateMode::Vector,
+                &mut spikes_via,
+            );
         }
     }) / STEPS as f64;
 
     // bit-identity: time_median repeats the closure, so both sides ran
-    // the same number of rounds over the same deterministic input
+    // the same number of rounds over the same deterministic input — and
+    // the dispatch side ran the *vector* kernel against the direct
+    // scalar fast path, so this is also the tentpole equivalence
     assert_eq!(
         spikes_direct, spikes_via,
         "dispatch changed the LIF spike train"
@@ -105,56 +128,223 @@ fn main() -> anyhow::Result<()> {
          enum branch per block, not per neuron)\n"
     );
 
+    // -- kernel formulation: scalar vs vector per model ------------------
+    // Each model steps two identically-seeded states through the same
+    // deterministic drive, once per formulation; spike trains and every
+    // state array must agree bitwise. The ratio is the ablation's
+    // headline number.
+    let mut rows: Vec<Json> = Vec::new();
+    let mut formulation = Table::new(
+        "kernel formulation — scalar vs branch-free vector \
+         (N = 4096, bit-identical asserted)",
+        &["model", "scalar_ns", "vector_ns", "speedup"],
+    );
+
+    // LIF: two parameter sets so the vector path exercises its
+    // homogeneous-run segmentation inside the timed loop
+    let lp_fast = LifParams { tau_m: 5.0, i_ext: 600.0, ..Default::default() };
+    let lp_slow = LifParams { tau_m: 20.0, i_ext: 380.0, ..Default::default() };
+    let lif_props =
+        vec![Propagators::new(&lp_fast, dt), Propagators::new(&lp_slow, dt)];
+    let pidx: Vec<u8> =
+        (0..N).map(|i| if i < N / 2 { 0 } else { 1 }).collect();
+    let mut lif_s = LifState::new(N, &lif_props, pidx.clone());
+    let mut lif_v = LifState::new(N, &lif_props, pidx);
+    let mut sp_s = Vec::new();
+    let mut sp_v = Vec::new();
+    let t_lif_s = time_median(5, || {
+        for step in 0..STEPS {
+            let in_e = synth_input(step);
+            lif::step_slice(
+                &mut lif_s, 0, N, &in_e, &zero, &lif_props, &mut sp_s,
+            );
+        }
+    }) / STEPS as f64;
+    let t_lif_v = time_median(5, || {
+        for step in 0..STEPS {
+            let in_e = synth_input(step);
+            lif::step_slice_vector(
+                &mut lif_v, 0, N, &in_e, &zero, &lif_props, &mut sp_v,
+            );
+        }
+    }) / STEPS as f64;
+    assert_eq!(sp_s, sp_v, "LIF: vector changed the spike train");
+    assert_eq!(lif_s.u, lif_v.u, "LIF: vector changed membrane state");
+    assert_eq!(lif_s.ie, lif_v.ie);
+    assert_eq!(lif_s.ii, lif_v.ii);
+    assert_eq!(lif_s.refrac, lif_v.refrac);
+
+    // AdEx
+    let ap = AdexParams { i_ext: 600.0, ..Default::default() };
+    let mut adex_s = adex::AdexState::new(N, &ap);
+    let mut adex_v = adex::AdexState::new(N, &ap);
+    let mut asp_s = Vec::new();
+    let mut asp_v = Vec::new();
+    let t_adex_s = time_median(5, || {
+        for step in 0..STEPS {
+            let in_e = synth_input(step);
+            adex::step_slice(
+                &mut adex_s, 0, N, &in_e, &zero, &ap, dt, &mut asp_s,
+            );
+        }
+    }) / STEPS as f64;
+    let t_adex_v = time_median(5, || {
+        for step in 0..STEPS {
+            let in_e = synth_input(step);
+            adex::step_slice_vector(
+                &mut adex_v, 0, N, &in_e, &zero, &ap, dt, &mut asp_v,
+            );
+        }
+    }) / STEPS as f64;
+    assert_eq!(asp_s, asp_v, "AdEx: vector changed the spike train");
+    assert_eq!(adex_s.v, adex_v.v, "AdEx: vector changed membrane state");
+    assert_eq!(adex_s.w, adex_v.w, "AdEx: vector changed adaptation");
+    assert_eq!(adex_s.refrac, adex_v.refrac);
+
+    // HH (10 sub-steps per dt; fewer reps keep the bench quick)
+    let hp = HhParams { i_ext: 8.0, ..Default::default() };
+    let mut hh_s = hh::HhState::new(N);
+    let mut hh_v = hh::HhState::new(N);
+    let mut hsp_s = Vec::new();
+    let mut hsp_v = Vec::new();
+    let t_hh_s = time_median(3, || {
+        for step in 0..STEPS / 4 {
+            let in_e = synth_input(step);
+            hh::step_slice(
+                &mut hh_s, 0, N, &in_e, &zero, &hp, dt, &mut hsp_s,
+            );
+        }
+    }) / (STEPS / 4) as f64;
+    let t_hh_v = time_median(3, || {
+        for step in 0..STEPS / 4 {
+            let in_e = synth_input(step);
+            hh::step_slice_vector(
+                &mut hh_v, 0, N, &in_e, &zero, &hp, dt, &mut hsp_v,
+            );
+        }
+    }) / (STEPS / 4) as f64;
+    assert_eq!(hsp_s, hsp_v, "HH: vector changed the spike train");
+    assert_eq!(hh_s.v, hh_v.v, "HH: vector changed membrane state");
+    assert_eq!(hh_s.m, hh_v.m);
+    assert_eq!(hh_s.h, hh_v.h);
+    assert_eq!(hh_s.n, hh_v.n);
+
+    for (name, ts, tv) in [
+        ("lif", t_lif_s, t_lif_v),
+        ("adex", t_adex_s, t_adex_v),
+        ("hh", t_hh_s, t_hh_v),
+    ] {
+        let scalar_ns = ts / N as f64 * 1e9;
+        let vector_ns = tv / N as f64 * 1e9;
+        formulation.row(&[
+            name.into(),
+            format!("{scalar_ns:.2}"),
+            format!("{vector_ns:.2}"),
+            format!("{:.2}x", scalar_ns / vector_ns),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("model".into(), Json::Str(name.into()));
+        row.insert("n_neurons".into(), Json::Num(N as f64));
+        row.insert("threads".into(), Json::Num(1.0));
+        row.insert("ns_per_neuron_step".into(), Json::Num(vector_ns));
+        row.insert(
+            "scalar_ns_per_neuron_step".into(),
+            Json::Num(scalar_ns),
+        );
+        row.insert("speedup".into(), Json::Num(scalar_ns / vector_ns));
+        rows.push(Json::Obj(row));
+    }
+    formulation
+        .emit(Path::new("target/bench_out"), "ablation_models_formulation")?;
+    // the perf acceptance, with slack for noisy CI runners: the LIF
+    // vector kernel must at minimum not lose to the scalar one
+    assert!(
+        t_lif_v <= t_lif_s * 1.10,
+        "LIF vector kernel slower than scalar: {:.2} vs {:.2} ns",
+        t_lif_v / N as f64 * 1e9,
+        t_lif_s / N as f64 * 1e9,
+    );
+
     // -- engine level: Potjans microcircuit per neuron model -------------
-    let lif = ModelParams::Lif(LifParams::default());
+    let lif_mp = ModelParams::Lif(LifParams::default());
     let variants: [(&str, PotjansModels); 3] = [
-        ("LIF (paper workload)", PotjansModels { e: lif, i: lif }),
+        ("LIF (paper workload)", PotjansModels { e: lif_mp, i: lif_mp }),
         (
             "AdEx E / LIF I",
             PotjansModels {
                 e: ModelParams::Adex(AdexParams::default()),
-                i: lif,
+                i: lif_mp,
             },
         ),
         (
             "HH E / LIF I",
             PotjansModels {
                 e: ModelParams::Hh(HhParams::default()),
-                i: lif,
+                i: lif_mp,
             },
         ),
     ];
     let mut table = Table::new(
-        "Potjans microcircuit (~1600 neurons, 60 ms, 2r x 2t) per model",
-        &["models", "wall_s", "spikes", "steps_per_s"],
+        "Potjans microcircuit (~1600 neurons, 60 ms, 2r x 2t) per model \
+         — vector vs scalar kernels, rasters asserted identical",
+        &["models", "wall_s", "scalar_wall_s", "spikes", "steps_per_s"],
     );
+    let steps = 600u64;
     for (name, models) in &variants {
         let spec =
             Arc::new(potjans_spec_with(1600.0 / 77_169.0, 23, models));
-        let out = run_simulation(
-            &spec,
-            &RunConfig {
-                ranks: 2,
-                threads: 2,
-                mapping: MappingKind::AreaProcesses,
-                comm: CommMode::Overlap,
-                backend: DynamicsBackend::Native,
-                exec: ExecMode::Pool,
-                build: BuildMode::TwoPass,
-                steps: 600,
-                record_limit: None,
-                verify_ownership: false,
-                artifacts_dir: "artifacts".into(),
-                seed: 23,
-            },
-        )?;
+        let run = |integrate: IntegrateMode| {
+            run_simulation(
+                &spec,
+                &RunConfig {
+                    ranks: 2,
+                    threads: 2,
+                    mapping: MappingKind::AreaProcesses,
+                    comm: CommMode::Overlap,
+                    backend: DynamicsBackend::Native,
+                    exec: ExecMode::Pool,
+                    build: BuildMode::TwoPass,
+                    integrate,
+                    steps,
+                    record_limit: Some(u32::MAX),
+                    verify_ownership: false,
+                    artifacts_dir: "artifacts".into(),
+                    seed: 23,
+                },
+            )
+        };
+        let out = run(IntegrateMode::Vector)?;
+        let out_s = run(IntegrateMode::Scalar)?;
+        assert_eq!(
+            out.raster.events, out_s.raster.events,
+            "{name}: kernel formulation changed the raster"
+        );
         table.row(&[
             (*name).into(),
             format!("{:.3}", out.wall_seconds),
+            format!("{:.3}", out_s.wall_seconds),
             format!("{}", out.total_spikes),
-            format!("{:.0}", 600.0 / out.wall_seconds),
+            format!("{:.0}", steps as f64 / out.wall_seconds),
         ]);
+        // the runtime instrument: per-model ns/neuron-step from the
+        // engine's own integrate phase timers (aggregate over workers)
+        for (m, n, ns) in integrate_rates(&spec, &out.timer_sum, steps) {
+            println!(
+                "  {name}: integrate {m:?} — {n} neurons, \
+                 {ns:.1} ns/neuron-step (vector)"
+            );
+        }
     }
     table.emit(Path::new("target/bench_out"), "ablation_models")?;
+
+    let out_dir = Path::new("target/bench_out");
+    std::fs::create_dir_all(out_dir)?;
+    let json = Json::Arr(rows).to_string_pretty();
+    std::fs::write(out_dir.join("BENCH_step.json"), json)?;
+    println!(
+        "\nwrote target/bench_out/BENCH_step.json; scalar and vector \
+         kernels bit-identical on all models, rasters identical through \
+         the full engine.\n"
+    );
     Ok(())
 }

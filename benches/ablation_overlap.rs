@@ -14,7 +14,10 @@ use std::sync::Arc;
 
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::comm::TofuModel;
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 
@@ -47,6 +50,7 @@ fn main() -> anyhow::Result<()> {
                 backend: DynamicsBackend::Native,
                 exec: ExecMode::Pool,
                 build: BuildMode::TwoPass,
+                integrate: IntegrateMode::Vector,
                 steps,
                 record_limit: None,
                 verify_ownership: false,

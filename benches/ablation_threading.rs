@@ -19,7 +19,10 @@ use std::path::Path;
 use std::sync::Arc;
 
 use cortex::atlas::random_spec;
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 use cortex::nest_baseline::{run_nest_simulation, NestRunConfig};
@@ -50,6 +53,7 @@ fn main() -> anyhow::Result<()> {
         backend: DynamicsBackend::Native,
         exec,
         build: BuildMode::TwoPass,
+        integrate: IntegrateMode::Vector,
         steps,
         record_limit: Some(u32::MAX),
         verify_ownership: false,

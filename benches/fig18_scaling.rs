@@ -15,7 +15,10 @@ use std::path::Path;
 use std::sync::Arc;
 
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::table::human_bytes;
 use cortex::metrics::Table;
@@ -78,6 +81,7 @@ fn main() -> anyhow::Result<()> {
                 backend: DynamicsBackend::Native,
                 exec: ExecMode::Pool,
                 build: BuildMode::TwoPass,
+                integrate: IntegrateMode::Vector,
                 steps,
                 record_limit: None,
                 verify_ownership: false,

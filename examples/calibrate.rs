@@ -7,7 +7,10 @@
 use std::sync::Arc;
 
 use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
 
@@ -44,6 +47,7 @@ fn main() {
                     backend: DynamicsBackend::Native,
                     exec: ExecMode::Pool,
                     build: BuildMode::TwoPass,
+                    integrate: IntegrateMode::Vector,
                     steps,
                     record_limit: Some(u32::MAX),
                     verify_ownership: false,

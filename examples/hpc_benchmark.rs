@@ -17,7 +17,10 @@
 use std::sync::Arc;
 
 use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
 use cortex::engine::{run_simulation, RunConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -46,6 +49,7 @@ fn main() -> anyhow::Result<()> {
         backend: DynamicsBackend::Native,
         exec: ExecMode::Pool,
         build: BuildMode::TwoPass,
+        integrate: IntegrateMode::Vector,
         steps,
         record_limit: Some(u32::MAX),
         verify_ownership: true, // the paper's Abort-on-foreign-access

@@ -1,7 +1,7 @@
 use std::sync::Arc;
 use cortex::atlas::random_spec;
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
-use cortex::engine::{run_simulation, RunConfig};
+use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode, MappingKind};
+use cortex::engine::{integrate_rates, run_simulation, RunConfig};
 fn main() {
     let which = std::env::args().nth(1).unwrap_or_default();
     let spec = Arc::new(random_spec(6000, 300, 31));
@@ -10,8 +10,15 @@ fn main() {
         println!("nest {} spikes {:.3}s", o.total_spikes, o.wall_seconds);
         print!("{}", o.memory.report());
     } else {
-        let o = run_simulation(&spec, &RunConfig{ranks:1,threads:1,mapping:MappingKind::AreaProcesses,comm:CommMode::Serialized,backend:DynamicsBackend::Native,exec:ExecMode::Pool,build:BuildMode::TwoPass,steps:500,record_limit:None,verify_ownership:false,artifacts_dir:"artifacts".into(),seed:31}).unwrap();
+        // `perfprobe scalar` flips the kernel ablation; default is vector
+        let integrate = if which == "scalar" { IntegrateMode::Scalar } else { IntegrateMode::Vector };
+        let steps = 500;
+        let o = run_simulation(&spec, &RunConfig{ranks:1,threads:1,mapping:MappingKind::AreaProcesses,comm:CommMode::Serialized,backend:DynamicsBackend::Native,exec:ExecMode::Pool,build:BuildMode::TwoPass,integrate,steps,record_limit:None,verify_ownership:false,artifacts_dir:"artifacts".into(),seed:31}).unwrap();
         println!("cortex {} spikes {:.3}s", o.total_spikes, o.wall_seconds); print!("{}", o.timer_max.report());
+        // per-model integrate throughput (aggregate timer, exact count)
+        for (m, n, ns) in integrate_rates(&spec, &o.timer_sum, steps) {
+            println!("{m:?}: {n} neurons, {ns:.1} ns/neuron-step ({integrate:?})");
+        }
         // resident-memory breakdown incl. neuron-model state (was
         // edge-store-only before the dynamics layer accounted it)
         print!("{}", o.memory.report());

@@ -18,7 +18,10 @@ use std::time::Duration;
 
 use cortex::atlas::potjans::potjans_spec;
 use cortex::comm::{Communicator, TcpComm};
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
 use cortex::engine::{run_simulation, RunConfig, Simulation};
 
 const SEED: u64 = 23;
@@ -48,6 +51,7 @@ fn main() -> anyhow::Result<()> {
             backend: DynamicsBackend::Native,
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
+            integrate: IntegrateMode::Vector,
             steps,
             record_limit: Some(u32::MAX),
             verify_ownership: false,

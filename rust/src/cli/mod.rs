@@ -35,7 +35,9 @@ use crate::config::{
 use crate::decomp::{
     area_processes_partition, random_equivalent_partition, RankStore,
 };
-use crate::engine::{run_simulation, RunConfig, Simulation, Transport};
+use crate::engine::{
+    integrate_rates, run_simulation, RunConfig, Simulation, Transport,
+};
 use crate::metrics::table::human_bytes;
 use crate::nest_baseline::{run_nest_simulation, NestRunConfig};
 use crate::probe::{PopRates, ProbeData};
@@ -253,6 +255,7 @@ pub fn run_config_of(cfg: &ExperimentConfig) -> RunConfig {
         backend: cfg.backend,
         exec: cfg.exec,
         build: cfg.build,
+        integrate: cfg.integrate,
         steps: cfg.steps(),
         record_limit: cfg.record_raster.then_some(cfg.record_limit as u32),
         verify_ownership: false,
@@ -347,6 +350,17 @@ pub fn cmd_run(args: &Args) -> Result<()> {
             );
             println!("--- phase times (critical path) ---");
             print!("{}", out.timer_max.report());
+            // per-model integrate throughput, from the aggregate timer
+            // (summed over workers/ranks, so the division is exact)
+            for (m, n, ns) in
+                integrate_rates(&spec, &out.timer_sum, cfg.steps())
+            {
+                println!(
+                    "integrate {m:?} ({:?}): {n} neurons, \
+                     {ns:.1} ns/neuron-step",
+                    cfg.integrate
+                );
+            }
             if let Some(path) = &args.raster_out {
                 // TCP ranks each dump their own shard; `sort -n` over
                 // the concatenation reproduces a single-process dump
@@ -746,6 +760,25 @@ mod tests {
         assert_eq!(
             run_config_of(&a.experiment().unwrap()).build,
             BuildMode::TwoPass
+        );
+    }
+
+    #[test]
+    fn integrate_mode_flows_into_run_config() {
+        use crate::config::IntegrateMode;
+        let a = Args::parse(&s(&[
+            "run",
+            "--set",
+            "engine.integrate=\"scalar\"",
+        ]))
+        .unwrap();
+        let cfg = a.experiment().unwrap();
+        assert_eq!(cfg.integrate, IntegrateMode::Scalar);
+        assert_eq!(run_config_of(&cfg).integrate, IntegrateMode::Scalar);
+        let a = Args::parse(&s(&["run"])).unwrap();
+        assert_eq!(
+            run_config_of(&a.experiment().unwrap()).integrate,
+            IntegrateMode::Vector
         );
     }
 

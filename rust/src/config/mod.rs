@@ -11,6 +11,7 @@ mod toml;
 
 pub use schema::{
     BuildMode, CommMode, CommTransport, CustomPop, DynamicsBackend,
-    EngineKind, ExecMode, ExperimentConfig, MappingKind, NetworkKind,
+    EngineKind, ExecMode, ExperimentConfig, IntegrateMode, MappingKind,
+    NetworkKind,
 };
 pub use toml::{ConfigDoc, ConfigError, Value};

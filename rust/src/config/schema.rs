@@ -134,6 +134,19 @@ pub enum BuildMode {
     Serial,
 }
 
+/// Integrate-kernel formulation (`engine.integrate`, see `model`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntegrateMode {
+    /// Branch-free, run-segmented kernels: propagator lookups hoisted
+    /// over homogeneous `pidx` runs, refractory/threshold handling as
+    /// select arithmetic with spike-mask compaction. Bit-identical to
+    /// the scalar formulation.
+    Vector,
+    /// Ablation fallback: the original per-neuron branching kernels
+    /// (measures what the branch-free rewrite buys).
+    Scalar,
+}
+
 /// Fully-validated experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -178,6 +191,7 @@ pub struct ExperimentConfig {
     pub comm: CommMode,
     pub exec: ExecMode,
     pub build: BuildMode,
+    pub integrate: IntegrateMode,
     pub artifacts_dir: String,
     /// Inter-rank transport: in-process channels or TCP processes.
     pub transport: CommTransport,
@@ -220,6 +234,7 @@ impl Default for ExperimentConfig {
             comm: CommMode::Overlap,
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
+            integrate: IntegrateMode::Vector,
             artifacts_dir: "artifacts".into(),
             transport: CommTransport::Local,
             tcp_rank: None,
@@ -317,6 +332,15 @@ impl ExperimentConfig {
                 &[
                     ("two_pass", BuildMode::TwoPass),
                     ("serial", BuildMode::Serial),
+                ],
+            )?,
+            integrate: parse_enum(
+                doc,
+                "engine.integrate",
+                "vector",
+                &[
+                    ("vector", IntegrateMode::Vector),
+                    ("scalar", IntegrateMode::Scalar),
                 ],
             )?,
             artifacts_dir: doc.str("engine.artifacts_dir", &d.artifacts_dir)?,
@@ -673,6 +697,20 @@ comm = "serialized"
         assert_eq!(cfg.build, BuildMode::Serial);
         let doc =
             ConfigDoc::parse("[engine]\nbuild = \"staged\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn integrate_mode_parses_and_defaults_to_vector() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.integrate, IntegrateMode::Vector);
+        let doc =
+            ConfigDoc::parse("[engine]\nintegrate = \"scalar\"").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.integrate, IntegrateMode::Scalar);
+        let doc =
+            ConfigDoc::parse("[engine]\nintegrate = \"simd\"").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 

@@ -69,12 +69,13 @@ use std::sync::Arc;
 use crate::atlas::NetworkSpec;
 use crate::comm::{SpikeMsg, SpikePacket};
 use crate::config::{
-    BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind,
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
 };
 use crate::decomp::{Partition, RankStore};
 use crate::metrics::memory::{vec_bytes, MemoryBreakdown, MemoryReport};
 use crate::metrics::{PhaseTimer, SpikeRecorder};
-use crate::model::dynamics::PopulationState;
+use crate::model::dynamics::{NeuronModel, PopulationState};
 use crate::model::poisson::PoissonDrive;
 use crate::model::stdp::TraceSet;
 use crate::{Gid, Step};
@@ -91,6 +92,9 @@ pub struct EngineOptions {
     /// Two-pass streaming store construction vs the serial staging
     /// builder (ablation; see `decomp::store`).
     pub build: BuildMode,
+    /// Branch-free vector integrate kernels vs the scalar ablation
+    /// (bit-identical; see `model`).
+    pub integrate: IntegrateMode,
     /// Built-in raster: record spikes of gids **below** this bound.
     /// `None` means the recorder is disabled (see
     /// [`SpikeRecorder::disabled`]) and no spikes are kept — use
@@ -111,6 +115,7 @@ impl Default for EngineOptions {
             backend: DynamicsBackend::Native,
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
+            integrate: IntegrateMode::Vector,
             record_limit: None,
             verify_ownership: false,
             artifacts_dir: "artifacts".into(),
@@ -225,6 +230,7 @@ impl RankEngine {
         let ctxs = workers::build_worker_ctxs(
             &spec,
             &mut store,
+            opts.integrate,
             opts.verify_ownership,
         );
         assert_eq!(
@@ -578,6 +584,12 @@ impl RankEngine {
         for ctx in &self.ctxs {
             self.timer.add("deliver", ctx.phase_ns[0] as u128);
             self.timer.add("integrate", ctx.phase_ns[1] as u128);
+            for m in NeuronModel::ALL {
+                let ns = ctx.model_ns[m.index()];
+                if ns > 0 {
+                    self.timer.add(integrate_phase_name(m), ns as u128);
+                }
+            }
             let lo = ctx.lo;
             for &ls in &ctx.spikes {
                 let local = lo + ls;
@@ -651,6 +663,9 @@ pub struct RunConfig {
     /// Store construction pipeline (two-pass streaming vs serial
     /// staging ablation).
     pub build: BuildMode,
+    /// Integrate-kernel formulation (branch-free vector vs the scalar
+    /// ablation; bit-identical either way).
+    pub integrate: IntegrateMode,
     pub steps: Step,
     /// Built-in raster: record gids below this bound; `None` disables
     /// recording entirely (documented [`SpikeRecorder::disabled`]
@@ -671,6 +686,7 @@ impl Default for RunConfig {
             backend: DynamicsBackend::Native,
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
+            integrate: IntegrateMode::Vector,
             steps: 1000,
             record_limit: None,
             verify_ownership: false,
@@ -698,6 +714,48 @@ pub struct RunOutput {
     pub comm_bytes: u64,
     pub windows: u64,
     pub partition: Partition,
+}
+
+/// Timer phase a model's integrate nanoseconds accumulate under
+/// (alongside the aggregate `integrate` phase).
+pub fn integrate_phase_name(m: NeuronModel) -> &'static str {
+    match m {
+        NeuronModel::Lif => "integrate_lif",
+        NeuronModel::Adex => "integrate_adex",
+        NeuronModel::Hh => "integrate_hh",
+        NeuronModel::Parrot => "integrate_parrot",
+    }
+}
+
+/// Per-model integrate throughput of a finished run: `(model, neurons,
+/// ns/neuron-step)` for every model with recorded integrate time. Reads
+/// the `integrate_<model>` phases of an **aggregate** timer (summed over
+/// workers and ranks — [`RunOutput::timer_sum`] or a solo engine's
+/// timer), so dividing by the spec-wide neuron count times `steps` is
+/// exact: the same metric `benches/ablation_models.rs` tracks in
+/// `BENCH_step.json`.
+pub fn integrate_rates(
+    spec: &NetworkSpec,
+    timer: &PhaseTimer,
+    steps: Step,
+) -> Vec<(NeuronModel, u64, f64)> {
+    let mut counts = [0u64; NeuronModel::COUNT];
+    for p in &spec.populations {
+        counts[p.model.index()] += p.n as u64;
+    }
+    let mut out = Vec::new();
+    for m in NeuronModel::ALL {
+        let n = counts[m.index()];
+        let ns = timer.nanos(integrate_phase_name(m));
+        if n > 0 && steps > 0 && ns > 0 {
+            out.push((
+                m,
+                n,
+                ns as f64 / (n as f64 * steps as f64),
+            ));
+        }
+    }
+    out
 }
 
 /// Partition the network and run it on `cfg.ranks` simulated ranks.

@@ -22,6 +22,7 @@
 use std::time::Instant;
 
 use crate::decomp::ThreadEdges;
+use crate::model::dynamics::NeuronModel;
 use crate::model::stdp::{StdpParams, TraceSet};
 use crate::Step;
 
@@ -36,6 +37,7 @@ pub(crate) fn run_compute(
     native: bool,
 ) {
     ctx.spikes.clear();
+    ctx.model_ns = [0; NeuronModel::COUNT];
     let t0 = Instant::now();
     deliver(ctx, job);
     ctx.phase_ns[0] = t0.elapsed().as_nanos() as u64;
@@ -106,24 +108,46 @@ fn deliver(ctx: &mut WorkerCtx, job: &StepJob) {
 /// Stage this step's synaptic input: drain the rings' due slot and add
 /// the Poisson drive into the worker's scratch buffers. Shared by the
 /// native integrate phase and the engine-side PJRT path.
+///
+/// The drive is batched per homogeneous run of identical prepared
+/// drives (populations tile the worker span, so runs are long): the
+/// off/λ/sign tests hoist out of the per-neuron loop while each sample
+/// stays the same pure function of `(seed, gid, step)`, so
+/// decomposition-independence is untouched. Negative-weight drives are
+/// inhibitory and land in `scratch_i` — the seed engine silently
+/// dropped them.
 pub(crate) fn gather_inputs(ctx: &mut WorkerCtx, now: Step) {
     let seed = ctx.seed;
     let now_slot = ctx.ring_e.slot(now);
     let WorkerCtx {
         ring_e, ring_i, drives, posts, scratch_e, scratch_i, ..
     } = ctx;
-    for i in 0..drives.len() {
-        let mut e = ring_e.take_at(i, now_slot);
-        let inh = ring_i.take_at(i, now_slot);
-        let d = &drives[i];
+    let n = drives.len();
+    // drain the rings' due slot …
+    for i in 0..n {
+        scratch_e[i] = ring_e.take_at(i, now_slot);
+        scratch_i[i] = ring_i.take_at(i, now_slot);
+    }
+    // … then add the drive, one homogeneous run at a time
+    let mut start = 0usize;
+    while start < n {
+        let d = drives[start];
+        let mut end = start + 1;
+        while end < n && drives[end] == d {
+            end += 1;
+        }
         if !d.is_off() {
-            let x = d.sample(seed, posts[i], now);
-            if x >= 0.0 {
-                e += x;
+            if d.weight_pa >= 0.0 {
+                for i in start..end {
+                    scratch_e[i] += d.sample(seed, posts[i], now);
+                }
+            } else {
+                for i in start..end {
+                    scratch_i[i] += d.sample(seed, posts[i], now);
+                }
             }
         }
-        scratch_e[i] = e;
-        scratch_i[i] = inh;
+        start = end;
     }
 }
 
@@ -134,19 +158,27 @@ pub(crate) fn gather_inputs(ctx: &mut WorkerCtx, now: Step) {
 /// ring+drive+integrate single pass was tried and measured slower — see
 /// EXPERIMENTS.md §Perf.)
 fn integrate(ctx: &mut WorkerCtx) {
-    let WorkerCtx { blocks, scratch_e, scratch_i, tables, spikes, .. } =
-        ctx;
+    let mode = ctx.integrate;
+    let WorkerCtx {
+        blocks, scratch_e, scratch_i, tables, spikes, model_ns, ..
+    } = ctx;
     for b in blocks.iter_mut() {
         let lo = b.offset as usize;
         let hi = lo + b.state.len();
+        let t0 = Instant::now();
         b.state.step_block(
             &scratch_e[lo..hi],
             &scratch_i[lo..hi],
             tables,
             b.pidx,
             b.offset,
+            mode,
             spikes,
         );
+        // one clock pair per block per step — the per-model
+        // ns/neuron-step instrument, far off the per-neuron path
+        model_ns[b.state.model().index()] +=
+            t0.elapsed().as_nanos() as u64;
     }
 }
 

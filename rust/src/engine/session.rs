@@ -75,7 +75,8 @@ use crate::comm::{
     Communicator, LocalCluster, SoloComm, SpikePacket, TcpComm,
 };
 use crate::config::{
-    BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind,
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
 };
 use crate::decomp::{
     area_processes_partition, random_equivalent_partition, Partition,
@@ -186,6 +187,7 @@ pub struct SimulationBuilder {
     backend: DynamicsBackend,
     exec: ExecMode,
     build: BuildMode,
+    integrate: IntegrateMode,
     record_limit: Option<Gid>,
     verify_ownership: bool,
     artifacts_dir: String,
@@ -206,6 +208,7 @@ impl SimulationBuilder {
             backend: DynamicsBackend::Native,
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
+            integrate: IntegrateMode::Vector,
             record_limit: None,
             verify_ownership: false,
             artifacts_dir: "artifacts".into(),
@@ -249,6 +252,14 @@ impl SimulationBuilder {
     /// default; [`BuildMode::Serial`] keeps the staging ablation).
     pub fn build_mode(mut self, b: BuildMode) -> Self {
         self.build = b;
+        self
+    }
+
+    /// Select the integrate-kernel formulation (branch-free vector by
+    /// default; [`IntegrateMode::Scalar`] keeps the per-neuron
+    /// branching kernels as an ablation).
+    pub fn integrate(mut self, m: IntegrateMode) -> Self {
+        self.integrate = m;
         self
     }
 
@@ -311,6 +322,7 @@ impl SimulationBuilder {
         self.backend = cfg.backend;
         self.exec = cfg.exec;
         self.build = cfg.build;
+        self.integrate = cfg.integrate;
         self.record_limit = cfg.record_limit;
         self.verify_ownership = cfg.verify_ownership;
         self.artifacts_dir = cfg.artifacts_dir.clone();
@@ -428,6 +440,7 @@ impl SimulationBuilder {
                 backend: self.backend,
                 exec: self.exec,
                 build: self.build,
+                integrate: self.integrate,
                 record_limit: self.record_limit,
                 verify_ownership: self.verify_ownership,
                 artifacts_dir: self.artifacts_dir.clone(),

@@ -47,11 +47,12 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::atlas::NetworkSpec;
+use crate::config::IntegrateMode;
 use crate::decomp::{
     BuildPart, BuildRunner, BuildTask, RankStore, ThreadEdges,
 };
 use crate::engine::ring::InputRing;
-use crate::model::dynamics::{ModelTables, PopulationState};
+use crate::model::dynamics::{ModelTables, NeuronModel, PopulationState};
 use crate::model::poisson::PreparedPoisson;
 use crate::model::stdp::{StdpParams, TraceSet};
 use crate::{Gid, Step};
@@ -120,6 +121,12 @@ pub(crate) struct WorkerCtx {
     pub spikes: Vec<u32>,
     /// [deliver_ns, integrate+plasticity_ns] of the last step.
     pub phase_ns: [u64; 2],
+    /// Integrate nanoseconds of the last step, split per neuron model
+    /// (indexed by [`NeuronModel::index`]); feeds the runtime
+    /// ns/neuron-step metric.
+    pub model_ns: [u64; NeuronModel::COUNT],
+    /// Kernel formulation of the integrate phase (vector / scalar).
+    pub integrate: IntegrateMode,
     /// Compile the paper's thread-ownership abort check into delivery.
     pub verify: bool,
     /// Network seed (Poisson drive hashing).
@@ -170,6 +177,7 @@ fn build_blocks(
 pub(crate) fn build_worker_ctxs(
     spec: &NetworkSpec,
     store: &mut RankStore,
+    integrate: IntegrateMode,
     verify: bool,
 ) -> Vec<WorkerCtx> {
     let tables = spec.model_tables();
@@ -213,6 +221,8 @@ pub(crate) fn build_worker_ctxs(
                 scratch_i: vec![0.0; span],
                 spikes: Vec::new(),
                 phase_ns: [0, 0],
+                model_ns: [0; NeuronModel::COUNT],
+                integrate,
                 verify,
                 seed: spec.seed,
             }

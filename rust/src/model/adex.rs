@@ -147,6 +147,92 @@ pub fn step_slice(
     }
 }
 
+/// Branch-free twin of [`step_slice`] — bit-identical by construction
+/// (`engine.integrate = "vector"`, the default).
+///
+/// Both the refractory arm and the free evolution are computed for every
+/// neuron, then selected by mask; the `exp_arg.min(20.0)` clamp keeps the
+/// speculative exponential finite even for held-at-reset membranes, so the
+/// discarded arm can never trap or poison the kept one. Each arm keeps
+/// the scalar kernel's exact f64 operation order (the refractory `w`
+/// update divides *after* the `dt` multiply; the free arm divides before
+/// — they are not the same rounding, so both are preserved verbatim).
+/// Spikes land in a stack mask chunk and compact into `spikes` in a
+/// separate ascending pass.
+#[allow(clippy::too_many_arguments)]
+pub fn step_slice_vector(
+    state: &mut AdexState,
+    lo: usize,
+    hi: usize,
+    in_e: &[f64],
+    in_i: &[f64],
+    p: &AdexParams,
+    dt_ms: f64,
+    spikes: &mut Vec<u32>,
+) {
+    use super::lif::MASK_CHUNK;
+    debug_assert!(hi <= state.len());
+    debug_assert_eq!(in_e.len(), hi - lo);
+    debug_assert_eq!(in_i.len(), hi - lo);
+    let ref_steps = (p.t_ref / dt_ms).round();
+    let de = (-dt_ms / p.tau_syn_ex).exp();
+    let di = (-dt_ms / p.tau_syn_in).exp();
+    let AdexState { v, w, refrac, ie, ii } = state;
+    let mut mask = [false; MASK_CHUNK];
+    let mut c_lo = lo;
+    while c_lo < hi {
+        let c_hi = (c_lo + MASK_CHUNK).min(hi);
+        for i in c_lo..c_hi {
+            let ce = ie[i];
+            let ci = ii[i];
+            let vm = v[i];
+            let wm = w[i];
+            let r = refrac[i];
+            // refractory arm: adaptation integrates against held reset
+            let w_ref = wm
+                + dt_ms * (p.a * (p.v_reset - p.e_l) - wm) / p.tau_w;
+            // free arm: forward-Euler with clamped exponential
+            let exp_arg = ((vm - p.v_t) / p.delta_t).min(20.0);
+            let dv = (-p.g_l * (vm - p.e_l)
+                + p.g_l * p.delta_t * exp_arg.exp()
+                - wm
+                + ce
+                + ci
+                + p.i_ext)
+                / p.c_m;
+            let dw = (p.a * (vm - p.e_l) - wm) / p.tau_w;
+            let v_cand = vm + dt_ms * dv;
+            let w_free = wm + dt_ms * dw;
+            let refr = r > 0.0;
+            let spike = !refr && v_cand >= p.v_peak;
+            v[i] = if refr || spike { p.v_reset } else { v_cand };
+            w[i] = if refr {
+                w_ref
+            } else if spike {
+                w_free + p.b
+            } else {
+                w_free
+            };
+            refrac[i] = if refr {
+                r - 1.0
+            } else if spike {
+                ref_steps
+            } else {
+                r
+            };
+            ie[i] = ce * de + in_e[i - lo];
+            ii[i] = ci * di + in_i[i - lo];
+            mask[i - c_lo] = spike;
+        }
+        for (j, &fired) in mask[..c_hi - c_lo].iter().enumerate() {
+            if fired {
+                spikes.push((c_lo + j - lo) as u32);
+            }
+        }
+        c_lo = c_hi;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,5 +355,36 @@ mod tests {
         assert_eq!(s.v[3], before[3]);
         assert_ne!(s.v[1], before[1]);
         assert_ne!(s.v[2], before[2]);
+    }
+
+    #[test]
+    fn vector_kernel_bit_identical_to_scalar() {
+        // spiking + refractory + adaptation across a multi-chunk block
+        let p = AdexParams { i_ext: 700.0, ..Default::default() };
+        let n = 2 * super::super::lif::MASK_CHUNK + 9;
+        let mut a = AdexState::new(n, &p);
+        let mut b = AdexState::new(n, &p);
+        for i in 0..n {
+            a.v[i] = p.e_l + (i % 29) as f64;
+            b.v[i] = a.v[i];
+        }
+        for step in 0..1500u64 {
+            let ine: Vec<f64> = (0..n)
+                .map(|i| ((i as u64 * 17 + step * 5) % 9) as f64 * 30.0)
+                .collect();
+            let ini: Vec<f64> = (0..n)
+                .map(|i| ((i as u64 * 7 + step * 11) % 5) as f64 * -20.0)
+                .collect();
+            let mut sa = Vec::new();
+            let mut sb = Vec::new();
+            step_slice(&mut a, 0, n, &ine, &ini, &p, 0.1, &mut sa);
+            step_slice_vector(&mut b, 0, n, &ine, &ini, &p, 0.1, &mut sb);
+            assert_eq!(sa, sb, "spikes diverged at step {step}");
+            assert_eq!(a.v, b.v, "v diverged at step {step}");
+            assert_eq!(a.w, b.w, "w diverged at step {step}");
+            assert_eq!(a.refrac, b.refrac);
+            assert_eq!(a.ie, b.ie);
+            assert_eq!(a.ii, b.ii);
+        }
     }
 }

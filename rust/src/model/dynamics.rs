@@ -22,6 +22,7 @@
 //! into the worker's span — STDP and spike collection key off that
 //! generic spike event, never off model internals.
 
+use crate::config::IntegrateMode;
 use crate::metrics::memory::vec_bytes;
 
 use super::adex::{self, AdexParams, AdexState};
@@ -38,6 +39,27 @@ pub enum NeuronModel {
 }
 
 impl NeuronModel {
+    /// Number of model kinds (size of per-model accounting arrays).
+    pub const COUNT: usize = 4;
+
+    /// All models, in [`Self::index`] order.
+    pub const ALL: [NeuronModel; NeuronModel::COUNT] = [
+        NeuronModel::Lif,
+        NeuronModel::Adex,
+        NeuronModel::Hh,
+        NeuronModel::Parrot,
+    ];
+
+    /// Stable small index for per-model accounting arrays.
+    pub fn index(&self) -> usize {
+        match self {
+            NeuronModel::Lif => 0,
+            NeuronModel::Adex => 1,
+            NeuronModel::Hh => 2,
+            NeuronModel::Parrot => 3,
+        }
+    }
+
     pub fn as_str(&self) -> &'static str {
         match self {
             NeuronModel::Lif => "lif",
@@ -270,7 +292,9 @@ impl PopulationState {
     /// Advance the whole block one step. `in_e` / `in_i` are this step's
     /// arriving synaptic input (plus drive) for the block's neurons;
     /// spikes are appended as indices relative to the worker span
-    /// (`offset` is the block's position within it).
+    /// (`offset` is the block's position within it). `mode` selects the
+    /// branch-free vector kernels or the scalar ablation — the two are
+    /// bit-identical, so the knob only moves time, never results.
     pub fn step_block(
         &mut self,
         in_e: &[f64],
@@ -278,21 +302,33 @@ impl PopulationState {
         tables: &ModelTables,
         pidx: u8,
         offset: u32,
+        mode: IntegrateMode,
         spikes: &mut Vec<u32>,
     ) {
         let base = spikes.len();
         match self {
             PopulationState::Lif(s) => {
                 let n = s.len();
-                lif::step_slice(
-                    s,
-                    0,
-                    n,
-                    in_e,
-                    in_i,
-                    &tables.lif_props,
-                    spikes,
-                );
+                match mode {
+                    IntegrateMode::Vector => lif::step_slice_vector(
+                        s,
+                        0,
+                        n,
+                        in_e,
+                        in_i,
+                        &tables.lif_props,
+                        spikes,
+                    ),
+                    IntegrateMode::Scalar => lif::step_slice(
+                        s,
+                        0,
+                        n,
+                        in_e,
+                        in_i,
+                        &tables.lif_props,
+                        spikes,
+                    ),
+                }
             }
             PopulationState::Adex(s) => {
                 let ModelParams::Adex(p) = &tables.params[pidx as usize]
@@ -300,16 +336,28 @@ impl PopulationState {
                     unreachable!("adex block with non-adex params")
                 };
                 let n = s.len();
-                adex::step_slice(
-                    s,
-                    0,
-                    n,
-                    in_e,
-                    in_i,
-                    p,
-                    tables.dt_ms,
-                    spikes,
-                );
+                match mode {
+                    IntegrateMode::Vector => adex::step_slice_vector(
+                        s,
+                        0,
+                        n,
+                        in_e,
+                        in_i,
+                        p,
+                        tables.dt_ms,
+                        spikes,
+                    ),
+                    IntegrateMode::Scalar => adex::step_slice(
+                        s,
+                        0,
+                        n,
+                        in_e,
+                        in_i,
+                        p,
+                        tables.dt_ms,
+                        spikes,
+                    ),
+                }
             }
             PopulationState::Hh(s) => {
                 let ModelParams::Hh(p) = &tables.params[pidx as usize]
@@ -317,16 +365,28 @@ impl PopulationState {
                     unreachable!("hh block with non-hh params")
                 };
                 let n = s.len();
-                hh::step_slice(
-                    s,
-                    0,
-                    n,
-                    in_e,
-                    in_i,
-                    p,
-                    tables.dt_ms,
-                    spikes,
-                );
+                match mode {
+                    IntegrateMode::Vector => hh::step_slice_vector(
+                        s,
+                        0,
+                        n,
+                        in_e,
+                        in_i,
+                        p,
+                        tables.dt_ms,
+                        spikes,
+                    ),
+                    IntegrateMode::Scalar => hh::step_slice(
+                        s,
+                        0,
+                        n,
+                        in_e,
+                        in_i,
+                        p,
+                        tables.dt_ms,
+                        spikes,
+                    ),
+                }
             }
             PopulationState::Parrot(s) => {
                 for (i, &e) in in_e.iter().take(s.n).enumerate() {
@@ -442,30 +502,34 @@ mod tests {
 
     #[test]
     fn lif_dispatch_is_bit_identical_to_direct_call() {
-        let t = tables(vec![ModelParams::Lif(LifParams::default())]);
-        let n = 64;
-        let mut direct = LifState::new(n, &t.lif_props, vec![0; n]);
-        let mut via = PopulationState::new(&t, 0, n);
-        for i in 0..n {
-            direct.u[i] = -65.0 + (i as f64) * 0.3;
-            via.set_v_init(i, -65.0 + (i as f64) * 0.3);
+        // both integrate modes must reproduce the direct scalar call
+        for mode in [IntegrateMode::Scalar, IntegrateMode::Vector] {
+            let t = tables(vec![ModelParams::Lif(LifParams::default())]);
+            let n = 64;
+            let mut direct = LifState::new(n, &t.lif_props, vec![0; n]);
+            let mut via = PopulationState::new(&t, 0, n);
+            for i in 0..n {
+                direct.u[i] = -65.0 + (i as f64) * 0.3;
+                via.set_v_init(i, -65.0 + (i as f64) * 0.3);
+            }
+            let mut sd = Vec::new();
+            let mut sv = Vec::new();
+            for step in 0..200 {
+                let in_e: Vec<f64> = (0..n)
+                    .map(|i| ((i * 7 + step) % 11) as f64 * 30.0)
+                    .collect();
+                let zero = vec![0.0; n];
+                lif::step_slice(
+                    &mut direct, 0, n, &in_e, &zero, &t.lif_props, &mut sd,
+                );
+                via.step_block(&in_e, &zero, &t, 0, 0, mode, &mut sv);
+            }
+            assert_eq!(sd, sv, "{mode:?} changed the spike train");
+            let PopulationState::Lif(s) = &via else { panic!() };
+            assert_eq!(s.u, direct.u);
+            assert_eq!(s.ie, direct.ie);
+            assert_eq!(s.refrac, direct.refrac);
         }
-        let mut sd = Vec::new();
-        let mut sv = Vec::new();
-        for step in 0..200 {
-            let in_e: Vec<f64> =
-                (0..n).map(|i| ((i * 7 + step) % 11) as f64 * 30.0).collect();
-            let zero = vec![0.0; n];
-            lif::step_slice(
-                &mut direct, 0, n, &in_e, &zero, &t.lif_props, &mut sd,
-            );
-            via.step_block(&in_e, &zero, &t, 0, 0, &mut sv);
-        }
-        assert_eq!(sd, sv, "dispatch changed the spike train");
-        let PopulationState::Lif(s) = &via else { panic!() };
-        assert_eq!(s.u, direct.u);
-        assert_eq!(s.ie, direct.ie);
-        assert_eq!(s.refrac, direct.refrac);
     }
 
     #[test]
@@ -479,6 +543,7 @@ mod tests {
             &t,
             0,
             100,
+            IntegrateMode::Vector,
             &mut spikes,
         );
         assert_eq!(spikes, vec![100, 102]);
@@ -490,9 +555,25 @@ mod tests {
         let mut p = PopulationState::new(&t, 0, 3);
         let mut spikes = Vec::new();
         // inhibitory input must not fire a relay
-        p.step_block(&[0.0; 3], &[-5.0; 3], &t, 0, 0, &mut spikes);
+        p.step_block(
+            &[0.0; 3],
+            &[-5.0; 3],
+            &t,
+            0,
+            0,
+            IntegrateMode::Vector,
+            &mut spikes,
+        );
         assert!(spikes.is_empty());
-        p.step_block(&[3.0, 0.0, 0.5], &[0.0; 3], &t, 0, 0, &mut spikes);
+        p.step_block(
+            &[3.0, 0.0, 0.5],
+            &[0.0; 3],
+            &t,
+            0,
+            0,
+            IntegrateMode::Vector,
+            &mut spikes,
+        );
         assert_eq!(spikes, vec![0, 2]);
         assert_eq!(p.bytes(), 0);
     }
@@ -511,7 +592,15 @@ mod tests {
             let zero = vec![0.0; 8];
             let mut spikes = Vec::new();
             for _ in 0..5000 {
-                s.step_block(&zero, &zero, &t, pidx, 0, &mut spikes);
+                s.step_block(
+                    &zero,
+                    &zero,
+                    &t,
+                    pidx,
+                    0,
+                    IntegrateMode::Vector,
+                    &mut spikes,
+                );
             }
             assert!(
                 !spikes.is_empty(),

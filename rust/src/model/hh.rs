@@ -209,6 +209,73 @@ pub fn step_slice(
     }
 }
 
+/// Mask-compacting twin of [`step_slice`] — bit-identical by construction
+/// (`engine.integrate = "vector"`, the default).
+///
+/// The sub-stepped gate/membrane body is already branch-free (the `vtrap`
+/// removable-singularity guard is value-preserving and stays — exactness
+/// forbids replacing it); what moves is the in-loop `spikes.push`: upward
+/// threshold crossings land in a stack mask chunk and compact into
+/// `spikes` in a separate ascending pass, keeping the neuron loop free of
+/// data-dependent control flow.
+#[allow(clippy::too_many_arguments)]
+pub fn step_slice_vector(
+    state: &mut HhState,
+    lo: usize,
+    hi: usize,
+    in_e: &[f64],
+    in_i: &[f64],
+    p: &HhParams,
+    dt_ms: f64,
+    spikes: &mut Vec<u32>,
+) {
+    use super::lif::MASK_CHUNK;
+    debug_assert!(hi <= state.len());
+    debug_assert_eq!(in_e.len(), hi - lo);
+    debug_assert_eq!(in_i.len(), hi - lo);
+    let h_dt = dt_ms / p.substeps as f64;
+    let de = (-dt_ms / p.tau_syn_ex).exp();
+    let di = (-dt_ms / p.tau_syn_in).exp();
+    let mut mask = [false; MASK_CHUNK];
+    let mut c_lo = lo;
+    while c_lo < hi {
+        let c_hi = (c_lo + MASK_CHUNK).min(hi);
+        for i in c_lo..c_hi {
+            let mut v = state.v[i];
+            let mut m = state.m[i];
+            let mut hh = state.h[i];
+            let mut n = state.n[i];
+            let i_drive = p.i_ext + state.ie[i] + state.ii[i];
+            for _ in 0..p.substeps {
+                let (am, bm) = (alpha_m(v), beta_m(v));
+                let (ah, bh) = (alpha_h(v), beta_h(v));
+                let (an, bn) = (alpha_n(v), beta_n(v));
+                m = exp_euler(m, am, bm, h_dt);
+                hh = exp_euler(hh, ah, bh, h_dt);
+                n = exp_euler(n, an, bn, h_dt);
+                let i_na = p.g_na * m * m * m * hh * (v - p.e_na);
+                let i_k = p.g_k * n * n * n * n * (v - p.e_k);
+                let i_l = p.g_l * (v - p.e_l);
+                v += h_dt * (i_drive - i_na - i_k - i_l) / p.c_m;
+            }
+            mask[i - c_lo] = state.v_prev[i] < p.v_spike && v >= p.v_spike;
+            state.v_prev[i] = v;
+            state.v[i] = v;
+            state.m[i] = m;
+            state.h[i] = hh;
+            state.n[i] = n;
+            state.ie[i] = state.ie[i] * de + p.syn_scale * in_e[i - lo];
+            state.ii[i] = state.ii[i] * di + p.syn_scale * in_i[i - lo];
+        }
+        for (j, &fired) in mask[..c_hi - c_lo].iter().enumerate() {
+            if fired {
+                spikes.push((c_lo + j - lo) as u32);
+            }
+        }
+        c_lo = c_hi;
+    }
+}
+
 #[inline]
 fn exp_euler(x: f64, a: f64, b: f64, dt: f64) -> f64 {
     let tau = 1.0 / (a + b);
@@ -328,6 +395,37 @@ mod tests {
             count += sp.len();
         }
         assert!(count > 5, "only {count} spikes under bombardment");
+    }
+
+    #[test]
+    fn vector_kernel_bit_identical_to_scalar() {
+        let p = HhParams { i_ext: 8.0, ..Default::default() };
+        let n = super::super::lif::MASK_CHUNK + 11;
+        let mut a = HhState::new(n);
+        let mut b = HhState::new(n);
+        for i in 0..n {
+            init_at(&mut a, i, -70.0 + (i % 17) as f64);
+            init_at(&mut b, i, -70.0 + (i % 17) as f64);
+        }
+        for step in 0..600u64 {
+            let ine: Vec<f64> = (0..n)
+                .map(|i| ((i as u64 * 23 + step * 3) % 6) as f64 * 40.0)
+                .collect();
+            let ini: Vec<f64> = (0..n)
+                .map(|i| ((i as u64 * 5 + step * 13) % 4) as f64 * -30.0)
+                .collect();
+            let mut sa = Vec::new();
+            let mut sb = Vec::new();
+            step_slice(&mut a, 0, n, &ine, &ini, &p, 0.1, &mut sa);
+            step_slice_vector(&mut b, 0, n, &ine, &ini, &p, 0.1, &mut sb);
+            assert_eq!(sa, sb, "spikes diverged at step {step}");
+            assert_eq!(a.v, b.v, "v diverged at step {step}");
+            assert_eq!(a.m, b.m);
+            assert_eq!(a.h, b.h);
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.ie, b.ie);
+            assert_eq!(a.ii, b.ii);
+        }
     }
 
     #[test]

@@ -185,6 +185,95 @@ pub fn step_slice(
     }
 }
 
+/// Spike-mask chunk width of the vector kernels: the inner loops run over
+/// at most this many neurons with the mask in a stack array, so the
+/// compiler sees fixed-bound, branch-free bodies it can unroll and
+/// vectorize.
+pub(crate) const MASK_CHUNK: usize = 64;
+
+/// Branch-free, run-segmented twin of [`step_slice`] — bit-identical by
+/// construction (`engine.integrate = "vector"`, the default).
+///
+/// Three transformations, none of which may move a single bit:
+/// 1. the span is segmented into homogeneous runs of equal `pidx`, so the
+///    propagator lookup (and the constant `i_ext · p20` drive term) hoists
+///    out of the inner loop — the hoisted multiply is the same f64 multiply
+///    the scalar loop performed per neuron;
+/// 2. refractory/threshold handling becomes select arithmetic: both the
+///    integrated membrane and the reset value are computed, then chosen by
+///    mask. The discarded arm has no side effects and the kept arm is the
+///    exact expression (same operation order) the scalar kernel evaluates;
+/// 3. `spikes.push` leaves the loop: spike flags land in a stack mask
+///    chunk, and a separate compaction pass appends local indices — still
+///    in ascending order, exactly as the scalar kernel emits them.
+#[allow(clippy::too_many_arguments)]
+pub fn step_slice_vector(
+    state: &mut LifState,
+    lo: usize,
+    hi: usize,
+    in_e: &[f64],
+    in_i: &[f64],
+    props: &[Propagators],
+    spikes: &mut Vec<u32>,
+) {
+    debug_assert!(hi <= state.len());
+    debug_assert_eq!(in_e.len(), hi - lo);
+    debug_assert_eq!(in_i.len(), hi - lo);
+    let LifState { u, ie, ii, refrac, pidx } = state;
+    let mut start = lo;
+    while start < hi {
+        // homogeneous run of equal pidx (blocks tile per population, so
+        // runs are long — usually the whole span)
+        let pi = pidx[start];
+        let mut end = start + 1;
+        while end < hi && pidx[end] == pi {
+            end += 1;
+        }
+        let p = props[pi as usize];
+        let i_drive = p.i_ext * p.p20;
+        let ref_arm = p.ref_steps as f64;
+
+        let mut mask = [false; MASK_CHUNK];
+        let mut c_lo = start;
+        while c_lo < end {
+            let c_hi = (c_lo + MASK_CHUNK).min(end);
+            for i in c_lo..c_hi {
+                let um = u[i];
+                let ce = ie[i];
+                let ci = ii[i];
+                let r = refrac[i];
+                let refr = r > 0.0;
+                let integ = p.e_l
+                    + (um - p.e_l) * p.p22
+                    + ce * p.p21e
+                    + ci * p.p21i
+                    + i_drive;
+                let u_int = if refr { p.v_reset } else { integ };
+                let spike = !refr && u_int >= p.v_th;
+                u[i] = if spike { p.v_reset } else { u_int };
+                refrac[i] = if refr {
+                    r - 1.0
+                } else if spike {
+                    ref_arm
+                } else {
+                    r
+                };
+                ie[i] = ce * p.p11e + in_e[i - lo];
+                ii[i] = ci * p.p11i + in_i[i - lo];
+                mask[i - c_lo] = spike;
+            }
+            // compaction pass: ascending local indices, as scalar emits
+            for (j, &fired) in mask[..c_hi - c_lo].iter().enumerate() {
+                if fired {
+                    spikes.push((c_lo + j - lo) as u32);
+                }
+            }
+            c_lo = c_hi;
+        }
+        start = end;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -306,6 +395,56 @@ mod tests {
         let mut sp = Vec::new();
         // step only [1, 3)
         step_slice(&mut s, 1, 3, &[0.0; 2], &[0.0; 2], &props, &mut sp);
+        assert_eq!(s.u[0], before[0]);
+        assert_eq!(s.u[3], before[3]);
+        assert_ne!(s.u[1], before[1]);
+        assert_ne!(s.u[2], before[2]);
+    }
+
+    #[test]
+    fn vector_kernel_bit_identical_to_scalar() {
+        // mixed pidx runs (crossing the MASK_CHUNK boundary), drive
+        // strong enough to spike, refractory overlap with bombardment
+        let fast = LifParams { tau_m: 5.0, i_ext: 600.0, ..Default::default() };
+        let slow = LifParams { tau_m: 20.0, ..Default::default() };
+        let props =
+            [Propagators::new(&fast, 0.1), Propagators::new(&slow, 0.1)];
+        let n = 3 * MASK_CHUNK + 7;
+        let pidx: Vec<u8> =
+            (0..n).map(|i| u8::from(i >= MASK_CHUNK + 3)).collect();
+        let mut a = LifState::new(n, &props, pidx.clone());
+        let mut b = LifState::new(n, &props, pidx);
+        for i in 0..n {
+            a.u[i] = -70.0 + (i % 37) as f64;
+            b.u[i] = a.u[i];
+        }
+        for step in 0..400u64 {
+            let ine: Vec<f64> = (0..n)
+                .map(|i| ((i as u64 * 31 + step * 7) % 11) as f64 * 40.0)
+                .collect();
+            let ini: Vec<f64> = (0..n)
+                .map(|i| ((i as u64 * 13 + step * 3) % 7) as f64 * -25.0)
+                .collect();
+            let mut sa = Vec::new();
+            let mut sb = Vec::new();
+            step_slice(&mut a, 0, n, &ine, &ini, &props, &mut sa);
+            step_slice_vector(&mut b, 0, n, &ine, &ini, &props, &mut sb);
+            assert_eq!(sa, sb, "spikes diverged at step {step}");
+            assert_eq!(a.u, b.u, "u diverged at step {step}");
+            assert_eq!(a.ie, b.ie);
+            assert_eq!(a.ii, b.ii);
+            assert_eq!(a.refrac, b.refrac);
+        }
+    }
+
+    #[test]
+    fn vector_kernel_respects_slice_bounds() {
+        let p = LifParams { i_ext: 1000.0, ..Default::default() };
+        let props = [Propagators::new(&p, 0.1)];
+        let mut s = LifState::new(4, &props, vec![0; 4]);
+        let before = s.u.clone();
+        let mut sp = Vec::new();
+        step_slice_vector(&mut s, 1, 3, &[0.0; 2], &[0.0; 2], &props, &mut sp);
         assert_eq!(s.u[0], before[0]);
         assert_eq!(s.u[3], before[3]);
         assert_ne!(s.u[1], before[1]);

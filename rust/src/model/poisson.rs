@@ -9,7 +9,7 @@
 //! bearing for the test suite: CORTEX and the NEST-style baseline must be
 //! *spike-exact* equal on identical networks.
 
-use crate::util::rng::{hash_stream, Rng};
+use crate::util::rng::hash_stream;
 use crate::{Gid, Step};
 
 /// Poisson drive: `rate_hz` source firing rate onto each neuron, each
@@ -35,19 +35,15 @@ impl PoissonDrive {
     }
 
     /// Input current contribution for (gid, step): weight × Poisson count.
+    ///
+    /// Delegates to [`PreparedPoisson::sample`] so the unprepared and
+    /// prepared paths draw from the *same* counter-based stream — a
+    /// drive sampled ad hoc and one prepared for the hot loop must
+    /// agree noise-for-noise or decomposition-independence quietly
+    /// breaks between call sites.
     #[inline]
     pub fn sample(&self, seed: u64, gid: Gid, step: Step, dt_ms: f64) -> f64 {
-        if self.is_off() {
-            return 0.0;
-        }
-        let lambda = self.rate_hz * dt_ms * 1e-3;
-        let mut rng = Rng::new(hash_stream(&[
-            seed,
-            0x504f4953u64, // "POIS" tag
-            gid as u64,
-            step,
-        ]));
-        self.weight_pa * rng.poisson(lambda) as f64
+        self.prepare(dt_ms).sample(seed, gid, step)
     }
 
     /// Precompute the per-step constants for the hot path.
@@ -66,7 +62,11 @@ impl PoissonDrive {
 /// per-(neuron, step) stream is a raw splitmix64 sequence — no xoshiro
 /// state expansion per sample. Still a pure function of
 /// (seed, gid, step), so decomposition-independence is preserved.
-#[derive(Clone, Copy, Debug)]
+///
+/// `PartialEq` lets `gather_inputs` segment a post range into runs of
+/// identical drives and hoist the off/λ checks out of the per-neuron
+/// loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PreparedPoisson {
     pub weight_pa: f64,
     lambda: f64,
@@ -178,6 +178,26 @@ mod tests {
                 (mean - lambda).abs() < 0.05 * lambda.max(0.3),
                 "rate {rate}: mean {mean} vs lambda {lambda}"
             );
+        }
+    }
+
+    #[test]
+    fn unprepared_and_prepared_draw_the_same_stream() {
+        // the ad-hoc path must be the prepared path: same tag, same
+        // sampler, same noise for identical (seed, gid, step)
+        for rate in [800.0, 8000.0, 400_000.0] {
+            let d = PoissonDrive::new(rate, 2.5);
+            let p = d.prepare(0.1);
+            for (seed, gid, step) in
+                [(1u64, 0u32, 0u64), (7, 42, 100), (23, 1599, 599)]
+            {
+                assert_eq!(
+                    d.sample(seed, gid, step, 0.1),
+                    p.sample(seed, gid, step),
+                    "rate {rate}: POIS/PREP streams diverged at \
+                     ({seed}, {gid}, {step})"
+                );
+            }
         }
     }
 

@@ -253,9 +253,13 @@ impl NestRank {
                 f64::from_bits(self.ring_i[idx].swap(0, Ordering::Relaxed));
             let d = &self.drives[i];
             if !d.is_off() {
+                // negative-weight drives are inhibitory input, matching
+                // the engine's gather_inputs (the seed dropped them)
                 let x = d.sample(self.spec.seed, self.posts[i], now);
                 if x >= 0.0 {
                     in_e[i] += x;
+                } else {
+                    in_i[i] += x;
                 }
             }
         }

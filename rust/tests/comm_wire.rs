@@ -18,7 +18,10 @@ use std::time::Duration;
 use cortex::atlas::potjans::potjans_spec;
 use cortex::comm::bsb::{self, CodecError};
 use cortex::comm::{Communicator, SpikeMsg, TcpComm};
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
 use cortex::engine::{run_simulation, RunConfig, Simulation};
 use cortex::util::proptest_lite::{property, Gen};
 
@@ -150,6 +153,7 @@ fn local_raster(
             backend: DynamicsBackend::Native,
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
+            integrate: IntegrateMode::Vector,
             steps: STEPS,
             record_limit: Some(u32::MAX),
             verify_ownership: false,

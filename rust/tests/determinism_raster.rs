@@ -13,7 +13,10 @@ use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
 use cortex::atlas::potjans::{
     potjans_spec, potjans_spec_with, PotjansModels,
 };
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
 use cortex::decomp::{area_processes_partition, RankStore};
 use cortex::engine::{
     run_simulation, EngineOptions, RankEngine, RunConfig,
@@ -37,6 +40,7 @@ fn potjans_raster_identical_across_thread_counts_and_comm_modes() {
                     backend: DynamicsBackend::Native,
                     exec: ExecMode::Pool,
                     build: BuildMode::TwoPass,
+                    integrate: IntegrateMode::Vector,
                     steps: 600,
                     record_limit: Some(u32::MAX),
                     verify_ownership: true,
@@ -80,6 +84,7 @@ fn build_pipelines_produce_identical_rasters() {
                     backend: DynamicsBackend::Native,
                     exec: ExecMode::Pool,
                     build,
+                    integrate: IntegrateMode::Vector,
                     steps: 400,
                     record_limit: Some(u32::MAX),
                     verify_ownership: true,
@@ -99,6 +104,122 @@ fn build_pipelines_produce_identical_rasters() {
             }
         }
     }
+}
+
+#[test]
+fn integrate_kernels_produce_identical_rasters() {
+    // the branch-free vector kernels vs the scalar ablation: spike
+    // rasters must be bit-identical on the all-LIF microcircuit AND on
+    // the mixed AdEx/LIF variant, at every thread count — the vector
+    // formulation reorders no floating-point operation
+    let lif = Arc::new(potjans_spec(1200.0 / 77_169.0, 41));
+    let mixed = Arc::new(potjans_spec_with(
+        1200.0 / 77_169.0,
+        41,
+        &PotjansModels {
+            e: ModelParams::Adex(AdexParams {
+                i_ext: 700.0,
+                ..Default::default()
+            }),
+            i: ModelParams::Lif(LifParams::default()),
+        },
+    ));
+    assert!(!mixed.all_lif(), "variant should actually be mixed");
+    for spec in [&lif, &mixed] {
+        let mut reference = None;
+        for integrate in [IntegrateMode::Scalar, IntegrateMode::Vector] {
+            for threads in [1usize, 2, 4] {
+                let out = run_simulation(
+                    spec,
+                    &RunConfig {
+                        ranks: 2,
+                        threads,
+                        mapping: MappingKind::AreaProcesses,
+                        comm: CommMode::Overlap,
+                        backend: DynamicsBackend::Native,
+                        exec: ExecMode::Pool,
+                        build: BuildMode::TwoPass,
+                        integrate,
+                        steps: 400,
+                        record_limit: Some(u32::MAX),
+                        verify_ownership: true,
+                        artifacts_dir: "artifacts".into(),
+                        seed: 41,
+                    },
+                )
+                .unwrap();
+                assert!(
+                    out.total_spikes > 0,
+                    "'{}' inactive ({integrate:?}, {threads}t)",
+                    spec.name
+                );
+                if let Some(want) = &reference {
+                    assert_eq!(
+                        want, &out.raster.events,
+                        "{integrate:?} at {threads} threads changed \
+                         the '{}' raster",
+                        spec.name
+                    );
+                } else {
+                    reference = Some(out.raster.events);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn integrate_kernels_agree_on_checkpoint_bytes() {
+    // stronger than raster identity: the scalar and vector kernels must
+    // agree on every state variable (u, w, currents, refractory clocks),
+    // all of which the checkpoint byte stream captures
+    let spec = Arc::new(potjans_spec_with(
+        1600.0 / 77_169.0,
+        31,
+        &PotjansModels {
+            e: ModelParams::Adex(AdexParams {
+                i_ext: 700.0,
+                ..Default::default()
+            }),
+            i: ModelParams::Lif(LifParams::default()),
+        },
+    ));
+    let part = area_processes_partition(&spec, 1, 31);
+    let run = |integrate: IntegrateMode| {
+        let store = RankStore::build(
+            &spec,
+            &part.members[0],
+            |_| true,
+            0,
+            2,
+        );
+        let mut eng = RankEngine::new(
+            Arc::clone(&spec),
+            store,
+            EngineOptions {
+                n_threads: 2,
+                verify_ownership: true,
+                integrate,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let spikes = eng.run_windows_solo(80);
+        let mut blob = Vec::new();
+        eng.checkpoint(&mut blob).unwrap();
+        (spikes, blob)
+    };
+    let (spikes_s, blob_s) = run(IntegrateMode::Scalar);
+    let (spikes_v, blob_v) = run(IntegrateMode::Vector);
+    assert!(!spikes_s.is_empty(), "mixed circuit should be active");
+    assert_eq!(
+        spikes_s, spikes_v,
+        "kernel formulation changed the spike train"
+    );
+    assert_eq!(
+        blob_s, blob_v,
+        "kernel formulation changed the checkpoint bytes"
+    );
 }
 
 #[test]

@@ -16,7 +16,10 @@ use std::sync::Arc;
 use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::atlas::random_spec;
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::nest_baseline::{run_nest_simulation, NestRunConfig};
 
@@ -29,6 +32,7 @@ fn base_cfg(steps: u64) -> RunConfig {
         backend: DynamicsBackend::Native,
         exec: ExecMode::Pool,
         build: BuildMode::TwoPass,
+        integrate: IntegrateMode::Vector,
         steps,
         record_limit: Some(u32::MAX),
         verify_ownership: true,

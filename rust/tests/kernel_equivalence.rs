@@ -1,0 +1,295 @@
+//! The tentpole's safety net: the branch-free "vector" neuron kernels
+//! must be **bit-identical** to the scalar originals — not approximately,
+//! not statistically. Property tests (via `util::proptest_lite`, replay
+//! with `CORTEX_PROPTEST_SEED`) drive both formulations over random
+//! parameter sets, mixed-`pidx` blocks whose sizes straddle the 64-lane
+//! mask chunks, and bombardment inputs strong enough to exercise the
+//! refractory/threshold selects, comparing every state variable by its
+//! raw bits (NaN-safe, unlike `==`). An engine-level test repeats the
+//! comparison through the full simulation across 1/2/4 threads, and a
+//! regression test pins the `gather_inputs` fix: negative-weight Poisson
+//! drive must reach the network as inhibition (the seed dropped it).
+
+use std::sync::Arc;
+
+use cortex::atlas::{random_spec, random_spec_with};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
+use cortex::engine::{run_simulation, RunConfig};
+use cortex::model::lif::{self, LifState, Propagators};
+use cortex::model::{adex, hh};
+use cortex::model::{
+    AdexParams, AdexState, HhParams, HhState, LifParams, ModelParams,
+    PoissonDrive,
+};
+use cortex::nest_baseline::{run_nest_simulation, NestRunConfig};
+use cortex::util::proptest_lite::{property, Gen};
+
+const DT_MS: f64 = 0.1;
+
+fn bits_equal(name: &str, a: &[f64], b: &[f64]) -> Result<(), String> {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!(
+                "{name}[{i}] diverged: scalar {x:?} vs vector {y:?}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Random inputs for one step of a block of `n` neurons: excitatory
+/// bombardment (occasionally strong enough to force a spike and a
+/// refractory period at these parameter ranges) plus inhibitory drive,
+/// which since the `gather_inputs` fix arrives as negative `in_i`.
+fn random_inputs(
+    g: &mut Gen,
+    n: usize,
+    e_max: f64,
+    i_min: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let hot = g.bool(0.3); // bombardment steps
+    let scale = if hot { 1.0 } else { 0.2 };
+    let in_e = (0..n).map(|_| g.f64(0.0, e_max) * scale).collect();
+    let in_i = (0..n).map(|_| g.f64(i_min, 0.0) * scale).collect();
+    (in_e, in_i)
+}
+
+#[test]
+fn lif_vector_bit_identical_on_random_mixed_pidx_blocks() {
+    property("lif vector == scalar", 150, |g| {
+        // a few propagator sets with genuinely different dynamics, so
+        // mixed-pidx spans exercise the homogeneous-run segmentation
+        let n_props = g.usize(1..4);
+        let props: Vec<Propagators> = (0..n_props)
+            .map(|_| {
+                Propagators::new(
+                    &LifParams {
+                        tau_m: g.f64(2.0, 30.0),
+                        tau_syn_ex: g.f64(0.2, 3.0),
+                        tau_syn_in: g.f64(0.2, 3.0),
+                        v_th: g.f64(-55.0, -45.0),
+                        t_ref: g.f64(0.0, 4.0),
+                        i_ext: g.f64(0.0, 450.0),
+                        ..Default::default()
+                    },
+                    DT_MS,
+                )
+            })
+            .collect();
+        // block sizes from 1 to three mask chunks (MASK_CHUNK = 64)
+        let n = g.usize(1..200);
+        let pidx: Vec<u8> = (0..n)
+            .map(|_| g.u32(0..n_props as u32) as u8)
+            .collect();
+        let mut s = LifState::new(n, &props, pidx.clone());
+        let mut v = LifState::new(n, &props, pidx);
+        for _ in 0..g.usize(1..30) {
+            let (in_e, in_i) = random_inputs(g, n, 900.0, -400.0);
+            let (mut sp_s, mut sp_v) = (Vec::new(), Vec::new());
+            lif::step_slice(&mut s, 0, n, &in_e, &in_i, &props, &mut sp_s);
+            lif::step_slice_vector(
+                &mut v, 0, n, &in_e, &in_i, &props, &mut sp_v,
+            );
+            if sp_s != sp_v {
+                return Err(format!(
+                    "spike lists diverged: {sp_s:?} vs {sp_v:?}"
+                ));
+            }
+        }
+        // one partial-span step (lo > 0), as the engine issues for
+        // blocks that straddle worker boundaries
+        if n > 1 {
+            let lo = g.usize(0..n - 1);
+            let hi = g.usize(lo + 1..n + 1);
+            let (in_e, in_i) = random_inputs(g, hi - lo, 900.0, -400.0);
+            let (mut sp_s, mut sp_v) = (Vec::new(), Vec::new());
+            lif::step_slice(&mut s, lo, hi, &in_e, &in_i, &props, &mut sp_s);
+            lif::step_slice_vector(
+                &mut v, lo, hi, &in_e, &in_i, &props, &mut sp_v,
+            );
+            if sp_s != sp_v {
+                return Err("partial-span spike lists diverged".into());
+            }
+        }
+        bits_equal("u", &s.u, &v.u)?;
+        bits_equal("ie", &s.ie, &v.ie)?;
+        bits_equal("ii", &s.ii, &v.ii)?;
+        bits_equal("refrac", &s.refrac, &v.refrac)
+    });
+}
+
+#[test]
+fn adex_vector_bit_identical_on_random_params() {
+    property("adex vector == scalar", 100, |g| {
+        let p = AdexParams {
+            a: g.f64(0.0, 8.0),
+            b: g.f64(0.0, 120.0),
+            tau_w: g.f64(20.0, 300.0),
+            delta_t: g.f64(0.5, 3.0),
+            t_ref: g.f64(0.0, 4.0),
+            i_ext: g.f64(0.0, 700.0),
+            ..Default::default()
+        };
+        let n = g.usize(1..200);
+        let mut s = AdexState::new(n, &p);
+        let mut v = AdexState::new(n, &p);
+        for _ in 0..g.usize(1..40) {
+            let (in_e, in_i) = random_inputs(g, n, 800.0, -500.0);
+            let (mut sp_s, mut sp_v) = (Vec::new(), Vec::new());
+            adex::step_slice(
+                &mut s, 0, n, &in_e, &in_i, &p, DT_MS, &mut sp_s,
+            );
+            adex::step_slice_vector(
+                &mut v, 0, n, &in_e, &in_i, &p, DT_MS, &mut sp_v,
+            );
+            if sp_s != sp_v {
+                return Err(format!(
+                    "spike lists diverged: {sp_s:?} vs {sp_v:?}"
+                ));
+            }
+        }
+        bits_equal("v", &s.v, &v.v)?;
+        bits_equal("w", &s.w, &v.w)?;
+        bits_equal("ie", &s.ie, &v.ie)?;
+        bits_equal("ii", &s.ii, &v.ii)?;
+        bits_equal("refrac", &s.refrac, &v.refrac)
+    });
+}
+
+#[test]
+fn hh_vector_bit_identical_on_random_params() {
+    property("hh vector == scalar", 40, |g| {
+        let p = HhParams {
+            i_ext: g.f64(0.0, 12.0),
+            tau_syn_ex: g.f64(0.2, 3.0),
+            tau_syn_in: g.f64(0.2, 6.0),
+            ..Default::default()
+        };
+        let n = g.usize(1..150);
+        let mut s = HhState::new(n);
+        let mut v = HhState::new(n);
+        for _ in 0..g.usize(1..15) {
+            let (in_e, in_i) = random_inputs(g, n, 60.0, -40.0);
+            let (mut sp_s, mut sp_v) = (Vec::new(), Vec::new());
+            hh::step_slice(
+                &mut s, 0, n, &in_e, &in_i, &p, DT_MS, &mut sp_s,
+            );
+            hh::step_slice_vector(
+                &mut v, 0, n, &in_e, &in_i, &p, DT_MS, &mut sp_v,
+            );
+            if sp_s != sp_v {
+                return Err(format!(
+                    "spike lists diverged: {sp_s:?} vs {sp_v:?}"
+                ));
+            }
+        }
+        bits_equal("v", &s.v, &v.v)?;
+        bits_equal("m", &s.m, &v.m)?;
+        bits_equal("h", &s.h, &v.h)?;
+        bits_equal("n", &s.n, &v.n)?;
+        bits_equal("v_prev", &s.v_prev, &v.v_prev)?;
+        bits_equal("ie", &s.ie, &v.ie)?;
+        bits_equal("ii", &s.ii, &v.ii)
+    });
+}
+
+// ---------------------------------------------------------------------
+// Through the full engine
+// ---------------------------------------------------------------------
+
+fn cfg(threads: usize, integrate: IntegrateMode, seed: u64) -> RunConfig {
+    RunConfig {
+        ranks: 1,
+        threads,
+        mapping: MappingKind::AreaProcesses,
+        comm: CommMode::Overlap,
+        backend: DynamicsBackend::Native,
+        exec: ExecMode::Pool,
+        build: BuildMode::TwoPass,
+        integrate,
+        steps: 300,
+        record_limit: Some(u32::MAX),
+        verify_ownership: true,
+        artifacts_dir: "artifacts".into(),
+        seed,
+    }
+}
+
+#[test]
+fn engine_raster_identical_scalar_vs_vector_across_threads() {
+    // mixed AdEx/LIF balanced random network: both kernel families run
+    // in the same simulation, under real Poisson drive and real worker
+    // partitions, at every thread count
+    let spec = Arc::new(random_spec_with(
+        400,
+        40,
+        7,
+        ModelParams::Adex(AdexParams {
+            i_ext: 700.0,
+            ..Default::default()
+        }),
+        ModelParams::Lif(LifParams::default()),
+    ));
+    let mut reference = None;
+    for integrate in [IntegrateMode::Scalar, IntegrateMode::Vector] {
+        for threads in [1usize, 2, 4] {
+            let out =
+                run_simulation(&spec, &cfg(threads, integrate, 7)).unwrap();
+            assert!(
+                out.total_spikes > 0,
+                "network inactive ({integrate:?}, {threads}t)"
+            );
+            if let Some(want) = &reference {
+                assert_eq!(
+                    want, &out.raster.events,
+                    "{integrate:?} at {threads} threads changed the raster"
+                );
+            } else {
+                reference = Some(out.raster.events);
+            }
+        }
+    }
+}
+
+#[test]
+fn negative_weight_poisson_drive_inhibits_the_network() {
+    // regression for the seed's gather_inputs, which silently dropped
+    // drives with negative weight: an inhibitory drive behaved exactly
+    // like no drive at all
+    let mk = |weight_pa: f64| {
+        let mut spec = random_spec(300, 30, 13);
+        // re-purpose the I population's drive as inhibitory bombardment
+        spec.populations[1].drive = PoissonDrive::new(8000.0, weight_pa);
+        Arc::new(spec)
+    };
+    let run = |weight_pa: f64| {
+        run_simulation(&mk(weight_pa), &cfg(1, IntegrateMode::Vector, 13))
+            .unwrap()
+    };
+    let inhibited = run(-60.0);
+    let undriven = run(0.0); // weight 0 ⇒ drive off
+    assert!(inhibited.total_spikes > 0, "network should stay active");
+    assert_ne!(
+        inhibited.raster.events, undriven.raster.events,
+        "negative-weight drive must reach the network as inhibition"
+    );
+    // the reference backend routes the same drive the same way, so the
+    // rasters agree spike-for-spike on the inhibited network
+    let nest = run_nest_simulation(
+        &mk(-60.0),
+        &NestRunConfig {
+            ranks: 1,
+            threads: 1,
+            steps: 300,
+            record_limit: Some(u32::MAX),
+            seed: 13,
+        },
+    );
+    assert_eq!(
+        inhibited.raster.events, nest.raster.events,
+        "engine and baseline disagree on inhibitory drive"
+    );
+}

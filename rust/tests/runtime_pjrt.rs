@@ -8,7 +8,10 @@
 use std::sync::Arc;
 
 use cortex::atlas::random_spec;
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, MappingKind};
+use cortex::config::{
+    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
+    MappingKind,
+};
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::model::lif::{step_slice, LifParams, LifState, Propagators};
 use cortex::model::ModelParams;
@@ -104,6 +107,7 @@ fn pjrt_backend_full_simulation_matches_native() {
         backend: DynamicsBackend::Native,
         exec: ExecMode::Pool,
         build: BuildMode::TwoPass,
+        integrate: IntegrateMode::Vector,
         steps: 400,
         record_limit: Some(u32::MAX),
         verify_ownership: false,
