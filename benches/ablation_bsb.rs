@@ -16,7 +16,7 @@ use cortex::comm::bsb::{pack, plan_exchange, unpack};
 use cortex::comm::{SpikeMsg, TofuModel};
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
@@ -44,6 +44,7 @@ fn main() -> anyhow::Result<()> {
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
             integrate: IntegrateMode::Vector,
+            routing: RoutingMode::Routed,
             steps,
             record_limit: Some(u32::MAX),
             verify_ownership: false,

@@ -30,7 +30,7 @@ use std::sync::Arc;
 use cortex::atlas::potjans::{potjans_spec_with, PotjansModels};
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::engine::{integrate_rates, run_simulation, RunConfig};
 use cortex::metrics::Table;
@@ -305,6 +305,7 @@ fn main() -> anyhow::Result<()> {
                     exec: ExecMode::Pool,
                     build: BuildMode::TwoPass,
                     integrate,
+                    routing: RoutingMode::Routed,
                     steps,
                     record_limit: Some(u32::MAX),
                     verify_ownership: false,

@@ -21,7 +21,7 @@ use std::sync::Arc;
 use cortex::atlas::random_spec;
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
         exec,
         build: BuildMode::TwoPass,
         integrate: IntegrateMode::Vector,
+        routing: RoutingMode::Routed,
         steps,
         record_limit: Some(u32::MAX),
         verify_ownership: false,

@@ -17,7 +17,7 @@ use std::sync::Arc;
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::table::human_bytes;
@@ -82,6 +82,7 @@ fn main() -> anyhow::Result<()> {
                 exec: ExecMode::Pool,
                 build: BuildMode::TwoPass,
                 integrate: IntegrateMode::Vector,
+                routing: RoutingMode::Routed,
                 steps,
                 record_limit: None,
                 verify_ownership: false,

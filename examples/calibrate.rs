@@ -9,7 +9,7 @@ use std::sync::Arc;
 use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::Table;
@@ -48,6 +48,7 @@ fn main() {
                     exec: ExecMode::Pool,
                     build: BuildMode::TwoPass,
                     integrate: IntegrateMode::Vector,
+                    routing: RoutingMode::Routed,
                     steps,
                     record_limit: Some(u32::MAX),
                     verify_ownership: false,

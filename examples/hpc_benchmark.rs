@@ -19,7 +19,7 @@ use std::sync::Arc;
 use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::engine::{run_simulation, RunConfig};
 
@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
         exec: ExecMode::Pool,
         build: BuildMode::TwoPass,
         integrate: IntegrateMode::Vector,
+        routing: RoutingMode::Routed,
         steps,
         record_limit: Some(u32::MAX),
         verify_ownership: true, // the paper's Abort-on-foreign-access

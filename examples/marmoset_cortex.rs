@@ -16,7 +16,7 @@ use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::comm::TofuModel;
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::metrics::table::{human_bytes, write_csv};
@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
         exec: ExecMode::Pool,
         build: BuildMode::TwoPass,
         integrate: IntegrateMode::Vector,
+        routing: RoutingMode::Routed,
         steps,
         record_limit: Some(u32::MAX),
         verify_ownership: false,

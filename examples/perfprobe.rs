@@ -1,6 +1,7 @@
 use std::sync::Arc;
 use cortex::atlas::random_spec;
-use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode, MappingKind};
+use cortex::comm::SPIKE_WIRE_BYTES;
+use cortex::config::{BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode, MappingKind, RoutingMode};
 use cortex::engine::{integrate_rates, run_simulation, RunConfig};
 fn main() {
     let which = std::env::args().nth(1).unwrap_or_default();
@@ -10,11 +11,25 @@ fn main() {
         println!("nest {} spikes {:.3}s", o.total_spikes, o.wall_seconds);
         print!("{}", o.memory.report());
     } else {
-        // `perfprobe scalar` flips the kernel ablation; default is vector
+        // `perfprobe scalar` flips the kernel ablation; `comm`/`bcast`
+        // run 2 ranks under routed/broadcast exchange; default is the
+        // single-rank vector-kernel probe
         let integrate = if which == "scalar" { IntegrateMode::Scalar } else { IntegrateMode::Vector };
+        let ranks = if which == "comm" || which == "bcast" { 2 } else { 1 };
+        let routing = if which == "bcast" { RoutingMode::Broadcast } else { RoutingMode::Routed };
         let steps = 500;
-        let o = run_simulation(&spec, &RunConfig{ranks:1,threads:1,mapping:MappingKind::AreaProcesses,comm:CommMode::Serialized,backend:DynamicsBackend::Native,exec:ExecMode::Pool,build:BuildMode::TwoPass,integrate,steps,record_limit:None,verify_ownership:false,artifacts_dir:"artifacts".into(),seed:31}).unwrap();
+        let o = run_simulation(&spec, &RunConfig{ranks,threads:1,mapping:MappingKind::AreaProcesses,comm:CommMode::Serialized,backend:DynamicsBackend::Native,exec:ExecMode::Pool,build:BuildMode::TwoPass,integrate,routing,steps,record_limit:None,verify_ownership:false,artifacts_dir:"artifacts".into(),seed:31}).unwrap();
         println!("cortex {} spikes {:.3}s", o.total_spikes, o.wall_seconds); print!("{}", o.timer_max.report());
+        // wire volumes, whole-run and per window ({routing:?} filters
+        // the spike packets down to each peer's subscription)
+        if o.windows > 0 {
+            println!(
+                "comm {routing:?}: {} sent / {} received over {} windows ({:.1} / {:.1} spikes per rank-window)",
+                o.comm_bytes, o.comm_recv_bytes, o.windows,
+                o.comm_bytes as f64 / (SPIKE_WIRE_BYTES * o.windows * ranks as u64) as f64,
+                o.comm_recv_bytes as f64 / (SPIKE_WIRE_BYTES * o.windows * ranks as u64) as f64,
+            );
+        }
         // per-model integrate throughput (aggregate timer, exact count)
         for (m, n, ns) in integrate_rates(&spec, &o.timer_sum, steps) {
             println!("{m:?}: {n} neurons, {ns:.1} ns/neuron-step ({integrate:?})");

@@ -20,7 +20,7 @@ use cortex::atlas::potjans::potjans_spec;
 use cortex::comm::{Communicator, TcpComm};
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::engine::{run_simulation, RunConfig, Simulation};
 
@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
             integrate: IntegrateMode::Vector,
+            routing: RoutingMode::Routed,
             steps,
             record_limit: Some(u32::MAX),
             verify_ownership: false,

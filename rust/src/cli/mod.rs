@@ -256,6 +256,7 @@ pub fn run_config_of(cfg: &ExperimentConfig) -> RunConfig {
         exec: cfg.exec,
         build: cfg.build,
         integrate: cfg.integrate,
+        routing: cfg.routing,
         steps: cfg.steps(),
         record_limit: cfg.record_raster.then_some(cfg.record_limit as u32),
         verify_ownership: false,
@@ -342,11 +343,14 @@ pub fn cmd_run(args: &Args) -> Result<()> {
                 );
             }
             println!(
-                "memory: max-rank {}, imbalance {:.2}; comm {} over {} windows",
+                "memory: max-rank {}, imbalance {:.2}; comm {} sent / \
+                 {} received over {} windows ({:?} routing)",
                 human_bytes(out.memory.max_rank_bytes()),
                 out.memory.imbalance(),
                 human_bytes(out.comm_bytes),
-                out.windows
+                human_bytes(out.comm_recv_bytes),
+                out.windows,
+                cfg.routing
             );
             println!("--- phase times (critical path) ---");
             print!("{}", out.timer_max.report());
@@ -567,6 +571,9 @@ pub fn cmd_partition(args: &Args) -> Result<()> {
         "merge_ms",
         "fill_ms"
     );
+    // per-rank interest: sub_counts[r][s] = gids rank r subscribes to
+    // from rank s (what interest routing puts on the s→r wire)
+    let mut sub_counts: Vec<Vec<u64>> = Vec::with_capacity(cfg.ranks);
     for r in 0..cfg.ranks {
         let rank_of = part.rank_of.clone();
         let is_local =
@@ -592,6 +599,13 @@ pub fn cmd_partition(args: &Args) -> Result<()> {
             }
         };
         let b = store.build;
+        sub_counts.push(
+            store
+                .subscriptions(&part)
+                .iter()
+                .map(|bucket| bucket.len() as u64)
+                .collect(),
+        );
         println!(
             "{:>5} {:>8} {:>10} {:>10} {:>12} {:>12} {:>12} \
              {:>9.2} {:>9.2} {:>9.2}",
@@ -606,6 +620,53 @@ pub fn cmd_partition(args: &Args) -> Result<()> {
             b.merge_ns as f64 * 1e-6,
             b.fill_ns as f64 * 1e-6,
         );
+    }
+    if cfg.ranks > 1 {
+        // worst-case per-window wire volumes: every owned gid spiking
+        // once per window — broadcast ships the full packet to every
+        // peer, routing ships each peer its subscribed subset. The Tofu
+        // projection prices one such exchange on Fugaku's interconnect.
+        println!("--- interest routing (1 spike/gid/window bound) ---");
+        println!(
+            "{:>5} {:>10} {:>12} {:>12} {:>6} {:>12} {:>12}",
+            "rank",
+            "sub_in",
+            "bcast",
+            "routed",
+            "share",
+            "tofu_bcast",
+            "tofu_routed"
+        );
+        let tofu = crate::comm::TofuModel::default();
+        const WIRE: u64 = crate::comm::SPIKE_WIRE_BYTES;
+        for r in 0..cfg.ranks {
+            let sub_in: u64 = sub_counts[r].iter().sum();
+            let sub_out: u64 =
+                sub_counts.iter().map(|c| c[r]).sum();
+            let posts = part.members[r].len() as u64;
+            let bcast = (cfg.ranks as u64 - 1) * posts * WIRE;
+            let routed = sub_out * WIRE;
+            let share = if bcast > 0 {
+                routed as f64 / bcast as f64
+            } else {
+                0.0
+            };
+            println!(
+                "{:>5} {:>10} {:>12} {:>12} {:>6.3} {:>10.1}us {:>10.1}us",
+                r,
+                sub_in,
+                human_bytes(bcast),
+                human_bytes(routed),
+                share,
+                tofu.allgather_seconds(cfg.ranks, (posts * WIRE) as f64)
+                    * 1e6,
+                tofu.routed_exchange_seconds(
+                    cfg.ranks,
+                    routed as f64,
+                    sub_in as f64 * WIRE as f64,
+                ) * 1e6,
+            );
+        }
     }
     Ok(())
 }
@@ -779,6 +840,25 @@ mod tests {
         assert_eq!(
             run_config_of(&a.experiment().unwrap()).integrate,
             IntegrateMode::Vector
+        );
+    }
+
+    #[test]
+    fn routing_mode_flows_into_run_config() {
+        use crate::config::RoutingMode;
+        let a = Args::parse(&s(&[
+            "run",
+            "--set",
+            "engine.routing=\"broadcast\"",
+        ]))
+        .unwrap();
+        let cfg = a.experiment().unwrap();
+        assert_eq!(cfg.routing, RoutingMode::Broadcast);
+        assert_eq!(run_config_of(&cfg).routing, RoutingMode::Broadcast);
+        let a = Args::parse(&s(&["run"])).unwrap();
+        assert_eq!(
+            run_config_of(&a.experiment().unwrap()).routing,
+            RoutingMode::Routed
         );
     }
 

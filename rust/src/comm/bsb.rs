@@ -30,6 +30,7 @@
 use std::fmt;
 
 use super::{SpikeMsg, SpikePacket};
+use crate::Gid;
 
 /// Longest legal varint: 10 bytes carry 70 payload bits; a u64 needs
 /// exactly that when every byte is a continuation.
@@ -121,6 +122,65 @@ fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64, CodecError> {
         shift += 7;
     }
     Err(CodecError::VarintOverflow)
+}
+
+/// Encode a **sorted, duplicate-free** gid list as varint count plus
+/// delta-coded varint gids — the wire form of one rank's interest
+/// subscription in the build-time routing collective
+/// ([`crate::comm::Communicator::alltoall`]). Sorted subscription lists
+/// delta-code down to ~1 byte/gid for the dense sub-graph interest
+/// sets the indegree decomposition produces.
+pub fn encode_gid_list(gids: &[Gid]) -> Vec<u8> {
+    debug_assert!(gids.windows(2).all(|w| w[0] < w[1]));
+    let mut out = Vec::with_capacity(gids.len() + 4);
+    put_varint(&mut out, gids.len() as u64);
+    let mut prev = 0u64;
+    for (i, &g) in gids.iter().enumerate() {
+        let g = g as u64;
+        // the first gid travels absolute; later gids as gap - 1 (gaps
+        // are >= 1 in a strictly increasing list, so runs cost 1 byte)
+        put_varint(&mut out, g - prev - u64::from(i > 0));
+        prev = g;
+    }
+    out
+}
+
+/// Decode an [`encode_gid_list`] payload back into the sorted gid
+/// list. Total like the rest of the codec: truncated buffers, overlong
+/// varints, gids escaping the 32-bit domain and trailing bytes are all
+/// [`CodecError`]s, never panics.
+pub fn decode_gid_list(buf: &[u8]) -> Result<Vec<Gid>, CodecError> {
+    let mut pos = 0usize;
+    let n = get_varint(buf, &mut pos)?;
+    // same pre-allocation guard as `unpack_at`: a declared count must
+    // be plausible for the bytes actually present (>= 1 byte per gid)
+    if n as usize > buf.len() {
+        return Err(CodecError::Truncated);
+    }
+    let mut gids = Vec::with_capacity(n as usize);
+    let mut prev = 0u64;
+    for i in 0..n {
+        let delta = get_varint(buf, &mut pos)?;
+        // the first gid travels absolute; later entries add delta + 1
+        // since the source list is strictly increasing
+        let g = prev
+            .checked_add(delta)
+            .and_then(|v| v.checked_add(u64::from(i > 0)))
+            .ok_or(CodecError::ValueOverflow)?;
+        if g > u32::MAX as u64 {
+            return Err(CodecError::ValueOverflow);
+        }
+        gids.push(g as Gid);
+        prev = g;
+    }
+    if pos != buf.len() {
+        return Err(CodecError::LengthMismatch {
+            declared: n,
+            used: pos,
+            len: buf.len(),
+        });
+    }
+    Ok(gids)
 }
 
 /// Pack one window's spikes: sorted by (step, gid), step stored as
@@ -346,6 +406,46 @@ mod tests {
                 step: start + rng.below(len as u64) as u32,
             })
             .collect()
+    }
+
+    #[test]
+    fn gid_list_roundtrips_and_stays_total() {
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let n = rng.below(300) as usize;
+            let mut gids: Vec<Gid> = (0..n)
+                .map(|_| rng.below(u32::MAX as u64 + 1) as Gid)
+                .collect();
+            gids.sort_unstable();
+            gids.dedup();
+            let buf = encode_gid_list(&gids);
+            assert_eq!(decode_gid_list(&buf).unwrap(), gids);
+            // dense runs (the common subscription shape) stay compact
+            if gids.is_empty() {
+                assert_eq!(buf.len(), 1);
+            }
+            // every strict prefix must error, never panic
+            for cut in 0..buf.len() {
+                assert!(decode_gid_list(&buf[..cut]).is_err());
+            }
+        }
+        // a consecutive run costs one byte per gid after the first
+        let run: Vec<Gid> = (1000..2000).collect();
+        let buf = encode_gid_list(&run);
+        assert!(buf.len() <= run.len() + 3, "{} bytes", buf.len());
+        // trailing garbage is rejected
+        let mut buf = encode_gid_list(&[3, 5, 9]);
+        buf.push(0);
+        assert!(decode_gid_list(&buf).is_err());
+        // a delta pushing past u32::MAX is rejected
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 2);
+        put_varint(&mut buf, u32::MAX as u64);
+        put_varint(&mut buf, 1);
+        assert_eq!(
+            decode_gid_list(&buf),
+            Err(CodecError::ValueOverflow)
+        );
     }
 
     #[test]

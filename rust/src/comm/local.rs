@@ -12,11 +12,15 @@
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
-use super::{CommError, Communicator, SpikePacket, SPIKE_WIRE_BYTES};
+use super::{
+    CommError, Communicator, Outbound, SpikePacket, SPIKE_WIRE_BYTES,
+};
 
-struct Packet {
-    window: u64,
-    spikes: SpikePacket,
+/// One channel message: a window's spikes, or a build-time blob of the
+/// subscription collective ([`Communicator::alltoall`]).
+enum Packet {
+    Spikes { window: u64, spikes: SpikePacket },
+    Blob(Vec<u8>),
 }
 
 /// One rank's endpoint of the cluster.
@@ -29,6 +33,7 @@ pub struct LocalComm {
     from_peer: Vec<Option<Receiver<Packet>>>,
     window: u64,
     bytes_sent: u64,
+    bytes_received: u64,
 }
 
 /// Factory for a set of wired endpoints.
@@ -64,6 +69,7 @@ impl LocalCluster {
                 from_peer,
                 window: 0,
                 bytes_sent: 0,
+                bytes_received: 0,
             })
             .collect()
     }
@@ -78,20 +84,32 @@ impl Communicator for LocalComm {
         self.size
     }
 
-    fn exchange(
+    fn exchange_outbound(
         &mut self,
-        local: SpikePacket,
+        out: Outbound,
     ) -> Result<SpikePacket, CommError> {
         let window = self.window;
         self.window += 1;
-        // broadcast to all peers
+        // send each peer its packet: the shared broadcast packet is
+        // cloned per peer, routed packets are moved out of their slots
+        let (bcast, mut per) = match out {
+            Outbound::Broadcast(p) => (Some(p), Vec::new()),
+            Outbound::Routed(per) => {
+                assert_eq!(per.len(), self.size, "one packet per rank");
+                (None, per)
+            }
+        };
         for dst in 0..self.size {
             if let Some(tx) = &self.to_peer[dst] {
+                let spikes = match &bcast {
+                    Some(p) => p.clone(),
+                    None => std::mem::take(&mut per[dst]),
+                };
                 self.bytes_sent +=
-                    local.len() as u64 * SPIKE_WIRE_BYTES;
+                    spikes.len() as u64 * SPIKE_WIRE_BYTES;
                 // peer hung up (e.g. errored out): ignore here, the
                 // receive below reports the lost peer
-                let _ = tx.send(Packet { window, spikes: local.clone() });
+                let _ = tx.send(Packet::Spikes { window, spikes });
             }
         }
         // gather from all peers
@@ -99,14 +117,21 @@ impl Communicator for LocalComm {
         for src in 0..self.size {
             if let Some(rx) = &self.from_peer[src] {
                 match rx.recv() {
-                    Ok(p) => {
-                        if p.window != window {
+                    Ok(Packet::Spikes { window: w, spikes }) => {
+                        if w != window {
                             return Err(CommError::WindowMismatch {
-                                got: p.window,
+                                got: w,
                                 want: window,
                             });
                         }
-                        all.extend(p.spikes);
+                        self.bytes_received +=
+                            spikes.len() as u64 * SPIKE_WIRE_BYTES;
+                        all.extend(spikes);
+                    }
+                    Ok(Packet::Blob(_)) => {
+                        return Err(CommError::Protocol(
+                            "subscription blob during a spike window",
+                        ))
                     }
                     Err(_) => {
                         return Err(CommError::PeerLost {
@@ -120,8 +145,46 @@ impl Communicator for LocalComm {
         Ok(all)
     }
 
+    fn alltoall(
+        &mut self,
+        out: Vec<Vec<u8>>,
+    ) -> Result<Vec<Vec<u8>>, CommError> {
+        assert_eq!(out.len(), self.size, "one blob per rank");
+        let mut blobs = out;
+        for (dst, blob) in blobs.iter_mut().enumerate() {
+            if let Some(tx) = &self.to_peer[dst] {
+                let _ = tx.send(Packet::Blob(std::mem::take(blob)));
+            }
+        }
+        let mut got = vec![Vec::new(); self.size];
+        for src in 0..self.size {
+            if let Some(rx) = &self.from_peer[src] {
+                match rx.recv() {
+                    Ok(Packet::Blob(b)) => got[src] = b,
+                    Ok(Packet::Spikes { .. }) => {
+                        return Err(CommError::Protocol(
+                            "spike packet during the subscription \
+                             collective",
+                        ))
+                    }
+                    Err(_) => {
+                        return Err(CommError::PeerLost {
+                            peer: src as u16,
+                            window: self.window,
+                        })
+                    }
+                }
+            }
+        }
+        Ok(got)
+    }
+
     fn bytes_sent(&self) -> u64 {
         self.bytes_sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.bytes_received
     }
 
     fn exchanges(&self) -> u64 {
@@ -195,13 +258,82 @@ mod tests {
                 thread::spawn(move || {
                     let spikes = vec![SpikeMsg { gid: 0, step: 0 }; 5];
                     c.exchange(spikes).unwrap();
-                    c.bytes_sent()
+                    (c.bytes_sent(), c.bytes_received())
                 })
             })
             .collect();
         for h in handles {
-            // 5 spikes × 8 bytes × 1 peer
-            assert_eq!(h.join().unwrap(), 40);
+            // 5 spikes × 8 bytes × 1 peer, both directions
+            assert_eq!(h.join().unwrap(), (40, 40));
+        }
+    }
+
+    #[test]
+    fn routed_exchange_delivers_only_the_targeted_packets() {
+        let comms = LocalCluster::new(3);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    let r = c.rank() as u32;
+                    // rank r sends gid 100*r+dst to each dst
+                    let per: Vec<SpikePacket> = (0..3)
+                        .map(|dst| {
+                            vec![SpikeMsg {
+                                gid: 100 * r + dst,
+                                step: 0,
+                            }]
+                        })
+                        .collect();
+                    let got = c
+                        .exchange_outbound(Outbound::Routed(per))
+                        .unwrap();
+                    (r, got, c.bytes_sent(), c.bytes_received())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (r, got, sent, received) = h.join().unwrap();
+            // source-rank order, exactly the packets addressed to r
+            let want: Vec<SpikeMsg> = (0..3)
+                .filter(|&src| src != r)
+                .map(|src| SpikeMsg { gid: 100 * src + r, step: 0 })
+                .collect();
+            assert_eq!(got, want, "rank {r}");
+            // 1 spike × 8 bytes × 2 peers, both directions
+            assert_eq!((sent, received), (16, 16), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn alltoall_ships_each_blob_to_its_addressee() {
+        let comms = LocalCluster::new(3);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    let r = c.rank();
+                    let out: Vec<Vec<u8>> =
+                        (0..3).map(|d| vec![r as u8, d as u8]).collect();
+                    let got = c.alltoall(out).unwrap();
+                    // a window exchange still works afterwards (the
+                    // collective must not disturb the window counter)
+                    let spikes = c.exchange(Vec::new()).unwrap();
+                    assert!(spikes.is_empty());
+                    assert_eq!(c.exchanges(), 1);
+                    (r, got)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (r, got) = h.join().unwrap();
+            for src in 0..3u8 {
+                if src == r as u8 {
+                    assert!(got[src as usize].is_empty());
+                } else {
+                    assert_eq!(got[src as usize], vec![src, r as u8]);
+                }
+            }
         }
     }
 

@@ -37,6 +37,102 @@ pub struct SpikeMsg {
 /// Payload of one window exchange.
 pub type SpikePacket = Vec<SpikeMsg>;
 
+/// What one rank contributes to a window exchange.
+///
+/// `Broadcast` is the paper's baseline allgather: the same packet goes
+/// to every peer, and each receiver drops the gids its sub-graph does
+/// not consume. `Routed` is the interest-routed form: one packet per
+/// destination rank (own slot ignored), pre-filtered to that peer's
+/// subscription so unconsumed spikes never touch the wire. Both forms
+/// deliver bit-identical spike streams — routing only removes traffic
+/// the receiver would have discarded.
+#[derive(Clone, Debug)]
+pub enum Outbound {
+    Broadcast(SpikePacket),
+    Routed(Vec<SpikePacket>),
+}
+
+impl Outbound {
+    /// The packet destined for peer `d` (shared packet if broadcast).
+    pub fn packet_for(&self, d: usize) -> &[SpikeMsg] {
+        match self {
+            Outbound::Broadcast(p) => p,
+            Outbound::Routed(per) => &per[d],
+        }
+    }
+}
+
+/// Send-side interest router: which destination ranks subscribe to
+/// which of this rank's source gids.
+///
+/// Built from the per-destination subscription lists shipped in the
+/// build-time collective ([`Communicator::alltoall`]). Destinations are
+/// kept as a multi-word bitmask per gid, so routing a packet is one
+/// binary search per spike plus a bit scan — independent of rank count
+/// for sparse interest.
+#[derive(Clone, Debug)]
+pub struct RoutingTable {
+    size: usize,
+    words: usize,
+    /// Sorted union of every gid at least one destination subscribes to.
+    gids: Vec<Gid>,
+    /// `gids.len() * words` mask words; bit `d` ⇒ rank `d` wants the gid.
+    masks: Vec<u64>,
+}
+
+impl RoutingTable {
+    /// `wanted[d]` is the sorted gid list destination `d` subscribed to
+    /// (own rank's slot empty). Lists need not be disjoint.
+    pub fn new(wanted: &[Vec<Gid>]) -> RoutingTable {
+        let size = wanted.len();
+        let words = size.div_ceil(64).max(1);
+        let mut gids: Vec<Gid> =
+            wanted.iter().flatten().copied().collect();
+        gids.sort_unstable();
+        gids.dedup();
+        let mut masks = vec![0u64; gids.len() * words];
+        for (d, list) in wanted.iter().enumerate() {
+            for g in list {
+                let i = gids.binary_search(g).expect("gid in union");
+                masks[i * words + d / 64] |= 1u64 << (d % 64);
+            }
+        }
+        RoutingTable { size, words, gids, masks }
+    }
+
+    /// Number of ranks the table routes to.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Gids at least one destination subscribes to.
+    pub fn n_subscribed(&self) -> usize {
+        self.gids.len()
+    }
+
+    /// Split an outbox into per-destination packets, preserving the
+    /// outbox order within each packet (the receive-side delivery order
+    /// is therefore identical to broadcast-then-drop). Spikes no
+    /// destination wants are dropped here instead of at every receiver.
+    pub fn route(&self, outbox: &[SpikeMsg]) -> Vec<SpikePacket> {
+        let mut per: Vec<SpikePacket> = vec![Vec::new(); self.size];
+        for &m in outbox {
+            let Ok(i) = self.gids.binary_search(&m.gid) else {
+                continue;
+            };
+            for w in 0..self.words {
+                let mut bits = self.masks[i * self.words + w];
+                while bits != 0 {
+                    let d = w * 64 + bits.trailing_zeros() as usize;
+                    per[d].push(m);
+                    bits &= bits - 1;
+                }
+            }
+        }
+        per
+    }
+}
+
 /// A failed window exchange. Recoverable at the session layer (the
 /// rank loop surfaces it as an error response instead of poisoning the
 /// process) — malformed or misaligned wire traffic must never panic.
@@ -53,6 +149,10 @@ pub enum CommError {
     PeerLost { peer: u16, window: u64 },
     /// A length-prefixed frame announces a size beyond the sanity bound.
     FrameTooLarge { bytes: usize, limit: usize },
+    /// The peer sent a well-formed frame of the wrong kind for the
+    /// protocol position (e.g. a subscription blob where a spike frame
+    /// was due).
+    Protocol(&'static str),
     /// The dedicated communication thread is gone (overlap mode).
     Shutdown,
     /// Transport-level I/O failure.
@@ -75,6 +175,9 @@ impl fmt::Display for CommError {
                 f,
                 "frame of {bytes} bytes exceeds the {limit}-byte bound"
             ),
+            CommError::Protocol(what) => {
+                write!(f, "protocol violation: {what}")
+            }
             CommError::Shutdown => {
                 write!(f, "communication thread terminated")
             }
@@ -112,19 +215,45 @@ pub trait Communicator: Send {
     fn rank(&self) -> u16;
     fn size(&self) -> usize;
 
-    /// Allgather-style spike broadcast: contribute this rank's spikes for
-    /// the current window, receive every other rank's. Blocking; one call
-    /// per rank per window, in window order. Window misalignment, peer
-    /// loss and malformed wire input surface as [`CommError`]s — an
-    /// endpoint that has returned an error must not be reused.
+    /// One window exchange: contribute this rank's outbound spikes
+    /// (broadcast or per-destination routed), receive every peer's
+    /// contribution for this rank, concatenated in source-rank order.
+    /// Blocking; one call per rank per window, in window order, and
+    /// every rank of a window must agree on the [`Outbound`] variant.
+    /// Window misalignment, peer loss and malformed wire input surface
+    /// as [`CommError`]s — an endpoint that has returned an error must
+    /// not be reused.
+    fn exchange_outbound(
+        &mut self,
+        out: Outbound,
+    ) -> Result<SpikePacket, CommError>;
+
+    /// Allgather-style spike broadcast — the baseline ablation path:
+    /// every peer gets the full packet.
     fn exchange(
         &mut self,
         local: SpikePacket,
-    ) -> Result<SpikePacket, CommError>;
+    ) -> Result<SpikePacket, CommError> {
+        self.exchange_outbound(Outbound::Broadcast(local))
+    }
 
-    /// Total payload bytes this rank has sent so far (for the network
-    /// cost model).
+    /// One-shot build-time collective: deliver `out[d]` to rank `d`
+    /// (own slot ignored) and return the blob each rank addressed to
+    /// this one, indexed by source rank (own slot empty). Used to ship
+    /// the interest subscription sets before the first window; does not
+    /// advance the window counter and is not counted in the per-window
+    /// byte volumes.
+    fn alltoall(
+        &mut self,
+        out: Vec<Vec<u8>>,
+    ) -> Result<Vec<Vec<u8>>, CommError>;
+
+    /// Total spike payload bytes this rank has sent so far (for the
+    /// network cost model).
     fn bytes_sent(&self) -> u64;
+
+    /// Total spike payload bytes this rank has received so far.
+    fn bytes_received(&self) -> u64;
 
     /// Number of exchanges performed.
     fn exchanges(&self) -> u64;
@@ -157,14 +286,23 @@ impl Communicator for SoloComm {
     fn size(&self) -> usize {
         1
     }
-    fn exchange(
+    fn exchange_outbound(
         &mut self,
-        _local: SpikePacket,
+        _out: Outbound,
     ) -> Result<SpikePacket, CommError> {
         self.count += 1;
         Ok(Vec::new())
     }
+    fn alltoall(
+        &mut self,
+        out: Vec<Vec<u8>>,
+    ) -> Result<Vec<Vec<u8>>, CommError> {
+        Ok(vec![Vec::new(); out.len().max(1)])
+    }
     fn bytes_sent(&self) -> u64 {
+        0
+    }
+    fn bytes_received(&self) -> u64 {
         0
     }
     fn exchanges(&self) -> u64 {
@@ -183,5 +321,75 @@ mod tests {
         let got = c.exchange(vec![SpikeMsg { gid: 1, step: 2 }]).unwrap();
         assert!(got.is_empty());
         assert_eq!(c.exchanges(), 1);
+        assert_eq!(c.bytes_received(), 0);
+    }
+
+    fn msg(gid: Gid, step: u32) -> SpikeMsg {
+        SpikeMsg { gid, step }
+    }
+
+    #[test]
+    fn routing_table_splits_by_subscription_preserving_order() {
+        // rank 1's view of a 3-rank cluster: rank 0 wants {3, 5},
+        // rank 2 wants {5, 9}; nobody wants 7
+        let rt = RoutingTable::new(&[
+            vec![3, 5],
+            vec![],
+            vec![5, 9],
+        ]);
+        assert_eq!(rt.size(), 3);
+        assert_eq!(rt.n_subscribed(), 3);
+        let out =
+            vec![msg(5, 10), msg(7, 10), msg(3, 11), msg(5, 12)];
+        let per = rt.route(&out);
+        assert_eq!(per[0], vec![msg(5, 10), msg(3, 11), msg(5, 12)]);
+        assert!(per[1].is_empty());
+        assert_eq!(per[2], vec![msg(5, 10), msg(5, 12)]);
+    }
+
+    #[test]
+    fn routing_table_equals_broadcast_then_drop() {
+        // property: for random interest sets, routing to d then
+        // concatenating equals broadcasting and dropping non-subscribed
+        // gids at d — the bit-identity argument in miniature
+        crate::util::proptest_lite::property(
+            "route == filter",
+            200,
+            |g| {
+                let ranks = g.usize(1..70); // spans the 64-bit word edge
+                let wanted: Vec<Vec<Gid>> = (0..ranks)
+                    .map(|_| {
+                        let n = g.usize(0..20);
+                        let mut v: Vec<Gid> =
+                            (0..n).map(|_| g.u32(0..50)).collect();
+                        v.sort_unstable();
+                        v.dedup();
+                        v
+                    })
+                    .collect();
+                let rt = RoutingTable::new(&wanted);
+                let outbox: Vec<SpikeMsg> = (0..g.usize(0..60))
+                    .map(|_| msg(g.u32(0..50), g.u32(0..5)))
+                    .collect();
+                let per = rt.route(&outbox);
+                for (d, want_list) in wanted.iter().enumerate() {
+                    let want: Vec<SpikeMsg> = outbox
+                        .iter()
+                        .copied()
+                        .filter(|m| {
+                            want_list.binary_search(&m.gid).is_ok()
+                        })
+                        .collect();
+                    if per[d] != want {
+                        return Err(format!(
+                            "dest {d}: {} routed, {} expected",
+                            per[d].len(),
+                            want.len()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -51,6 +51,49 @@ impl TofuModel {
         bytes / (self.link_bw_gbs * 1e9)
     }
 
+    /// Estimated time (seconds) of one interest-routed exchange where
+    /// this rank sends `sent_bytes` total (across its targeted peer
+    /// frames) and receives `recv_bytes`. Routed exchange is pairwise,
+    /// not staged: one latency to every peer it actually talks to
+    /// (bounded by the allgather's log2(R) stages, since sends launch
+    /// concurrently), and the larger of the injection-in/out volumes
+    /// through the node port. With every peer subscribed to everything
+    /// this degenerates to [`Self::allgather_seconds`]'s bandwidth
+    /// term.
+    pub fn routed_exchange_seconds(
+        &self,
+        ranks: usize,
+        sent_bytes: f64,
+        recv_bytes: f64,
+    ) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        let stages = (ranks as f64).log2().ceil();
+        let eff_bw =
+            self.injection_bw_gbs * 1e9 / self.ranks_per_node;
+        stages * self.latency_us * 1e-6
+            + sent_bytes.max(recv_bytes) / eff_bw
+    }
+
+    /// Project a full routed simulation's communication time:
+    /// `windows` exchanges at the run's **average** per-window sent /
+    /// received volumes of its busiest rank.
+    pub fn total_routed_seconds(
+        &self,
+        ranks: usize,
+        windows: u64,
+        avg_sent_bytes: f64,
+        avg_recv_bytes: f64,
+    ) -> f64 {
+        windows as f64
+            * self.routed_exchange_seconds(
+                ranks,
+                avg_sent_bytes,
+                avg_recv_bytes,
+            )
+    }
+
     /// Project a full simulation's communication time: `windows` exchanges
     /// of `avg_bytes_per_rank` each.
     pub fn total_comm_seconds(
@@ -97,6 +140,25 @@ mod tests {
         );
         assert!(
             m.allgather_seconds(16, 1e4) < m.allgather_seconds(16, 1e6)
+        );
+    }
+
+    #[test]
+    fn routed_never_beats_latency_and_tracks_volume() {
+        let m = TofuModel::default();
+        assert_eq!(m.routed_exchange_seconds(1, 1e6, 1e6), 0.0);
+        // same volume as a broadcast → same bandwidth cost shape
+        let bcast = m.allgather_seconds(64, 1e6);
+        let routed_full =
+            m.routed_exchange_seconds(64, 63e6, 63e6);
+        assert!((routed_full - bcast).abs() < 1e-9, "{routed_full}");
+        // a 10% subscription share cuts the bandwidth term 10×
+        let routed = m.routed_exchange_seconds(64, 6.3e6, 6.3e6);
+        assert!(routed < bcast, "{routed} !< {bcast}");
+        // but the per-exchange latency floor stays
+        let floor = 6.0 * 1e-6;
+        assert!(
+            m.routed_exchange_seconds(64, 1.0, 1.0) >= floor
         );
     }
 

@@ -28,11 +28,19 @@
 //! panic — and the endpoint is considered poisoned afterwards.
 //!
 //! Streams run with `TCP_NODELAY` (one small latency-critical frame per
-//! window per peer, the paper's §III.C traffic shape). Frames are
-//! written to every peer before any is read; per-window spike payloads
-//! are orders of magnitude below kernel socket buffers, so the
-//! all-write-then-all-read pattern cannot deadlock at the scales the
-//! in-memory engine reaches on one host.
+//! window per peer, the paper's §III.C traffic shape). The exchange
+//! itself is a **nonblocking, interleaved** per-peer loop: every stream
+//! is switched to nonblocking mode and the rank round-robins partial
+//! writes and partial reads across all peers until each send and each
+//! receive completes. No peer's frame is waited on before another's, so
+//! a slow peer cannot head-of-line-block the window, and a mesh of
+//! mutually-writing ranks makes progress regardless of frame size —
+//! the old write-all-then-read-all pattern (and its helper-thread
+//! workaround for frames beyond the kernel socket buffers) is gone.
+//! The same loop carries the build-time subscription collective
+//! ([`Communicator::alltoall`]), whose frames are raw
+//! [`bsb::encode_gid_list`] blobs at a fixed protocol position before
+//! the first window.
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -40,7 +48,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use super::{bsb, CommError, Communicator, SpikePacket};
+use super::{bsb, CommError, Communicator, Outbound, SpikePacket};
 
 /// Handshake magic: "CORTEXTC" as LE bytes.
 const HANDSHAKE_MAGIC: u64 = 0x4354_5845_5452_4f43;
@@ -57,14 +65,14 @@ pub const MAX_FRAME_BYTES: usize = 64 << 20;
 /// Poll interval while dialing a peer that is not listening yet.
 const RETRY_EVERY: Duration = Duration::from_millis(50);
 
-/// Frames up to this size are written to all peers inline before any
-/// read — they fit comfortably inside default kernel socket buffers, so
-/// the write side can never block on a peer that is itself still
-/// writing. Larger frames (hundreds of thousands of packed spikes in
-/// one window) are pushed from a helper thread instead, with this
-/// thread draining reads concurrently, so a mesh of mutually-writing
-/// ranks degrades to an error or completes rather than deadlocking.
-const INLINE_WRITE_BYTES: usize = 1 << 18;
+/// Nonblocking exchange loop: after this many consecutive pass
+/// iterations without a single byte of progress, back off from
+/// `yield_now` to a short sleep so a genuinely slow peer does not cost
+/// a spinning core.
+const IDLE_SPINS_BEFORE_SLEEP: u32 = 256;
+
+/// Back-off sleep once a peer has been idle past the spin budget.
+const IDLE_SLEEP: Duration = Duration::from_micros(50);
 
 /// One rank's endpoint of a TCP cluster.
 pub struct TcpComm {
@@ -74,6 +82,17 @@ pub struct TcpComm {
     streams: Vec<Option<TcpStream>>,
     window: u64,
     bytes_sent: u64,
+    bytes_received: u64,
+}
+
+/// Receive progress of one peer's frame inside the interleaved loop.
+enum RecvState {
+    /// Accumulating the 4-byte length prefix.
+    Header { buf: [u8; 4], pos: usize },
+    /// Accumulating the payload.
+    Body { buf: Vec<u8>, pos: usize },
+    /// Frame complete.
+    Done(Vec<u8>),
 }
 
 impl TcpComm {
@@ -205,55 +224,218 @@ impl TcpComm {
                 }
             }
         }
-        Ok(TcpComm { rank, size, streams, window: 0, bytes_sent: 0 })
+        Ok(TcpComm {
+            rank,
+            size,
+            streams,
+            window: 0,
+            bytes_sent: 0,
+            bytes_received: 0,
+        })
     }
 
-    /// Receive-from-all: read exactly one length-prefixed frame from
-    /// every peer, verify its embedded window counter, and concatenate
-    /// the payloads in rank order (the exact order
-    /// [`super::local::LocalComm`]'s channel gather produces).
-    fn gather(
+    /// The interleaved collective under both the window exchange and
+    /// the subscription alltoall: send `frames[p]` to every peer `p`
+    /// (self slot ignored) while reading exactly one length-prefixed
+    /// frame back from each, returning the received payloads indexed
+    /// by source rank (self slot empty).
+    ///
+    /// Every stream runs nonblocking; each pass round-robins partial
+    /// writes and reads over all peers, so progress on one peer never
+    /// waits on another and frames larger than the socket buffers
+    /// cannot deadlock the mutually-writing mesh. `window` only labels
+    /// peer-loss errors.
+    fn exchange_frames(
         &mut self,
+        frames: Vec<Vec<u8>>,
         window: u64,
-    ) -> Result<SpikePacket, CommError> {
-        let mut all = Vec::new();
-        for src in 0..self.size {
-            let Some(stream) = self.streams[src].as_mut() else {
-                continue;
-            };
-            let mut len = [0u8; 4];
-            stream.read_exact(&mut len).map_err(|e| {
-                if e.kind() == ErrorKind::UnexpectedEof {
-                    CommError::PeerLost { peer: src as u16, window }
-                } else {
-                    CommError::Io(e)
-                }
-            })?;
-            let len = u32::from_le_bytes(len) as usize;
-            if len > MAX_FRAME_BYTES {
-                return Err(CommError::FrameTooLarge {
-                    bytes: len,
-                    limit: MAX_FRAME_BYTES,
-                });
-            }
-            let mut buf = vec![0u8; len];
-            stream.read_exact(&mut buf).map_err(|e| {
-                if e.kind() == ErrorKind::UnexpectedEof {
-                    CommError::PeerLost { peer: src as u16, window }
-                } else {
-                    CommError::Io(e)
-                }
-            })?;
-            let (got_window, spikes) = bsb::decode_frame(&buf)?;
-            if got_window != window {
-                return Err(CommError::WindowMismatch {
-                    got: got_window,
-                    want: window,
-                });
-            }
-            all.extend(spikes);
+    ) -> Result<Vec<Vec<u8>>, CommError> {
+        assert_eq!(frames.len(), self.size, "one frame per rank");
+        for s in self.streams.iter().flatten() {
+            s.set_nonblocking(true)?;
         }
-        Ok(all)
+        let result = self.exchange_frames_nonblocking(frames, window);
+        // restore blocking mode even on failure: teardown paths may
+        // still flush, and a poisoned endpoint should fail loudly on
+        // I/O rather than spin on WouldBlock
+        for s in self.streams.iter().flatten() {
+            let _ = s.set_nonblocking(false);
+        }
+        result
+    }
+
+    fn exchange_frames_nonblocking(
+        &mut self,
+        frames: Vec<Vec<u8>>,
+        window: u64,
+    ) -> Result<Vec<Vec<u8>>, CommError> {
+        // per-peer send buffer (length prefix + payload) and cursor
+        let mut send: Vec<Option<(Vec<u8>, usize)>> =
+            vec![None; self.size];
+        let mut recv: Vec<Option<RecvState>> =
+            (0..self.size).map(|_| None).collect();
+        for (p, frame) in frames.into_iter().enumerate() {
+            if self.streams[p].is_none() {
+                continue;
+            }
+            let mut buf =
+                Vec::with_capacity(4 + frame.len());
+            buf.extend_from_slice(
+                &(frame.len() as u32).to_le_bytes(),
+            );
+            buf.extend_from_slice(&frame);
+            send[p] = Some((buf, 0));
+            recv[p] =
+                Some(RecvState::Header { buf: [0; 4], pos: 0 });
+        }
+        let mut idle_spins = 0u32;
+        loop {
+            let mut progressed = false;
+            let mut pending = false;
+            for p in 0..self.size {
+                let Some(stream) = self.streams[p].as_mut() else {
+                    continue;
+                };
+                // push this peer's remaining send bytes
+                if let Some((buf, pos)) = send[p].as_mut() {
+                    match stream.write(&buf[*pos..]) {
+                        Ok(0) => {
+                            return Err(CommError::Io(
+                                std::io::Error::from(
+                                    ErrorKind::WriteZero,
+                                ),
+                            ))
+                        }
+                        Ok(n) => {
+                            *pos += n;
+                            progressed = true;
+                            if *pos == buf.len() {
+                                send[p] = None;
+                            }
+                        }
+                        Err(e)
+                            if e.kind() == ErrorKind::WouldBlock
+                                || e.kind()
+                                    == ErrorKind::Interrupted => {}
+                        Err(e) => return Err(CommError::Io(e)),
+                    }
+                    if send[p].is_some() {
+                        pending = true;
+                    }
+                }
+                // pull this peer's frame: header, then body, each
+                // stage reading as much as the socket will give
+                'recv: loop {
+                    match recv[p].as_mut() {
+                        None | Some(RecvState::Done(_)) => {
+                            break 'recv
+                        }
+                        Some(RecvState::Header { buf, pos }) => {
+                            while *pos < buf.len() {
+                                match stream.read(&mut buf[*pos..]) {
+                                    Ok(0) => {
+                                        return Err(
+                                            CommError::PeerLost {
+                                                peer: p as u16,
+                                                window,
+                                            },
+                                        )
+                                    }
+                                    Ok(n) => {
+                                        *pos += n;
+                                        progressed = true;
+                                    }
+                                    Err(e)
+                                        if e.kind()
+                                            == ErrorKind::WouldBlock
+                                            || e.kind()
+                                                == ErrorKind::Interrupted =>
+                                    {
+                                        break 'recv
+                                    }
+                                    Err(e) => {
+                                        return Err(CommError::Io(e))
+                                    }
+                                }
+                            }
+                            let len =
+                                u32::from_le_bytes(*buf) as usize;
+                            if len > MAX_FRAME_BYTES {
+                                return Err(
+                                    CommError::FrameTooLarge {
+                                        bytes: len,
+                                        limit: MAX_FRAME_BYTES,
+                                    },
+                                );
+                            }
+                            recv[p] = Some(RecvState::Body {
+                                buf: vec![0u8; len],
+                                pos: 0,
+                            });
+                        }
+                        Some(RecvState::Body { buf, pos }) => {
+                            while *pos < buf.len() {
+                                match stream.read(&mut buf[*pos..]) {
+                                    Ok(0) => {
+                                        return Err(
+                                            CommError::PeerLost {
+                                                peer: p as u16,
+                                                window,
+                                            },
+                                        )
+                                    }
+                                    Ok(n) => {
+                                        *pos += n;
+                                        progressed = true;
+                                    }
+                                    Err(e)
+                                        if e.kind()
+                                            == ErrorKind::WouldBlock
+                                            || e.kind()
+                                                == ErrorKind::Interrupted =>
+                                    {
+                                        break 'recv
+                                    }
+                                    Err(e) => {
+                                        return Err(CommError::Io(e))
+                                    }
+                                }
+                            }
+                            let done = std::mem::take(buf);
+                            recv[p] = Some(RecvState::Done(done));
+                            break 'recv;
+                        }
+                    }
+                }
+                if !matches!(
+                    recv[p],
+                    None | Some(RecvState::Done(_))
+                ) {
+                    pending = true;
+                }
+            }
+            if !pending {
+                break;
+            }
+            if progressed {
+                idle_spins = 0;
+            } else {
+                idle_spins += 1;
+                if idle_spins < IDLE_SPINS_BEFORE_SLEEP {
+                    std::thread::yield_now();
+                } else {
+                    std::thread::sleep(IDLE_SLEEP);
+                }
+            }
+        }
+        Ok(recv
+            .into_iter()
+            .map(|r| match r {
+                Some(RecvState::Done(buf)) => buf,
+                None => Vec::new(),
+                _ => unreachable!("loop exited with pending recv"),
+            })
+            .collect())
     }
 }
 
@@ -334,61 +516,89 @@ impl Communicator for TcpComm {
         self.size
     }
 
-    fn exchange(
+    fn exchange_outbound(
         &mut self,
-        local: SpikePacket,
+        out: Outbound,
     ) -> Result<SpikePacket, CommError> {
         let window = self.window;
         self.window += 1;
-        let frame = bsb::encode_frame(window, &local)?;
-        if frame.len() > MAX_FRAME_BYTES {
-            return Err(CommError::FrameTooLarge {
-                bytes: frame.len(),
-                limit: MAX_FRAME_BYTES,
-            });
-        }
-        let len = (frame.len() as u32).to_le_bytes();
-        if frame.len() <= INLINE_WRITE_BYTES {
-            // the steady state: send-to-all, then receive-from-all
-            for dst in 0..self.size {
-                if let Some(stream) = self.streams[dst].as_mut() {
-                    stream.write_all(&len)?;
-                    stream.write_all(&frame)?;
-                    self.bytes_sent += (4 + frame.len()) as u64;
+        // encode one frame per peer (broadcast reuses the same bytes)
+        let mut frames: Vec<Vec<u8>> = vec![Vec::new(); self.size];
+        match &out {
+            Outbound::Broadcast(local) => {
+                let frame = bsb::encode_frame(window, local)?;
+                for p in 0..self.size {
+                    if self.streams[p].is_some() {
+                        frames[p] = frame.clone();
+                    }
                 }
             }
-            return self.gather(window);
-        }
-        // a frame this large could fill both directions' socket buffers
-        // while every rank is still in its write loop; write on dup'd
-        // handles from a helper thread so reads drain concurrently
-        let mut writers: Vec<TcpStream> = Vec::new();
-        for s in self.streams.iter().flatten() {
-            writers.push(s.try_clone()?);
-        }
-        self.bytes_sent +=
-            writers.len() as u64 * (4 + frame.len()) as u64;
-        let frame = &frame;
-        let len = &len;
-        std::thread::scope(|scope| {
-            let writer =
-                scope.spawn(move || -> Result<(), CommError> {
-                    let mut writers = writers;
-                    for s in writers.iter_mut() {
-                        s.write_all(len)?;
-                        s.write_all(frame)?;
+            Outbound::Routed(per) => {
+                assert_eq!(per.len(), self.size, "one packet per rank");
+                for p in 0..self.size {
+                    if self.streams[p].is_some() {
+                        frames[p] =
+                            bsb::encode_frame(window, &per[p])?;
                     }
-                    Ok(())
+                }
+            }
+        }
+        for (p, f) in frames.iter().enumerate() {
+            if f.len() > MAX_FRAME_BYTES {
+                return Err(CommError::FrameTooLarge {
+                    bytes: f.len(),
+                    limit: MAX_FRAME_BYTES,
                 });
-            let got = self.gather(window);
-            let wrote =
-                writer.join().expect("writer thread panicked");
-            wrote.and(got)
-        })
+            }
+            if self.streams[p].is_some() {
+                self.bytes_sent += (4 + f.len()) as u64;
+            }
+        }
+        let payloads = self.exchange_frames(frames, window)?;
+        // decode in rank order — the concatenation order LocalComm's
+        // channel gather produces, so rasters stay transport-invariant
+        let mut all = Vec::new();
+        for (src, buf) in payloads.into_iter().enumerate() {
+            if self.streams[src].is_none() {
+                continue;
+            }
+            self.bytes_received += (4 + buf.len()) as u64;
+            let (got_window, spikes) = bsb::decode_frame(&buf)?;
+            if got_window != window {
+                return Err(CommError::WindowMismatch {
+                    got: got_window,
+                    want: window,
+                });
+            }
+            all.extend(spikes);
+        }
+        Ok(all)
+    }
+
+    fn alltoall(
+        &mut self,
+        out: Vec<Vec<u8>>,
+    ) -> Result<Vec<Vec<u8>>, CommError> {
+        assert_eq!(out.len(), self.size, "one blob per rank");
+        for blob in &out {
+            if blob.len() > MAX_FRAME_BYTES {
+                return Err(CommError::FrameTooLarge {
+                    bytes: blob.len(),
+                    limit: MAX_FRAME_BYTES,
+                });
+            }
+        }
+        // build-time traffic: deliberately not counted in the
+        // per-window bytes_sent/bytes_received volumes
+        self.exchange_frames(out, self.window)
     }
 
     fn bytes_sent(&self) -> u64 {
         self.bytes_sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.bytes_received
     }
 
     fn exchanges(&self) -> u64 {
@@ -500,6 +710,7 @@ mod tests {
             streams: vec![None, Some(srv)],
             window: 0,
             bytes_sent: 0,
+            bytes_received: 0,
         };
         // 16 bytes of 0xff: the embedded window varint overflows
         let garbage = [0xffu8; 16];
@@ -522,6 +733,7 @@ mod tests {
             streams: vec![None, Some(srv)],
             window: 0,
             bytes_sent: 0,
+            bytes_received: 0,
         };
         // announce 100 bytes, deliver 3, hang up mid-frame
         peer.write_all(&100u32.to_le_bytes()).unwrap();
@@ -547,6 +759,7 @@ mod tests {
             streams: vec![None, Some(srv)],
             window: 0,
             bytes_sent: 0,
+            bytes_received: 0,
         };
         peer.write_all(&u32::MAX.to_le_bytes()).unwrap();
         let err = comm.exchange(Vec::new()).unwrap_err();
@@ -578,6 +791,124 @@ mod tests {
         let _ = fake.join().unwrap();
         let msg = format!("{err:#}");
         assert!(msg.contains("timed out"), "unexpected error: {msg}");
+    }
+
+    #[test]
+    fn routed_exchange_over_sockets() {
+        let comms = cluster(3);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    let r = c.rank() as u32;
+                    for w in 0..4u32 {
+                        let per: Vec<SpikePacket> = (0..3)
+                            .map(|dst| {
+                                vec![SpikeMsg {
+                                    gid: 100 * r + dst,
+                                    step: w,
+                                }]
+                            })
+                            .collect();
+                        let got = c
+                            .exchange_outbound(Outbound::Routed(per))
+                            .unwrap();
+                        let want: Vec<SpikeMsg> = (0..3)
+                            .filter(|&src| src != r)
+                            .map(|src| SpikeMsg {
+                                gid: 100 * src + r,
+                                step: w,
+                            })
+                            .collect();
+                        assert_eq!(got, want, "rank {r} window {w}");
+                    }
+                    assert!(c.bytes_received() > 0);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn alltoall_ships_blobs_over_sockets() {
+        let comms = cluster(3);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    let r = c.rank();
+                    let out: Vec<Vec<u8>> = (0..3)
+                        .map(|d| vec![r as u8, d as u8, 0xCC])
+                        .collect();
+                    let got = c.alltoall(out).unwrap();
+                    for src in 0..3u16 {
+                        if src == r {
+                            assert!(got[src as usize].is_empty());
+                        } else {
+                            assert_eq!(
+                                got[src as usize],
+                                vec![src as u8, r as u8, 0xCC]
+                            );
+                        }
+                    }
+                    // the collective is invisible to the window
+                    // counter and the spike byte accounting
+                    assert_eq!(c.exchanges(), 0);
+                    assert_eq!(c.bytes_sent(), 0);
+                    assert_eq!(c.bytes_received(), 0);
+                    let spikes = c.exchange(Vec::new()).unwrap();
+                    assert!(spikes.is_empty());
+                    assert_eq!(c.exchanges(), 1);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn large_frames_complete_without_deadlock() {
+        // frames far beyond the kernel socket buffers in both
+        // directions at once: the interleaved nonblocking loop must
+        // keep draining reads while its own writes stall. (The old
+        // write-all-then-read-all exchange needed a helper thread for
+        // this; the rewrite handles it in-line.)
+        let comms = cluster(2);
+        let n = 400_000u32;
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    let r = c.rank() as u32;
+                    // wide gid jumps defeat the delta coding, so the
+                    // frame stays in the multi-megabyte range
+                    let mine: Vec<SpikeMsg> = (0..n)
+                        .map(|i| SpikeMsg {
+                            gid: i.wrapping_mul(2_654_435_761) | r,
+                            step: 3,
+                        })
+                        .collect();
+                    let got = c.exchange(mine).unwrap();
+                    assert_eq!(got.len(), n as usize);
+                    assert!(
+                        c.bytes_sent() > (1 << 20),
+                        "sent frame unexpectedly small: {} bytes",
+                        c.bytes_sent()
+                    );
+                    assert!(
+                        c.bytes_received() > (1 << 20),
+                        "received frame unexpectedly small: {} bytes",
+                        c.bytes_received()
+                    );
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 
     #[test]

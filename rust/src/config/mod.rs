@@ -12,6 +12,6 @@ mod toml;
 pub use schema::{
     BuildMode, CommMode, CommTransport, CustomPop, DynamicsBackend,
     EngineKind, ExecMode, ExperimentConfig, IntegrateMode, MappingKind,
-    NetworkKind,
+    NetworkKind, RoutingMode,
 };
 pub use toml::{ConfigDoc, ConfigError, Value};

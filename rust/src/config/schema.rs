@@ -134,6 +134,19 @@ pub enum BuildMode {
     Serial,
 }
 
+/// Spike-exchange routing policy (`engine.routing`, see `comm`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingMode {
+    /// Interest-routed exchange: each rank sends every peer only the
+    /// spikes that peer's sub-graph subscribes to, using subscription
+    /// sets shipped rank-to-rank during build. Bit-identical to
+    /// broadcast — unsubscribed spikes are dropped receive-side anyway.
+    Routed,
+    /// Ablation fallback: the full allgather of every rank's packet to
+    /// every peer (measures what interest routing saves on the wire).
+    Broadcast,
+}
+
 /// Integrate-kernel formulation (`engine.integrate`, see `model`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum IntegrateMode {
@@ -192,6 +205,7 @@ pub struct ExperimentConfig {
     pub exec: ExecMode,
     pub build: BuildMode,
     pub integrate: IntegrateMode,
+    pub routing: RoutingMode,
     pub artifacts_dir: String,
     /// Inter-rank transport: in-process channels or TCP processes.
     pub transport: CommTransport,
@@ -235,6 +249,7 @@ impl Default for ExperimentConfig {
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
             integrate: IntegrateMode::Vector,
+            routing: RoutingMode::Routed,
             artifacts_dir: "artifacts".into(),
             transport: CommTransport::Local,
             tcp_rank: None,
@@ -341,6 +356,15 @@ impl ExperimentConfig {
                 &[
                     ("vector", IntegrateMode::Vector),
                     ("scalar", IntegrateMode::Scalar),
+                ],
+            )?,
+            routing: parse_enum(
+                doc,
+                "engine.routing",
+                "routed",
+                &[
+                    ("routed", RoutingMode::Routed),
+                    ("broadcast", RoutingMode::Broadcast),
                 ],
             )?,
             artifacts_dir: doc.str("engine.artifacts_dir", &d.artifacts_dir)?,
@@ -711,6 +735,20 @@ comm = "serialized"
         assert_eq!(cfg.integrate, IntegrateMode::Scalar);
         let doc =
             ConfigDoc::parse("[engine]\nintegrate = \"simd\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn routing_mode_parses_and_defaults_to_routed() {
+        let doc = ConfigDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.routing, RoutingMode::Routed);
+        let doc =
+            ConfigDoc::parse("[engine]\nrouting = \"broadcast\"").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.routing, RoutingMode::Broadcast);
+        let doc =
+            ConfigDoc::parse("[engine]\nrouting = \"multicast\"").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 

@@ -45,9 +45,12 @@
 //! engine runs the parallel passes on its persistent worker pool via
 //! the [`BuildRunner`] seam.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::Partition;
 use crate::atlas::NetworkSpec;
 use crate::graph::Edge;
 use crate::metrics::memory::{vec_bytes, MemoryBreakdown};
@@ -405,6 +408,43 @@ fn fill_pass(
     }
 }
 
+/// K-way merge of sorted-unique gid lists into their sorted-unique
+/// union, heap-based: each round pops every head equal to the current
+/// minimum off a min-heap of `(head gid, list)` pairs and advances it —
+/// O(total · log k), replacing the old linear scan over all `k` heads
+/// per emitted gid. A counting sweep (`emit = None`) returns the union
+/// size without writing, so the fill sweep can allocate exactly.
+fn merge_sorted_unique(
+    lists: &[&[Gid]],
+    mut emit: Option<&mut Vec<Gid>>,
+) -> usize {
+    let mut heads = vec![0usize; lists.len()];
+    let mut heap: BinaryHeap<Reverse<(Gid, usize)>> = lists
+        .iter()
+        .enumerate()
+        .filter_map(|(t, l)| l.first().map(|&g| Reverse((g, t))))
+        .collect();
+    let mut merged = 0usize;
+    while let Some(&Reverse((g, _))) = heap.peek() {
+        if let Some(out) = emit.as_mut() {
+            out.push(g);
+        }
+        merged += 1;
+        while let Some(&Reverse((h, t))) = heap.peek() {
+            if h != g {
+                break;
+            }
+            heap.pop();
+            heads[t] += 1;
+            if let Some(&next) = lists[t].get(heads[t]) {
+                debug_assert!(next > g, "list {t} not sorted-unique");
+                heap.push(Reverse((next, t)));
+            }
+        }
+    }
+    merged
+}
+
 /// The rank's full data instance.
 #[derive(Clone, Debug)]
 pub struct RankStore {
@@ -497,41 +537,17 @@ impl RankStore {
             posts_bytes + counts.iter().map(|c| c.peak_bytes).sum::<u64>();
 
         // ---- merge (serial) ------------------------------------------
-        // k-way merge of the sorted-unique per-thread source tables,
-        // run twice: a counting sweep sizes `pres` exactly (no growth,
-        // no shrink copy — the analytic peak stays honest), then the
-        // fill sweep writes it
+        // heap-based k-way merge of the sorted-unique per-thread source
+        // tables ([`merge_sorted_unique`]), run twice: a counting sweep
+        // sizes `pres` exactly (no growth, no shrink copy — the
+        // analytic peak stays honest), then the fill sweep writes it
         let t1 = Instant::now();
         let k = counts.len();
-        let merge_sweep = |mut emit: Option<&mut Vec<Gid>>| -> usize {
-            let mut heads = vec![0usize; k];
-            let mut merged = 0usize;
-            loop {
-                let mut min: Option<Gid> = None;
-                for t in 0..k {
-                    if let Some(&g) = counts[t].upres.get(heads[t]) {
-                        min = Some(match min {
-                            None => g,
-                            Some(m) => m.min(g),
-                        });
-                    }
-                }
-                let Some(g) = min else { break };
-                if let Some(out) = emit.as_mut() {
-                    out.push(g);
-                }
-                merged += 1;
-                for t in 0..k {
-                    if counts[t].upres.get(heads[t]) == Some(&g) {
-                        heads[t] += 1;
-                    }
-                }
-            }
-            merged
-        };
-        let n_pres = merge_sweep(None);
+        let upres_lists: Vec<&[Gid]> =
+            counts.iter().map(|c| c.upres.as_slice()).collect();
+        let n_pres = merge_sorted_unique(&upres_lists, None);
         let mut pres: Vec<Gid> = Vec::with_capacity(n_pres);
-        merge_sweep(Some(&mut pres));
+        merge_sorted_unique(&upres_lists, Some(&mut pres));
         let n_local_pres =
             pres.iter().filter(|&&g| is_local(g)).count();
         let max_delay = counts
@@ -876,6 +892,25 @@ impl RankStore {
     #[inline]
     pub fn thread_of(&self, local_post: u32) -> ThreadId {
         owner_of(local_post, self.n_posts(), self.thread_ranges.len())
+    }
+
+    /// Per-source-rank subscription sets: the sources this rank's
+    /// sub-graph consumes, bucketed by owning rank. `pres` is ascending,
+    /// so every bucket comes out strictly increasing — exactly the
+    /// precondition of the gid-list wire codec
+    /// ([`crate::comm::bsb::encode_gid_list`]). The own-rank slot stays
+    /// empty: local spikes never cross the wire. Shipped to the source
+    /// ranks by the build-time subscription collective, these sets are
+    /// what interest-routed exchange filters against.
+    pub fn subscriptions(&self, part: &Partition) -> Vec<Vec<Gid>> {
+        let mut subs = vec![Vec::new(); part.n_ranks];
+        for &g in &self.pres {
+            let src = part.rank_of[g as usize] as usize;
+            if src != self.rank as usize {
+                subs[src].push(g);
+            }
+        }
+        subs
     }
 
     /// Move the per-thread edge stores out (engine construction hands
@@ -1296,6 +1331,87 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn property_heap_merge_equals_linear_scan() {
+        // the heap merge must produce exactly what the old
+        // O(pres·threads) per-element min-scan produced, counting
+        // sweep included
+        fn linear_scan(lists: &[&[Gid]]) -> Vec<Gid> {
+            let mut heads = vec![0usize; lists.len()];
+            let mut out = Vec::new();
+            loop {
+                let min = lists
+                    .iter()
+                    .zip(&heads)
+                    .filter_map(|(l, &h)| l.get(h))
+                    .min()
+                    .copied();
+                let Some(g) = min else { break };
+                out.push(g);
+                for (l, h) in lists.iter().zip(&mut heads) {
+                    if l.get(*h) == Some(&g) {
+                        *h += 1;
+                    }
+                }
+            }
+            out
+        }
+        property("heap merge == linear scan", 40, |g| {
+            let k = g.usize(1..9);
+            let lists: Vec<Vec<Gid>> = (0..k)
+                .map(|_| {
+                    let len = g.usize(0..60);
+                    let mut l: Vec<Gid> =
+                        (0..len).map(|_| g.u32(0..120)).collect();
+                    l.sort_unstable();
+                    l.dedup();
+                    l
+                })
+                .collect();
+            let refs: Vec<&[Gid]> =
+                lists.iter().map(|l| l.as_slice()).collect();
+            let want = linear_scan(&refs);
+            let n = merge_sorted_unique(&refs, None);
+            let mut got = Vec::with_capacity(n);
+            merge_sorted_unique(&refs, Some(&mut got));
+            if n != want.len() || got != want {
+                return Err(format!(
+                    "merge diverged: count {n} vs {}, {got:?} vs \
+                     {want:?}",
+                    want.len()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn subscriptions_bucket_pres_by_owner_and_skip_local() {
+        let (_, stores) = build_stores(120, 7, 3, 2, 411);
+        let part = random_equivalent_partition(120, 3, 411);
+        for s in &stores {
+            let subs = s.subscriptions(&part);
+            assert_eq!(subs.len(), 3);
+            assert!(subs[s.rank as usize].is_empty());
+            let n_remote: usize =
+                subs.iter().map(|b| b.len()).sum();
+            assert_eq!(n_remote, s.pres.len() - s.n_local_pres);
+            for (src, bucket) in subs.iter().enumerate() {
+                assert!(
+                    bucket.windows(2).all(|w| w[0] < w[1]),
+                    "bucket {src} not strictly increasing"
+                );
+                for &g in bucket {
+                    assert_eq!(
+                        part.rank_of[g as usize] as usize, src,
+                        "gid {g} bucketed under the wrong rank"
+                    );
+                    assert!(s.pre_index_of(g).is_some());
+                }
+            }
+        }
     }
 
     #[test]

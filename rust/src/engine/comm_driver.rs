@@ -7,6 +7,13 @@
 //! pool's workers compute window `k` while the comm thread exchanges
 //! window `k-1`'s spikes (paper §III.C.2).
 //!
+//! With a [`RoutingTable`] installed (`engine.routing = "routed"`) the
+//! driver splits each submitted packet into per-destination subsets
+//! before handing it to the transport. In overlap mode the split runs
+//! **on the communication thread**, so both the routing work and the
+//! wire exchange overlap the next window's compute; the rank loop's
+//! `submit` stays a channel send either way.
+//!
 //! Exchange failures ([`CommError`]: window misalignment, malformed
 //! wire frames, lost peers) propagate through [`CommDriver::submit`] /
 //! [`CommDriver::recv_completed`] as errors — in overlap mode the
@@ -17,14 +24,29 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
-use crate::comm::{CommError, Communicator, SpikePacket};
+use crate::comm::{
+    CommError, Communicator, Outbound, RoutingTable, SpikePacket,
+};
 use crate::config::CommMode;
+
+/// Split a window packet per destination if a routing table is
+/// installed, else broadcast it whole.
+fn outbound_of(
+    routing: Option<&RoutingTable>,
+    pkt: SpikePacket,
+) -> Outbound {
+    match routing {
+        Some(rt) => Outbound::Routed(rt.route(&pkt)),
+        None => Outbound::Broadcast(pkt),
+    }
+}
 
 /// Spike-exchange driver: one per rank, owned by its session rank
 /// thread (`engine::session::RankRuntime`).
 pub(crate) enum CommDriver {
     Serialized {
         comm: Box<dyn Communicator>,
+        routing: Option<RoutingTable>,
         staged: Option<SpikePacket>,
     },
     Overlap {
@@ -36,10 +58,16 @@ pub(crate) enum CommDriver {
 }
 
 impl CommDriver {
-    pub fn new(comm: Box<dyn Communicator>, mode: CommMode) -> CommDriver {
+    /// `routing: None` keeps the broadcast allgather (the ablation
+    /// baseline and the only shape `SoloComm` ever sees).
+    pub fn new(
+        comm: Box<dyn Communicator>,
+        mode: CommMode,
+        routing: Option<RoutingTable>,
+    ) -> CommDriver {
         match mode {
             CommMode::Serialized => {
-                CommDriver::Serialized { comm, staged: None }
+                CommDriver::Serialized { comm, routing, staged: None }
             }
             CommMode::Overlap => {
                 let (req_tx, req_rx) = channel::<SpikePacket>();
@@ -50,9 +78,11 @@ impl CommDriver {
                     // the dedicated communication thread: drains exchange
                     // requests until the engine hangs up or the transport
                     // errors out (the error is forwarded, then the thread
-                    // exits — its endpoint is poisoned)
+                    // exits — its endpoint is poisoned). Routing the
+                    // packet happens here too, off the rank loop.
                     while let Ok(pkt) = req_rx.recv() {
-                        let got = comm.exchange(pkt);
+                        let out = outbound_of(routing.as_ref(), pkt);
+                        let got = comm.exchange_outbound(out);
                         let failed = got.is_err();
                         if resp_tx.send(got).is_err() || failed {
                             break;
@@ -76,9 +106,10 @@ impl CommDriver {
     /// [`Self::recv_completed`].
     pub fn submit(&mut self, pkt: SpikePacket) -> Result<(), CommError> {
         match self {
-            CommDriver::Serialized { comm, staged } => {
+            CommDriver::Serialized { comm, routing, staged } => {
                 debug_assert!(staged.is_none());
-                *staged = Some(comm.exchange(pkt)?);
+                let out = outbound_of(routing.as_ref(), pkt);
+                *staged = Some(comm.exchange_outbound(out)?);
                 Ok(())
             }
             CommDriver::Overlap { req, in_flight, .. } => {
@@ -122,5 +153,106 @@ impl CommDriver {
                 handle.join().expect("comm thread panicked")
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::SpikeMsg;
+
+    /// A transport whose exchange always fails — the poisoned-endpoint
+    /// shape the overlap comm thread must surface, not panic on.
+    struct FailComm {
+        exchanges: u64,
+    }
+
+    impl Communicator for FailComm {
+        fn rank(&self) -> u16 {
+            0
+        }
+        fn size(&self) -> usize {
+            2
+        }
+        fn exchange_outbound(
+            &mut self,
+            _out: Outbound,
+        ) -> Result<SpikePacket, CommError> {
+            self.exchanges += 1;
+            Err(CommError::PeerLost { peer: 1, window: self.exchanges })
+        }
+        fn alltoall(
+            &mut self,
+            _out: Vec<Vec<u8>>,
+        ) -> Result<Vec<Vec<u8>>, CommError> {
+            Err(CommError::Shutdown)
+        }
+        fn bytes_sent(&self) -> u64 {
+            0
+        }
+        fn bytes_received(&self) -> u64 {
+            0
+        }
+        fn exchanges(&self) -> u64 {
+            self.exchanges
+        }
+    }
+
+    fn pkt() -> SpikePacket {
+        vec![SpikeMsg { gid: 7, step: 3 }]
+    }
+
+    #[test]
+    fn overlap_poisoned_transport_errors_on_recv_not_panic() {
+        let mut d = CommDriver::new(
+            Box::new(FailComm { exchanges: 0 }),
+            CommMode::Overlap,
+            None,
+        );
+        d.submit(pkt()).expect("submit is a channel send");
+        let err = d.recv_completed().unwrap_err();
+        assert!(
+            matches!(err, CommError::PeerLost { peer: 1, window: 1 }),
+            "unexpected error: {err}"
+        );
+        // the comm thread exited after forwarding the error; a further
+        // submit/recv round reports the hangup instead of wedging
+        match d.submit(pkt()) {
+            Ok(()) => {
+                let err = d.recv_completed().unwrap_err();
+                assert!(matches!(err, CommError::Shutdown));
+            }
+            Err(err) => assert!(matches!(err, CommError::Shutdown)),
+        }
+        let comm = d.finish();
+        assert_eq!(comm.exchanges(), 1);
+    }
+
+    #[test]
+    fn finish_after_failed_in_flight_does_not_hang() {
+        let mut d = CommDriver::new(
+            Box::new(FailComm { exchanges: 0 }),
+            CommMode::Overlap,
+            None,
+        );
+        d.submit(pkt()).expect("submit is a channel send");
+        // the in-flight exchange has failed (or is about to); finish
+        // must drain it and join the thread without deadlocking
+        let comm = d.finish();
+        assert_eq!(comm.exchanges(), 1);
+    }
+
+    #[test]
+    fn serialized_poisoned_transport_errors_on_submit() {
+        let mut d = CommDriver::new(
+            Box::new(FailComm { exchanges: 0 }),
+            CommMode::Serialized,
+            None,
+        );
+        let err = d.submit(pkt()).unwrap_err();
+        assert!(
+            matches!(err, CommError::PeerLost { peer: 1, window: 1 }),
+            "unexpected error: {err}"
+        );
     }
 }

@@ -70,7 +70,7 @@ use crate::atlas::NetworkSpec;
 use crate::comm::{SpikeMsg, SpikePacket};
 use crate::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use crate::decomp::{Partition, RankStore};
 use crate::metrics::memory::{vec_bytes, MemoryBreakdown, MemoryReport};
@@ -95,6 +95,9 @@ pub struct EngineOptions {
     /// Branch-free vector integrate kernels vs the scalar ablation
     /// (bit-identical; see `model`).
     pub integrate: IntegrateMode,
+    /// Interest-routed spike exchange vs the broadcast allgather
+    /// ablation (bit-identical; see `comm`).
+    pub routing: RoutingMode,
     /// Built-in raster: record spikes of gids **below** this bound.
     /// `None` means the recorder is disabled (see
     /// [`SpikeRecorder::disabled`]) and no spikes are kept — use
@@ -116,6 +119,7 @@ impl Default for EngineOptions {
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
             integrate: IntegrateMode::Vector,
+            routing: RoutingMode::Routed,
             record_limit: None,
             verify_ownership: false,
             artifacts_dir: "artifacts".into(),
@@ -643,6 +647,10 @@ pub struct RankOutput {
     pub memory: MemoryBreakdown,
     pub total_spikes: u64,
     pub comm_bytes: u64,
+    /// Spike payload bytes this rank received (the wire-volume mirror
+    /// of `comm_bytes`; under routed exchange both shrink to the
+    /// subscribed subsets).
+    pub comm_recv_bytes: u64,
     pub windows: u64,
     /// Store + engine construction time (not simulation), measured on
     /// the rank thread that built the engine.
@@ -666,6 +674,9 @@ pub struct RunConfig {
     /// Integrate-kernel formulation (branch-free vector vs the scalar
     /// ablation; bit-identical either way).
     pub integrate: IntegrateMode,
+    /// Spike-exchange routing (interest-routed vs the broadcast
+    /// allgather ablation; bit-identical either way).
+    pub routing: RoutingMode,
     pub steps: Step,
     /// Built-in raster: record gids below this bound; `None` disables
     /// recording entirely (documented [`SpikeRecorder::disabled`]
@@ -687,6 +698,7 @@ impl Default for RunConfig {
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
             integrate: IntegrateMode::Vector,
+            routing: RoutingMode::Routed,
             steps: 1000,
             record_limit: None,
             verify_ownership: false,
@@ -712,6 +724,10 @@ pub struct RunOutput {
     /// generation + (pre, delay) edge layout.
     pub build_seconds: f64,
     pub comm_bytes: u64,
+    /// Total spike payload bytes received across ranks (== `comm_bytes`
+    /// in a closed cluster; reported separately because the Tofu
+    /// projection charges injection and reception independently).
+    pub comm_recv_bytes: u64,
     pub windows: u64,
     pub partition: Partition,
 }

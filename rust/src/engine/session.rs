@@ -72,14 +72,16 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::atlas::NetworkSpec;
 use crate::comm::{
-    Communicator, LocalCluster, SoloComm, SpikePacket, TcpComm,
+    bsb, Communicator, LocalCluster, RoutingTable, SoloComm,
+    SpikePacket, TcpComm,
 };
 use crate::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use crate::decomp::{
     area_processes_partition, random_equivalent_partition, Partition,
+    RankStore,
 };
 use crate::metrics::memory::MemoryBreakdown;
 use crate::metrics::{MemoryReport, PhaseTimer, SpikeRecorder};
@@ -188,6 +190,7 @@ pub struct SimulationBuilder {
     exec: ExecMode,
     build: BuildMode,
     integrate: IntegrateMode,
+    routing: RoutingMode,
     record_limit: Option<Gid>,
     verify_ownership: bool,
     artifacts_dir: String,
@@ -209,6 +212,7 @@ impl SimulationBuilder {
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
             integrate: IntegrateMode::Vector,
+            routing: RoutingMode::Routed,
             record_limit: None,
             verify_ownership: false,
             artifacts_dir: "artifacts".into(),
@@ -260,6 +264,14 @@ impl SimulationBuilder {
     /// branching kernels as an ablation).
     pub fn integrate(mut self, m: IntegrateMode) -> Self {
         self.integrate = m;
+        self
+    }
+
+    /// Select the spike-exchange routing (interest-routed by default;
+    /// [`RoutingMode::Broadcast`] keeps the full allgather as an
+    /// ablation — bit-identical rasters either way).
+    pub fn routing(mut self, r: RoutingMode) -> Self {
+        self.routing = r;
         self
     }
 
@@ -323,6 +335,7 @@ impl SimulationBuilder {
         self.exec = cfg.exec;
         self.build = cfg.build;
         self.integrate = cfg.integrate;
+        self.routing = cfg.routing;
         self.record_limit = cfg.record_limit;
         self.verify_ownership = cfg.verify_ownership;
         self.artifacts_dir = cfg.artifacts_dir.clone();
@@ -441,6 +454,7 @@ impl SimulationBuilder {
                 exec: self.exec,
                 build: self.build,
                 integrate: self.integrate,
+                routing: self.routing,
                 record_limit: self.record_limit,
                 verify_ownership: self.verify_ownership,
                 artifacts_dir: self.artifacts_dir.clone(),
@@ -881,6 +895,7 @@ impl Simulation {
         let mut per_rank_mem = Vec::new();
         let mut total_spikes = 0;
         let mut comm_bytes = 0;
+        let mut comm_recv_bytes = 0;
         let mut windows = 0;
         let mut wall_seconds: f64 = 0.0;
         let mut build_seconds: f64 = 0.0;
@@ -891,6 +906,7 @@ impl Simulation {
             per_rank_mem.push(o.memory.clone());
             total_spikes += o.total_spikes;
             comm_bytes += o.comm_bytes;
+            comm_recv_bytes += o.comm_recv_bytes;
             windows = windows.max(o.windows);
             wall_seconds = wall_seconds.max(*sim_s);
             build_seconds = build_seconds.max(o.build_seconds);
@@ -905,6 +921,7 @@ impl Simulation {
             wall_seconds,
             build_seconds,
             comm_bytes,
+            comm_recv_bytes,
             windows,
             partition: Arc::try_unwrap(partition)
                 .unwrap_or_else(|a| (*a).clone()),
@@ -1111,10 +1128,28 @@ fn build_runtime(
     factories: &[(String, ProbeFactory)],
 ) -> Result<RankRuntime> {
     let t_build = Instant::now();
+    let routing_mode = opts.routing;
     // store construction runs on the engine's own worker pool (two-pass
     // streaming builder) — the rank thread only orchestrates
-    let engine =
+    let mut engine =
         RankEngine::build(Arc::clone(&spec), &partition, r, opts)?;
+    // the subscription collective (one alltoall over the run transport,
+    // before window 0): ship every peer the set of its gids this rank's
+    // sub-graph consumes, receive the sets the peers consume of ours —
+    // the routing table the driver then filters every window against
+    let mut comm = comm;
+    let routing = match routing_mode {
+        RoutingMode::Routed if comm.size() > 1 => {
+            Some(engine.timer.time("comm_subscribe", || {
+                subscription_collective(
+                    &engine.store,
+                    &partition,
+                    comm.as_mut(),
+                )
+            })?)
+        }
+        _ => None,
+    };
     let build_seconds = t_build.elapsed().as_secs_f64();
     let mut probes: Vec<(String, Box<dyn Probe>)> = factories
         .iter()
@@ -1130,7 +1165,7 @@ fn build_runtime(
     drop(view);
     Ok(RankRuntime {
         engine,
-        driver: CommDriver::new(comm, comm_mode),
+        driver: CommDriver::new(comm, comm_mode, routing),
         m: spec.min_delay_steps as Step,
         outbox: Vec::new(),
         step_in_window: 0,
@@ -1141,6 +1176,38 @@ fn build_runtime(
         build_seconds,
         sim_seconds: 0.0,
     })
+}
+
+/// Build-time interest exchange: encode this rank's per-source-rank
+/// subscription sets ([`RankStore::subscriptions`]) with the gid-list
+/// wire codec, alltoall them over the run transport, and decode what
+/// every peer wants of this rank into the send-side [`RoutingTable`]
+/// the driver filters every window's packet against. One collective,
+/// before window 0 — it reuses the spike transport and does not touch
+/// the window counter.
+fn subscription_collective(
+    store: &RankStore,
+    partition: &Partition,
+    comm: &mut dyn Communicator,
+) -> Result<RoutingTable> {
+    let blobs: Vec<Vec<u8>> = store
+        .subscriptions(partition)
+        .iter()
+        .map(|b| bsb::encode_gid_list(b))
+        .collect();
+    let got = comm.alltoall(blobs)?;
+    let me = comm.rank() as usize;
+    let mut wanted: Vec<Vec<Gid>> = Vec::with_capacity(got.len());
+    for (src, blob) in got.iter().enumerate() {
+        if src == me {
+            wanted.push(Vec::new());
+            continue;
+        }
+        wanted.push(bsb::decode_gid_list(blob).map_err(|e| {
+            anyhow!("rank {src} sent a malformed subscription set: {e}")
+        })?);
+    }
+    Ok(RoutingTable::new(&wanted))
 }
 
 impl RankRuntime {
@@ -1329,6 +1396,7 @@ impl RankRuntime {
             CommDriver::new(
                 Box::new(SoloComm::new()),
                 CommMode::Serialized,
+                None,
             ),
         );
         let comm = driver.finish();
@@ -1346,6 +1414,7 @@ impl RankRuntime {
                 memory,
                 total_spikes: self.engine.total_spikes,
                 comm_bytes: comm.bytes_sent(),
+                comm_recv_bytes: comm.bytes_received(),
                 windows: comm.exchanges(),
                 build_seconds: self.build_seconds,
             },

@@ -15,12 +15,13 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
+use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::atlas::potjans::potjans_spec;
 use cortex::comm::bsb::{self, CodecError};
 use cortex::comm::{Communicator, SpikeMsg, TcpComm};
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::engine::{run_simulation, RunConfig, Simulation};
 use cortex::util::proptest_lite::{property, Gen};
@@ -139,14 +140,16 @@ const SEED: u64 = 23;
 const STEPS: u64 = 600;
 const THREADS: usize = 2;
 
-fn local_raster(
+fn local_run(
     spec: &Arc<cortex::atlas::NetworkSpec>,
     comm: CommMode,
-) -> Vec<(u64, u32)> {
-    let out = run_simulation(
+    ranks: usize,
+    routing: RoutingMode,
+) -> cortex::engine::RunOutput {
+    run_simulation(
         spec,
         &RunConfig {
-            ranks: 2,
+            ranks,
             threads: THREADS,
             mapping: MappingKind::AreaProcesses,
             comm,
@@ -154,6 +157,7 @@ fn local_raster(
             exec: ExecMode::Pool,
             build: BuildMode::TwoPass,
             integrate: IntegrateMode::Vector,
+            routing,
             steps: STEPS,
             record_limit: Some(u32::MAX),
             verify_ownership: false,
@@ -161,19 +165,27 @@ fn local_raster(
             seed: SEED,
         },
     )
-    .unwrap();
-    out.raster.events
+    .unwrap()
+}
+
+fn local_raster(
+    spec: &Arc<cortex::atlas::NetworkSpec>,
+    comm: CommMode,
+) -> Vec<(u64, u32)> {
+    local_run(spec, comm, 2, RoutingMode::Routed).raster.events
 }
 
 /// Run the same 2-rank simulation as two single-rank TCP sessions (one
 /// per thread, real sockets on ephemeral localhost ports), driving
 /// each through the given `run_for` chunks, and merge their rasters.
-fn tcp_raster(
+fn tcp_raster_matrix(
     spec: &Arc<cortex::atlas::NetworkSpec>,
     comm: CommMode,
     chunks: &[u64],
+    ranks: usize,
+    routing: RoutingMode,
 ) -> Vec<(u64, u32)> {
-    let listeners: Vec<TcpListener> = (0..2)
+    let listeners: Vec<TcpListener> = (0..ranks)
         .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
         .collect();
     let peers: Vec<String> = listeners
@@ -196,14 +208,15 @@ fn tcp_raster(
                 )
                 .unwrap();
                 let mut sim = Simulation::builder(spec)
-                    .ranks(2)
+                    .ranks(ranks)
                     .threads(THREADS)
                     .mapping(MappingKind::AreaProcesses)
                     .comm(comm)
+                    .routing(routing)
                     .record_limit(Some(u32::MAX))
                     .seed(SEED)
                     .transport_with(move |n| {
-                        assert_eq!(n, 2);
+                        assert_eq!(n, ranks);
                         Ok(vec![(
                             rank,
                             Box::new(endpoint)
@@ -226,6 +239,14 @@ fn tcp_raster(
     }
     events.sort_unstable();
     events
+}
+
+fn tcp_raster(
+    spec: &Arc<cortex::atlas::NetworkSpec>,
+    comm: CommMode,
+    chunks: &[u64],
+) -> Vec<(u64, u32)> {
+    tcp_raster_matrix(spec, comm, chunks, 2, RoutingMode::Routed)
 }
 
 #[test]
@@ -257,4 +278,160 @@ fn tcp_split_runs_stay_aligned_across_windows() {
     let want = local_raster(&spec, CommMode::Overlap);
     let got = tcp_raster(&spec, CommMode::Overlap, &[7, 100, 493]);
     assert_eq!(got, want, "split TCP runs diverged from local");
+}
+
+// ---------------------------------------------------------------------
+// Interest routing: bit-identity to broadcast + wire-volume reduction
+// ---------------------------------------------------------------------
+
+#[test]
+fn routed_is_bit_identical_to_broadcast_across_the_local_matrix() {
+    // the full local matrix: 2/4 ranks × serialized/overlap. Routed
+    // exchange must reproduce the broadcast raster bit-for-bit — it
+    // only withholds spikes the receiver's sub-graph would have
+    // dropped on enqueue anyway. No volume reduction is expected HERE:
+    // the single-area microcircuit is recurrently dense, so at these
+    // rank counts every rank subscribes to (essentially) every peer
+    // gid and routed volume rides at the broadcast bound — which is
+    // itself part of the contract: routing must never *add* bytes.
+    let spec = Arc::new(potjans_spec(SCALE, SEED));
+    for ranks in [2usize, 4] {
+        for comm in [CommMode::Serialized, CommMode::Overlap] {
+            let bcast =
+                local_run(&spec, comm, ranks, RoutingMode::Broadcast);
+            assert!(
+                !bcast.raster.events.is_empty(),
+                "{ranks}r/{comm:?}: microcircuit should be active"
+            );
+            let routed =
+                local_run(&spec, comm, ranks, RoutingMode::Routed);
+            assert_eq!(
+                routed.raster.events, bcast.raster.events,
+                "{ranks}r/{comm:?}: routed exchange changed the raster"
+            );
+            assert_eq!(
+                routed.total_spikes, bcast.total_spikes,
+                "{ranks}r/{comm:?}: spike totals diverged"
+            );
+            // closed cluster: every byte sent is a byte received
+            assert_eq!(routed.comm_bytes, routed.comm_recv_bytes);
+            assert_eq!(bcast.comm_bytes, bcast.comm_recv_bytes);
+            assert!(
+                routed.comm_bytes <= bcast.comm_bytes,
+                "{ranks}r/{comm:?}: routed {} > broadcast {}",
+                routed.comm_bytes,
+                bcast.comm_bytes
+            );
+        }
+    }
+}
+
+#[test]
+fn routed_sheds_wire_volume_on_the_multi_area_network() {
+    // where the reduction structurally lives (paper Fig 7/8: varied
+    // density of synaptic interactions): in the multi-area model,
+    // inhibitory populations project only within their own area, so
+    // with area-aligned ranks no rank ever subscribes to a remote I
+    // gid — every inhibitory spike stays off the wire — and
+    // distance-decayed E→E pairs whose indegree rounds to zero drop
+    // whole remote areas. Identity still holds bit-for-bit.
+    let spec = Arc::new(marmoset_spec(
+        &MarmosetParams {
+            n_neurons: 3_000,
+            n_areas: 8,
+            indegree: 150,
+            ..Default::default()
+        },
+        SEED,
+    ));
+    let bcast = local_run(&spec, CommMode::Overlap, 4, RoutingMode::Broadcast);
+    assert!(
+        !bcast.raster.events.is_empty(),
+        "multi-area network should be active"
+    );
+    let routed = local_run(&spec, CommMode::Overlap, 4, RoutingMode::Routed);
+    assert_eq!(
+        routed.raster.events, bcast.raster.events,
+        "routed exchange changed the multi-area raster"
+    );
+    // ≥ 1/5 of every area is inhibitory and never subscribed remotely,
+    // so the routed share must come in measurably below broadcast
+    assert!(
+        (routed.comm_bytes as f64)
+            < 0.95 * bcast.comm_bytes as f64,
+        "no measurable reduction: routed {} vs broadcast {}",
+        routed.comm_bytes,
+        bcast.comm_bytes
+    );
+}
+
+#[test]
+fn routed_is_bit_identical_to_broadcast_over_tcp() {
+    // sockets exercise the framed codec + the nonblocking interleaved
+    // exchange loop; 2 ranks across both comm modes, then 4 ranks
+    // under overlap (the production shape)
+    let spec = Arc::new(potjans_spec(SCALE, SEED));
+    for (ranks, comm) in [
+        (2usize, CommMode::Serialized),
+        (2, CommMode::Overlap),
+        (4, CommMode::Overlap),
+    ] {
+        let want = tcp_raster_matrix(
+            &spec,
+            comm,
+            &[STEPS],
+            ranks,
+            RoutingMode::Broadcast,
+        );
+        assert!(
+            !want.is_empty(),
+            "{ranks}r/{comm:?}: microcircuit should be active"
+        );
+        let got = tcp_raster_matrix(
+            &spec,
+            comm,
+            &[STEPS],
+            ranks,
+            RoutingMode::Routed,
+        );
+        assert_eq!(
+            got, want,
+            "{ranks}r/{comm:?}: routed TCP exchange changed the \
+             raster ({} vs {} events)",
+            got.len(),
+            want.len()
+        );
+    }
+}
+
+#[test]
+fn routed_checkpoints_are_bit_identical_to_broadcast() {
+    // the session checkpoint serializes every rank's full dynamical
+    // state — bit-equal blobs mean the two routing modes agree on
+    // every membrane potential, queue entry and RNG draw, not just on
+    // the recorded raster
+    let spec = Arc::new(potjans_spec(SCALE, SEED));
+    let blob_of = |routing: RoutingMode| {
+        let mut sim = Simulation::builder(Arc::clone(&spec))
+            .ranks(2)
+            .threads(THREADS)
+            .comm(CommMode::Overlap)
+            .routing(routing)
+            .record_limit(Some(u32::MAX))
+            .seed(SEED)
+            .build()
+            .unwrap();
+        sim.run_for(300).unwrap();
+        let mut blob = Vec::new();
+        sim.checkpoint(&mut blob).unwrap();
+        sim.finish().unwrap();
+        blob
+    };
+    let routed = blob_of(RoutingMode::Routed);
+    let bcast = blob_of(RoutingMode::Broadcast);
+    assert!(!routed.is_empty());
+    assert_eq!(
+        routed, bcast,
+        "routing mode leaked into the checkpointed state"
+    );
 }

@@ -15,7 +15,7 @@ use cortex::atlas::potjans::{
 };
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::decomp::{area_processes_partition, RankStore};
 use cortex::engine::{
@@ -41,6 +41,7 @@ fn potjans_raster_identical_across_thread_counts_and_comm_modes() {
                     exec: ExecMode::Pool,
                     build: BuildMode::TwoPass,
                     integrate: IntegrateMode::Vector,
+                    routing: RoutingMode::Routed,
                     steps: 600,
                     record_limit: Some(u32::MAX),
                     verify_ownership: true,
@@ -85,6 +86,7 @@ fn build_pipelines_produce_identical_rasters() {
                     exec: ExecMode::Pool,
                     build,
                     integrate: IntegrateMode::Vector,
+                    routing: RoutingMode::Routed,
                     steps: 400,
                     record_limit: Some(u32::MAX),
                     verify_ownership: true,
@@ -140,6 +142,7 @@ fn integrate_kernels_produce_identical_rasters() {
                         exec: ExecMode::Pool,
                         build: BuildMode::TwoPass,
                         integrate,
+                        routing: RoutingMode::Routed,
                         steps: 400,
                         record_limit: Some(u32::MAX),
                         verify_ownership: true,

@@ -18,7 +18,7 @@ use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::atlas::random_spec;
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::nest_baseline::{run_nest_simulation, NestRunConfig};
@@ -33,6 +33,7 @@ fn base_cfg(steps: u64) -> RunConfig {
         exec: ExecMode::Pool,
         build: BuildMode::TwoPass,
         integrate: IntegrateMode::Vector,
+        routing: RoutingMode::Routed,
         steps,
         record_limit: Some(u32::MAX),
         verify_ownership: true,

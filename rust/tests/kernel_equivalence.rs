@@ -15,7 +15,7 @@ use std::sync::Arc;
 use cortex::atlas::{random_spec, random_spec_with};
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::model::lif::{self, LifState, Propagators};
@@ -210,6 +210,7 @@ fn cfg(threads: usize, integrate: IntegrateMode, seed: u64) -> RunConfig {
         exec: ExecMode::Pool,
         build: BuildMode::TwoPass,
         integrate,
+        routing: RoutingMode::Routed,
         steps: 300,
         record_limit: Some(u32::MAX),
         verify_ownership: true,

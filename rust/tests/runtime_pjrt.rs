@@ -10,7 +10,7 @@ use std::sync::Arc;
 use cortex::atlas::random_spec;
 use cortex::config::{
     BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind,
+    MappingKind, RoutingMode,
 };
 use cortex::engine::{run_simulation, RunConfig};
 use cortex::model::lif::{step_slice, LifParams, LifState, Propagators};
@@ -108,6 +108,7 @@ fn pjrt_backend_full_simulation_matches_native() {
         exec: ExecMode::Pool,
         build: BuildMode::TwoPass,
         integrate: IntegrateMode::Vector,
+        routing: RoutingMode::Routed,
         steps: 400,
         record_limit: Some(u32::MAX),
         verify_ownership: false,
