@@ -10,6 +10,8 @@
 //! cortex verify    [--config F] [--set k=v]...   paper §IV.A verification
 //! cortex partition [--config F] [--set k=v]...   inspect the decomposition
 //! cortex info      [--artifacts DIR]             PJRT artifact report
+//! cortex serve     [--addr H:P] [--set k=v]...   multi-session daemon
+//! cortex client    [--addr H:P] VERB [options]   drive a running daemon
 //! ```
 //!
 //! The distributed runtime: `cortex launch --ranks N` spawns N copies of
@@ -61,6 +63,30 @@ pub struct Args {
     /// `--raster-out FILE` — dump the merged spike raster as
     /// "step gid" lines (TCP ranks write `FILE.r<rank>`).
     pub raster_out: Option<String>,
+    /// `--addr H:P` — daemon listen/connect address for
+    /// `cortex serve` / `cortex client` (overrides `serve.addr`).
+    pub addr: Option<String>,
+    /// `--session ID` — target session for `cortex client` verbs.
+    pub session: Option<u64>,
+    /// `--steps N` — step count for `cortex client run`.
+    pub steps: Option<u64>,
+    /// `--probe SPEC` (repeatable) — probe specs for
+    /// `cortex client create` (`raster:NAME`, `rates:NAME:BIN`,
+    /// `phases:NAME`) or the probe name for `drain`.
+    pub probes: Vec<String>,
+    /// `--pop NAME` — target population for `cortex client stim`.
+    pub pop: Option<String>,
+    /// `--poisson RATE:WEIGHT` — Poisson drive for `cortex client stim`.
+    pub poisson: Option<String>,
+    /// `--dc PA` — DC drive for `cortex client stim`.
+    pub dc: Option<f64>,
+    /// `--push` — stream probe data with `cortex client run`.
+    pub push: bool,
+    /// `--out FILE` — output path for `cortex client checkpoint`.
+    pub out: Option<String>,
+    /// Bare (non-flag) tokens after the subcommand — the
+    /// `cortex client` verb and its operands.
+    pub positional: Vec<String>,
 }
 
 impl Args {
@@ -73,7 +99,8 @@ impl Args {
         let mut it = argv.iter().peekable();
         let Some(sub) = it.next() else {
             bail!(
-                "usage: cortex <run|launch|verify|partition|info> \
+                "usage: cortex \
+                 <run|launch|verify|partition|info|serve|client> \
                  [options]"
             );
         };
@@ -133,6 +160,65 @@ impl Args {
                             .context("--raster-out needs a path")?
                             .clone(),
                     );
+                }
+                "--addr" => {
+                    args.addr = Some(
+                        it.next()
+                            .context("--addr needs host:port")?
+                            .clone(),
+                    );
+                }
+                "--session" => {
+                    args.session = Some(
+                        it.next()
+                            .context("--session needs an id")?
+                            .parse()
+                            .context("--session must be an integer")?,
+                    );
+                }
+                "--steps" => {
+                    args.steps = Some(
+                        it.next()
+                            .context("--steps needs a count")?
+                            .parse()
+                            .context("--steps must be an integer")?,
+                    );
+                }
+                "--probe" => {
+                    args.probes.push(
+                        it.next().context("--probe needs a spec")?.clone(),
+                    );
+                }
+                "--pop" => {
+                    args.pop = Some(
+                        it.next()
+                            .context("--pop needs a population name")?
+                            .clone(),
+                    );
+                }
+                "--poisson" => {
+                    args.poisson = Some(
+                        it.next()
+                            .context("--poisson needs RATE:WEIGHT")?
+                            .clone(),
+                    );
+                }
+                "--dc" => {
+                    args.dc = Some(
+                        it.next()
+                            .context("--dc needs a current in pA")?
+                            .parse()
+                            .context("--dc must be a number")?,
+                    );
+                }
+                "--push" => args.push = true,
+                "--out" => {
+                    args.out = Some(
+                        it.next().context("--out needs a path")?.clone(),
+                    );
+                }
+                other if !other.starts_with('-') => {
+                    args.positional.push(other.to_string());
                 }
                 other => bail!("unknown argument '{other}'"),
             }
@@ -479,17 +565,59 @@ pub fn cmd_launch(args: &Args) -> Result<()> {
             }
         }
     }
-    let mut failed = false;
-    for (r, mut child) in children {
-        let status = child
-            .wait()
-            .with_context(|| format!("waiting for rank {r}"))?;
-        if !status.success() {
-            eprintln!("rank {r} exited with {status}");
-            failed = true;
+    // Poll every child instead of wait()ing in rank order: a rank
+    // that dies (OOM, panic, bad config on one host) leaves its peers
+    // blocked in the TCP exchange for the full socket timeout. The
+    // first nonzero exit kills the survivors and fails the launch
+    // immediately with the culprit's rank in the message.
+    let mut failed: Option<usize> = None;
+    while !children.is_empty() {
+        let mut progressed = false;
+        let mut i = 0;
+        while i < children.len() {
+            let (r, child) = &mut children[i];
+            let status = match child.try_wait() {
+                Ok(Some(status)) => status,
+                Ok(None) => {
+                    i += 1;
+                    continue;
+                }
+                Err(e) => {
+                    eprintln!("waiting for rank {r}: {e}");
+                    failed = Some(*r);
+                    // unpollable — treat as dead and reap below
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    children.swap_remove(i);
+                    progressed = true;
+                    continue;
+                }
+            };
+            let r = *r;
+            if !status.success() {
+                eprintln!("rank {r} exited with {status}");
+                failed = Some(r);
+            }
+            children.swap_remove(i);
+            progressed = true;
+        }
+        if failed.is_some() {
+            // one casualty dooms the cluster — don't let the rest
+            // hang out their join/exchange timeouts
+            for (r, mut child) in children.drain(..) {
+                eprintln!("killing rank {r} (sibling failed)");
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            break;
+        }
+        if !progressed {
+            std::thread::sleep(std::time::Duration::from_millis(30));
         }
     }
-    ensure!(!failed, "one or more rank processes failed");
+    if let Some(r) = failed {
+        bail!("rank {r} failed; remaining ranks were terminated");
+    }
     println!("all {n} ranks completed");
     Ok(())
 }
@@ -685,6 +813,178 @@ pub fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `cortex serve` — the resident multi-session daemon. `[serve]`
+/// config keys set the quotas; `--addr` overrides the listen address.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = args.experiment()?;
+    let mut limits = cfg.serve.clone();
+    if let Some(addr) = &args.addr {
+        limits.addr = addr.clone();
+    }
+    crate::serve::serve(&limits)
+}
+
+/// `cortex client` — drive a running daemon over the control
+/// protocol: one verb per invocation, line-oriented output that CI
+/// shell jobs can parse.
+pub fn cmd_client(args: &Args) -> Result<()> {
+    use crate::serve::{Client, ProbeSpec};
+    let verb = args.positional.first().map(String::as_str).context(
+        "client needs a verb: create|run|drain|stim|suspend|resume|\
+         checkpoint|close|stats|shutdown",
+    )?;
+    let addr = args.addr.as_deref().unwrap_or("127.0.0.1:9077");
+    let mut client = Client::connect(addr)?;
+    let session = || args.session.context("--session ID is required");
+    match verb {
+        "create" => {
+            let doc = match &args.config_path {
+                Some(p) => std::fs::read_to_string(p)
+                    .with_context(|| format!("reading config {p}"))?,
+                None => String::new(),
+            };
+            let probes = args
+                .probes
+                .iter()
+                .map(|s| ProbeSpec::parse(s))
+                .collect::<Result<Vec<_>>>()?;
+            let id = client.create(&doc, &args.overrides, &probes)?;
+            // parseable: scripts grab the id with `awk '{print $2}'`
+            println!("session {id}");
+        }
+        "run" => {
+            let sid = session()?;
+            let steps = args.steps.context("--steps N is required")?;
+            let push = args.push || args.raster_out.is_some();
+            let (step, pushes) = client.run(sid, steps, push)?;
+            for (probe, data) in pushes {
+                report_probe(args, &probe, data)?;
+            }
+            println!("session {sid} at step {step}");
+        }
+        "drain" => {
+            let sid = session()?;
+            let probe = args
+                .probes
+                .first()
+                .context("drain needs --probe NAME")?;
+            // accept the bare drain name or a full create-time spec
+            let name = probe.split(':').nth(1).unwrap_or(probe);
+            let data = client.drain(sid, name)?;
+            report_probe(args, name, data)?;
+        }
+        "stim" => {
+            let sid = session()?;
+            let pop =
+                args.pop.as_deref().context("stim needs --pop NAME")?;
+            match (&args.poisson, args.dc) {
+                (Some(p), None) => {
+                    let (rate, weight) = p
+                        .split_once(':')
+                        .context("--poisson needs RATE:WEIGHT")?;
+                    client.set_poisson(
+                        sid,
+                        pop,
+                        rate.parse().context("bad poisson rate")?,
+                        weight.parse().context("bad poisson weight")?,
+                    )?;
+                }
+                (None, Some(dc)) => client.set_dc(sid, pop, dc)?,
+                _ => bail!("stim needs exactly one of --poisson, --dc"),
+            }
+            println!("stim applied to '{pop}'");
+        }
+        "suspend" => {
+            let sid = session()?;
+            client.suspend(sid)?;
+            println!("session {sid} suspended");
+        }
+        "resume" => {
+            let sid = session()?;
+            client.resume(sid)?;
+            println!("session {sid} resumed");
+        }
+        "checkpoint" => {
+            let sid = session()?;
+            let blob = client.checkpoint(sid)?;
+            match &args.out {
+                Some(path) => {
+                    std::fs::write(path, &blob).with_context(|| {
+                        format!("writing checkpoint to {path}")
+                    })?;
+                    println!(
+                        "checkpoint written to {path} ({} bytes)",
+                        blob.len()
+                    );
+                }
+                None => println!("checkpoint: {} bytes", blob.len()),
+            }
+        }
+        "close" => {
+            let sid = session()?;
+            client.close(sid)?;
+            println!("session {sid} closed");
+        }
+        "stats" => {
+            let s = client.stats()?;
+            let mem_budget = if s.mem_budget == 0 {
+                "unlimited".to_string()
+            } else {
+                human_bytes(s.mem_budget)
+            };
+            println!(
+                "sessions {} (active {}, suspended {}) \
+                 threads {}/{} memory {}/{}",
+                s.sessions,
+                s.active,
+                s.suspended,
+                s.threads_in_use,
+                s.thread_budget,
+                human_bytes(s.mem_in_use),
+                mem_budget,
+            );
+        }
+        "shutdown" => {
+            client.shutdown()?;
+            println!("daemon shut down");
+        }
+        other => bail!(
+            "unknown client verb '{other}' (expected create|run|drain|\
+             stim|suspend|resume|checkpoint|close|stats|shutdown)"
+        ),
+    }
+    Ok(())
+}
+
+/// Print or persist one drained probe: rasters honour `--raster-out`,
+/// everything else gets a one-line summary.
+fn report_probe(
+    args: &Args,
+    probe: &str,
+    data: ProbeData,
+) -> Result<()> {
+    match data {
+        ProbeData::Raster(events) => match &args.raster_out {
+            Some(path) => write_raster(path, &events)?,
+            None => {
+                println!("probe '{probe}': {} spikes", events.len())
+            }
+        },
+        ProbeData::Rates { rows, .. } => {
+            println!("probe '{probe}': {} rate rows", rows.len())
+        }
+        ProbeData::Phases(rows) => {
+            for (rank, phase, ms) in &rows {
+                println!(
+                    "probe '{probe}': rank {rank} {phase} {ms:.3} ms"
+                );
+            }
+        }
+        other => println!("probe '{probe}': {other:?}"),
+    }
+    Ok(())
+}
+
 pub fn main_with(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.subcommand.as_str() {
@@ -693,9 +993,11 @@ pub fn main_with(argv: &[String]) -> Result<()> {
         "verify" => cmd_verify(&args),
         "partition" => cmd_partition(&args),
         "info" => cmd_info(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         other => bail!(
             "unknown subcommand '{other}' \
-             (expected run|launch|verify|partition|info)"
+             (expected run|launch|verify|partition|info|serve|client)"
         ),
     }
 }
@@ -948,5 +1250,65 @@ mod tests {
         assert_eq!(spec.populations[0].model, NeuronModel::Adex);
         assert_eq!(spec.populations[2].model, NeuronModel::Parrot);
         assert!(spec.n_edges() > 0);
+    }
+
+    #[test]
+    fn serve_client_flags_parse() {
+        let a = Args::parse(&s(&[
+            "client",
+            "run",
+            "--addr",
+            "127.0.0.1:29860",
+            "--session",
+            "3",
+            "--steps",
+            "300",
+            "--push",
+            "--probe",
+            "raster:spikes",
+            "--probe",
+            "rates:r:100",
+        ]))
+        .unwrap();
+        assert_eq!(a.subcommand, "client");
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.addr.as_deref(), Some("127.0.0.1:29860"));
+        assert_eq!(a.session, Some(3));
+        assert_eq!(a.steps, Some(300));
+        assert!(a.push);
+        assert_eq!(a.probes, vec!["raster:spikes", "rates:r:100"]);
+
+        let a = Args::parse(&s(&[
+            "client", "stim", "--pop", "L4E", "--poisson", "8000:87.8",
+        ]))
+        .unwrap();
+        assert_eq!(a.pop.as_deref(), Some("L4E"));
+        assert_eq!(a.poisson.as_deref(), Some("8000:87.8"));
+
+        // a flag value may start with '-' (consumed, not a flag)
+        let a =
+            Args::parse(&s(&["client", "stim", "--dc", "-120.5"]))
+                .unwrap();
+        assert_eq!(a.dc, Some(-120.5));
+
+        // malformed values and unknown flags still error
+        assert!(Args::parse(&s(&["client", "--session", "x"])).is_err());
+        assert!(Args::parse(&s(&["serve", "--bogus"])).is_err());
+    }
+
+    #[test]
+    fn serve_config_reaches_the_daemon_limits() {
+        let a = Args::parse(&s(&[
+            "serve",
+            "--set",
+            "serve.max_sessions=3",
+            "--set",
+            "serve.thread_budget=4",
+        ]))
+        .unwrap();
+        let cfg = a.experiment().unwrap();
+        assert_eq!(cfg.serve.max_sessions, 3);
+        assert_eq!(cfg.serve.thread_budget, 4);
+        assert_eq!(cfg.serve.addr, "127.0.0.1:9077");
     }
 }

@@ -85,9 +85,10 @@ impl fmt::Display for CodecError {
 
 impl std::error::Error for CodecError {}
 
-/// Varint (LEB128) encode.
+/// Varint (LEB128) encode. Shared with the `serve` control protocol,
+/// which reuses the BSB codec's varint discipline.
 #[inline]
-fn put_varint(out: &mut Vec<u8>, mut x: u64) {
+pub(crate) fn put_varint(out: &mut Vec<u8>, mut x: u64) {
     loop {
         let b = (x & 0x7f) as u8;
         x >>= 7;
@@ -104,7 +105,10 @@ fn put_varint(out: &mut Vec<u8>, mut x: u64) {
 /// [`MAX_VARINT_BYTES`] or carrying bits past 63 is
 /// [`CodecError::VarintOverflow`].
 #[inline]
-fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64, CodecError> {
+pub(crate) fn get_varint(
+    buf: &[u8],
+    pos: &mut usize,
+) -> Result<u64, CodecError> {
     let mut x = 0u64;
     let mut shift = 0u32;
     for _ in 0..MAX_VARINT_BYTES {

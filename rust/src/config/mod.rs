@@ -12,6 +12,6 @@ mod toml;
 pub use schema::{
     BuildMode, CommMode, CommTransport, CustomPop, DynamicsBackend,
     EngineKind, ExecMode, ExperimentConfig, IntegrateMode, MappingKind,
-    NetworkKind, RoutingMode,
+    NetworkKind, RoutingMode, ServeConfig,
 };
 pub use toml::{ConfigDoc, ConfigError, Value};

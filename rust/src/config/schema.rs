@@ -215,6 +215,65 @@ pub struct ExperimentConfig {
     /// Rank-ordered listen addresses of the TCP cluster
     /// (`engine.peers` / `--peers`); must have exactly `ranks` entries.
     pub peers: Vec<String>,
+
+    // [serve]
+    pub serve: ServeConfig,
+}
+
+/// `[serve]` — the `cortex serve` daemon's listen address and
+/// admission-control quotas. All keys have defaults, so any experiment
+/// config doubles as a daemon config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// `serve.addr` — daemon listen address (`--addr` overrides).
+    pub addr: String,
+    /// `serve.max_sessions` — hosted sessions, active + suspended.
+    pub max_sessions: usize,
+    /// `serve.thread_budget` — shared worker-thread pool all active
+    /// sessions draw from (one session costs `ranks × threads`).
+    pub thread_budget: usize,
+    /// `serve.max_session_threads` — per-session worker-thread cap;
+    /// `0` means "bounded only by the shared budget".
+    pub max_session_threads: usize,
+    /// `serve.memory_budget_mb` — resident-state budget across active
+    /// sessions plus suspended checkpoint blobs; `0` disables the
+    /// memory gate.
+    pub memory_budget_mb: usize,
+    /// `serve.idle_suspend_ms` — suspend sessions idle this long to
+    /// checkpoint blobs (threads reclaimed); `0` disables the sweep.
+    pub idle_suspend_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:9077".into(),
+            max_sessions: 8,
+            thread_budget: 16,
+            max_session_threads: 0,
+            memory_budget_mb: 0,
+            idle_suspend_ms: 0,
+        }
+    }
+}
+
+fn serve_config_from(doc: &ConfigDoc) -> Result<ServeConfig, ConfigError> {
+    let d = ServeConfig::default();
+    Ok(ServeConfig {
+        addr: doc.str("serve.addr", &d.addr)?,
+        max_sessions: doc.usize("serve.max_sessions", d.max_sessions)?,
+        thread_budget: doc
+            .usize("serve.thread_budget", d.thread_budget)?,
+        max_session_threads: doc.usize(
+            "serve.max_session_threads",
+            d.max_session_threads,
+        )?,
+        memory_budget_mb: doc
+            .usize("serve.memory_budget_mb", d.memory_budget_mb)?,
+        idle_suspend_ms: doc
+            .usize("serve.idle_suspend_ms", d.idle_suspend_ms as usize)?
+            as u64,
+    })
 }
 
 impl Default for ExperimentConfig {
@@ -254,6 +313,7 @@ impl Default for ExperimentConfig {
             transport: CommTransport::Local,
             tcp_rank: None,
             peers: Vec::new(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -379,6 +439,7 @@ impl ExperimentConfig {
             )?,
             tcp_rank: parse_tcp_rank(doc)?,
             peers: parse_peers(doc)?,
+            serve: serve_config_from(doc)?,
         };
         // the custom-builder scaffold knobs are not wired into the
         // parametric builders (which have their own calibrated values) —
@@ -481,6 +542,21 @@ impl ExperimentConfig {
                 "engine.rank",
                 "engine.rank / engine.peers are only used with \
                  engine.transport = \"tcp\"",
+            );
+        }
+        if self.serve.addr.is_empty() {
+            return bad("serve.addr", "must be a host:port address");
+        }
+        if self.serve.max_sessions == 0 {
+            return bad("serve.max_sessions", "must be > 0");
+        }
+        if self.serve.thread_budget == 0 {
+            return bad("serve.thread_budget", "must be > 0");
+        }
+        if self.serve.max_session_threads > self.serve.thread_budget {
+            return bad(
+                "serve.max_session_threads",
+                "cannot exceed serve.thread_budget",
             );
         }
         Ok(())

@@ -63,7 +63,9 @@
 //! receiving twice).
 
 use std::io::{Read, Write};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, Sender, SyncSender,
+};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -804,25 +806,82 @@ impl Simulation {
             self.steps_done,
             self.min_delay
         );
+        // Every rank streams its CORTEX3 section through a bounded
+        // channel and the session interleaves the copies into `w` in
+        // rank order, so peak buffering is O(ranks × chunk) instead
+        // of the sum of whole rank blobs. Ranks serialize
+        // concurrently; rank r+1 fills its channel while rank r's
+        // section is still being copied. On any error the bytes
+        // already written to `w` are garbage — discard them.
+        let mut rxs = Vec::with_capacity(self.links.len());
+        let mut send_err: Option<anyhow::Error> = None;
         for r in 0..self.links.len() {
-            self.send(r, Cmd::Checkpoint)?;
-        }
-        let mut blobs = Vec::with_capacity(self.links.len());
-        for (r, res) in self.recv_each().into_iter().enumerate() {
-            match res? {
-                Resp::Blob(b) => blobs.push(b),
-                _ => bail!(
-                    "rank {}: unexpected checkpoint response",
-                    self.links[r].rank
-                ),
+            let (tx, rx) = sync_channel(CKPT_CHANNEL_CAP);
+            match self.send(r, Cmd::Checkpoint(tx)) {
+                Ok(()) => rxs.push(rx),
+                Err(e) => {
+                    // ranks past r never got the command — only the
+                    // first `rxs.len()` links owe a response below
+                    send_err = Some(e);
+                    break;
+                }
             }
         }
-        put_u64(w, SESSION_MAGIC)?;
-        put_u64(w, self.links.len() as u64)?;
-        put_u64(w, self.steps_done)?;
-        for blob in blobs {
-            put_u64(w, blob.len() as u64)?;
-            w.write_all(&blob)?;
+        let mut stream_err: Option<anyhow::Error> = None;
+        if send_err.is_none() {
+            if let Err(e) = (|| -> Result<()> {
+                put_u64(w, SESSION_MAGIC)?;
+                put_u64(w, self.links.len() as u64)?;
+                put_u64(w, self.steps_done)
+            })() {
+                stream_err = Some(e);
+            }
+        }
+        for (r, rx) in rxs.iter().enumerate() {
+            if send_err.is_none() && stream_err.is_none() {
+                if let Err(e) = copy_rank_section(rx, w) {
+                    stream_err = Some(e.context(format!(
+                        "streaming rank {} checkpoint section",
+                        self.links[r].rank
+                    )));
+                }
+            }
+            // always drain to completion: a rank blocked on a full
+            // channel must be able to finish and send its response
+            while rx.recv().is_ok() {}
+        }
+        // receive from every rank that was sent a command before
+        // acting on any failure (the recv_each discipline)
+        let mut rank_err: Option<anyhow::Error> = None;
+        let mut bad_resp: Option<u16> = None;
+        for r in 0..rxs.len() {
+            match self.recv(r) {
+                Ok(Resp::Ack) => {}
+                Ok(_) => {
+                    if bad_resp.is_none() {
+                        bad_resp = Some(self.links[r].rank);
+                    }
+                }
+                Err(e) => {
+                    // the rank-side error has the root cause; it wins
+                    // over the session-side stream symptom
+                    if rank_err.is_none() {
+                        rank_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = rank_err {
+            return Err(e);
+        }
+        if let Some(e) = send_err {
+            return Err(e);
+        }
+        if let Some(e) = stream_err {
+            return Err(e);
+        }
+        if let Some(rank) = bad_resp {
+            bail!("rank {rank}: unexpected checkpoint response");
         }
         Ok(())
     }
@@ -1009,12 +1068,121 @@ enum Cmd {
     RunFor(Step),
     Stimulus(StimUpdate),
     Drain(String),
-    Checkpoint,
+    /// Stream the rank's checkpoint section through the channel:
+    /// [`CkptChunk::Len`] first, then data chunks totalling exactly
+    /// that many bytes, then a final [`Resp::Ack`] / [`Resp::Err`].
+    Checkpoint(SyncSender<CkptChunk>),
     Restore(Vec<u8>),
     /// Report the engine's current per-population (drive, DC) state.
     StimState,
     Memory,
     Finish,
+}
+
+/// One message on a rank's checkpoint stream.
+enum CkptChunk {
+    /// Total section length, announced before any data.
+    Len(u64),
+    Data(Vec<u8>),
+}
+
+/// Streaming-checkpoint chunk size and channel depth: a rank holds at
+/// most `CKPT_CHANNEL_CAP` chunks in flight, so the whole session
+/// buffers O(ranks × chunk) during a checkpoint.
+const CKPT_CHUNK_BYTES: usize = 1 << 20;
+const CKPT_CHANNEL_CAP: usize = 4;
+
+/// Copy one rank's streamed checkpoint section into the sink: write
+/// the announced length as the section's prefix, then forward data
+/// chunks until exactly that many bytes have passed.
+fn copy_rank_section(
+    rx: &Receiver<CkptChunk>,
+    w: &mut impl Write,
+) -> Result<()> {
+    let len = match rx.recv() {
+        Ok(CkptChunk::Len(len)) => len,
+        Ok(CkptChunk::Data(_)) => {
+            bail!("data chunk before the length announcement")
+        }
+        Err(_) => bail!("stream closed before the length announcement"),
+    };
+    put_u64(w, len)?;
+    let mut copied = 0u64;
+    while copied < len {
+        match rx.recv() {
+            Ok(CkptChunk::Data(chunk)) => {
+                copied += chunk.len() as u64;
+                ensure!(
+                    copied <= len,
+                    "rank streamed {copied} bytes but announced {len}"
+                );
+                w.write_all(&chunk)?;
+            }
+            Ok(CkptChunk::Len(_)) => {
+                bail!("second length announcement mid-section")
+            }
+            Err(_) => bail!(
+                "stream closed after {copied} of {len} section bytes"
+            ),
+        }
+    }
+    Ok(())
+}
+
+/// `Write` sink that only counts — the checkpoint sizing pass.
+struct ByteCounter(u64);
+
+impl Write for ByteCounter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0 += buf.len() as u64;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// `Write` sink that ships bounded chunks through the checkpoint
+/// channel — the streaming pass. The bounded send applies
+/// backpressure: a rank serializes no faster than the session copies.
+struct ChunkSink<'a> {
+    tx: &'a SyncSender<CkptChunk>,
+    buf: Vec<u8>,
+}
+
+impl ChunkSink<'_> {
+    fn ship(&mut self) -> std::io::Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        let chunk = std::mem::take(&mut self.buf);
+        self.tx.send(CkptChunk::Data(chunk)).map_err(|_| {
+            std::io::Error::new(
+                std::io::ErrorKind::BrokenPipe,
+                "session hung up mid-checkpoint",
+            )
+        })
+    }
+
+    fn finish(mut self) -> Result<()> {
+        self.ship()?;
+        Ok(())
+    }
+}
+
+impl Write for ChunkSink<'_> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.buf.extend_from_slice(buf);
+        if self.buf.len() >= CKPT_CHUNK_BYTES {
+            self.ship()?;
+        }
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.ship()
+    }
 }
 
 #[derive(Clone, Copy)]
@@ -1034,7 +1202,6 @@ enum Resp {
     Ran,
     Ack,
     Data(Box<ProbeData>),
-    Blob(Vec<u8>),
     Stim(Vec<(PoissonDrive, f64)>),
     Mem(Box<MemoryBreakdown>),
     /// (rank output, total simulation seconds on this rank)
@@ -1215,7 +1382,7 @@ impl RankRuntime {
         // a poisoned transport refuses everything that would advance or
         // snapshot the simulation (teardown still works)
         if let Some(why) = &self.poisoned {
-            if matches!(cmd, Cmd::RunFor(_) | Cmd::Checkpoint) {
+            if matches!(cmd, Cmd::RunFor(_) | Cmd::Checkpoint(_)) {
                 return Resp::Err(format!(
                     "transport poisoned by an earlier exchange \
                      failure: {why}"
@@ -1246,10 +1413,16 @@ impl RankRuntime {
                     None => Resp::Err(format!("no probe named '{name}'")),
                 }
             }
-            Cmd::Checkpoint => match self.checkpoint_blob() {
-                Ok(blob) => Resp::Blob(blob),
-                Err(e) => Resp::Err(format!("{e}")),
-            },
+            Cmd::Checkpoint(tx) => {
+                let res = self.checkpoint_stream(&tx);
+                // close the stream before the final response so the
+                // session's drain loop terminates
+                drop(tx);
+                match res {
+                    Ok(()) => Resp::Ack,
+                    Err(e) => Resp::Err(format!("{e}")),
+                }
+            }
             Cmd::Restore(blob) => match self.restore_blob(&blob) {
                 Ok(()) => Resp::Ack,
                 Err(e) => Resp::Err(format!("{e}")),
@@ -1279,7 +1452,7 @@ impl RankRuntime {
     }
 
     /// Apply queued stimulus updates to the engine. Only called at
-    /// window boundaries (from `window_start` and `checkpoint_blob`),
+    /// window boundaries (from `window_start` and `checkpoint_stream`),
     /// which is what keeps mutation timing reproducible.
     fn apply_pending_stim(&mut self) {
         for up in std::mem::take(&mut self.pending_stim) {
@@ -1332,13 +1505,17 @@ impl RankRuntime {
         Ok(())
     }
 
-    /// Serialize the engine at a window boundary, with the boundary's
-    /// exchange drained into the pending list first so no spike is in
-    /// flight outside the snapshot. Queued stimulus updates are applied
+    /// Serialize the engine at a window boundary, streamed through the
+    /// session's checkpoint channel, with the boundary's exchange
+    /// drained into the pending list first so no spike is in flight
+    /// outside the snapshot. Queued stimulus updates are applied
     /// before serializing — they would take effect at this boundary
     /// anyway (the live session sees the identical schedule), and
     /// flushing them keeps the snapshot's stimulus section complete.
-    fn checkpoint_blob(&mut self) -> Result<Vec<u8>> {
+    fn checkpoint_stream(
+        &mut self,
+        tx: &SyncSender<CkptChunk>,
+    ) -> Result<()> {
         ensure!(
             self.step_in_window == 0,
             "checkpoint requires a window boundary"
@@ -1363,9 +1540,17 @@ impl RankRuntime {
             self.window_drained = true;
         }
         self.apply_pending_stim();
-        let mut blob = Vec::new();
-        self.engine.checkpoint(&mut blob)?;
-        Ok(blob)
+        // sizing pass first (serialization is deterministic and does
+        // not mutate the engine), so the section length can lead the
+        // stream; then the real pass ships bounded chunks instead of
+        // materializing the whole blob
+        let mut counter = ByteCounter(0);
+        self.engine.checkpoint(&mut counter)?;
+        tx.send(CkptChunk::Len(counter.0))
+            .map_err(|_| anyhow!("session hung up mid-checkpoint"))?;
+        let mut sink = ChunkSink { tx, buf: Vec::new() };
+        self.engine.checkpoint(&mut sink)?;
+        sink.finish()
     }
 
     /// Load a per-rank blob into the freshly built engine. The snapshot

@@ -45,6 +45,12 @@
 //!   delivery, serialized exchange).
 //! - [`runtime`] — XLA/PJRT loading + execution of the AOT artifacts
 //!   produced by `python/compile/aot.py`.
+//! - [`serve`]  — `cortex serve`, the resident multi-session daemon:
+//!   many concurrent [`engine::Simulation`] sessions behind a
+//!   versioned length-prefixed control protocol with typed admission
+//!   control against `[serve]` thread/memory quotas, server-push
+//!   probe streaming, and suspend-to-blob with transparent resume
+//!   (plus the [`serve::Client`] behind `cortex client`).
 //! - [`config`], [`metrics`], [`util`], [`cli`] — experiment configuration,
 //!   instrumentation and the from-scratch support substrates (the build is
 //!   fully offline: `anyhow` and `xla` are vendored path crates under
@@ -91,6 +97,7 @@ pub mod model;
 pub mod nest_baseline;
 pub mod probe;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Global neuron id.

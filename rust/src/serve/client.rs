@@ -1,0 +1,200 @@
+//! Typed client for the `cortex serve` control protocol.
+//!
+//! One [`Client`] is one connection: a hello exchange at connect, then
+//! strictly request → (push frames) → final reply. Admission refusals
+//! surface as errors carrying a downcastable
+//! [`AdmissionError`](super::proto::AdmissionError); server-side
+//! simulation failures surface as plain errors. The `cortex client`
+//! subcommand is a thin argv wrapper over these methods, which keeps
+//! the daemon scriptable from CI shell jobs and usable as a library
+//! from tests.
+
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Context, Error, Result};
+
+use crate::probe::ProbeData;
+
+use super::proto::{
+    self, ProbeSpec, Reply, Request, ServeStats,
+};
+
+/// A connected control-protocol endpoint.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect and exchange hellos (magic + protocol version).
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to {addr}"))?;
+        // command/reply turnaround dominates; don't batch tiny frames
+        let _ = stream.set_nodelay(true);
+        let mut client = Client { stream };
+        proto::send_hello(&mut client.stream)?;
+        proto::expect_hello(&mut client.stream)?;
+        Ok(client)
+    }
+
+    /// One request/reply exchange, collecting any push frames that
+    /// precede the final reply.
+    fn call(
+        &mut self,
+        req: &Request,
+    ) -> Result<(Vec<(String, ProbeData)>, Reply)> {
+        proto::write_frame(&mut self.stream, &proto::encode_request(req))?;
+        let mut pushes = Vec::new();
+        loop {
+            let frame = proto::read_frame(&mut self.stream)?;
+            match proto::decode_reply(&frame)? {
+                Reply::Push { probe, data, .. } => {
+                    pushes.push((probe, data))
+                }
+                reply => return Ok((pushes, reply)),
+            }
+        }
+    }
+
+    /// Map the two failure replies to errors; refusals keep the typed
+    /// [`AdmissionError`](super::proto::AdmissionError) downcastable.
+    fn finish(reply: Reply) -> Result<Reply> {
+        match reply {
+            Reply::Refused(adm) => {
+                Err(Error::new(adm).context("admission refused"))
+            }
+            Reply::Error(msg) => Err(anyhow!("server error: {msg}")),
+            other => Ok(other),
+        }
+    }
+
+    /// Create a session from a TOML document plus `key=value`
+    /// overrides (the launcher's config surface) and a probe list.
+    pub fn create(
+        &mut self,
+        doc: &str,
+        overrides: &[String],
+        probes: &[ProbeSpec],
+    ) -> Result<u64> {
+        let (_, reply) = self.call(&Request::Create {
+            doc: doc.to_string(),
+            overrides: overrides.to_vec(),
+            probes: probes.to_vec(),
+        })?;
+        match Self::finish(reply)? {
+            Reply::Created { session } => Ok(session),
+            other => bail!("unexpected create reply: {other:?}"),
+        }
+    }
+
+    /// Advance `steps`; with `push`, returns every probe's drained
+    /// data as streamed by the server.
+    pub fn run(
+        &mut self,
+        session: u64,
+        steps: u64,
+        push: bool,
+    ) -> Result<(u64, Vec<(String, ProbeData)>)> {
+        let (pushes, reply) =
+            self.call(&Request::Run { session, steps, push })?;
+        match Self::finish(reply)? {
+            Reply::Ran { step, .. } => Ok((step, pushes)),
+            other => bail!("unexpected run reply: {other:?}"),
+        }
+    }
+
+    /// Drain one probe by name.
+    pub fn drain(
+        &mut self,
+        session: u64,
+        probe: &str,
+    ) -> Result<ProbeData> {
+        let (_, reply) = self.call(&Request::Drain {
+            session,
+            probe: probe.to_string(),
+        })?;
+        match Self::finish(reply)? {
+            Reply::Data { data, .. } => Ok(data),
+            other => bail!("unexpected drain reply: {other:?}"),
+        }
+    }
+
+    pub fn set_poisson(
+        &mut self,
+        session: u64,
+        pop: &str,
+        rate_hz: f64,
+        weight_pa: f64,
+    ) -> Result<()> {
+        let (_, reply) = self.call(&Request::Poisson {
+            session,
+            pop: pop.to_string(),
+            rate_hz,
+            weight_pa,
+        })?;
+        Self::expect_ok(reply)
+    }
+
+    pub fn set_dc(
+        &mut self,
+        session: u64,
+        pop: &str,
+        dc_pa: f64,
+    ) -> Result<()> {
+        let (_, reply) = self.call(&Request::Dc {
+            session,
+            pop: pop.to_string(),
+            dc_pa,
+        })?;
+        Self::expect_ok(reply)
+    }
+
+    /// Park the session as a checkpoint blob (threads reclaimed).
+    pub fn suspend(&mut self, session: u64) -> Result<()> {
+        let (_, reply) = self.call(&Request::Suspend { session })?;
+        Self::expect_ok(reply)
+    }
+
+    /// Rebuild a suspended session now. Optional — any session
+    /// command resumes transparently — but lets a script pay the
+    /// rebuild cost at a chosen time.
+    pub fn resume(&mut self, session: u64) -> Result<()> {
+        let (_, reply) = self.call(&Request::Resume { session })?;
+        Self::expect_ok(reply)
+    }
+
+    /// Fetch the session's checkpoint container bytes.
+    pub fn checkpoint(&mut self, session: u64) -> Result<Vec<u8>> {
+        let (_, reply) = self.call(&Request::Checkpoint { session })?;
+        match Self::finish(reply)? {
+            Reply::Blob(bytes) => Ok(bytes),
+            other => bail!("unexpected checkpoint reply: {other:?}"),
+        }
+    }
+
+    pub fn close(&mut self, session: u64) -> Result<()> {
+        let (_, reply) = self.call(&Request::Close { session })?;
+        Self::expect_ok(reply)
+    }
+
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        let (_, reply) = self.call(&Request::Stats)?;
+        match Self::finish(reply)? {
+            Reply::Stats(stats) => Ok(stats),
+            other => bail!("unexpected stats reply: {other:?}"),
+        }
+    }
+
+    /// Ask the daemon to exit its serve loop.
+    pub fn shutdown(&mut self) -> Result<()> {
+        let (_, reply) = self.call(&Request::Shutdown)?;
+        Self::expect_ok(reply)
+    }
+
+    fn expect_ok(reply: Reply) -> Result<()> {
+        match Self::finish(reply)? {
+            Reply::Ok => Ok(()),
+            other => bail!("unexpected reply: {other:?}"),
+        }
+    }
+}

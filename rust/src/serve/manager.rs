@@ -1,0 +1,650 @@
+//! Multi-session admission control and lifecycle for `cortex serve`.
+//!
+//! The [`SessionManager`] owns every hosted [`Simulation`] and meters
+//! two shared quotas from the `[serve]` config: a worker-thread budget
+//! (one session costs `ranks × threads` rank threads) and an optional
+//! resident-memory budget (measured post-build from the engine's own
+//! [`Simulation::memory`] accounting, plus suspended checkpoint
+//! blobs). A request the quotas cannot cover is refused with a typed
+//! [`AdmissionError`] — the caller can retry after `close`/`suspend`,
+//! distinguishing "over budget" from a hard failure.
+//!
+//! Concurrency model: connection threads `checkout` a session (its
+//! slot is marked busy), drive it **outside** the manager lock — long
+//! `run_for` calls on one session never block commands to another —
+//! and `checkin` when done. A command addressed to a busy session
+//! fails fast instead of queueing.
+//!
+//! Suspend/resume: `suspend` drains every probe into a parked carry
+//! list, snapshots the session to a CORTEX3 blob
+//! ([`Simulation::checkpoint`]) and tears the rank threads down; only
+//! the blob stays resident. `checkout` of a suspended session rebuilds
+//! it transparently via [`SimulationBuilder::restore`] (re-running
+//! admission, since the quotas may have been claimed meanwhile) and
+//! re-attaches the parked probe data, so a drain after resume returns
+//! exactly what an uninterrupted session would have.
+//!
+//! [`SimulationBuilder::restore`]: crate::engine::SimulationBuilder::restore
+
+use std::collections::HashMap;
+use std::io::Cursor;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::atlas::NetworkSpec;
+use crate::config::{
+    CommTransport, ConfigDoc, EngineKind, ExperimentConfig, ServeConfig,
+};
+use crate::engine::{RunConfig, Simulation};
+use crate::probe::{PhaseStream, PopRates, ProbeData, SpikeRaster};
+
+use super::proto::{AdmissionError, ProbeSpec, ServeStats};
+
+/// Everything needed to build a session's engines — retained so a
+/// suspended session can be rebuilt bit-identically on resume.
+#[derive(Clone)]
+struct SessionCfg {
+    spec: Arc<NetworkSpec>,
+    run: RunConfig,
+    probes: Vec<ProbeSpec>,
+}
+
+/// A hosted session with live rank threads, checked out by one
+/// connection at a time.
+pub struct ActiveSession {
+    sim: Simulation,
+    cfg: SessionCfg,
+    threads: u64,
+    mem_bytes: u64,
+    /// Probe data drained at suspend time, merged back into the next
+    /// drain of the same probe after resume.
+    carry: Vec<(String, ProbeData)>,
+    last_used: Instant,
+}
+
+impl ActiveSession {
+    /// Steps completed so far.
+    pub fn step(&self) -> u64 {
+        self.sim.step()
+    }
+
+    /// Advance all ranks; returns the new step count.
+    pub fn run(&mut self, steps: u64) -> Result<u64> {
+        self.sim.run_for(steps)?;
+        Ok(self.sim.step())
+    }
+
+    /// Drain one probe, merging any parked pre-suspend data in front
+    /// of the freshly collected events.
+    pub fn drain(&mut self, probe: &str) -> Result<ProbeData> {
+        let fresh = self.sim.drain(probe)?;
+        match self.carry.iter().position(|(n, _)| n == probe) {
+            Some(i) => self.carry.remove(i).1.merge(fresh),
+            None => Ok(fresh),
+        }
+    }
+
+    /// Drain every registered probe (the server-push path).
+    pub fn drain_all(&mut self) -> Result<Vec<(String, ProbeData)>> {
+        let names: Vec<String> = self
+            .cfg
+            .probes
+            .iter()
+            .map(|p| p.name().to_string())
+            .collect();
+        let mut out = Vec::with_capacity(names.len());
+        for name in names {
+            let data = self.drain(&name)?;
+            out.push((name, data));
+        }
+        Ok(out)
+    }
+
+    pub fn set_poisson(
+        &mut self,
+        pop: &str,
+        rate_hz: f64,
+        weight_pa: f64,
+    ) -> Result<()> {
+        self.sim.set_poisson(pop, rate_hz, weight_pa)
+    }
+
+    pub fn set_dc(&mut self, pop: &str, dc_pa: f64) -> Result<()> {
+        self.sim.set_dc(pop, dc_pa)
+    }
+
+    /// Serialize the session container (magic, ranks, step, per-rank
+    /// CORTEX3 sections) — the same bytes `cortex run` checkpoints.
+    pub fn checkpoint_bytes(&mut self) -> Result<Vec<u8>> {
+        let mut blob = Vec::new();
+        self.sim.checkpoint(&mut blob)?;
+        Ok(blob)
+    }
+
+    /// True at an exchange-window boundary (where checkpoints are
+    /// legal).
+    fn at_boundary(&self) -> bool {
+        let m = self.cfg.spec.min_delay_steps as u64;
+        m > 0 && self.sim.step() % m == 0
+    }
+}
+
+/// A session parked as a checkpoint blob: no threads, no engines.
+struct SuspendedSession {
+    blob: Vec<u8>,
+    cfg: SessionCfg,
+    threads: u64,
+    parked: Vec<(String, ProbeData)>,
+}
+
+enum Slot {
+    Active(Box<ActiveSession>),
+    Suspended(Box<SuspendedSession>),
+    /// Checked out by a connection thread; commands fail fast rather
+    /// than queue behind it.
+    Busy,
+}
+
+/// The daemon's session table and quota ledger. Wrap in a
+/// `Mutex` and hold the lock only for table operations — checked-out
+/// sessions run outside it.
+pub struct SessionManager {
+    limits: ServeConfig,
+    next_id: u64,
+    slots: HashMap<u64, Slot>,
+    threads_in_use: u64,
+    mem_in_use: u64,
+}
+
+impl SessionManager {
+    pub fn new(limits: ServeConfig) -> SessionManager {
+        SessionManager {
+            limits,
+            next_id: 1,
+            slots: HashMap::new(),
+            threads_in_use: 0,
+            mem_in_use: 0,
+        }
+    }
+
+    fn mem_budget_bytes(&self) -> u64 {
+        (self.limits.memory_budget_mb as u64) << 20
+    }
+
+    /// Parse the client's config document + overrides, run admission,
+    /// build the session, and return its id. Over-quota requests fail
+    /// with a downcastable [`AdmissionError`].
+    pub fn create(
+        &mut self,
+        doc_text: &str,
+        overrides: &[String],
+        probes: &[ProbeSpec],
+    ) -> Result<u64> {
+        if self.slots.len() >= self.limits.max_sessions {
+            return Err(AdmissionError::Sessions {
+                active: self.slots.len() as u64,
+                max: self.limits.max_sessions as u64,
+            }
+            .into());
+        }
+        let mut doc = ConfigDoc::parse(doc_text)?;
+        doc.apply_overrides(overrides)?;
+        let cfg = ExperimentConfig::from_doc(&doc)?;
+        ensure!(
+            cfg.engine == EngineKind::Cortex,
+            "serve hosts the cortex engine only"
+        );
+        ensure!(
+            cfg.transport == CommTransport::Local,
+            "serve sessions use the in-process transport; \
+             distributed TCP runs go through `cortex launch`"
+        );
+        for (i, p) in probes.iter().enumerate() {
+            ensure!(
+                !probes[..i].iter().any(|q| q.name() == p.name()),
+                "duplicate probe name '{}'",
+                p.name()
+            );
+        }
+        let want = (cfg.ranks * cfg.threads) as u64;
+        let cap = self.limits.max_session_threads as u64;
+        if cap != 0 && want > cap {
+            return Err(
+                AdmissionError::SessionThreads { want, max: cap }.into()
+            );
+        }
+        self.admit_threads(want)?;
+        let scfg = SessionCfg {
+            spec: Arc::new(crate::cli::build_spec(&cfg)),
+            run: crate::cli::run_config_of(&cfg),
+            probes: probes.to_vec(),
+        };
+        let mut sim = build_session(&scfg, None)?;
+        let mem_bytes = sim.memory()?.total_bytes();
+        self.admit_memory(mem_bytes)?; // drops `sim` on refusal
+        let id = self.next_id;
+        self.next_id += 1;
+        self.threads_in_use += want;
+        self.mem_in_use += mem_bytes;
+        self.slots.insert(
+            id,
+            Slot::Active(Box::new(ActiveSession {
+                sim,
+                cfg: scfg,
+                threads: want,
+                mem_bytes,
+                carry: Vec::new(),
+                last_used: Instant::now(),
+            })),
+        );
+        Ok(id)
+    }
+
+    fn admit_threads(&self, want: u64) -> Result<()> {
+        let budget = self.limits.thread_budget as u64;
+        if self.threads_in_use + want > budget {
+            return Err(AdmissionError::Threads {
+                want,
+                in_use: self.threads_in_use,
+                budget,
+            }
+            .into());
+        }
+        Ok(())
+    }
+
+    fn admit_memory(&self, want_bytes: u64) -> Result<()> {
+        let budget = self.mem_budget_bytes();
+        if budget != 0 && self.mem_in_use + want_bytes > budget {
+            return Err(AdmissionError::Memory {
+                want_bytes,
+                in_use: self.mem_in_use,
+                budget,
+            }
+            .into());
+        }
+        Ok(())
+    }
+
+    /// Take exclusive ownership of a session for the duration of one
+    /// client command; the slot reads busy until [`checkin`]. A
+    /// suspended session is transparently rebuilt from its blob —
+    /// re-admitted against the thread/memory quotas first.
+    ///
+    /// [`checkin`]: SessionManager::checkin
+    pub fn checkout(&mut self, id: u64) -> Result<Box<ActiveSession>> {
+        let slot = match self.slots.get_mut(&id) {
+            Some(s) => std::mem::replace(s, Slot::Busy),
+            None => bail!("no session {id}"),
+        };
+        match slot {
+            Slot::Busy => {
+                bail!(
+                    "session {id} is busy with another client's command"
+                )
+            }
+            Slot::Active(mut s) => {
+                s.last_used = Instant::now();
+                Ok(s)
+            }
+            Slot::Suspended(s) => match self.resume_suspended(*s) {
+                Ok(active) => Ok(active),
+                Err((parked, e)) => {
+                    // leave the blob in place: resume may succeed once
+                    // quota frees up
+                    self.slots
+                        .insert(id, Slot::Suspended(Box::new(parked)));
+                    Err(e)
+                }
+            },
+        }
+    }
+
+    fn resume_suspended(
+        &mut self,
+        s: SuspendedSession,
+    ) -> std::result::Result<
+        Box<ActiveSession>,
+        (SuspendedSession, anyhow::Error),
+    > {
+        if let Err(e) = self.admit_threads(s.threads) {
+            return Err((s, e));
+        }
+        let mut sim = match build_session(&s.cfg, Some(&s.blob)) {
+            Ok(sim) => sim,
+            Err(e) => return Err((s, e)),
+        };
+        let mem_bytes = match sim.memory() {
+            Ok(m) => m.total_bytes(),
+            Err(e) => return Err((s, e)),
+        };
+        // the blob is released on success, so re-admit the difference
+        let blob_bytes = s.blob.len() as u64;
+        let budget = self.mem_budget_bytes();
+        if budget != 0
+            && self.mem_in_use - blob_bytes + mem_bytes > budget
+        {
+            let e = AdmissionError::Memory {
+                want_bytes: mem_bytes,
+                in_use: self.mem_in_use - blob_bytes,
+                budget,
+            };
+            return Err((s, e.into()));
+        }
+        self.mem_in_use = self.mem_in_use - blob_bytes + mem_bytes;
+        self.threads_in_use += s.threads;
+        Ok(Box::new(ActiveSession {
+            sim,
+            cfg: s.cfg,
+            threads: s.threads,
+            mem_bytes,
+            carry: s.parked,
+            last_used: Instant::now(),
+        }))
+    }
+
+    /// Return a checked-out session to its slot.
+    pub fn checkin(&mut self, id: u64, mut s: Box<ActiveSession>) {
+        s.last_used = Instant::now();
+        self.slots.insert(id, Slot::Active(s));
+    }
+
+    /// Snapshot a session to its checkpoint blob, drain every probe
+    /// into the parked carry list, and reclaim its rank threads.
+    /// Idempotent on an already-suspended session. Requires an
+    /// exchange-window boundary (run totals that are a multiple of the
+    /// spec's `min_delay_steps`).
+    pub fn suspend(&mut self, id: u64) -> Result<()> {
+        let slot = match self.slots.get_mut(&id) {
+            Some(s) => std::mem::replace(s, Slot::Busy),
+            None => bail!("no session {id}"),
+        };
+        let mut s = match slot {
+            Slot::Suspended(s) => {
+                self.slots.insert(id, Slot::Suspended(s));
+                return Ok(());
+            }
+            Slot::Busy => bail!(
+                "session {id} is busy with another client's command"
+            ),
+            Slot::Active(s) => s,
+        };
+        let parked = match suspend_drain(&mut s) {
+            Ok(parked) => parked,
+            Err(e) => {
+                self.slots.insert(id, Slot::Active(s));
+                return Err(e);
+            }
+        };
+        let mut blob = Vec::new();
+        if let Err(e) = s.sim.checkpoint(&mut blob) {
+            self.slots.insert(id, Slot::Active(s));
+            return Err(e);
+        }
+        // rank threads join here; only the blob stays resident
+        let ActiveSession { sim, cfg, threads, mem_bytes, .. } = *s;
+        drop(sim);
+        self.threads_in_use -= threads;
+        self.mem_in_use -= mem_bytes;
+        self.mem_in_use += blob.len() as u64;
+        self.slots.insert(
+            id,
+            Slot::Suspended(Box::new(SuspendedSession {
+                blob,
+                cfg,
+                threads,
+                parked,
+            })),
+        );
+        Ok(())
+    }
+
+    /// Tear a session down and release its quota.
+    pub fn close(&mut self, id: u64) -> Result<()> {
+        match self.slots.remove(&id) {
+            None => bail!("no session {id}"),
+            Some(Slot::Busy) => {
+                self.slots.insert(id, Slot::Busy);
+                bail!(
+                    "session {id} is busy with another client's command"
+                )
+            }
+            Some(Slot::Active(s)) => {
+                self.threads_in_use -= s.threads;
+                self.mem_in_use -= s.mem_bytes;
+                // dropping the Simulation joins its rank threads
+            }
+            Some(Slot::Suspended(s)) => {
+                self.mem_in_use -= s.blob.len() as u64;
+            }
+        }
+        Ok(())
+    }
+
+    /// Occupancy counters for [`super::proto::Request::Stats`].
+    pub fn stats(&self) -> ServeStats {
+        let mut active = 0u64;
+        let mut suspended = 0u64;
+        for slot in self.slots.values() {
+            match slot {
+                Slot::Active(_) | Slot::Busy => active += 1,
+                Slot::Suspended(_) => suspended += 1,
+            }
+        }
+        ServeStats {
+            sessions: self.slots.len() as u64,
+            active,
+            suspended,
+            threads_in_use: self.threads_in_use,
+            thread_budget: self.limits.thread_budget as u64,
+            mem_in_use: self.mem_in_use,
+            mem_budget: self.mem_budget_bytes(),
+        }
+    }
+
+    /// Suspend sessions idle past the configured timeout (no-op when
+    /// `serve.idle_suspend_ms = 0`). Only sessions parked at a window
+    /// boundary qualify — a mid-window session stays live until its
+    /// next run lands on one.
+    pub fn sweep_idle(&mut self) {
+        if self.limits.idle_suspend_ms == 0 {
+            return;
+        }
+        let timeout =
+            std::time::Duration::from_millis(self.limits.idle_suspend_ms);
+        let due: Vec<u64> = self
+            .slots
+            .iter()
+            .filter_map(|(&id, slot)| match slot {
+                Slot::Active(s)
+                    if s.last_used.elapsed() >= timeout
+                        && s.at_boundary() =>
+                {
+                    Some(id)
+                }
+                _ => None,
+            })
+            .collect();
+        for id in due {
+            // boundary was checked; a failure here (e.g. a poisoned
+            // rank) leaves the session active and surfaces on the
+            // next client command
+            let _ = self.suspend(id);
+        }
+    }
+
+    /// Drop every session (joins all rank threads).
+    pub fn shutdown(&mut self) {
+        self.slots.clear();
+        self.threads_in_use = 0;
+        self.mem_in_use = 0;
+    }
+}
+
+/// Drain every probe ahead of a suspend, merging into any carry left
+/// from a previous suspend cycle.
+fn suspend_drain(
+    s: &mut ActiveSession,
+) -> Result<Vec<(String, ProbeData)>> {
+    ensure!(
+        s.at_boundary(),
+        "suspend requires a window boundary (step {} is not a \
+         multiple of min_delay {})",
+        s.sim.step(),
+        s.cfg.spec.min_delay_steps
+    );
+    s.drain_all()
+}
+
+/// Build (or rebuild from a checkpoint blob) a session's
+/// [`Simulation`] with its probes registered per rank.
+fn build_session(
+    cfg: &SessionCfg,
+    restore: Option<&[u8]>,
+) -> Result<Simulation> {
+    let mut b =
+        Simulation::builder(cfg.spec.clone()).run_config(&cfg.run);
+    for p in &cfg.probes {
+        b = match p {
+            ProbeSpec::Raster { name } => {
+                let n = name.clone();
+                b.probe_with(name, move |_| {
+                    Box::new(SpikeRaster::all(&n))
+                })
+            }
+            ProbeSpec::Rates { name, bin_steps } => {
+                let n = name.clone();
+                let bin = *bin_steps;
+                b.probe_with(name, move |_| {
+                    Box::new(PopRates::new(&n, bin))
+                })
+            }
+            ProbeSpec::Phases { name } => {
+                let n = name.clone();
+                b.probe_with(name, move |_| {
+                    Box::new(PhaseStream::new(&n))
+                })
+            }
+        };
+    }
+    match restore {
+        Some(blob) => b.restore(&mut Cursor::new(blob)),
+        None => b.build(),
+    }
+}
+
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_overrides(ranks: usize, threads: usize) -> Vec<String> {
+        vec![
+            "network.kind=\"random\"".into(),
+            "network.n_neurons=200".into(),
+            "network.indegree=20".into(),
+            "seed=7".into(),
+            format!("engine.ranks={ranks}"),
+            format!("engine.threads={threads}"),
+        ]
+    }
+
+    fn limits(
+        max_sessions: usize,
+        thread_budget: usize,
+        max_session_threads: usize,
+    ) -> ServeConfig {
+        ServeConfig {
+            max_sessions,
+            thread_budget,
+            max_session_threads,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn admission_of(e: &anyhow::Error) -> &AdmissionError {
+        e.downcast_ref::<AdmissionError>().unwrap_or_else(|| {
+            panic!("expected a typed AdmissionError, got: {e:#}")
+        })
+    }
+
+    #[test]
+    fn per_session_thread_cap_refuses_before_building() {
+        let mut mgr = SessionManager::new(limits(4, 16, 2));
+        let err = mgr
+            .create("", &tiny_overrides(2, 2), &[])
+            .unwrap_err();
+        assert_eq!(
+            *admission_of(&err),
+            AdmissionError::SessionThreads { want: 4, max: 2 }
+        );
+        assert_eq!(mgr.stats().sessions, 0);
+    }
+
+    #[test]
+    fn thread_budget_and_session_quota_are_enforced() {
+        let mut mgr = SessionManager::new(limits(2, 2, 0));
+        let a = mgr.create("", &tiny_overrides(1, 2), &[]).unwrap();
+        let err = mgr
+            .create("", &tiny_overrides(1, 1), &[])
+            .unwrap_err();
+        assert_eq!(
+            *admission_of(&err),
+            AdmissionError::Threads { want: 1, in_use: 2, budget: 2 }
+        );
+
+        // suspending A releases its threads; the next create fits
+        mgr.suspend(a).unwrap();
+        assert_eq!(mgr.stats().threads_in_use, 0);
+        let _b = mgr.create("", &tiny_overrides(1, 1), &[]).unwrap();
+
+        // ... but now the session count is the binding quota
+        let err = mgr
+            .create("", &tiny_overrides(1, 1), &[])
+            .unwrap_err();
+        assert_eq!(
+            *admission_of(&err),
+            AdmissionError::Sessions { active: 2, max: 2 }
+        );
+
+        // resume of A must re-admit: B holds 1 of 2 threads, A wants 2
+        let err = mgr.checkout(a).unwrap_err();
+        assert_eq!(
+            *admission_of(&err),
+            AdmissionError::Threads { want: 2, in_use: 1, budget: 2 }
+        );
+        assert_eq!(mgr.stats().suspended, 1, "blob stays parked");
+    }
+
+    #[test]
+    fn close_releases_quota_for_suspended_and_active() {
+        let mut mgr = SessionManager::new(limits(8, 8, 0));
+        let a = mgr.create("", &tiny_overrides(1, 1), &[]).unwrap();
+        let b = mgr.create("", &tiny_overrides(1, 1), &[]).unwrap();
+        mgr.suspend(b).unwrap();
+        assert!(mgr.stats().mem_in_use > 0);
+        mgr.close(a).unwrap();
+        mgr.close(b).unwrap();
+        let s = mgr.stats();
+        assert_eq!(
+            (s.sessions, s.threads_in_use, s.mem_in_use),
+            (0, 0, 0)
+        );
+        assert!(mgr.close(a).is_err(), "double close is an error");
+    }
+
+    #[test]
+    fn busy_sessions_fail_fast() {
+        let mut mgr = SessionManager::new(limits(8, 8, 0));
+        let a = mgr.create("", &tiny_overrides(1, 1), &[]).unwrap();
+        let s = mgr.checkout(a).unwrap();
+        assert!(mgr.checkout(a).is_err());
+        assert!(mgr.suspend(a).is_err());
+        assert!(mgr.close(a).is_err());
+        mgr.checkin(a, s);
+        mgr.close(a).unwrap();
+    }
+}

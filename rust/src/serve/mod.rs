@@ -1,0 +1,284 @@
+//! `cortex serve` — the resident simulation daemon: build once, serve
+//! many.
+//!
+//! The ROADMAP's service direction made concrete: a persistent process
+//! hosts many concurrent [`Simulation`](crate::engine::Simulation)
+//! sessions behind a versioned, length-prefixed control protocol
+//! ([`proto`], reusing the BSB codec's fallible varint discipline and
+//! the TCP transport's magic/version/frame-cap conventions). The
+//! pieces:
+//!
+//! * [`proto`] — wire types: [`Request`]/[`Reply`] frames, typed
+//!   [`ProtoError`] decode failures, probe drain-to-frame
+//!   serialization, typed [`AdmissionError`] refusals.
+//! * [`manager`] — the session table: admission control against
+//!   `[serve]` thread/memory quotas, busy-slot checkout so one
+//!   session's long `run` never blocks another, suspend-to-blob and
+//!   transparent resume.
+//! * [`client`] — a thin typed client ([`Client`]) driving the full
+//!   protocol; `cortex client` wraps it for scripting and CI.
+//!
+//! One OS thread per accepted connection speaks the protocol
+//! synchronously; the shared [`SessionManager`] lock is held only for
+//! table bookkeeping, never across a simulation command, so N clients
+//! drive N sessions genuinely in parallel. Probe output travels as
+//! server-push [`Reply::Push`] frames preceding a run's final reply.
+//! Suspended sessions cost no threads and only their checkpoint blob
+//! in memory; any later command on the session rebuilds it
+//! transparently (re-running admission first).
+
+pub mod client;
+pub mod manager;
+pub mod proto;
+
+pub use client::Client;
+pub use manager::{ActiveSession, SessionManager};
+pub use proto::{
+    AdmissionError, ProbeSpec, ProtoError, Reply, Request, ServeStats,
+};
+
+use std::io;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::ServeConfig;
+use crate::probe::ProbeData;
+
+/// Accept-loop poll interval (the listener is nonblocking so the loop
+/// can observe the shutdown flag and run the idle-suspend sweep).
+const ACCEPT_POLL: Duration = Duration::from_millis(50);
+
+/// Bind the configured listen address and serve until a client sends
+/// [`Request::Shutdown`].
+pub fn serve(limits: &ServeConfig) -> Result<()> {
+    let listener = TcpListener::bind(&limits.addr)
+        .with_context(|| format!("binding {}", limits.addr))?;
+    serve_on(listener, limits.clone())
+}
+
+/// Serve on an already-bound listener (lets tests use an ephemeral
+/// port in-process). Returns after a clean shutdown request.
+pub fn serve_on(
+    listener: TcpListener,
+    limits: ServeConfig,
+) -> Result<()> {
+    let addr = listener.local_addr()?;
+    println!(
+        "cortex serve: listening on {addr} \
+         (max_sessions {}, thread_budget {}, memory_budget_mb {}, \
+         idle_suspend_ms {})",
+        limits.max_sessions,
+        limits.thread_budget,
+        limits.memory_budget_mb,
+        limits.idle_suspend_ms,
+    );
+    listener.set_nonblocking(true)?;
+    let mgr = Arc::new(Mutex::new(SessionManager::new(limits)));
+    let stop = Arc::new(AtomicBool::new(false));
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // the listener's nonblocking flag must not leak onto
+                // the connection socket
+                stream.set_nonblocking(false)?;
+                let mgr = Arc::clone(&mgr);
+                let stop = Arc::clone(&stop);
+                thread::Builder::new()
+                    .name("cortex-serve-conn".into())
+                    .spawn(move || handle_conn(stream, mgr, stop))?;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                lock(&mgr).sweep_idle();
+                thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => return Err(e).context("accepting a connection"),
+        }
+    }
+    lock(&mgr).shutdown();
+    println!("cortex serve: shut down");
+    Ok(())
+}
+
+/// A panicked connection thread must not wedge the daemon: recover
+/// the manager from a poisoned lock instead of propagating.
+fn lock(mgr: &Mutex<SessionManager>) -> MutexGuard<'_, SessionManager> {
+    mgr.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// One connection's synchronous request loop. An undecodable frame
+/// gets a [`Reply::Error`] and a hangup (the stream may be desynced);
+/// a clean EOF between frames ends the loop quietly.
+fn handle_conn(
+    mut stream: TcpStream,
+    mgr: Arc<Mutex<SessionManager>>,
+    stop: Arc<AtomicBool>,
+) {
+    if proto::send_hello(&mut stream).is_err()
+        || proto::expect_hello(&mut stream).is_err()
+    {
+        return;
+    }
+    loop {
+        let frame = match proto::read_frame_opt(&mut stream) {
+            Ok(Some(frame)) => frame,
+            Ok(None) | Err(_) => return,
+        };
+        let req = match proto::decode_request(&frame) {
+            Ok(req) => req,
+            Err(e) => {
+                let rep = Reply::Error(format!("bad request: {e}"));
+                let _ = proto::write_frame(
+                    &mut stream,
+                    &proto::encode_reply(&rep),
+                );
+                return;
+            }
+        };
+        let shutting_down = matches!(req, Request::Shutdown);
+        let reply = dispatch(req, &mgr, &mut stream, &stop);
+        if proto::write_frame(&mut stream, &proto::encode_reply(&reply))
+            .is_err()
+            || shutting_down
+        {
+            return;
+        }
+    }
+}
+
+fn dispatch(
+    req: Request,
+    mgr: &Mutex<SessionManager>,
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+) -> Reply {
+    match req {
+        Request::Create { doc, overrides, probes } => {
+            match lock(mgr).create(&doc, &overrides, &probes) {
+                Ok(id) => Reply::Created { session: id },
+                Err(e) => refusal_or_error(e),
+            }
+        }
+        Request::Run { session, steps, push } => {
+            run_session(session, steps, push, mgr, stream)
+        }
+        Request::Drain { session, probe } => {
+            with_session(session, mgr, |s| {
+                let data = s.drain(&probe)?;
+                Ok(Reply::Data { probe, data })
+            })
+        }
+        Request::Poisson { session, pop, rate_hz, weight_pa } => {
+            with_session(session, mgr, |s| {
+                s.set_poisson(&pop, rate_hz, weight_pa)?;
+                Ok(Reply::Ok)
+            })
+        }
+        Request::Dc { session, pop, dc_pa } => {
+            with_session(session, mgr, |s| {
+                s.set_dc(&pop, dc_pa)?;
+                Ok(Reply::Ok)
+            })
+        }
+        Request::Suspend { session } => {
+            match lock(mgr).suspend(session) {
+                Ok(()) => Reply::Ok,
+                Err(e) => refusal_or_error(e),
+            }
+        }
+        // checkout rebuilds a suspended session; nothing else to do
+        Request::Resume { session } => {
+            with_session(session, mgr, |_s| Ok(Reply::Ok))
+        }
+        Request::Checkpoint { session } => {
+            with_session(session, mgr, |s| {
+                Ok(Reply::Blob(s.checkpoint_bytes()?))
+            })
+        }
+        Request::Close { session } => match lock(mgr).close(session) {
+            Ok(()) => Reply::Ok,
+            Err(e) => Reply::Error(format!("{e:#}")),
+        },
+        Request::Stats => Reply::Stats(lock(mgr).stats()),
+        Request::Shutdown => {
+            stop.store(true, Ordering::SeqCst);
+            Reply::Ok
+        }
+    }
+}
+
+/// Check a session out, run `f` on it **outside** the manager lock,
+/// check it back in. Admission refusals (transparent resume may hit
+/// quota) map to [`Reply::Refused`].
+fn with_session<F>(
+    id: u64,
+    mgr: &Mutex<SessionManager>,
+    f: F,
+) -> Reply
+where
+    F: FnOnce(&mut ActiveSession) -> Result<Reply>,
+{
+    let mut s = match lock(mgr).checkout(id) {
+        Ok(s) => s,
+        Err(e) => return refusal_or_error(e),
+    };
+    let rep = f(&mut s);
+    lock(mgr).checkin(id, s);
+    match rep {
+        Ok(reply) => reply,
+        Err(e) => Reply::Error(format!("{e:#}")),
+    }
+}
+
+/// `Run` with optional server-push: advance outside the lock, then
+/// stream each drained probe as a [`Reply::Push`] frame ahead of the
+/// final [`Reply::Ran`].
+fn run_session(
+    id: u64,
+    steps: u64,
+    push: bool,
+    mgr: &Mutex<SessionManager>,
+    stream: &mut TcpStream,
+) -> Reply {
+    let mut s = match lock(mgr).checkout(id) {
+        Ok(s) => s,
+        Err(e) => return refusal_or_error(e),
+    };
+    let result = (|| -> Result<(u64, Vec<(String, ProbeData)>)> {
+        let step = s.run(steps)?;
+        let pushes = if push { s.drain_all()? } else { Vec::new() };
+        Ok((step, pushes))
+    })();
+    lock(mgr).checkin(id, s);
+    match result {
+        Ok((step, pushes)) => {
+            for (probe, data) in pushes {
+                let frame = proto::encode_reply(&Reply::Push {
+                    session: id,
+                    probe,
+                    data,
+                });
+                if proto::write_frame(stream, &frame).is_err() {
+                    // client went away; the final write fails too and
+                    // the request loop hangs up
+                    break;
+                }
+            }
+            Reply::Ran { session: id, step }
+        }
+        Err(e) => Reply::Error(format!("{e:#}")),
+    }
+}
+
+/// Typed admission refusals travel as [`Reply::Refused`]; everything
+/// else as [`Reply::Error`].
+fn refusal_or_error(e: anyhow::Error) -> Reply {
+    match e.downcast::<AdmissionError>() {
+        Ok(adm) => Reply::Refused(adm),
+        Err(e) => Reply::Error(format!("{e:#}")),
+    }
+}

@@ -1,0 +1,1198 @@
+//! The `cortex serve` control protocol: versioned, length-prefixed
+//! frames carrying session commands and server-push probe data.
+//!
+//! The wire discipline deliberately mirrors the spike-exchange stack:
+//! the varint layer is the BSB codec's ([`crate::comm::bsb`], shared
+//! `put_varint`/`get_varint` with the same 10-byte/63-bit overflow
+//! rules), the transport framing follows the TCP communicator (fixed
+//! magic + version hello, 4-byte little-endian length prefix, a hard
+//! frame-size cap so a corrupt prefix cannot drive a giant
+//! allocation). Every decode path is fallible and total: adversarial
+//! bytes produce a typed [`ProtoError`], never a panic and never an
+//! unbounded `Vec::with_capacity`.
+//!
+//! Frame layout:
+//!
+//! | bytes | content                                         |
+//! |-------|-------------------------------------------------|
+//! | 8     | hello only: magic `0x434f5254_45585356` ("CORTEXSV", LE) |
+//! | 2     | hello only: protocol version (LE)               |
+//! | 4     | every frame: payload length (LE, ≤ 64 MiB)      |
+//! | 1     | payload tag ([`Request`] 0x01.., [`Reply`] 0x81..) |
+//! | ...   | tag-specific fields (varints, length-prefixed UTF-8, f64 LE bits) |
+
+use std::io;
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::bsb::{get_varint, put_varint, CodecError};
+use crate::probe::ProbeData;
+use crate::{Gid, Step};
+
+/// Hello magic: ASCII "CORTEXSV".
+pub const SERVE_MAGIC: u64 = 0x434f_5254_4558_5356;
+/// Control-protocol version; bumped on any wire change.
+pub const SERVE_VERSION: u16 = 1;
+/// Hard cap on one frame's payload (matches the spike-exchange
+/// transport cap): a corrupt or hostile length prefix is rejected
+/// before any allocation.
+pub const MAX_SERVE_FRAME: usize = 64 << 20;
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// Typed decode/handshake failures. Totality contract: any byte string
+/// fed to [`decode_request`]/[`decode_reply`] yields `Ok` or one of
+/// these — the fuzz suite in `comm_wire.rs` holds the codec to it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// Varint-layer failure (truncated buffer, overlong varint, or a
+    /// value too wide for its field), inherited from the BSB codec.
+    Codec(CodecError),
+    /// Payload tag byte not assigned by this protocol version.
+    UnknownTag(u8),
+    /// Payload decoded cleanly but left unconsumed bytes.
+    TrailingBytes { used: usize, len: usize },
+    /// A length-prefixed string was not valid UTF-8.
+    BadUtf8,
+    /// Hello carried the wrong magic — not a cortex serve endpoint.
+    BadMagic { got: u64 },
+    /// Hello magic matched but the protocol version did not.
+    BadVersion { got: u16 },
+    /// Length prefix beyond [`MAX_SERVE_FRAME`].
+    FrameTooLarge { bytes: u64, limit: u64 },
+}
+
+impl From<CodecError> for ProtoError {
+    fn from(e: CodecError) -> Self {
+        ProtoError::Codec(e)
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Codec(e) => write!(f, "{e}"),
+            ProtoError::UnknownTag(t) => {
+                write!(f, "unknown control-frame tag 0x{t:02x}")
+            }
+            ProtoError::TrailingBytes { used, len } => write!(
+                f,
+                "control frame decoded {used} of {len} bytes; \
+                 trailing garbage"
+            ),
+            ProtoError::BadUtf8 => {
+                write!(f, "control frame string is not valid UTF-8")
+            }
+            ProtoError::BadMagic { got } => write!(
+                f,
+                "bad hello magic 0x{got:016x} (want 0x{SERVE_MAGIC:016x}); \
+                 peer is not a cortex serve endpoint"
+            ),
+            ProtoError::BadVersion { got } => write!(
+                f,
+                "protocol version mismatch: peer speaks v{got}, \
+                 this build speaks v{SERVE_VERSION}"
+            ),
+            ProtoError::FrameTooLarge { bytes, limit } => write!(
+                f,
+                "control frame of {bytes} bytes exceeds the {limit}-byte cap"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// Typed admission-control rejection, carried on the wire inside
+/// [`Reply::Refused`] so clients can distinguish "over budget, retry
+/// later" from a hard protocol or simulation error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The daemon already hosts `max` sessions (active + suspended).
+    Sessions { active: u64, max: u64 },
+    /// The shared worker-thread budget cannot cover this session.
+    Threads { want: u64, in_use: u64, budget: u64 },
+    /// The resident-memory budget cannot cover this session.
+    Memory { want_bytes: u64, in_use: u64, budget: u64 },
+    /// The session alone exceeds the per-session thread cap.
+    SessionThreads { want: u64, max: u64 },
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::Sessions { active, max } => write!(
+                f,
+                "session quota exhausted: {active} of {max} sessions \
+                 in use"
+            ),
+            AdmissionError::Threads { want, in_use, budget } => write!(
+                f,
+                "thread budget exhausted: session wants {want} worker \
+                 threads but {in_use} of {budget} are in use"
+            ),
+            AdmissionError::Memory { want_bytes, in_use, budget } => {
+                write!(
+                    f,
+                    "memory budget exhausted: session wants \
+                     {want_bytes} bytes but {in_use} of {budget} are \
+                     in use"
+                )
+            }
+            AdmissionError::SessionThreads { want, max } => write!(
+                f,
+                "session wants {want} worker threads; per-session cap \
+                 is {max}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+// ---------------------------------------------------------------------
+// Message types
+// ---------------------------------------------------------------------
+
+/// A probe to register at session creation, mirroring the built-in
+/// probe constructors the daemon instantiates per rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProbeSpec {
+    /// [`crate::probe::SpikeRaster::all`].
+    Raster { name: String },
+    /// [`crate::probe::PopRates::new`].
+    Rates { name: String, bin_steps: Step },
+    /// [`crate::probe::PhaseStream::new`].
+    Phases { name: String },
+}
+
+impl ProbeSpec {
+    /// The probe's drain name.
+    pub fn name(&self) -> &str {
+        match self {
+            ProbeSpec::Raster { name }
+            | ProbeSpec::Rates { name, .. }
+            | ProbeSpec::Phases { name } => name,
+        }
+    }
+
+    /// Parse the CLI form: `raster:NAME`, `rates:NAME:BIN_STEPS`, or
+    /// `phases:NAME`.
+    pub fn parse(s: &str) -> Result<ProbeSpec> {
+        let mut parts = s.split(':');
+        let kind = parts.next().unwrap_or("");
+        let name = parts
+            .next()
+            .filter(|n| !n.is_empty())
+            .with_context(|| {
+                format!("probe spec '{s}' is missing a name")
+            })?
+            .to_string();
+        let spec = match kind {
+            "raster" => ProbeSpec::Raster { name },
+            "rates" => {
+                let bin = parts.next().with_context(|| {
+                    format!(
+                        "probe spec '{s}' needs rates:NAME:BIN_STEPS"
+                    )
+                })?;
+                let bin_steps = bin.parse::<Step>().with_context(|| {
+                    format!("bad bin_steps '{bin}' in probe spec '{s}'")
+                })?;
+                ProbeSpec::Rates { name, bin_steps }
+            }
+            "phases" => ProbeSpec::Phases { name },
+            other => bail!(
+                "unknown probe kind '{other}' in '{s}' \
+                 (want raster|rates|phases)"
+            ),
+        };
+        if parts.next().is_some() && !matches!(spec, ProbeSpec::Rates { .. })
+        {
+            bail!("trailing fields in probe spec '{s}'");
+        }
+        Ok(spec)
+    }
+}
+
+/// Client → daemon commands.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Build a session: a TOML document (may be empty) plus
+    /// `key=value` override lines, exactly the launcher's config
+    /// surface, and the probes to register.
+    Create {
+        doc: String,
+        overrides: Vec<String>,
+        probes: Vec<ProbeSpec>,
+    },
+    /// Advance the session `steps` steps. With `push`, the daemon
+    /// drains every probe afterwards and streams each as a
+    /// [`Reply::Push`] frame before the final [`Reply::Ran`].
+    Run { session: u64, steps: u64, push: bool },
+    /// Drain one probe by name.
+    Drain { session: u64, probe: String },
+    /// Retune a population's Poisson drive.
+    Poisson { session: u64, pop: String, rate_hz: f64, weight_pa: f64 },
+    /// Retune a population's DC clamp.
+    Dc { session: u64, pop: String, dc_pa: f64 },
+    /// Snapshot to a CORTEX3 blob and release threads + state.
+    Suspend { session: u64 },
+    /// Rebuild a suspended session now (resume is otherwise
+    /// transparent on the next session command).
+    Resume { session: u64 },
+    /// Fetch the session's checkpoint bytes (the `cortex run`
+    /// compatible CORTEX3 session container).
+    Checkpoint { session: u64 },
+    /// Tear the session down and release its quota.
+    Close { session: u64 },
+    /// Daemon-wide occupancy counters.
+    Stats,
+    /// Stop accepting connections and exit the serve loop.
+    Shutdown,
+}
+
+/// Daemon → client responses. `Push` frames may precede the final
+/// reply of a `Run`/`Suspend`; everything else is one frame per
+/// request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    Ok,
+    Created { session: u64 },
+    Refused(AdmissionError),
+    Error(String),
+    Ran { session: u64, step: u64 },
+    Data { probe: String, data: ProbeData },
+    /// Server-push probe frame (precedes the request's final reply).
+    Push { session: u64, probe: String, data: ProbeData },
+    Blob(Vec<u8>),
+    Stats(ServeStats),
+}
+
+/// Daemon occupancy counters ([`Request::Stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServeStats {
+    pub sessions: u64,
+    pub active: u64,
+    pub suspended: u64,
+    pub threads_in_use: u64,
+    pub thread_budget: u64,
+    pub mem_in_use: u64,
+    pub mem_budget: u64,
+}
+
+// ---------------------------------------------------------------------
+// Primitive field codecs
+// ---------------------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(buf: &[u8], pos: &mut usize) -> Result<String, ProtoError> {
+    let len = get_varint(buf, pos)? as usize;
+    if len > buf.len().saturating_sub(*pos) {
+        return Err(CodecError::Truncated.into());
+    }
+    let s = std::str::from_utf8(&buf[*pos..*pos + len])
+        .map_err(|_| ProtoError::BadUtf8)?;
+    *pos += len;
+    Ok(s.to_string())
+}
+
+fn put_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_bits().to_le_bytes());
+}
+
+fn get_f64(buf: &[u8], pos: &mut usize) -> Result<f64, ProtoError> {
+    if buf.len().saturating_sub(*pos) < 8 {
+        return Err(CodecError::Truncated.into());
+    }
+    let bits =
+        u64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(f64::from_bits(bits))
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_varint(out, b.len() as u64);
+    out.extend_from_slice(b);
+}
+
+fn get_bytes(buf: &[u8], pos: &mut usize) -> Result<Vec<u8>, ProtoError> {
+    let len = get_varint(buf, pos)? as usize;
+    if len > buf.len().saturating_sub(*pos) {
+        return Err(CodecError::Truncated.into());
+    }
+    let b = buf[*pos..*pos + len].to_vec();
+    *pos += len;
+    Ok(b)
+}
+
+/// Element-count guard: a declared count larger than the bytes left
+/// cannot be honest (every element costs ≥ 1 byte), so reject before
+/// `Vec::with_capacity` can amplify a hostile prefix.
+fn get_count(buf: &[u8], pos: &mut usize) -> Result<usize, ProtoError> {
+    let n = get_varint(buf, pos)? as usize;
+    if n > buf.len().saturating_sub(*pos) {
+        return Err(CodecError::Truncated.into());
+    }
+    Ok(n)
+}
+
+fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32, ProtoError> {
+    u32::try_from(get_varint(buf, pos)?)
+        .map_err(|_| CodecError::ValueOverflow.into())
+}
+
+fn get_u16(buf: &[u8], pos: &mut usize) -> Result<u16, ProtoError> {
+    u16::try_from(get_varint(buf, pos)?)
+        .map_err(|_| CodecError::ValueOverflow.into())
+}
+
+fn get_bool(buf: &[u8], pos: &mut usize) -> Result<bool, ProtoError> {
+    match get_varint(buf, pos)? {
+        0 => Ok(false),
+        1 => Ok(true),
+        _ => Err(CodecError::ValueOverflow.into()),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Probe data
+// ---------------------------------------------------------------------
+
+const PD_RASTER: u8 = 0;
+const PD_RATES: u8 = 1;
+const PD_TRACES: u8 = 2;
+const PD_WEIGHTS: u8 = 3;
+const PD_PHASES: u8 = 4;
+const PD_LINES: u8 = 5;
+
+/// Serialize a drained [`ProbeData`] into the frame body — the
+/// "drain-to-frame" half of server-push probes.
+pub fn encode_probe_data(out: &mut Vec<u8>, data: &ProbeData) {
+    match data {
+        ProbeData::Raster(events) => {
+            out.push(PD_RASTER);
+            put_varint(out, events.len() as u64);
+            for &(step, gid) in events {
+                put_varint(out, step);
+                put_varint(out, gid as u64);
+            }
+        }
+        ProbeData::Rates { bin_steps, pops, rows } => {
+            out.push(PD_RATES);
+            put_varint(out, *bin_steps);
+            put_varint(out, pops.len() as u64);
+            for p in pops {
+                put_str(out, p);
+            }
+            put_varint(out, rows.len() as u64);
+            for (start, vals) in rows {
+                put_varint(out, *start);
+                put_varint(out, vals.len() as u64);
+                for &v in vals {
+                    put_f64(out, v);
+                }
+            }
+        }
+        ProbeData::Traces(traces) => {
+            out.push(PD_TRACES);
+            put_varint(out, traces.len() as u64);
+            for (gid, pts) in traces {
+                put_varint(out, *gid as u64);
+                put_varint(out, pts.len() as u64);
+                for &(step, v) in pts {
+                    put_varint(out, step);
+                    put_f64(out, v);
+                }
+            }
+        }
+        ProbeData::Weights(snaps) => {
+            out.push(PD_WEIGHTS);
+            put_varint(out, snaps.len() as u64);
+            for (step, edges) in snaps {
+                put_varint(out, *step);
+                put_varint(out, edges.len() as u64);
+                for &(pre, post, delay, w) in edges {
+                    put_varint(out, pre as u64);
+                    put_varint(out, post as u64);
+                    put_varint(out, delay as u64);
+                    put_f64(out, w);
+                }
+            }
+        }
+        ProbeData::Phases(rows) => {
+            out.push(PD_PHASES);
+            put_varint(out, rows.len() as u64);
+            for (rank, phase, secs) in rows {
+                put_varint(out, *rank as u64);
+                put_str(out, phase);
+                put_f64(out, *secs);
+            }
+        }
+        ProbeData::Lines(lines) => {
+            out.push(PD_LINES);
+            put_varint(out, lines.len() as u64);
+            for l in lines {
+                put_str(out, l);
+            }
+        }
+    }
+}
+
+/// Decode one [`ProbeData`]; advances `pos`.
+pub fn decode_probe_data(
+    buf: &[u8],
+    pos: &mut usize,
+) -> Result<ProbeData, ProtoError> {
+    let tag = *buf.get(*pos).ok_or(CodecError::Truncated)?;
+    *pos += 1;
+    match tag {
+        PD_RASTER => {
+            let n = get_count(buf, pos)?;
+            let mut events: Vec<(Step, Gid)> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let step = get_varint(buf, pos)?;
+                let gid = get_u32(buf, pos)?;
+                events.push((step, gid));
+            }
+            Ok(ProbeData::Raster(events))
+        }
+        PD_RATES => {
+            let bin_steps = get_varint(buf, pos)?;
+            let np = get_count(buf, pos)?;
+            let mut pops = Vec::with_capacity(np);
+            for _ in 0..np {
+                pops.push(get_str(buf, pos)?);
+            }
+            let nr = get_count(buf, pos)?;
+            let mut rows: Vec<(Step, Vec<f64>)> = Vec::with_capacity(nr);
+            for _ in 0..nr {
+                let start = get_varint(buf, pos)?;
+                let nv = get_count(buf, pos)?;
+                let mut vals = Vec::with_capacity(nv);
+                for _ in 0..nv {
+                    vals.push(get_f64(buf, pos)?);
+                }
+                rows.push((start, vals));
+            }
+            Ok(ProbeData::Rates { bin_steps, pops, rows })
+        }
+        PD_TRACES => {
+            let n = get_count(buf, pos)?;
+            let mut traces: Vec<(Gid, Vec<(Step, f64)>)> =
+                Vec::with_capacity(n);
+            for _ in 0..n {
+                let gid = get_u32(buf, pos)?;
+                let np = get_count(buf, pos)?;
+                let mut pts = Vec::with_capacity(np);
+                for _ in 0..np {
+                    let step = get_varint(buf, pos)?;
+                    let v = get_f64(buf, pos)?;
+                    pts.push((step, v));
+                }
+                traces.push((gid, pts));
+            }
+            Ok(ProbeData::Traces(traces))
+        }
+        PD_WEIGHTS => {
+            let n = get_count(buf, pos)?;
+            let mut snaps: Vec<(Step, Vec<(Gid, Gid, u16, f64)>)> =
+                Vec::with_capacity(n);
+            for _ in 0..n {
+                let step = get_varint(buf, pos)?;
+                let ne = get_count(buf, pos)?;
+                let mut edges = Vec::with_capacity(ne);
+                for _ in 0..ne {
+                    let pre = get_u32(buf, pos)?;
+                    let post = get_u32(buf, pos)?;
+                    let delay = get_u16(buf, pos)?;
+                    let w = get_f64(buf, pos)?;
+                    edges.push((pre, post, delay, w));
+                }
+                snaps.push((step, edges));
+            }
+            Ok(ProbeData::Weights(snaps))
+        }
+        PD_PHASES => {
+            let n = get_count(buf, pos)?;
+            let mut rows: Vec<(u16, String, f64)> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let rank = get_u16(buf, pos)?;
+                let phase = get_str(buf, pos)?;
+                let secs = get_f64(buf, pos)?;
+                rows.push((rank, phase, secs));
+            }
+            Ok(ProbeData::Phases(rows))
+        }
+        PD_LINES => {
+            let n = get_count(buf, pos)?;
+            let mut lines = Vec::with_capacity(n);
+            for _ in 0..n {
+                lines.push(get_str(buf, pos)?);
+            }
+            Ok(ProbeData::Lines(lines))
+        }
+        other => Err(ProtoError::UnknownTag(other)),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------
+
+const RQ_CREATE: u8 = 0x01;
+const RQ_RUN: u8 = 0x02;
+const RQ_DRAIN: u8 = 0x03;
+const RQ_POISSON: u8 = 0x04;
+const RQ_DC: u8 = 0x05;
+const RQ_SUSPEND: u8 = 0x06;
+const RQ_RESUME: u8 = 0x07;
+const RQ_CHECKPOINT: u8 = 0x08;
+const RQ_CLOSE: u8 = 0x09;
+const RQ_STATS: u8 = 0x0a;
+const RQ_SHUTDOWN: u8 = 0x0b;
+
+const PS_RASTER: u8 = 0;
+const PS_RATES: u8 = 1;
+const PS_PHASES: u8 = 2;
+
+fn put_probe_spec(out: &mut Vec<u8>, p: &ProbeSpec) {
+    match p {
+        ProbeSpec::Raster { name } => {
+            out.push(PS_RASTER);
+            put_str(out, name);
+        }
+        ProbeSpec::Rates { name, bin_steps } => {
+            out.push(PS_RATES);
+            put_str(out, name);
+            put_varint(out, *bin_steps);
+        }
+        ProbeSpec::Phases { name } => {
+            out.push(PS_PHASES);
+            put_str(out, name);
+        }
+    }
+}
+
+fn get_probe_spec(
+    buf: &[u8],
+    pos: &mut usize,
+) -> Result<ProbeSpec, ProtoError> {
+    let tag = *buf.get(*pos).ok_or(CodecError::Truncated)?;
+    *pos += 1;
+    match tag {
+        PS_RASTER => Ok(ProbeSpec::Raster { name: get_str(buf, pos)? }),
+        PS_RATES => Ok(ProbeSpec::Rates {
+            name: get_str(buf, pos)?,
+            bin_steps: get_varint(buf, pos)?,
+        }),
+        PS_PHASES => Ok(ProbeSpec::Phases { name: get_str(buf, pos)? }),
+        other => Err(ProtoError::UnknownTag(other)),
+    }
+}
+
+/// Serialize one request into a frame payload.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::new();
+    match req {
+        Request::Create { doc, overrides, probes } => {
+            out.push(RQ_CREATE);
+            put_str(&mut out, doc);
+            put_varint(&mut out, overrides.len() as u64);
+            for o in overrides {
+                put_str(&mut out, o);
+            }
+            put_varint(&mut out, probes.len() as u64);
+            for p in probes {
+                put_probe_spec(&mut out, p);
+            }
+        }
+        Request::Run { session, steps, push } => {
+            out.push(RQ_RUN);
+            put_varint(&mut out, *session);
+            put_varint(&mut out, *steps);
+            put_varint(&mut out, *push as u64);
+        }
+        Request::Drain { session, probe } => {
+            out.push(RQ_DRAIN);
+            put_varint(&mut out, *session);
+            put_str(&mut out, probe);
+        }
+        Request::Poisson { session, pop, rate_hz, weight_pa } => {
+            out.push(RQ_POISSON);
+            put_varint(&mut out, *session);
+            put_str(&mut out, pop);
+            put_f64(&mut out, *rate_hz);
+            put_f64(&mut out, *weight_pa);
+        }
+        Request::Dc { session, pop, dc_pa } => {
+            out.push(RQ_DC);
+            put_varint(&mut out, *session);
+            put_str(&mut out, pop);
+            put_f64(&mut out, *dc_pa);
+        }
+        Request::Suspend { session } => {
+            out.push(RQ_SUSPEND);
+            put_varint(&mut out, *session);
+        }
+        Request::Resume { session } => {
+            out.push(RQ_RESUME);
+            put_varint(&mut out, *session);
+        }
+        Request::Checkpoint { session } => {
+            out.push(RQ_CHECKPOINT);
+            put_varint(&mut out, *session);
+        }
+        Request::Close { session } => {
+            out.push(RQ_CLOSE);
+            put_varint(&mut out, *session);
+        }
+        Request::Stats => out.push(RQ_STATS),
+        Request::Shutdown => out.push(RQ_SHUTDOWN),
+    }
+    out
+}
+
+/// Decode one request payload; total over arbitrary bytes.
+pub fn decode_request(buf: &[u8]) -> Result<Request, ProtoError> {
+    let mut pos = 0usize;
+    let tag = *buf.get(pos).ok_or(CodecError::Truncated)?;
+    pos += 1;
+    let req = match tag {
+        RQ_CREATE => {
+            let doc = get_str(buf, &mut pos)?;
+            let no = get_count(buf, &mut pos)?;
+            let mut overrides = Vec::with_capacity(no);
+            for _ in 0..no {
+                overrides.push(get_str(buf, &mut pos)?);
+            }
+            let np = get_count(buf, &mut pos)?;
+            let mut probes = Vec::with_capacity(np);
+            for _ in 0..np {
+                probes.push(get_probe_spec(buf, &mut pos)?);
+            }
+            Request::Create { doc, overrides, probes }
+        }
+        RQ_RUN => Request::Run {
+            session: get_varint(buf, &mut pos)?,
+            steps: get_varint(buf, &mut pos)?,
+            push: get_bool(buf, &mut pos)?,
+        },
+        RQ_DRAIN => Request::Drain {
+            session: get_varint(buf, &mut pos)?,
+            probe: get_str(buf, &mut pos)?,
+        },
+        RQ_POISSON => Request::Poisson {
+            session: get_varint(buf, &mut pos)?,
+            pop: get_str(buf, &mut pos)?,
+            rate_hz: get_f64(buf, &mut pos)?,
+            weight_pa: get_f64(buf, &mut pos)?,
+        },
+        RQ_DC => Request::Dc {
+            session: get_varint(buf, &mut pos)?,
+            pop: get_str(buf, &mut pos)?,
+            dc_pa: get_f64(buf, &mut pos)?,
+        },
+        RQ_SUSPEND => {
+            Request::Suspend { session: get_varint(buf, &mut pos)? }
+        }
+        RQ_RESUME => {
+            Request::Resume { session: get_varint(buf, &mut pos)? }
+        }
+        RQ_CHECKPOINT => {
+            Request::Checkpoint { session: get_varint(buf, &mut pos)? }
+        }
+        RQ_CLOSE => {
+            Request::Close { session: get_varint(buf, &mut pos)? }
+        }
+        RQ_STATS => Request::Stats,
+        RQ_SHUTDOWN => Request::Shutdown,
+        other => return Err(ProtoError::UnknownTag(other)),
+    };
+    if pos != buf.len() {
+        return Err(ProtoError::TrailingBytes { used: pos, len: buf.len() });
+    }
+    Ok(req)
+}
+
+// ---------------------------------------------------------------------
+// Replies
+// ---------------------------------------------------------------------
+
+const RP_OK: u8 = 0x81;
+const RP_CREATED: u8 = 0x82;
+const RP_REFUSED: u8 = 0x83;
+const RP_ERROR: u8 = 0x84;
+const RP_RAN: u8 = 0x85;
+const RP_DATA: u8 = 0x86;
+const RP_PUSH: u8 = 0x87;
+const RP_BLOB: u8 = 0x88;
+const RP_STATS: u8 = 0x89;
+
+const ADM_SESSIONS: u8 = 0;
+const ADM_THREADS: u8 = 1;
+const ADM_MEMORY: u8 = 2;
+const ADM_SESSION_THREADS: u8 = 3;
+
+fn put_admission(out: &mut Vec<u8>, e: &AdmissionError) {
+    match e {
+        AdmissionError::Sessions { active, max } => {
+            out.push(ADM_SESSIONS);
+            put_varint(out, *active);
+            put_varint(out, *max);
+        }
+        AdmissionError::Threads { want, in_use, budget } => {
+            out.push(ADM_THREADS);
+            put_varint(out, *want);
+            put_varint(out, *in_use);
+            put_varint(out, *budget);
+        }
+        AdmissionError::Memory { want_bytes, in_use, budget } => {
+            out.push(ADM_MEMORY);
+            put_varint(out, *want_bytes);
+            put_varint(out, *in_use);
+            put_varint(out, *budget);
+        }
+        AdmissionError::SessionThreads { want, max } => {
+            out.push(ADM_SESSION_THREADS);
+            put_varint(out, *want);
+            put_varint(out, *max);
+        }
+    }
+}
+
+fn get_admission(
+    buf: &[u8],
+    pos: &mut usize,
+) -> Result<AdmissionError, ProtoError> {
+    let tag = *buf.get(*pos).ok_or(CodecError::Truncated)?;
+    *pos += 1;
+    match tag {
+        ADM_SESSIONS => Ok(AdmissionError::Sessions {
+            active: get_varint(buf, pos)?,
+            max: get_varint(buf, pos)?,
+        }),
+        ADM_THREADS => Ok(AdmissionError::Threads {
+            want: get_varint(buf, pos)?,
+            in_use: get_varint(buf, pos)?,
+            budget: get_varint(buf, pos)?,
+        }),
+        ADM_MEMORY => Ok(AdmissionError::Memory {
+            want_bytes: get_varint(buf, pos)?,
+            in_use: get_varint(buf, pos)?,
+            budget: get_varint(buf, pos)?,
+        }),
+        ADM_SESSION_THREADS => Ok(AdmissionError::SessionThreads {
+            want: get_varint(buf, pos)?,
+            max: get_varint(buf, pos)?,
+        }),
+        other => Err(ProtoError::UnknownTag(other)),
+    }
+}
+
+/// Serialize one reply into a frame payload.
+pub fn encode_reply(rep: &Reply) -> Vec<u8> {
+    let mut out = Vec::new();
+    match rep {
+        Reply::Ok => out.push(RP_OK),
+        Reply::Created { session } => {
+            out.push(RP_CREATED);
+            put_varint(&mut out, *session);
+        }
+        Reply::Refused(e) => {
+            out.push(RP_REFUSED);
+            put_admission(&mut out, e);
+        }
+        Reply::Error(msg) => {
+            out.push(RP_ERROR);
+            put_str(&mut out, msg);
+        }
+        Reply::Ran { session, step } => {
+            out.push(RP_RAN);
+            put_varint(&mut out, *session);
+            put_varint(&mut out, *step);
+        }
+        Reply::Data { probe, data } => {
+            out.push(RP_DATA);
+            put_str(&mut out, probe);
+            encode_probe_data(&mut out, data);
+        }
+        Reply::Push { session, probe, data } => {
+            out.push(RP_PUSH);
+            put_varint(&mut out, *session);
+            put_str(&mut out, probe);
+            encode_probe_data(&mut out, data);
+        }
+        Reply::Blob(bytes) => {
+            out.push(RP_BLOB);
+            put_bytes(&mut out, bytes);
+        }
+        Reply::Stats(s) => {
+            out.push(RP_STATS);
+            put_varint(&mut out, s.sessions);
+            put_varint(&mut out, s.active);
+            put_varint(&mut out, s.suspended);
+            put_varint(&mut out, s.threads_in_use);
+            put_varint(&mut out, s.thread_budget);
+            put_varint(&mut out, s.mem_in_use);
+            put_varint(&mut out, s.mem_budget);
+        }
+    }
+    out
+}
+
+/// Decode one reply payload; total over arbitrary bytes.
+pub fn decode_reply(buf: &[u8]) -> Result<Reply, ProtoError> {
+    let mut pos = 0usize;
+    let tag = *buf.get(pos).ok_or(CodecError::Truncated)?;
+    pos += 1;
+    let rep = match tag {
+        RP_OK => Reply::Ok,
+        RP_CREATED => {
+            Reply::Created { session: get_varint(buf, &mut pos)? }
+        }
+        RP_REFUSED => Reply::Refused(get_admission(buf, &mut pos)?),
+        RP_ERROR => Reply::Error(get_str(buf, &mut pos)?),
+        RP_RAN => Reply::Ran {
+            session: get_varint(buf, &mut pos)?,
+            step: get_varint(buf, &mut pos)?,
+        },
+        RP_DATA => Reply::Data {
+            probe: get_str(buf, &mut pos)?,
+            data: decode_probe_data(buf, &mut pos)?,
+        },
+        RP_PUSH => Reply::Push {
+            session: get_varint(buf, &mut pos)?,
+            probe: get_str(buf, &mut pos)?,
+            data: decode_probe_data(buf, &mut pos)?,
+        },
+        RP_BLOB => Reply::Blob(get_bytes(buf, &mut pos)?),
+        RP_STATS => Reply::Stats(ServeStats {
+            sessions: get_varint(buf, &mut pos)?,
+            active: get_varint(buf, &mut pos)?,
+            suspended: get_varint(buf, &mut pos)?,
+            threads_in_use: get_varint(buf, &mut pos)?,
+            thread_budget: get_varint(buf, &mut pos)?,
+            mem_in_use: get_varint(buf, &mut pos)?,
+            mem_budget: get_varint(buf, &mut pos)?,
+        }),
+        other => return Err(ProtoError::UnknownTag(other)),
+    };
+    if pos != buf.len() {
+        return Err(ProtoError::TrailingBytes { used: pos, len: buf.len() });
+    }
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// Stream I/O: hello + length-prefixed frames
+// ---------------------------------------------------------------------
+
+/// Write the 10-byte hello (magic + version).
+pub fn send_hello(w: &mut impl io::Write) -> io::Result<()> {
+    w.write_all(&SERVE_MAGIC.to_le_bytes())?;
+    w.write_all(&SERVE_VERSION.to_le_bytes())?;
+    w.flush()
+}
+
+/// Read and validate the peer's hello.
+pub fn expect_hello(r: &mut impl io::Read) -> Result<()> {
+    let mut b = [0u8; 10];
+    r.read_exact(&mut b).context("reading protocol hello")?;
+    let magic = u64::from_le_bytes(b[..8].try_into().unwrap());
+    if magic != SERVE_MAGIC {
+        return Err(ProtoError::BadMagic { got: magic }.into());
+    }
+    let version = u16::from_le_bytes(b[8..].try_into().unwrap());
+    if version != SERVE_VERSION {
+        return Err(ProtoError::BadVersion { got: version }.into());
+    }
+    Ok(())
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl io::Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_SERVE_FRAME {
+        return Err(ProtoError::FrameTooLarge {
+            bytes: payload.len() as u64,
+            limit: MAX_SERVE_FRAME as u64,
+        }
+        .into());
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame payload; errors on EOF (use [`read_frame_opt`] when
+/// a clean close between frames is expected).
+pub fn read_frame(r: &mut impl io::Read) -> Result<Vec<u8>> {
+    read_frame_opt(r)?.context("connection closed")
+}
+
+/// Read one frame payload, or `None` on a clean EOF at a frame
+/// boundary. The length prefix is validated against
+/// [`MAX_SERVE_FRAME`] before any allocation.
+pub fn read_frame_opt(
+    r: &mut impl io::Read,
+) -> Result<Option<Vec<u8>>> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("connection closed mid-frame header"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_SERVE_FRAME {
+        return Err(ProtoError::FrameTooLarge {
+            bytes: len as u64,
+            limit: MAX_SERVE_FRAME as u64,
+        }
+        .into());
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("reading frame payload")?;
+    Ok(Some(buf))
+}
+
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: Request) {
+        let bytes = encode_request(&req);
+        assert_eq!(decode_request(&bytes).unwrap(), req);
+    }
+
+    fn roundtrip_reply(rep: Reply) {
+        let bytes = encode_reply(&rep);
+        assert_eq!(decode_reply(&bytes).unwrap(), rep);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_request(Request::Create {
+            doc: "[network]\nkind = \"potjans\"\n".into(),
+            overrides: vec!["seed=23".into(), "engine.ranks=2".into()],
+            probes: vec![
+                ProbeSpec::Raster { name: "spikes".into() },
+                ProbeSpec::Rates { name: "rates".into(), bin_steps: 100 },
+                ProbeSpec::Phases { name: "phases".into() },
+            ],
+        });
+        roundtrip_request(Request::Run {
+            session: 7,
+            steps: 600,
+            push: true,
+        });
+        roundtrip_request(Request::Drain {
+            session: u64::MAX,
+            probe: "spikes".into(),
+        });
+        roundtrip_request(Request::Poisson {
+            session: 1,
+            pop: "L4e".into(),
+            rate_hz: 8000.0,
+            weight_pa: 87.8,
+        });
+        roundtrip_request(Request::Dc {
+            session: 1,
+            pop: "L4e".into(),
+            dc_pa: -30.5,
+        });
+        roundtrip_request(Request::Suspend { session: 3 });
+        roundtrip_request(Request::Resume { session: 3 });
+        roundtrip_request(Request::Checkpoint { session: 3 });
+        roundtrip_request(Request::Close { session: 3 });
+        roundtrip_request(Request::Stats);
+        roundtrip_request(Request::Shutdown);
+    }
+
+    #[test]
+    fn reply_roundtrips() {
+        roundtrip_reply(Reply::Ok);
+        roundtrip_reply(Reply::Created { session: 42 });
+        roundtrip_reply(Reply::Refused(AdmissionError::Threads {
+            want: 8,
+            in_use: 12,
+            budget: 16,
+        }));
+        roundtrip_reply(Reply::Refused(AdmissionError::Sessions {
+            active: 4,
+            max: 4,
+        }));
+        roundtrip_reply(Reply::Refused(AdmissionError::Memory {
+            want_bytes: 1 << 30,
+            in_use: 1 << 29,
+            budget: 1 << 30,
+        }));
+        roundtrip_reply(Reply::Refused(
+            AdmissionError::SessionThreads { want: 9, max: 8 },
+        ));
+        roundtrip_reply(Reply::Error("rank 1: boom".into()));
+        roundtrip_reply(Reply::Ran { session: 2, step: 1200 });
+        roundtrip_reply(Reply::Blob(vec![0xde, 0xad, 0xbe, 0xef]));
+        roundtrip_reply(Reply::Stats(ServeStats {
+            sessions: 3,
+            active: 2,
+            suspended: 1,
+            threads_in_use: 6,
+            thread_budget: 16,
+            mem_in_use: 1 << 20,
+            mem_budget: 0,
+        }));
+    }
+
+    #[test]
+    fn probe_data_roundtrips() {
+        let variants = vec![
+            ProbeData::Raster(vec![(0, 1), (5, 1599), (600, 0)]),
+            ProbeData::Rates {
+                bin_steps: 100,
+                pops: vec!["E".into(), "I".into()],
+                rows: vec![(0, vec![3.5, 8.25]), (100, vec![0.0, 1.0])],
+            },
+            ProbeData::Traces(vec![(7, vec![(0, -65.0), (1, -64.5)])]),
+            ProbeData::Weights(vec![(
+                300,
+                vec![(0, 1, 15, 87.8), (2, 3, 40, -351.2)],
+            )]),
+            ProbeData::Phases(vec![
+                (0, "compute".into(), 1.25),
+                (1, "comm_wait".into(), 0.5),
+            ]),
+            ProbeData::Lines(vec!["a".into(), "b".into()]),
+        ];
+        for data in variants {
+            roundtrip_reply(Reply::Push {
+                session: 9,
+                probe: "p".into(),
+                data,
+            });
+        }
+    }
+
+    #[test]
+    fn empty_and_unknown_tags_are_typed_errors() {
+        assert!(matches!(
+            decode_request(&[]),
+            Err(ProtoError::Codec(CodecError::Truncated))
+        ));
+        assert!(matches!(
+            decode_request(&[0x7f]),
+            Err(ProtoError::UnknownTag(0x7f))
+        ));
+        assert!(matches!(
+            decode_reply(&[0x01]),
+            Err(ProtoError::UnknownTag(0x01))
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut bytes = encode_request(&Request::Stats);
+        bytes.push(0);
+        assert!(matches!(
+            decode_request(&bytes),
+            Err(ProtoError::TrailingBytes { used: 1, len: 2 })
+        ));
+    }
+
+    #[test]
+    fn absurd_counts_are_rejected_before_allocation() {
+        // Create with 2^60 overrides declared in a 12-byte frame
+        let mut bytes = vec![RQ_CREATE];
+        put_str(&mut bytes, ""); // empty doc
+        put_varint(&mut bytes, 1u64 << 60);
+        let err = decode_request(&bytes).unwrap_err();
+        assert!(matches!(
+            err,
+            ProtoError::Codec(CodecError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn bad_utf8_is_a_typed_error() {
+        let mut bytes = vec![RQ_DRAIN];
+        put_varint(&mut bytes, 5); // session
+        put_varint(&mut bytes, 2); // string length
+        bytes.extend_from_slice(&[0xff, 0xfe]);
+        assert!(matches!(
+            decode_request(&bytes),
+            Err(ProtoError::BadUtf8)
+        ));
+    }
+
+    #[test]
+    fn probe_spec_parse_forms() {
+        assert_eq!(
+            ProbeSpec::parse("raster:spikes").unwrap(),
+            ProbeSpec::Raster { name: "spikes".into() }
+        );
+        assert_eq!(
+            ProbeSpec::parse("rates:r:250").unwrap(),
+            ProbeSpec::Rates { name: "r".into(), bin_steps: 250 }
+        );
+        assert_eq!(
+            ProbeSpec::parse("phases:p").unwrap(),
+            ProbeSpec::Phases { name: "p".into() }
+        );
+        assert!(ProbeSpec::parse("raster").is_err());
+        assert!(ProbeSpec::parse("rates:r").is_err());
+        assert!(ProbeSpec::parse("voltage:v").is_err());
+        assert!(ProbeSpec::parse("raster:a:b").is_err());
+    }
+
+    #[test]
+    fn hello_roundtrip_and_mismatches() {
+        let mut buf = Vec::new();
+        send_hello(&mut buf).unwrap();
+        assert_eq!(buf.len(), 10);
+        expect_hello(&mut &buf[..]).unwrap();
+
+        let mut bad = buf.clone();
+        bad[0] ^= 0xff;
+        let err = expect_hello(&mut &bad[..]).unwrap_err();
+        let proto = err.downcast_ref::<ProtoError>().unwrap();
+        assert!(matches!(proto, ProtoError::BadMagic { .. }));
+
+        let mut old = buf.clone();
+        old[8] = 0xff;
+        old[9] = 0xff;
+        let err = expect_hello(&mut &old[..]).unwrap_err();
+        let proto = err.downcast_ref::<ProtoError>().unwrap();
+        assert!(matches!(
+            proto,
+            ProtoError::BadVersion { got: 0xffff }
+        ));
+    }
+
+    #[test]
+    fn frame_roundtrip_and_oversized_prefix() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        let got = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(got, b"hello");
+        assert!(read_frame_opt(&mut &[][..]).unwrap().is_none());
+
+        // a hostile length prefix must be rejected before allocation
+        let huge = u32::MAX.to_le_bytes();
+        let err = read_frame(&mut &huge[..]).unwrap_err();
+        let proto = err.downcast_ref::<ProtoError>().unwrap();
+        assert!(matches!(proto, ProtoError::FrameTooLarge { .. }));
+    }
+}

@@ -9,7 +9,14 @@
 //! a 2-rank Potjans run over `TcpComm` on localhost produces a spike
 //! raster **bit-identical** to the same spec/seed/threads run over
 //! `LocalComm`, in both `serialized` and `overlap` comm modes.
+//!
+//! The serve control protocol (`serve::proto`) is the same kind of
+//! trust boundary and gets the same adversarial treatment; and the
+//! subscription collective's edge cases — a rank that subscribes to
+//! nothing (zero-edge network) and a single-rank cluster — are pinned
+//! over both transports.
 
+use std::io::Cursor;
 use std::net::TcpListener;
 use std::sync::Arc;
 use std::thread;
@@ -20,10 +27,15 @@ use cortex::atlas::potjans::potjans_spec;
 use cortex::comm::bsb::{self, CodecError};
 use cortex::comm::{Communicator, SpikeMsg, TcpComm};
 use cortex::config::{
-    BuildMode, CommMode, DynamicsBackend, ExecMode, IntegrateMode,
-    MappingKind, RoutingMode,
+    BuildMode, CommMode, ConfigDoc, DynamicsBackend, ExecMode,
+    ExperimentConfig, IntegrateMode, MappingKind, RoutingMode,
 };
 use cortex::engine::{run_simulation, RunConfig, Simulation};
+use cortex::probe::ProbeData;
+use cortex::serve::proto::{self, ProtoError};
+use cortex::serve::{
+    AdmissionError, ProbeSpec, Reply, Request, ServeStats,
+};
 use cortex::util::proptest_lite::{property, Gen};
 
 fn random_window(g: &mut Gen) -> (u32, Vec<SpikeMsg>) {
@@ -434,4 +446,372 @@ fn routed_checkpoints_are_bit_identical_to_broadcast() {
         routed, bcast,
         "routing mode leaked into the checkpointed state"
     );
+}
+
+// ---------------------------------------------------------------------
+// Subscription collective edge cases: zero-subscription ranks and the
+// single-rank cluster, over both transports
+// ---------------------------------------------------------------------
+
+/// A custom network with `indegree = 0`: zero recurrent edges, every
+/// neuron driven only by its background Poisson source. No rank
+/// subscribes to any remote gid, so the delta-coded subscription
+/// lists exchanged at build time are all empty.
+fn zero_edge_spec() -> Arc<cortex::atlas::NetworkSpec> {
+    let mut doc = ConfigDoc::parse("").unwrap();
+    doc.apply_overrides(&[
+        "network.kind=\"custom\"".to_string(),
+        "network.indegree=0".to_string(),
+        "network.populations=[\"E:240:lif:e\", \"I:60:lif:i\"]"
+            .to_string(),
+        "seed=11".to_string(),
+    ])
+    .unwrap();
+    let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+    Arc::new(cortex::cli::build_spec(&cfg))
+}
+
+#[test]
+fn zero_subscription_ranks_agree_with_broadcast() {
+    let spec = zero_edge_spec();
+    assert_eq!(spec.n_edges(), 0, "indegree 0 must build no edges");
+    let bcast =
+        local_run(&spec, CommMode::Overlap, 2, RoutingMode::Broadcast);
+    assert!(
+        !bcast.raster.events.is_empty(),
+        "background Poisson should still drive spikes"
+    );
+    let routed =
+        local_run(&spec, CommMode::Overlap, 2, RoutingMode::Routed);
+    assert_eq!(
+        routed.raster.events, bcast.raster.events,
+        "empty subscription lists changed the raster"
+    );
+    // nothing is subscribed, so routing must strip every spike off
+    // the wire that broadcast would have shipped
+    assert!(
+        routed.comm_bytes <= bcast.comm_bytes,
+        "routed {} > broadcast {}",
+        routed.comm_bytes,
+        bcast.comm_bytes
+    );
+    // and the same exchange must survive real sockets
+    let tcp = tcp_raster_matrix(
+        &spec,
+        CommMode::Overlap,
+        &[STEPS],
+        2,
+        RoutingMode::Routed,
+    );
+    assert_eq!(
+        tcp, bcast.raster.events,
+        "zero-subscription TCP exchange changed the raster"
+    );
+}
+
+#[test]
+fn single_rank_cluster_runs_over_local_and_tcp() {
+    // ranks = 1: the subscription collective has no peers to exchange
+    // with, and the TCP transport must come up as a size-1 cluster
+    let spec = Arc::new(potjans_spec(SCALE, SEED));
+    let routed =
+        local_run(&spec, CommMode::Overlap, 1, RoutingMode::Routed);
+    assert!(!routed.raster.events.is_empty());
+    let bcast =
+        local_run(&spec, CommMode::Overlap, 1, RoutingMode::Broadcast);
+    assert_eq!(
+        routed.raster.events, bcast.raster.events,
+        "routing mode matters on a single rank"
+    );
+    let tcp = tcp_raster_matrix(
+        &spec,
+        CommMode::Overlap,
+        &[STEPS],
+        1,
+        RoutingMode::Routed,
+    );
+    assert_eq!(
+        tcp, routed.raster.events,
+        "single-rank TCP cluster diverged from local"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Serve control protocol: adversarial fuzzing of the second codec
+// ---------------------------------------------------------------------
+
+fn ascii(g: &mut Gen) -> String {
+    let n = g.usize(0..12);
+    (0..n).map(|_| (g.u32(32..127) as u8) as char).collect()
+}
+
+fn sid(g: &mut Gen) -> u64 {
+    g.usize(0..1_000_000) as u64
+}
+
+fn random_probe_spec(g: &mut Gen) -> ProbeSpec {
+    match g.u32(0..3) {
+        0 => ProbeSpec::Raster { name: ascii(g) },
+        1 => ProbeSpec::Rates {
+            name: ascii(g),
+            bin_steps: g.usize(1..1000) as u64,
+        },
+        _ => ProbeSpec::Phases { name: ascii(g) },
+    }
+}
+
+fn random_probe_data(g: &mut Gen) -> ProbeData {
+    match g.u32(0..4) {
+        0 => ProbeData::Raster(
+            (0..g.usize(0..20))
+                .map(|_| (sid(g), g.u32(0..100_000)))
+                .collect(),
+        ),
+        1 => ProbeData::Rates {
+            bin_steps: g.usize(1..100) as u64,
+            pops: (0..g.usize(0..4)).map(|_| ascii(g)).collect(),
+            rows: (0..g.usize(0..6))
+                .map(|_| {
+                    let row = (0..g.usize(0..4))
+                        .map(|_| g.f64(0.0, 50.0))
+                        .collect();
+                    (sid(g), row)
+                })
+                .collect(),
+        },
+        2 => ProbeData::Phases(
+            (0..g.usize(0..6))
+                .map(|_| {
+                    (g.u32(0..8) as u16, ascii(g), g.f64(0.0, 9.0))
+                })
+                .collect(),
+        ),
+        _ => ProbeData::Lines(
+            (0..g.usize(0..5)).map(|_| ascii(g)).collect(),
+        ),
+    }
+}
+
+fn random_serve_request(g: &mut Gen) -> Request {
+    match g.u32(0..10) {
+        0 => Request::Create {
+            doc: ascii(g),
+            overrides: (0..g.usize(0..4)).map(|_| ascii(g)).collect(),
+            probes: (0..g.usize(0..3))
+                .map(|_| random_probe_spec(g))
+                .collect(),
+        },
+        1 => Request::Run {
+            session: sid(g),
+            steps: sid(g),
+            push: g.bool(0.5),
+        },
+        2 => Request::Drain { session: sid(g), probe: ascii(g) },
+        3 => Request::Poisson {
+            session: sid(g),
+            pop: ascii(g),
+            rate_hz: g.f64(0.0, 20_000.0),
+            weight_pa: g.f64(-500.0, 500.0),
+        },
+        4 => Request::Dc {
+            session: sid(g),
+            pop: ascii(g),
+            dc_pa: g.f64(-500.0, 500.0),
+        },
+        5 => Request::Suspend { session: sid(g) },
+        6 => Request::Resume { session: sid(g) },
+        7 => Request::Checkpoint { session: sid(g) },
+        8 => Request::Close { session: sid(g) },
+        _ => {
+            if g.bool(0.5) {
+                Request::Stats
+            } else {
+                Request::Shutdown
+            }
+        }
+    }
+}
+
+fn random_serve_reply(g: &mut Gen) -> Reply {
+    match g.u32(0..9) {
+        0 => Reply::Ok,
+        1 => Reply::Created { session: sid(g) },
+        2 => Reply::Refused(match g.u32(0..4) {
+            0 => AdmissionError::Sessions {
+                active: sid(g),
+                max: sid(g),
+            },
+            1 => AdmissionError::Threads {
+                want: sid(g),
+                in_use: sid(g),
+                budget: sid(g),
+            },
+            2 => AdmissionError::Memory {
+                want_bytes: sid(g),
+                in_use: sid(g),
+                budget: sid(g),
+            },
+            _ => AdmissionError::SessionThreads {
+                want: sid(g),
+                max: sid(g),
+            },
+        }),
+        3 => Reply::Error(ascii(g)),
+        4 => Reply::Ran { session: sid(g), step: sid(g) },
+        5 => Reply::Data {
+            probe: ascii(g),
+            data: random_probe_data(g),
+        },
+        6 => Reply::Push {
+            session: sid(g),
+            probe: ascii(g),
+            data: random_probe_data(g),
+        },
+        7 => Reply::Blob(
+            (0..g.usize(0..64))
+                .map(|_| g.u32(0..256) as u8)
+                .collect(),
+        ),
+        _ => Reply::Stats(ServeStats {
+            sessions: sid(g),
+            active: sid(g),
+            suspended: sid(g),
+            threads_in_use: sid(g),
+            thread_budget: sid(g),
+            mem_in_use: sid(g),
+            mem_budget: sid(g),
+        }),
+    }
+}
+
+#[test]
+fn serve_frames_roundtrip_exactly() {
+    property("serve request/reply roundtrip", 300, |g| {
+        let req = random_serve_request(g);
+        let bytes = proto::encode_request(&req);
+        let back = proto::decode_request(&bytes)
+            .map_err(|e| format!("request decode failed: {e}"))?;
+        if back != req {
+            return Err(format!("request mismatch: {req:?}"));
+        }
+        let rep = random_serve_reply(g);
+        let bytes = proto::encode_reply(&rep);
+        let back = proto::decode_reply(&bytes)
+            .map_err(|e| format!("reply decode failed: {e}"))?;
+        if back != rep {
+            return Err(format!("reply mismatch: {rep:?}"));
+        }
+        // and through the length-prefixed framing layer
+        let mut wire = Vec::new();
+        proto::write_frame(&mut wire, &bytes)
+            .map_err(|e| format!("write_frame failed: {e:#}"))?;
+        let frame = proto::read_frame(&mut Cursor::new(wire))
+            .map_err(|e| format!("read_frame failed: {e:#}"))?;
+        if frame != bytes {
+            return Err("framing changed the payload".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn serve_garbage_never_panics_only_typed_errors() {
+    property("serve garbage decode is total", 500, |g| {
+        let n = g.usize(0..200);
+        let bytes: Vec<u8> =
+            (0..n).map(|_| g.u32(0..256) as u8).collect();
+        // any returned value is fine — Ok or ProtoError, never a panic
+        let _ = proto::decode_request(&bytes);
+        let _ = proto::decode_reply(&bytes);
+        let _ = proto::read_frame_opt(&mut Cursor::new(&bytes));
+        Ok(())
+    });
+}
+
+#[test]
+fn every_truncation_of_a_serve_frame_errors() {
+    property("serve truncations error out", 100, |g| {
+        let req = random_serve_request(g);
+        let bytes = proto::encode_request(&req);
+        for cut in 0..bytes.len() {
+            if proto::decode_request(&bytes[..cut]).is_ok() {
+                return Err(format!(
+                    "request prefix {cut}/{} decoded",
+                    bytes.len()
+                ));
+            }
+        }
+        let rep = random_serve_reply(g);
+        let bytes = proto::encode_reply(&rep);
+        for cut in 0..bytes.len() {
+            if proto::decode_reply(&bytes[..cut]).is_ok() {
+                return Err(format!(
+                    "reply prefix {cut}/{} decoded",
+                    bytes.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn serve_bit_flips_never_panic() {
+    property("serve bit flips are total", 300, |g| {
+        let bytes = if g.bool(0.5) {
+            proto::encode_request(&random_serve_request(g))
+        } else {
+            proto::encode_reply(&random_serve_reply(g))
+        };
+        let mut bytes = bytes;
+        let byte = g.usize(0..bytes.len());
+        let bit = g.u32(0..8);
+        bytes[byte] ^= 1 << bit;
+        // a flipped frame may decode to something else or error — it
+        // must only never panic
+        let _ = proto::decode_request(&bytes);
+        let _ = proto::decode_reply(&bytes);
+        Ok(())
+    });
+}
+
+#[test]
+fn oversized_serve_frame_prefix_is_a_typed_error() {
+    // a hostile length prefix must be refused before any allocation
+    let mut wire = Vec::from(u32::MAX.to_le_bytes());
+    wire.extend_from_slice(&[0u8; 16]);
+    let err =
+        proto::read_frame(&mut Cursor::new(wire)).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<ProtoError>(),
+            Some(ProtoError::FrameTooLarge { .. })
+        ),
+        "expected FrameTooLarge, got: {err:#}"
+    );
+}
+
+#[test]
+fn serve_hello_mismatches_are_typed_errors() {
+    let mut good = Vec::new();
+    proto::send_hello(&mut good).unwrap();
+    proto::expect_hello(&mut Cursor::new(good.clone())).unwrap();
+
+    let mut bad_magic = good.clone();
+    bad_magic[0] ^= 0xff;
+    let err = proto::expect_hello(&mut Cursor::new(bad_magic))
+        .unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<ProtoError>(),
+        Some(ProtoError::BadMagic { .. })
+    ));
+
+    let mut bad_version = good;
+    bad_version[8] ^= 0xff;
+    let err = proto::expect_hello(&mut Cursor::new(bad_version))
+        .unwrap_err();
+    assert!(matches!(
+        err.downcast_ref::<ProtoError>(),
+        Some(ProtoError::BadVersion { .. })
+    ));
 }

@@ -1,0 +1,182 @@
+//! End-to-end tests for the `cortex serve` daemon: a real TCP daemon
+//! on an ephemeral port, driven through the typed [`Client`].
+//!
+//! The two acceptance properties of the serve subsystem:
+//! * a session that is suspended and transparently resumed produces a
+//!   spike raster **and** checkpoint bytes bit-identical to an
+//!   uninterrupted in-process run of the same configuration;
+//! * sessions over the `[serve]` thread/session quotas are refused
+//!   with a typed [`AdmissionError`], downcastable client-side.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::Result;
+
+use cortex::cli::{build_spec, run_config_of};
+use cortex::config::{ConfigDoc, ExperimentConfig, ServeConfig};
+use cortex::engine::Simulation;
+use cortex::probe::SpikeRaster;
+use cortex::serve::{self, AdmissionError, Client, ProbeSpec};
+
+/// The acceptance workload: the downscaled Potjans microcircuit, as
+/// shipped in `configs/` (2 ranks × 2 threads, local transport).
+const POTJANS: &str = include_str!("../../configs/potjans.toml");
+
+fn start_daemon(
+    limits: ServeConfig,
+) -> (String, thread::JoinHandle<Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle =
+        thread::spawn(move || serve::serve_on(listener, limits));
+    (addr, handle)
+}
+
+#[test]
+fn suspended_session_is_bit_identical_to_uninterrupted_run() {
+    let (addr, daemon) = start_daemon(ServeConfig::default());
+    let mut client = Client::connect(&addr).unwrap();
+
+    // daemon side: 300 steps, park to a blob, then 300 more — the
+    // second run transparently rebuilds the session from the blob
+    let probes = [ProbeSpec::Raster { name: "spikes".into() }];
+    let sid = client.create(POTJANS, &[], &probes).unwrap();
+    let (step, _) = client.run(sid, 300, false).unwrap();
+    assert_eq!(step, 300);
+    client.suspend(sid).unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.suspended, 1);
+    assert_eq!(stats.active, 0);
+    assert_eq!(stats.threads_in_use, 0, "parked sessions cost no threads");
+    let (step, _) = client.run(sid, 300, false).unwrap();
+    assert_eq!(step, 600);
+    let served = client
+        .drain(sid, "spikes")
+        .unwrap()
+        .into_raster()
+        .unwrap();
+    let served_ckpt = client.checkpoint(sid).unwrap();
+    client.close(sid).unwrap();
+    client.shutdown().unwrap();
+    daemon.join().unwrap().unwrap();
+
+    // reference: the identical configuration run in-process without
+    // interruption
+    let doc = ConfigDoc::parse(POTJANS).unwrap();
+    let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+    let spec = Arc::new(build_spec(&cfg));
+    let rc = run_config_of(&cfg);
+    let mut sim = Simulation::builder(spec)
+        .run_config(&rc)
+        .probe(SpikeRaster::all("spikes"))
+        .build()
+        .unwrap();
+    sim.run_for(600).unwrap();
+    let reference =
+        sim.drain("spikes").unwrap().into_raster().unwrap();
+    let mut reference_ckpt = Vec::new();
+    sim.checkpoint(&mut reference_ckpt).unwrap();
+
+    assert!(!reference.is_empty(), "workload should spike");
+    assert_eq!(served, reference, "raster must survive suspend/resume");
+    assert_eq!(
+        served_ckpt, reference_ckpt,
+        "checkpoint bytes must survive suspend/resume"
+    );
+}
+
+/// A 1-rank × `threads`-thread random network, entirely from
+/// overrides (no document).
+fn tiny_overrides(threads: usize) -> Vec<String> {
+    [
+        "network.kind=\"random\"".to_string(),
+        "network.n_neurons=200".to_string(),
+        "network.indegree=20".to_string(),
+        "seed=7".to_string(),
+        "engine.ranks=1".to_string(),
+        format!("engine.threads={threads}"),
+    ]
+    .to_vec()
+}
+
+fn admission_of(e: &anyhow::Error) -> &AdmissionError {
+    e.downcast_ref::<AdmissionError>()
+        .unwrap_or_else(|| panic!("not an admission error: {e:#}"))
+}
+
+#[test]
+fn over_budget_sessions_are_refused_with_typed_errors() {
+    let (addr, daemon) = start_daemon(ServeConfig {
+        max_sessions: 2,
+        thread_budget: 2,
+        ..ServeConfig::default()
+    });
+    let mut client = Client::connect(&addr).unwrap();
+
+    let a = client.create("", &tiny_overrides(2), &[]).unwrap();
+    client.run(a, 10, false).unwrap();
+
+    // thread budget exhausted: 2 of 2 in use
+    let err =
+        client.create("", &tiny_overrides(1), &[]).unwrap_err();
+    assert_eq!(
+        *admission_of(&err),
+        AdmissionError::Threads { want: 1, in_use: 2, budget: 2 }
+    );
+
+    // suspending releases the threads, so the same request is admitted
+    client.suspend(a).unwrap();
+    let b = client.create("", &tiny_overrides(1), &[]).unwrap();
+
+    // session-count quota is independent of the thread ledger
+    let err =
+        client.create("", &tiny_overrides(1), &[]).unwrap_err();
+    assert_eq!(
+        *admission_of(&err),
+        AdmissionError::Sessions { active: 2, max: 2 }
+    );
+
+    // resuming `a` needs 2 threads but only 1 is free — a typed
+    // refusal, and the parked session must stay parked
+    let err = client.resume(a).unwrap_err();
+    assert_eq!(
+        *admission_of(&err),
+        AdmissionError::Threads { want: 2, in_use: 1, budget: 2 }
+    );
+    assert_eq!(client.stats().unwrap().suspended, 1);
+
+    // closing `b` frees its thread; the resume now goes through and
+    // the session continues from where it was parked
+    client.close(b).unwrap();
+    client.resume(a).unwrap();
+    let (step, _) = client.run(a, 10, false).unwrap();
+    assert_eq!(step, 20);
+
+    // a plain simulation failure is a server error, not a refusal
+    let err = client.run(9999, 10, false).unwrap_err();
+    assert!(err.downcast_ref::<AdmissionError>().is_none());
+    assert!(format!("{err:#}").contains("server error"), "{err:#}");
+
+    client.shutdown().unwrap();
+    daemon.join().unwrap().unwrap();
+}
+
+#[test]
+fn per_session_thread_cap_refuses_oversized_sessions() {
+    let (addr, daemon) = start_daemon(ServeConfig {
+        thread_budget: 8,
+        max_session_threads: 2,
+        ..ServeConfig::default()
+    });
+    let mut client = Client::connect(&addr).unwrap();
+    let err =
+        client.create("", &tiny_overrides(4), &[]).unwrap_err();
+    assert_eq!(
+        *admission_of(&err),
+        AdmissionError::SessionThreads { want: 4, max: 2 }
+    );
+    client.shutdown().unwrap();
+    daemon.join().unwrap().unwrap();
+}

@@ -3,9 +3,12 @@
 //! The build environment has no network registry, so the workspace vendors
 //! the small slice of `anyhow` it actually uses: [`Error`] (a message plus
 //! a cause chain), [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`]
-//! macros, and the [`Context`] extension trait for `Result` and `Option`.
-//! `{e}` prints the outermost message; `{e:#}` prints the whole chain
-//! separated by `": "`, matching real `anyhow`'s alternate formatting.
+//! macros, the [`Context`] extension trait for `Result` and `Option`, and
+//! [`Error::downcast`] / [`Error::downcast_ref`] recovering the original
+//! typed error from a converted one (the serve daemon's typed admission
+//! refusals ride on this). `{e}` prints the outermost message; `{e:#}`
+//! prints the whole chain separated by `": "`, matching real `anyhow`'s
+//! alternate formatting.
 
 use std::error::Error as StdError;
 use std::fmt;
@@ -14,20 +17,34 @@ use std::fmt;
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// A boxed-free error: an owned message plus an optional cause chain.
+/// A layer converted from a typed `std::error::Error` keeps the
+/// original value as its payload so it can be downcast back out.
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    payload: Option<Box<dyn StdError + Send + Sync + 'static>>,
 }
 
 impl Error {
     /// Build an error from any displayable message.
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { msg: message.to_string(), source: None }
+        Error { msg: message.to_string(), source: None, payload: None }
+    }
+
+    /// Build an error from a typed `std::error::Error`, keeping the
+    /// value downcastable (identical to the `From` conversion, named
+    /// as in real `anyhow`).
+    pub fn new<E: StdError + Send + Sync + 'static>(e: E) -> Error {
+        Error::from(e)
     }
 
     /// Wrap this error with an outer context message.
     pub fn context<C: fmt::Display>(self, context: C) -> Error {
-        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+            payload: None,
+        }
     }
 
     /// The cause chain, outermost first (the `{:#}` rendering order).
@@ -40,10 +57,52 @@ impl Error {
         })
     }
 
+    /// Borrow the first error of type `E` in the chain, if any layer
+    /// was converted from one.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            if let Some(hit) =
+                e.payload.as_ref().and_then(|p| p.downcast_ref::<E>())
+            {
+                return Some(hit);
+            }
+            cur = e.source.as_deref();
+        }
+        None
+    }
+
+    /// Recover the first error of type `E` in the chain by value, or
+    /// give the error back unchanged.
+    pub fn downcast<E: StdError + Send + Sync + 'static>(
+        self,
+    ) -> std::result::Result<E, Error> {
+        if self.downcast_ref::<E>().is_none() {
+            return Err(self);
+        }
+        // peel context layers until the matching payload is outermost
+        let mut cur = self;
+        loop {
+            let here = cur
+                .payload
+                .as_ref()
+                .is_some_and(|p| p.downcast_ref::<E>().is_some());
+            if here {
+                let boxed = cur.payload.expect("checked above");
+                match boxed.downcast::<E>() {
+                    Ok(e) => return Ok(*e),
+                    Err(_) => unreachable!("downcast_ref matched"),
+                }
+            }
+            cur = *cur.source.expect("downcast_ref found a match deeper");
+        }
+    }
+
     fn from_std(e: &(dyn StdError + 'static)) -> Error {
         Error {
             msg: e.to_string(),
             source: e.source().map(|s| Box::new(Error::from_std(s))),
+            payload: None,
         }
     }
 }
@@ -81,7 +140,9 @@ impl fmt::Debug for Error {
 // is what makes this blanket conversion coherent.
 impl<E: StdError + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        Error::from_std(&e)
+        let mut err = Error::from_std(&e);
+        err.payload = Some(Box::new(e));
+        err
     }
 }
 
@@ -212,6 +273,26 @@ mod tests {
             format!("{}", fails(true).unwrap_err()),
             "unreachable arm 1"
         );
+    }
+
+    #[test]
+    fn downcast_recovers_the_typed_error() {
+        let e: Error = Error::new(io_err());
+        assert_eq!(
+            e.downcast_ref::<std::io::Error>().unwrap().to_string(),
+            "disk on fire"
+        );
+        // context layers do not hide the payload
+        let wrapped = e.context("while snapshotting");
+        assert!(wrapped.downcast_ref::<std::io::Error>().is_some());
+        assert!(wrapped.downcast_ref::<std::fmt::Error>().is_none());
+        let owned = wrapped.downcast::<std::io::Error>().unwrap();
+        assert_eq!(owned.to_string(), "disk on fire");
+
+        // a message-only error downcasts to nothing and round-trips
+        let plain = anyhow!("no payload here");
+        let back = plain.downcast::<std::io::Error>().unwrap_err();
+        assert_eq!(format!("{back}"), "no payload here");
     }
 
     #[test]
