@@ -1,0 +1,209 @@
+//! **Build amortization across an ensemble** — the acceptance bench of
+//! the topology/state split: one expensive network build shared by
+//! N trajectories must cost (nearly) what a single standalone build
+//! costs, and the shared store must be resident **once**, not N times.
+//!
+//! For an N=4 ensemble over a balanced random network this bench
+//! asserts (a) total ensemble build time — the one shared store build
+//! plus all four state-only trajectory constructions — stays within
+//! 1.2× of a single standalone build (+50 ms jitter allowance), and
+//! (b) the shared-store memory stays under 1.5× one standalone build's
+//! store (standalone × 4 holds it four times). It also re-checks the
+//! bit-identity bar end-to-end: every trajectory's raster and
+//! checkpoint bytes must equal its standalone counterpart's. Results
+//! land in `target/bench_out/BENCH_sweep.json`.
+//!
+//! Run: `cargo bench --bench sweep_scaling` (`-- <n_neurons>
+//! <indegree>` to override the default 8000/100).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use cortex::atlas::random_spec;
+use cortex::engine::{Ensemble, RunConfig, Simulation};
+use cortex::metrics::table::human_bytes;
+use cortex::metrics::Table;
+use cortex::util::json::Json;
+
+const RANKS: usize = 2;
+const THREADS: usize = 2;
+const N_TRAJ: usize = 4;
+const STEPS: u64 = 200;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<usize> = std::env::args()
+        .skip(1)
+        .filter_map(|a| a.parse().ok())
+        .collect();
+    let n = argv.first().copied().unwrap_or(8_000);
+    let k = argv.get(1).copied().unwrap_or(100) as u32;
+    let spec = Arc::new(random_spec(n, k.min((n / 4) as u32), 7));
+    let cfg = RunConfig {
+        ranks: RANKS,
+        threads: THREADS,
+        steps: STEPS,
+        record_limit: Some(u32::MAX),
+        seed: 7,
+        ..Default::default()
+    };
+
+    // N standalone runs: each pays its own full network build
+    let mut solo_build = Vec::new();
+    let mut solo_results = Vec::new();
+    let mut solo_store_bytes = 0u64;
+    for t in 0..N_TRAJ {
+        let mut sim = Simulation::builder(Arc::clone(&spec))
+            .run_config(&cfg)
+            .drive_seed(t as u64 + 1)
+            .build()?;
+        solo_build.push(sim.build_seconds());
+        if t == 0 {
+            let (shared, _) = sim.memory_split()?;
+            solo_store_bytes = shared;
+        }
+        sim.run_for(STEPS)?;
+        let mut blob = Vec::new();
+        sim.checkpoint(&mut blob)?;
+        let out = sim.finish()?;
+        solo_results.push((out.raster.events, blob));
+    }
+    let single_build = solo_build[0];
+
+    // the ensemble: one shared build, then state-only constructions
+    let ens = Ensemble::builder(Arc::clone(&spec))
+        .run_config(&cfg)
+        .build()?;
+    let shared_bytes = ens.shared_memory().total_bytes();
+    let mut traj_build = Vec::new();
+    let mut state_bytes = Vec::new();
+    let mut raster_identical = true;
+    let mut blob_identical = true;
+    for t in 0..N_TRAJ {
+        let t0 = Instant::now();
+        let mut sim =
+            ens.trajectory().drive_seed(t as u64 + 1).build()?;
+        traj_build.push(t0.elapsed().as_secs_f64());
+        let (_, state) = sim.memory_split()?;
+        state_bytes.push(state);
+        sim.run_for(STEPS)?;
+        let mut blob = Vec::new();
+        sim.checkpoint(&mut blob)?;
+        let out = sim.finish()?;
+        let (solo_raster, solo_blob) = &solo_results[t];
+        raster_identical &= *solo_raster == out.raster.events;
+        blob_identical &= *solo_blob == blob;
+        assert!(out.total_spikes > 0, "trajectory {t} inactive");
+    }
+    let ens_total =
+        ens.build_seconds() + traj_build.iter().sum::<f64>();
+
+    assert!(
+        raster_identical,
+        "an ensemble trajectory's raster diverged from standalone"
+    );
+    assert!(
+        blob_identical,
+        "an ensemble trajectory's checkpoint diverged from standalone"
+    );
+    // the amortization bar: N=4 trajectories for ~one build
+    assert!(
+        ens_total <= 1.2 * single_build + 0.05,
+        "ensemble total build {ens_total:.3}s exceeds 1.2x the \
+         single standalone build {single_build:.3}s"
+    );
+    // the memory bar: the store is resident once, not four times
+    assert!(
+        (shared_bytes as f64) < 1.5 * solo_store_bytes as f64,
+        "shared store {shared_bytes} B >= 1.5x one standalone \
+         store {solo_store_bytes} B"
+    );
+
+    let mut table = Table::new(
+        "sweep scaling — one build, N=4 trajectories",
+        &["quantity", "standalone x4", "ensemble"],
+    );
+    table.row(&[
+        "build_s (total)".into(),
+        format!("{:.3}", solo_build.iter().sum::<f64>()),
+        format!("{ens_total:.3}"),
+    ]);
+    table.row(&[
+        "store bytes (resident)".into(),
+        human_bytes(solo_store_bytes * N_TRAJ as u64),
+        human_bytes(shared_bytes),
+    ]);
+    table.row(&[
+        "state bytes / trajectory".into(),
+        "-".into(),
+        human_bytes(state_bytes.iter().sum::<u64>() / N_TRAJ as u64),
+    ]);
+    table.row(&[
+        "bit-identical rasters".into(),
+        "-".into(),
+        raster_identical.to_string(),
+    ]);
+    table.emit(Path::new("target/bench_out"), "sweep_scaling")?;
+
+    let mut obj = BTreeMap::new();
+    obj.insert("n_neurons".into(), Json::Num(spec.n_total() as f64));
+    obj.insert("n_trajectories".into(), Json::Num(N_TRAJ as f64));
+    obj.insert("steps".into(), Json::Num(STEPS as f64));
+    obj.insert(
+        "single_build_seconds".into(),
+        Json::Num(single_build),
+    );
+    obj.insert(
+        "standalone_total_build_seconds".into(),
+        Json::Num(solo_build.iter().sum::<f64>()),
+    );
+    obj.insert(
+        "ensemble_shared_build_seconds".into(),
+        Json::Num(ens.build_seconds()),
+    );
+    obj.insert(
+        "ensemble_total_build_seconds".into(),
+        Json::Num(ens_total),
+    );
+    obj.insert(
+        "build_amortization_ratio".into(),
+        Json::Num(ens_total / single_build.max(1e-9)),
+    );
+    obj.insert(
+        "shared_store_bytes".into(),
+        Json::Num(shared_bytes as f64),
+    );
+    obj.insert(
+        "standalone_store_bytes_x4".into(),
+        Json::Num((solo_store_bytes * N_TRAJ as u64) as f64),
+    );
+    obj.insert(
+        "trajectory_state_bytes".into(),
+        Json::Arr(
+            state_bytes
+                .iter()
+                .map(|&b| Json::Num(b as f64))
+                .collect(),
+        ),
+    );
+    obj.insert(
+        "bit_identical_rasters".into(),
+        Json::Bool(raster_identical),
+    );
+    obj.insert(
+        "bit_identical_checkpoints".into(),
+        Json::Bool(blob_identical),
+    );
+    let out_dir = Path::new("target/bench_out");
+    std::fs::create_dir_all(out_dir)?;
+    std::fs::write(
+        out_dir.join("BENCH_sweep.json"),
+        Json::Obj(obj).to_string_pretty(),
+    )?;
+    println!(
+        "wrote target/bench_out/BENCH_sweep.json; one shared build \
+         served {N_TRAJ} bit-identical trajectories.\n"
+    );
+    Ok(())
+}

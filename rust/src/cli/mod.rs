@@ -5,6 +5,8 @@
 //! cortex run       [--config F] [--set k=v]...   run an experiment
 //!                  [--rank I --peers H:P,...]    … as one TCP cluster rank
 //!                  [--raster-out FILE]           … dumping the spike raster
+//! cortex sweep     [--config F] [--set k=v]...   run the [sweep] grid over
+//!                  [--steps N] [--out FILE]      one shared network build
 //! cortex launch    --ranks N [--config F] ...    spawn an N-process TCP
 //!                  [--port-base P]               cluster on localhost
 //! cortex verify    [--config F] [--set k=v]...   paper §IV.A verification
@@ -33,12 +35,14 @@ use crate::atlas::potjans::{potjans_spec_with, PotjansModels};
 use crate::atlas::{random_spec_with, NetworkSpec};
 use crate::config::{
     CommTransport, ConfigDoc, EngineKind, ExperimentConfig, NetworkKind,
+    SweepDc, SweepPoisson,
 };
 use crate::decomp::{
     area_processes_partition, random_equivalent_partition, RankStore,
 };
 use crate::engine::{
-    integrate_rates, run_simulation, RunConfig, Simulation, Transport,
+    integrate_rates, run_simulation, Ensemble, RunConfig, Simulation,
+    Transport,
 };
 use crate::metrics::table::human_bytes;
 use crate::nest_baseline::{run_nest_simulation, NestRunConfig};
@@ -100,7 +104,7 @@ impl Args {
         let Some(sub) = it.next() else {
             bail!(
                 "usage: cortex \
-                 <run|launch|verify|partition|info|serve|client> \
+                 <run|sweep|launch|verify|partition|info|serve|client> \
                  [options]"
             );
         };
@@ -505,6 +509,302 @@ fn write_raster(path: &str, events: &[(u64, u32)]) -> Result<()> {
         .with_context(|| format!("writing raster to {path}"))?;
     println!("raster written to {path} ({} events)", events.len());
     Ok(())
+}
+
+/// One point of the `[sweep]` grid: a drive seed plus optional
+/// stimulus overrides.
+struct SweepPoint {
+    drive_seed: u64,
+    dc: Option<SweepDc>,
+    poisson: Option<SweepPoisson>,
+}
+
+impl SweepPoint {
+    fn dc_label(&self) -> String {
+        match &self.dc {
+            Some(d) => format!("{}:{}", d.pop, d.dc_pa),
+            None => "-".into(),
+        }
+    }
+
+    fn poisson_label(&self) -> String {
+        match &self.poisson {
+            Some(p) => format!("{}:{}:{}", p.pop, p.rate_hz, p.weight_pa),
+            None => "-".into(),
+        }
+    }
+}
+
+/// One trajectory's merged results.
+struct SweepRow {
+    spikes: u64,
+    rate_hz: f64,
+    /// Integrate ns per neuron-step, averaged over models.
+    ns_per: f64,
+    /// This trajectory's private state bytes (summed over ranks).
+    state_bytes: u64,
+    /// State-only construction seconds (the amortization evidence:
+    /// compare against the shared build).
+    build_seconds: f64,
+    wall_seconds: f64,
+}
+
+/// `cortex sweep` — build the network once ([`Ensemble`]), then run the
+/// `[sweep]` grid of trajectories (drive seeds × DC × Poisson) over the
+/// shared stores, `sweep.parallel` at a time.
+pub fn cmd_sweep(args: &Args) -> Result<()> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let cfg = args.experiment()?;
+    ensure!(
+        cfg.engine == EngineKind::Cortex,
+        "cortex sweep drives the CORTEX engine \
+         (engine.kind = \"cortex\")"
+    );
+    ensure!(
+        cfg.transport == CommTransport::Local,
+        "cortex sweep runs in-process \
+         (engine.transport = \"local\")"
+    );
+    let spec = Arc::new(build_spec(&cfg));
+    println!(
+        "network '{}': {} neurons, {} synapses, {} areas",
+        spec.name,
+        spec.n_total(),
+        spec.n_edges(),
+        spec.n_areas()
+    );
+
+    let ens = Ensemble::builder(Arc::clone(&spec))
+        .run_config(&run_config_of(&cfg))
+        .build()?;
+    let shared_bytes = ens.shared_memory().total_bytes();
+    println!(
+        "shared build: {:.3}s, {} topology across {} ranks x {} threads \
+         (counted once for every trajectory)",
+        ens.build_seconds(),
+        human_bytes(shared_bytes),
+        cfg.ranks,
+        cfg.threads
+    );
+
+    // the grid: seeds × dc × poisson, empty axes contributing a single
+    // "no override" point
+    let seeds = if cfg.sweep.seeds.is_empty() {
+        vec![cfg.seed]
+    } else {
+        cfg.sweep.seeds.clone()
+    };
+    let dc_axis: Vec<Option<SweepDc>> = if cfg.sweep.dc.is_empty() {
+        vec![None]
+    } else {
+        cfg.sweep.dc.iter().cloned().map(Some).collect()
+    };
+    let poisson_axis: Vec<Option<SweepPoisson>> =
+        if cfg.sweep.poisson.is_empty() {
+            vec![None]
+        } else {
+            cfg.sweep.poisson.iter().cloned().map(Some).collect()
+        };
+    let mut points = Vec::new();
+    for &drive_seed in &seeds {
+        for dc in &dc_axis {
+            for poisson in &poisson_axis {
+                points.push(SweepPoint {
+                    drive_seed,
+                    dc: dc.clone(),
+                    poisson: poisson.clone(),
+                });
+            }
+        }
+    }
+    let steps =
+        args.steps.or(cfg.sweep.steps).unwrap_or_else(|| cfg.steps()).max(1);
+    let parallel = cfg.sweep.parallel.max(1).min(points.len());
+    println!(
+        "sweep: {} trajectories ({} seeds x {} dc x {} poisson), \
+         {} steps each, {} concurrent",
+        points.len(),
+        seeds.len(),
+        dc_axis.len(),
+        poisson_axis.len(),
+        steps,
+        parallel
+    );
+
+    // bounded-parallel execution: `parallel` workers pull trajectory
+    // indices off a shared counter (each trajectory is itself a full
+    // multi-rank session over the shared stores)
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<Result<SweepRow>>>> =
+        points.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..parallel {
+            let (next, results, points, ens, spec, cfg) =
+                (&next, &results, &points, &ens, &spec, &cfg);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let row =
+                    run_trajectory(ens, spec, cfg, &points[i], steps);
+                *results[i].lock().unwrap() = Some(row);
+            });
+        }
+    });
+
+    let mut table = crate::metrics::Table::new(
+        "sweep",
+        &[
+            "traj", "seed", "dc", "poisson", "spikes", "rate_hz",
+            "ns/step", "state", "build_s", "wall_s",
+        ],
+    );
+    let mut rows = Vec::with_capacity(points.len());
+    for (i, cell) in results.iter().enumerate() {
+        let row = cell
+            .lock()
+            .unwrap()
+            .take()
+            .expect("sweep worker skipped a trajectory")
+            .with_context(|| format!("trajectory {i} failed"))?;
+        let pt = &points[i];
+        table.row(&[
+            i.to_string(),
+            pt.drive_seed.to_string(),
+            pt.dc_label(),
+            pt.poisson_label(),
+            row.spikes.to_string(),
+            format!("{:.2}", row.rate_hz),
+            format!("{:.1}", row.ns_per),
+            human_bytes(row.state_bytes),
+            format!("{:.3}", row.build_seconds),
+            format!("{:.3}", row.wall_seconds),
+        ]);
+        rows.push(row);
+    }
+    println!("{}", table.render());
+    let max_traj_build = rows
+        .iter()
+        .map(|r| r.build_seconds)
+        .fold(0.0f64, f64::max);
+    println!(
+        "build amortization: shared {:.3}s once vs {:.3}s max per \
+         trajectory ({} trajectories share {} of topology)",
+        ens.build_seconds(),
+        max_traj_build,
+        rows.len(),
+        human_bytes(shared_bytes)
+    );
+
+    if let Some(path) = &args.out {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let trajectories: Vec<Json> = points
+            .iter()
+            .zip(&rows)
+            .map(|(pt, r)| {
+                let mut o = BTreeMap::new();
+                o.insert(
+                    "seed".into(),
+                    Json::Num(pt.drive_seed as f64),
+                );
+                o.insert("dc".into(), Json::Str(pt.dc_label()));
+                o.insert(
+                    "poisson".into(),
+                    Json::Str(pt.poisson_label()),
+                );
+                o.insert("spikes".into(), Json::Num(r.spikes as f64));
+                o.insert("rate_hz".into(), Json::Num(r.rate_hz));
+                o.insert(
+                    "integrate_ns_per_neuron_step".into(),
+                    Json::Num(r.ns_per),
+                );
+                o.insert(
+                    "state_bytes".into(),
+                    Json::Num(r.state_bytes as f64),
+                );
+                o.insert(
+                    "build_seconds".into(),
+                    Json::Num(r.build_seconds),
+                );
+                o.insert(
+                    "wall_seconds".into(),
+                    Json::Num(r.wall_seconds),
+                );
+                Json::Obj(o)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("network".into(), Json::Str(spec.name.clone()));
+        top.insert(
+            "n_neurons".into(),
+            Json::Num(spec.n_total() as f64),
+        );
+        top.insert("steps".into(), Json::Num(steps as f64));
+        top.insert(
+            "shared_build_seconds".into(),
+            Json::Num(ens.build_seconds()),
+        );
+        top.insert(
+            "shared_store_bytes".into(),
+            Json::Num(shared_bytes as f64),
+        );
+        top.insert("trajectories".into(), Json::Arr(trajectories));
+        std::fs::write(path, Json::Obj(top).to_string_pretty())
+            .with_context(|| format!("writing sweep results to {path}"))?;
+        println!("results written to {path}");
+    }
+    Ok(())
+}
+
+/// Run one sweep trajectory over the shared network and merge its
+/// results.
+fn run_trajectory(
+    ens: &Ensemble,
+    spec: &NetworkSpec,
+    cfg: &ExperimentConfig,
+    pt: &SweepPoint,
+    steps: u64,
+) -> Result<SweepRow> {
+    let mut tb = ens
+        .trajectory()
+        .drive_seed(pt.drive_seed)
+        .probe(PopRates::new("rates", steps));
+    if let Some(d) = &pt.dc {
+        tb = tb.dc(&d.pop, d.dc_pa);
+    }
+    if let Some(p) = &pt.poisson {
+        tb = tb.poisson(&p.pop, p.rate_hz, p.weight_pa);
+    }
+    let mut sim = tb.build()?;
+    let build_seconds = sim.build_seconds();
+    let (_shared, state_bytes) = sim.memory_split()?;
+    sim.run_for(steps)?;
+    let _rates = sim.drain("rates")?;
+    let out = sim.finish()?;
+    let (mut ns_weighted, mut n_neurons) = (0.0f64, 0u64);
+    for (_m, n, ns) in integrate_rates(spec, &out.timer_sum, steps) {
+        ns_weighted += ns * n as f64;
+        n_neurons += n;
+    }
+    let rate_hz = out.total_spikes as f64
+        / spec.n_total() as f64
+        / (steps as f64 * cfg.dt_ms * 1e-3);
+    Ok(SweepRow {
+        spikes: out.total_spikes,
+        rate_hz,
+        ns_per: if n_neurons > 0 {
+            ns_weighted / n_neurons as f64
+        } else {
+            0.0
+        },
+        state_bytes,
+        build_seconds,
+        wall_seconds: out.wall_seconds,
+    })
 }
 
 /// `cortex launch` — spawn an N-process TCP cluster on localhost: rank
@@ -989,6 +1289,7 @@ pub fn main_with(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.subcommand.as_str() {
         "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
         "launch" => cmd_launch(&args),
         "verify" => cmd_verify(&args),
         "partition" => cmd_partition(&args),
@@ -997,7 +1298,8 @@ pub fn main_with(argv: &[String]) -> Result<()> {
         "client" => cmd_client(&args),
         other => bail!(
             "unknown subcommand '{other}' \
-             (expected run|launch|verify|partition|info|serve|client)"
+             (expected run|sweep|launch|verify|partition|info|serve|\
+             client)"
         ),
     }
 }
@@ -1076,6 +1378,24 @@ mod tests {
             a.experiment().unwrap().transport,
             CommTransport::Local
         );
+    }
+
+    #[test]
+    fn sweep_flags_parse() {
+        let a = Args::parse(&s(&[
+            "sweep",
+            "--steps",
+            "100",
+            "--out",
+            "/tmp/sweep.json",
+            "--set",
+            "sweep.parallel=2",
+        ]))
+        .unwrap();
+        assert_eq!(a.subcommand, "sweep");
+        assert_eq!(a.steps, Some(100));
+        assert_eq!(a.out.as_deref(), Some("/tmp/sweep.json"));
+        assert_eq!(a.experiment().unwrap().sweep.parallel, 2);
     }
 
     #[test]

@@ -12,6 +12,7 @@ mod toml;
 pub use schema::{
     BuildMode, CommMode, CommTransport, CustomPop, DynamicsBackend,
     EngineKind, ExecMode, ExperimentConfig, IntegrateMode, MappingKind,
-    NetworkKind, RoutingMode, ServeConfig,
+    NetworkKind, RoutingMode, ServeConfig, SweepConfig, SweepDc,
+    SweepPoisson,
 };
 pub use toml::{ConfigDoc, ConfigError, Value};

@@ -218,6 +218,9 @@ pub struct ExperimentConfig {
 
     // [serve]
     pub serve: ServeConfig,
+
+    // [sweep]
+    pub sweep: SweepConfig,
 }
 
 /// `[serve]` — the `cortex serve` daemon's listen address and
@@ -242,6 +245,10 @@ pub struct ServeConfig {
     /// `serve.idle_suspend_ms` — suspend sessions idle this long to
     /// checkpoint blobs (threads reclaimed); `0` disables the sweep.
     pub idle_suspend_ms: u64,
+    /// `serve.spill_dir` — directory suspended-session checkpoint
+    /// blobs spill to (one file per session, deleted on resume/close);
+    /// empty keeps blobs on the heap.
+    pub spill_dir: String,
 }
 
 impl Default for ServeConfig {
@@ -253,6 +260,7 @@ impl Default for ServeConfig {
             max_session_threads: 0,
             memory_budget_mb: 0,
             idle_suspend_ms: 0,
+            spill_dir: String::new(),
         }
     }
 }
@@ -273,7 +281,152 @@ fn serve_config_from(doc: &ConfigDoc) -> Result<ServeConfig, ConfigError> {
         idle_suspend_ms: doc
             .usize("serve.idle_suspend_ms", d.idle_suspend_ms as usize)?
             as u64,
+        spill_dir: doc.str("serve.spill_dir", &d.spill_dir)?,
     })
+}
+
+/// One `sweep.dc` axis point: `"POP:dc_pa"`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepDc {
+    pub pop: String,
+    pub dc_pa: f64,
+}
+
+/// One `sweep.poisson` axis point: `"POP:rate_hz:weight_pa"`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepPoisson {
+    pub pop: String,
+    pub rate_hz: f64,
+    pub weight_pa: f64,
+}
+
+/// `[sweep]` — the trajectory grid `cortex sweep` runs over one shared
+/// network build: the cartesian product of `seeds × dc × poisson`
+/// (empty axes contribute a single "no override" point).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SweepConfig {
+    /// `sweep.steps` — steps per trajectory (default: `sim.sim_ms`).
+    pub steps: Option<u64>,
+    /// `sweep.parallel` — trajectories stepped concurrently
+    /// (`0` = one at a time).
+    pub parallel: usize,
+    /// `sweep.seeds` — Poisson drive seeds (default: the config seed).
+    pub seeds: Vec<u64>,
+    /// `sweep.dc` — DC-offset axis, `"POP:dc_pa"` per point.
+    pub dc: Vec<SweepDc>,
+    /// `sweep.poisson` — Poisson-drive axis, `"POP:rate_hz:weight_pa"`.
+    pub poisson: Vec<SweepPoisson>,
+}
+
+impl SweepConfig {
+    /// Trajectory count of the grid.
+    pub fn n_trajectories(&self) -> usize {
+        self.seeds.len().max(1)
+            * self.dc.len().max(1)
+            * self.poisson.len().max(1)
+    }
+}
+
+fn sweep_config_from(doc: &ConfigDoc) -> Result<SweepConfig, ConfigError> {
+    let steps = match doc.get("sweep.steps") {
+        None => None,
+        Some(v) => Some(
+            v.as_i64().filter(|x| *x > 0).ok_or(ConfigError::Type {
+                key: "sweep.steps".into(),
+                expected: "positive integer",
+            })? as u64,
+        ),
+    };
+    let seeds = match doc.get("sweep.seeds") {
+        None => Vec::new(),
+        Some(Value::Array(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_i64().filter(|x| *x >= 0).map(|x| x as u64).ok_or(
+                    ConfigError::Type {
+                        key: "sweep.seeds".into(),
+                        expected: "array of non-negative integers",
+                    },
+                )
+            })
+            .collect::<Result<_, _>>()?,
+        Some(_) => {
+            return Err(ConfigError::Type {
+                key: "sweep.seeds".into(),
+                expected: "array of non-negative integers",
+            })
+        }
+    };
+    let dc = parse_str_axis(doc, "sweep.dc")?
+        .into_iter()
+        .map(|s| parse_sweep_dc(&s))
+        .collect::<Result<_, _>>()?;
+    let poisson = parse_str_axis(doc, "sweep.poisson")?
+        .into_iter()
+        .map(|s| parse_sweep_poisson(&s))
+        .collect::<Result<_, _>>()?;
+    Ok(SweepConfig {
+        steps,
+        parallel: doc.usize("sweep.parallel", 0)?,
+        seeds,
+        dc,
+        poisson,
+    })
+}
+
+fn parse_str_axis(
+    doc: &ConfigDoc,
+    key: &str,
+) -> Result<Vec<String>, ConfigError> {
+    match doc.get(key) {
+        None => Ok(Vec::new()),
+        Some(Value::Array(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_str().map(str::to_string).ok_or(ConfigError::Type {
+                    key: key.into(),
+                    expected: "array of strings",
+                })
+            })
+            .collect(),
+        Some(_) => Err(ConfigError::Type {
+            key: key.into(),
+            expected: "array of strings",
+        }),
+    }
+}
+
+fn parse_sweep_dc(s: &str) -> Result<SweepDc, ConfigError> {
+    let bad = || ConfigError::Invalid {
+        key: "sweep.dc".into(),
+        msg: format!("'{s}' is not of the form POP:dc_pa"),
+    };
+    let (pop, dc) = s.split_once(':').ok_or_else(bad)?;
+    if pop.is_empty() {
+        return Err(bad());
+    }
+    let dc_pa: f64 = dc.parse().map_err(|_| bad())?;
+    Ok(SweepDc { pop: pop.to_string(), dc_pa })
+}
+
+fn parse_sweep_poisson(s: &str) -> Result<SweepPoisson, ConfigError> {
+    let bad = || ConfigError::Invalid {
+        key: "sweep.poisson".into(),
+        msg: format!("'{s}' is not of the form POP:rate_hz:weight_pa"),
+    };
+    let parts: Vec<&str> = s.split(':').collect();
+    let &[pop, rate, weight] = parts.as_slice() else {
+        return Err(bad());
+    };
+    if pop.is_empty() {
+        return Err(bad());
+    }
+    let rate_hz: f64 = rate.parse().map_err(|_| bad())?;
+    let weight_pa: f64 = weight.parse().map_err(|_| bad())?;
+    if !(rate_hz >= 0.0) {
+        return Err(bad());
+    }
+    Ok(SweepPoisson { pop: pop.to_string(), rate_hz, weight_pa })
 }
 
 impl Default for ExperimentConfig {
@@ -314,6 +467,7 @@ impl Default for ExperimentConfig {
             tcp_rank: None,
             peers: Vec::new(),
             serve: ServeConfig::default(),
+            sweep: SweepConfig::default(),
         }
     }
 }
@@ -440,6 +594,7 @@ impl ExperimentConfig {
             tcp_rank: parse_tcp_rank(doc)?,
             peers: parse_peers(doc)?,
             serve: serve_config_from(doc)?,
+            sweep: sweep_config_from(doc)?,
         };
         // the custom-builder scaffold knobs are not wired into the
         // parametric builders (which have their own calibrated values) —
@@ -558,6 +713,11 @@ impl ExperimentConfig {
                 "serve.max_session_threads",
                 "cannot exceed serve.thread_budget",
             );
+        }
+        if let Some(steps) = self.sweep.steps {
+            if steps == 0 {
+                return bad("sweep.steps", "must be > 0");
+            }
         }
         Ok(())
     }
@@ -904,6 +1064,67 @@ peers = ["127.0.0.1:7001", "127.0.0.1:7002"]
         )
         .unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn sweep_section_parses_and_validates() {
+        // empty doc: one-trajectory default grid, heap-resident serve
+        let doc = ConfigDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sweep, SweepConfig::default());
+        assert_eq!(cfg.sweep.n_trajectories(), 1);
+        assert!(cfg.serve.spill_dir.is_empty());
+
+        let doc = ConfigDoc::parse(
+            r#"
+[sweep]
+steps = 200
+parallel = 2
+seeds = [1, 2, 3]
+dc = ["L5E:30", "L5E:-12.5"]
+poisson = ["E:8000:87.8"]
+[serve]
+spill_dir = "/tmp/spill"
+"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sweep.steps, Some(200));
+        assert_eq!(cfg.sweep.parallel, 2);
+        assert_eq!(cfg.sweep.seeds, vec![1, 2, 3]);
+        assert_eq!(
+            cfg.sweep.dc[1],
+            SweepDc { pop: "L5E".into(), dc_pa: -12.5 }
+        );
+        assert_eq!(
+            cfg.sweep.poisson[0],
+            SweepPoisson {
+                pop: "E".into(),
+                rate_hz: 8000.0,
+                weight_pa: 87.8
+            }
+        );
+        // seeds × dc × poisson
+        assert_eq!(cfg.sweep.n_trajectories(), 6);
+        assert_eq!(cfg.serve.spill_dir, "/tmp/spill");
+
+        // malformed axes are rejected
+        for bad in [
+            "[sweep]\nsteps = 0",
+            "[sweep]\nseeds = [-1]",
+            "[sweep]\nseeds = \"1\"",
+            "[sweep]\ndc = [\"L5E\"]",
+            "[sweep]\ndc = [\"L5E:x\"]",
+            "[sweep]\ndc = [\":30\"]",
+            "[sweep]\npoisson = [\"E:8000\"]",
+            "[sweep]\npoisson = [\"E:-1:87.8\"]",
+        ] {
+            let doc = ConfigDoc::parse(bad).unwrap();
+            assert!(
+                ExperimentConfig::from_doc(&doc).is_err(),
+                "expected error for {bad}"
+            );
+        }
     }
 
     #[test]

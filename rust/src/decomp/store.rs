@@ -913,20 +913,23 @@ impl RankStore {
         subs
     }
 
-    /// Move the per-thread edge stores out (engine construction hands
-    /// each one to its permanently-owning worker; see `engine::workers`).
-    /// Rank-level structure (`posts`, `pres`, ranges, counts) stays.
+    /// Move the per-thread edge stores out. The engine no longer does
+    /// this — since the topology/state split it shares the whole store
+    /// immutably (`Arc<RankStore>`) across worker contexts and
+    /// trajectories — but standalone consumers (benches, ablations)
+    /// may still claim exclusive ownership of the shares.
     pub fn take_threads(&mut self) -> Vec<ThreadEdges> {
         std::mem::take(&mut self.threads)
     }
 
-    /// Memory accounting for the Fig 18 / Fig 9-10 benches. Neuron-model
-    /// state is included analytically while this store still owns the
-    /// per-thread shares; after [`Self::take_threads`] the worker
-    /// contexts own both edges and state and report their actual bytes
-    /// (so `RankEngine::memory` never double-counts). The transient
-    /// construction peak is attached as a gauge — reported next to the
-    /// components, never summed into the steady-state total.
+    /// Memory accounting for the Fig 18 / Fig 9-10 benches, for a store
+    /// inspected **standalone** (`cortex partition`, build benches):
+    /// structure plus an analytic neuron-state figure while the store
+    /// owns its per-thread shares. The engine instead reports
+    /// [`Self::shared_memory`] + its trajectory's actual state bytes,
+    /// which never double-counts. The transient construction peak is
+    /// attached as a gauge — reported next to the components, never
+    /// summed into the steady-state total.
     pub fn memory(&self) -> MemoryBreakdown {
         let mut m = MemoryBreakdown::new();
         m.add("posts", vec_bytes(&self.posts));
@@ -934,6 +937,23 @@ impl RankStore {
         if !self.threads.is_empty() {
             m.add("state", self.state_bytes);
         }
+        for t in &self.threads {
+            m.add("edges", t.bytes());
+        }
+        m.set_gauge("build_peak", self.build.peak_bytes);
+        m
+    }
+
+    /// Bytes of the **shared, immutable** build product alone: gid maps
+    /// plus every thread's edge store, no neuron state. This is what an
+    /// ensemble of N trajectories holds exactly once (each trajectory's
+    /// own state is accounted by `RankEngine::trajectory_memory`), and
+    /// what the serve daemon's admission control charges per built
+    /// network rather than per session state.
+    pub fn shared_memory(&self) -> MemoryBreakdown {
+        let mut m = MemoryBreakdown::new();
+        m.add("posts", vec_bytes(&self.posts));
+        m.add("pres", vec_bytes(&self.pres));
         for t in &self.threads {
             m.add("edges", t.bytes());
         }

@@ -151,7 +151,7 @@ impl RankEngine {
             Vec<&crate::model::dynamics::PopulationState>,
         )> = Vec::new();
         for ctx in &self.ctxs {
-            for b in &ctx.blocks {
+            for b in &ctx.state.blocks {
                 match segs.last_mut() {
                     Some((pop, parts)) if *pop == b.pop => {
                         parts.push(&b.state)
@@ -176,13 +176,13 @@ impl RankEngine {
         }
         // rings: worker buffers are post-major rows of the same ring, so
         // their concatenation is the monolithic ring's buffer
-        put_u64(w, self.ctxs[0].ring_e.len as u64)?;
+        put_u64(w, self.ctxs[0].state.ring_e.len as u64)?;
         let parts: Vec<&[f64]> =
-            self.ctxs.iter().map(|c| c.ring_e.raw()).collect();
+            self.ctxs.iter().map(|c| c.state.ring_e.raw()).collect();
         gather_f64s(w, &parts)?;
-        put_u64(w, self.ctxs[0].ring_i.len as u64)?;
+        put_u64(w, self.ctxs[0].state.ring_i.len as u64)?;
         let parts: Vec<&[f64]> =
-            self.ctxs.iter().map(|c| c.ring_i.raw()).collect();
+            self.ctxs.iter().map(|c| c.state.ring_i.raw()).collect();
         gather_f64s(w, &parts)?;
         // pending spikes
         put_u64(w, self.pending.len() as u64)?;
@@ -195,8 +195,16 @@ impl RankEngine {
             None => put_u64(w, 0)?,
             Some(s) => {
                 put_u64(w, 1)?;
+                // live weights are the trajectory's private copy —
+                // same per-thread order (and therefore bytes) as when
+                // the store's own weights were serialized
                 for ctx in &self.ctxs {
-                    put_f64s(w, &ctx.edges.weight)?;
+                    let ws = ctx
+                        .state
+                        .weights
+                        .as_ref()
+                        .expect("stdp net without weight copy");
+                    put_f64s(w, ws)?;
                 }
                 s.pre_traces.save(w)?;
                 // post traces (worker-owned): values then last-steps,
@@ -204,18 +212,28 @@ impl RankEngine {
                 let parts: Vec<&[f64]> = self
                     .ctxs
                     .iter()
-                    .map(|c| c.post_traces.as_ref().expect("stdp").raw().0)
+                    .map(|c| {
+                        c.state.post_traces.as_ref().expect("stdp").raw().0
+                    })
                     .collect();
                 gather_f64s(w, &parts)?;
                 let total: usize = self
                     .ctxs
                     .iter()
-                    .map(|c| c.post_traces.as_ref().expect("stdp").raw().1.len())
+                    .map(|c| {
+                        c.state
+                            .post_traces
+                            .as_ref()
+                            .expect("stdp")
+                            .raw()
+                            .1
+                            .len()
+                    })
                     .sum();
                 put_u64(w, total as u64)?;
                 for ctx in &self.ctxs {
                     let (_, last) =
-                        ctx.post_traces.as_ref().expect("stdp").raw();
+                        ctx.state.post_traces.as_ref().expect("stdp").raw();
                     for &x in last {
                         put_u64(w, x)?;
                     }
@@ -265,7 +283,7 @@ impl RankEngine {
         // own blocks ((ctx, block) indices per rank-level population run)
         let mut layout: Vec<(u16, u64, Vec<(usize, usize)>)> = Vec::new();
         for (ci, ctx) in self.ctxs.iter().enumerate() {
-            for (bi, b) in ctx.blocks.iter().enumerate() {
+            for (bi, b) in ctx.state.blocks.iter().enumerate() {
                 match layout.last_mut() {
                     Some((pop, _, parts)) if *pop == b.pop => {
                         parts.push((ci, bi))
@@ -297,18 +315,23 @@ impl RankEngine {
             }
             let seg_spans: Vec<usize> = parts
                 .iter()
-                .map(|&(ci, bi)| self.ctxs[ci].blocks[bi].state.len())
+                .map(|&(ci, bi)| {
+                    self.ctxs[ci].state.blocks[bi].state.len()
+                })
                 .collect();
             if f_len != seg_spans.iter().sum::<usize>() {
                 bail!("checkpoint segment length mismatch");
             }
             let (c0, b0) = parts[0];
-            let n_fields = self.ctxs[c0].blocks[b0].state.n_fields();
+            let n_fields =
+                self.ctxs[c0].state.blocks[b0].state.n_fields();
             for f in 0..n_fields {
                 let vals = scatter_f64s(r, &seg_spans)
                     .with_context(|| format!("pop {pop} field {f}"))?;
                 for (&(ci, bi), v) in parts.iter().zip(vals) {
-                    self.ctxs[ci].blocks[bi].state.restore_field(f, v);
+                    self.ctxs[ci].state.blocks[bi]
+                        .state
+                        .restore_field(f, v);
                 }
             }
         }
@@ -318,21 +341,25 @@ impl RankEngine {
                 .ctxs
                 .iter()
                 .map(|c| {
-                    if chan == 0 { c.ring_e.raw().len() } else { c.ring_i.raw().len() }
+                    if chan == 0 {
+                        c.state.ring_e.raw().len()
+                    } else {
+                        c.state.ring_i.raw().len()
+                    }
                 })
                 .collect();
-            if len != self.ctxs[0].ring_e.len {
+            if len != self.ctxs[0].state.ring_e.len {
                 bail!(
                     "ring length mismatch: {len} vs {}",
-                    self.ctxs[0].ring_e.len
+                    self.ctxs[0].state.ring_e.len
                 );
             }
             let parts = scatter_f64s(r, &ring_spans).context("rings")?;
             for (ctx, part) in self.ctxs.iter_mut().zip(parts) {
                 let buf = if chan == 0 {
-                    ctx.ring_e.raw_mut()
+                    ctx.state.ring_e.raw_mut()
                 } else {
-                    ctx.ring_i.raw_mut()
+                    ctx.state.ring_i.raw_mut()
                 };
                 buf.copy_from_slice(&part);
             }
@@ -354,10 +381,12 @@ impl RankEngine {
         if let Some(s) = &mut self.stdp {
             for ctx in &mut self.ctxs {
                 let w = get_f64s(r)?;
-                if w.len() != ctx.edges.weight.len() {
+                if w.len() != ctx.edges().weight.len() {
                     bail!("plastic weight shape mismatch");
                 }
-                ctx.edges.weight = w;
+                // restore into the trajectory's private copy; the
+                // shared store keeps its pristine build-time weights
+                ctx.state.weights = Some(w);
             }
             s.pre_traces.load(r).context("pre_traces")?;
             let values = scatter_f64s(r, &spans).context("post_traces")?;
@@ -376,7 +405,8 @@ impl RankEngine {
             for ((ctx, value), last) in
                 self.ctxs.iter_mut().zip(values).zip(lasts)
             {
-                ctx.post_traces
+                ctx.state
+                    .post_traces
                     .as_mut()
                     .expect("stdp")
                     .raw_restore(value, last)

@@ -1,0 +1,428 @@
+//! Ensemble runtime: build the network **once**, run N trajectories.
+//!
+//! Network construction dominates short parameter sweeps (the paper's
+//! Fig 18 separates build from simulation time for exactly this
+//! reason): every [`super::Simulation`] normally partitions the spec
+//! and constructs its rank stores from scratch. An [`Ensemble`] hoists
+//! that build product — the partition plus one immutable
+//! [`RankStore`] per rank, wrapped in a [`SharedNetwork`] of `Arc`s —
+//! out of the per-run path, so N trajectories pay for it once:
+//!
+//! ```text
+//!            EnsembleBuilder::build()            (expensive, once)
+//!                     │
+//!           SharedNetwork (read-only)
+//!         partition + Arc<RankStore> per rank
+//!           ╱          │          ╲
+//!   trajectory()   trajectory()   trajectory()   (cheap, N times)
+//!        │              │              │
+//!   Simulation     Simulation     Simulation
+//!   state only     state only     state only
+//!   (rings, neuron state, drives, traces, weights*, RNG, probes)
+//! ```
+//!
+//! Each trajectory owns only its mutable per-trajectory state (see
+//! `engine::workers::TrajectoryState`); the store is never written
+//! during stepping — plastic nets mutate a private weight copy. A
+//! trajectory is **bit-identical** to a standalone session over the
+//! same spec/partition issuing the same stimulus schedule: sharing
+//! changes ownership, never arithmetic.
+//!
+//! Trajectories differ by [`TrajectoryBuilder::drive_seed`] (the
+//! Poisson noise stream), DC / Poisson stimulus overrides (queued
+//! exactly like [`super::Simulation::set_dc`] /
+//! [`super::Simulation::set_poisson`] calls before step 0), and
+//! probes. `cortex sweep` drives this API from a `[sweep]` config
+//! section.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use cortex::atlas::random_spec;
+//! use cortex::engine::Ensemble;
+//! use cortex::probe::PopRates;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let spec = Arc::new(random_spec(400, 40, 7));
+//! let ens = Ensemble::builder(Arc::clone(&spec))
+//!     .ranks(2)
+//!     .threads(2)
+//!     .build()?;                       // the one expensive build
+//! for seed in [1u64, 2, 3, 4] {
+//!     let mut sim = ens
+//!         .trajectory()
+//!         .drive_seed(seed)            // independent noise stream
+//!         .probe(PopRates::new("rates", 100))
+//!         .build()?;                   // state-only construction
+//!     sim.run_for(1000)?;
+//!     let rates = sim.drain("rates")?;
+//!     # let _ = rates;
+//! }
+//! # Ok(())
+//! # }
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::atlas::NetworkSpec;
+use crate::config::{
+    BuildMode, CommMode, IntegrateMode, MappingKind, RoutingMode,
+};
+use crate::decomp::{
+    area_processes_partition, random_equivalent_partition, Partition,
+    RankStore,
+};
+use crate::metrics::MemoryReport;
+use crate::probe::Probe;
+use crate::Gid;
+
+use super::session::Simulation;
+use super::RunConfig;
+
+/// The read-only build product N trajectories share: the partition
+/// plus one built [`RankStore`] per rank. Cheap to clone (`Arc`s all
+/// the way down); dropped when the last trajectory holding it drops.
+#[derive(Clone)]
+pub struct SharedNetwork {
+    pub(crate) spec: Arc<NetworkSpec>,
+    pub(crate) partition: Arc<Partition>,
+    pub(crate) stores: Vec<Arc<RankStore>>,
+    /// Decomposition thread count the stores were built for — every
+    /// trajectory must run with exactly this many workers per rank.
+    pub(crate) threads: usize,
+    pub(crate) build_seconds: f64,
+}
+
+impl SharedNetwork {
+    pub fn spec(&self) -> &Arc<NetworkSpec> {
+        &self.spec
+    }
+
+    pub fn partition(&self) -> &Arc<Partition> {
+        &self.partition
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.stores.len()
+    }
+
+    /// Worker threads per rank the decomposition was built for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn store(&self, rank: usize) -> &Arc<RankStore> {
+        &self.stores[rank]
+    }
+
+    /// Wall time of the one-time network construction (max over the
+    /// concurrent per-rank builds).
+    pub fn build_seconds(&self) -> f64 {
+        self.build_seconds
+    }
+
+    /// Per-rank memory of the shared topology alone — counted **once**
+    /// no matter how many trajectories share it. Trajectory state is
+    /// reported separately by
+    /// [`super::RankEngine::trajectory_memory`] (or
+    /// [`super::Simulation::memory_split`]).
+    pub fn shared_memory(&self) -> MemoryReport {
+        MemoryReport::new(
+            self.stores.iter().map(|s| s.shared_memory()).collect(),
+        )
+    }
+}
+
+/// Configures the one-time network build. Obtained from
+/// [`Ensemble::builder`]; the knobs mirror the build-relevant subset
+/// of [`RunConfig`] (and [`Self::run_config`] adopts one wholesale —
+/// its per-run fields become the trajectories' defaults).
+pub struct EnsembleBuilder {
+    spec: Arc<NetworkSpec>,
+    cfg: RunConfig,
+}
+
+impl EnsembleBuilder {
+    fn new(spec: Arc<NetworkSpec>) -> EnsembleBuilder {
+        let seed = spec.seed;
+        EnsembleBuilder {
+            spec,
+            cfg: RunConfig {
+                ranks: 1,
+                threads: 1,
+                seed,
+                ..RunConfig::default()
+            },
+        }
+    }
+
+    pub fn ranks(mut self, n: usize) -> Self {
+        self.cfg.ranks = n;
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.threads = n;
+        self
+    }
+
+    pub fn mapping(mut self, m: MappingKind) -> Self {
+        self.cfg.mapping = m;
+        self
+    }
+
+    /// Partition seed (defaults to the spec's network seed). Distinct
+    /// from a trajectory's [`TrajectoryBuilder::drive_seed`].
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Store-construction pipeline (two-pass streaming by default).
+    pub fn build_mode(mut self, b: BuildMode) -> Self {
+        self.cfg.build = b;
+        self
+    }
+
+    /// Default exchange mode for trajectories (overridable per
+    /// trajectory — it never affects the build).
+    pub fn comm(mut self, c: CommMode) -> Self {
+        self.cfg.comm = c;
+        self
+    }
+
+    /// Default integrate-kernel formulation for trajectories.
+    pub fn integrate(mut self, m: IntegrateMode) -> Self {
+        self.cfg.integrate = m;
+        self
+    }
+
+    /// Default spike-exchange routing for trajectories.
+    pub fn routing(mut self, r: RoutingMode) -> Self {
+        self.cfg.routing = r;
+        self
+    }
+
+    /// Default built-in raster bound for trajectories.
+    pub fn record_limit(mut self, limit: Option<Gid>) -> Self {
+        self.cfg.record_limit = limit;
+        self
+    }
+
+    /// Adopt every knob of a [`RunConfig`]: the build-relevant fields
+    /// configure the one-time construction, the rest become the
+    /// trajectories' defaults.
+    pub fn run_config(mut self, cfg: &RunConfig) -> Self {
+        self.cfg = cfg.clone();
+        self
+    }
+
+    /// Partition the network and construct every rank's store, each on
+    /// its own thread (mirroring the per-rank concurrency of a session
+    /// build). The expensive step — everything after is state-only.
+    pub fn build(self) -> Result<Ensemble> {
+        let ranks = self.cfg.ranks;
+        ensure!(
+            ranks >= 1 && ranks <= u16::MAX as usize,
+            "ranks must be in 1..=65535"
+        );
+        ensure!(self.cfg.threads >= 1, "threads must be >= 1");
+        let spec = self.spec;
+        let partition = Arc::new(match self.cfg.mapping {
+            MappingKind::AreaProcesses => {
+                area_processes_partition(&spec, ranks, self.cfg.seed)
+            }
+            MappingKind::RandomEquivalent => random_equivalent_partition(
+                spec.n_total(),
+                ranks,
+                self.cfg.seed,
+            ),
+        });
+        let t0 = Instant::now();
+        let (threads, build) = (self.cfg.threads, self.cfg.build);
+        let stores: Vec<Arc<RankStore>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..ranks)
+                .map(|r| {
+                    let (spec, partition) = (&spec, &partition);
+                    s.spawn(move || {
+                        build_store(spec, partition, r, threads, build)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    Arc::new(h.join().expect("rank store build panicked"))
+                })
+                .collect()
+        });
+        let build_seconds = t0.elapsed().as_secs_f64();
+        Ok(Ensemble {
+            net: SharedNetwork {
+                spec,
+                partition,
+                stores,
+                threads,
+                build_seconds,
+            },
+            cfg: self.cfg,
+        })
+    }
+}
+
+/// Build rank `r`'s store exactly as a standalone engine would (same
+/// two-pass/serial pipelines, same bit-identical product) — just
+/// without an engine around it.
+fn build_store(
+    spec: &NetworkSpec,
+    partition: &Partition,
+    r: usize,
+    n_threads: usize,
+    build: BuildMode,
+) -> RankStore {
+    let posts = &partition.members[r];
+    let rank_of = &partition.rank_of;
+    let is_local = move |g: Gid| rank_of[g as usize] as usize == r;
+    match build {
+        BuildMode::Serial => RankStore::build_serial(
+            spec,
+            posts,
+            is_local,
+            r as u16,
+            n_threads,
+        ),
+        BuildMode::TwoPass => {
+            RankStore::build(spec, posts, is_local, r as u16, n_threads)
+        }
+    }
+}
+
+/// A built network plus trajectory defaults: the handle `cortex sweep`
+/// (and any embedding program) instantiates cheap [`Simulation`]s
+/// from. See the [module docs](self).
+pub struct Ensemble {
+    net: SharedNetwork,
+    cfg: RunConfig,
+}
+
+impl Ensemble {
+    /// Start configuring an ensemble over `spec`.
+    pub fn builder(spec: Arc<NetworkSpec>) -> EnsembleBuilder {
+        EnsembleBuilder::new(spec)
+    }
+
+    /// The shared read-only build product (cloneable; hold it to keep
+    /// the stores alive independently of the `Ensemble`).
+    pub fn network(&self) -> &SharedNetwork {
+        &self.net
+    }
+
+    /// Wall time of the one-time network construction.
+    pub fn build_seconds(&self) -> f64 {
+        self.net.build_seconds
+    }
+
+    /// Memory of the shared topology, counted once for all trajectories.
+    pub fn shared_memory(&self) -> MemoryReport {
+        self.net.shared_memory()
+    }
+
+    /// Start configuring one trajectory: a full [`Simulation`] over the
+    /// shared stores, differing only in per-trajectory state.
+    pub fn trajectory(&self) -> TrajectoryBuilder {
+        let builder = Simulation::builder(Arc::clone(&self.net.spec))
+            .run_config(&self.cfg)
+            .shared(self.net.clone());
+        TrajectoryBuilder {
+            builder,
+            dc: Vec::new(),
+            poisson: Vec::new(),
+        }
+    }
+}
+
+/// Configures one trajectory of an [`Ensemble`]. Build-time knobs
+/// (ranks, threads, mapping, partition seed) are fixed by the shared
+/// network; what varies here is the trajectory's noise stream,
+/// stimulus overrides, probes, and exchange mode.
+pub struct TrajectoryBuilder {
+    builder: super::session::SimulationBuilder,
+    dc: Vec<(String, f64)>,
+    poisson: Vec<(String, f64, f64)>,
+}
+
+impl TrajectoryBuilder {
+    /// This trajectory's Poisson noise stream (defaults to the spec's
+    /// network seed — i.e. identical to a standalone session).
+    pub fn drive_seed(mut self, seed: u64) -> Self {
+        self.builder = self.builder.drive_seed(seed);
+        self
+    }
+
+    /// Queue a DC offset for `pop` (name or prefix), applied before
+    /// step 0 — exactly [`Simulation::set_dc`] issued at build.
+    pub fn dc(mut self, pop: &str, dc_pa: f64) -> Self {
+        self.dc.push((pop.into(), dc_pa));
+        self
+    }
+
+    /// Queue a Poisson drive override for `pop`, applied before step 0
+    /// — exactly [`Simulation::set_poisson`] issued at build.
+    pub fn poisson(
+        mut self,
+        pop: &str,
+        rate_hz: f64,
+        weight_pa: f64,
+    ) -> Self {
+        self.poisson.push((pop.into(), rate_hz, weight_pa));
+        self
+    }
+
+    /// Exchange mode for this trajectory (ablation knob; bit-identical
+    /// either way).
+    pub fn comm(mut self, c: CommMode) -> Self {
+        self.builder = self.builder.comm(c);
+        self
+    }
+
+    /// Built-in raster bound for this trajectory.
+    pub fn record_limit(mut self, limit: Option<Gid>) -> Self {
+        self.builder = self.builder.record_limit(limit);
+        self
+    }
+
+    /// Register a probe on this trajectory (cloned onto every rank).
+    pub fn probe<P>(mut self, probe: P) -> Self
+    where
+        P: Probe + Clone + Sync + 'static,
+    {
+        self.builder = self.builder.probe(probe);
+        self
+    }
+
+    /// Register a probe via an explicit per-rank factory.
+    pub fn probe_with(
+        mut self,
+        name: &str,
+        make: impl Fn(u16) -> Box<dyn Probe> + Send + Sync + 'static,
+    ) -> Self {
+        self.builder = self.builder.probe_with(name, make);
+        self
+    }
+
+    /// Construct the trajectory's [`Simulation`]: per-trajectory state
+    /// only (rings, neuron state, drives, traces, weight copies on
+    /// plastic nets), then the queued stimulus overrides.
+    pub fn build(self) -> Result<Simulation> {
+        let mut sim = self.builder.build()?;
+        for (pop, dc_pa) in &self.dc {
+            sim.set_dc(pop, *dc_pa)?;
+        }
+        for (pop, rate_hz, weight_pa) in &self.poisson {
+            sim.set_poisson(pop, *rate_hz, *weight_pa)?;
+        }
+        Ok(sim)
+    }
+}

@@ -14,9 +14,11 @@
 //! The compute threads are **long-lived** (paper Fig 16: threads run
 //! continuously across the whole simulation, not per step). At
 //! construction, `RankEngine::new` moves every thread's state into a
-//! `workers::WorkerCtx` — edges, per-population model state blocks
-//! (LIF / AdEx / HH / parrot via `model::dynamics`), ring rows, STDP
-//! post-traces, drives, scratch, spike outbox — and (in
+//! `workers::WorkerCtx` — a handle into the shared immutable build
+//! product (`Arc<RankStore>`: the (pre, delay)-sorted edges) plus a
+//! private mutable `workers::TrajectoryState` — per-population model
+//! state blocks (LIF / AdEx / HH / parrot via `model::dynamics`), ring
+//! rows, STDP post-traces, drives, scratch, spike outbox — and (in
 //! [`ExecMode::Pool`]) spawns one worker thread per context via
 //! `workers::WorkerPool`. Per step, `step_once` transfers each context
 //! plus one shared read-only `workers::StepJob` (pending spikes +
@@ -51,15 +53,20 @@
 //! `run_for` calls with probes, mid-run stimulus mutation and
 //! checkpoint/restore in between — extending the worker-pool
 //! ownership-transfer design one level up. [`run_simulation`] is a thin
-//! one-shot wrapper over it.
+//! one-shot wrapper over it, and [`Ensemble`] ([`ensemble`]) shares one
+//! immutable build product across N cheap trajectory sessions.
 
 pub mod checkpoint;
 mod comm_driver;
+pub mod ensemble;
 mod phases;
 pub mod ring;
 pub mod session;
 mod workers;
 
+pub use ensemble::{
+    Ensemble, EnsembleBuilder, SharedNetwork, TrajectoryBuilder,
+};
 pub use session::{
     Simulation, SimulationBuilder, Transport, TransportFactory,
 };
@@ -79,7 +86,7 @@ use crate::model::dynamics::{NeuronModel, PopulationState};
 use crate::model::poisson::PoissonDrive;
 use crate::model::stdp::TraceSet;
 use crate::{Gid, Step};
-use workers::{StdpRank, StepJob, WorkerCtx, WorkerPool};
+use workers::{StdpRank, StepJob, TrajectoryState, WorkerCtx, WorkerPool};
 
 /// Engine knobs (a validated subset of [`crate::config::ExperimentConfig`]).
 #[derive(Clone, Debug)]
@@ -108,6 +115,12 @@ pub struct EngineOptions {
     pub verify_ownership: bool,
     /// Where the AOT artifacts live (PJRT backend).
     pub artifacts_dir: String,
+    /// Per-trajectory noise stream: the seed the Poisson drive hashes
+    /// with. `None` ⇒ the spec's network seed. Distinct from the
+    /// partition seed — overriding it changes the stimulus realization
+    /// only, never the built network, which is what lets N ensemble
+    /// trajectories share one store while seeing independent noise.
+    pub drive_seed: Option<u64>,
 }
 
 impl Default for EngineOptions {
@@ -123,17 +136,21 @@ impl Default for EngineOptions {
             record_limit: None,
             verify_ownership: false,
             artifacts_dir: "artifacts".into(),
+            drive_seed: None,
         }
     }
 }
 
-/// One rank's engine.
+/// One rank's engine: a (possibly shared) immutable topology plus this
+/// trajectory's mutable state.
 pub struct RankEngine {
     pub rank: u16,
     spec: Arc<NetworkSpec>,
-    /// Rank-level structure (posts, pres, ranges); the per-thread edge
-    /// stores were moved into the worker contexts at construction.
-    pub store: RankStore,
+    /// The shared, immutable build product: posts/pres gid maps, thread
+    /// ranges **and** every thread's edge store. Read-only during
+    /// stepping — an [`ensemble::Ensemble`] hands the same `Arc` to N
+    /// engines, which then differ only in per-trajectory state.
+    pub store: Arc<RankStore>,
     /// Worker-owned state, in thread order. Parked here between steps
     /// (and permanently in scoped/inline mode).
     ctxs: Vec<WorkerCtx>,
@@ -212,7 +229,7 @@ impl RankEngine {
                 None,
             ),
         };
-        Self::with_store_and_pool(spec, store, opts, pool)
+        Self::with_store_and_pool(spec, Arc::new(store), opts, pool)
     }
 
     /// Construct the engine around an externally built store (tests,
@@ -222,20 +239,33 @@ impl RankEngine {
         store: RankStore,
         opts: EngineOptions,
     ) -> anyhow::Result<RankEngine> {
+        Self::with_store_and_pool(spec, Arc::new(store), opts, None)
+    }
+
+    /// Construct one trajectory's engine over an **already-built shared
+    /// store** (the ensemble path): no store construction, no edge
+    /// copies — only the per-trajectory state is allocated. The store's
+    /// decomposition fixes `opts.n_threads`.
+    pub fn with_shared(
+        spec: Arc<NetworkSpec>,
+        store: Arc<RankStore>,
+        opts: EngineOptions,
+    ) -> anyhow::Result<RankEngine> {
         Self::with_store_and_pool(spec, store, opts, None)
     }
 
     fn with_store_and_pool(
         spec: Arc<NetworkSpec>,
-        mut store: RankStore,
+        store: Arc<RankStore>,
         opts: EngineOptions,
         pool: Option<WorkerPool>,
     ) -> anyhow::Result<RankEngine> {
         let ctxs = workers::build_worker_ctxs(
             &spec,
-            &mut store,
+            &store,
             opts.integrate,
             opts.verify_ownership,
+            opts.drive_seed.unwrap_or(spec.seed),
         );
         assert_eq!(
             ctxs.len(),
@@ -325,13 +355,18 @@ impl RankEngine {
     pub fn plastic_edges(&self) -> Vec<(u32, u32, u16, f64)> {
         let mut out = Vec::new();
         for ctx in &self.ctxs {
-            for ei in 0..ctx.edges.n_edges() {
-                if ctx.edges.plastic.get(ei) {
+            let te = ctx.edges();
+            // live plastic weights are the trajectory's private copy;
+            // static nets read the shared store
+            let ws: &[f64] =
+                ctx.state.weights.as_deref().unwrap_or(&te.weight);
+            for ei in 0..te.n_edges() {
+                if te.plastic.get(ei) {
                     out.push((
-                        ctx.edges.epre[ei],
-                        ctx.edges.post[ei],
-                        ctx.edges.delay[ei],
-                        ctx.edges.weight[ei],
+                        te.epre[ei],
+                        te.post[ei],
+                        te.delay[ei],
+                        ws[ei],
                     ));
                 }
             }
@@ -369,10 +404,10 @@ impl RankEngine {
             .iter()
             .find(|c| local >= c.lo && local < c.hi)?;
         let i = (local - ctx.lo) as usize;
-        let bi = ctx
-            .blocks
+        let blocks = &ctx.state.blocks;
+        let bi = blocks
             .partition_point(|b| b.offset as usize + b.state.len() <= i);
-        let b = ctx.blocks.get(bi)?;
+        let b = blocks.get(bi)?;
         b.state.voltage(i - b.offset as usize)
     }
 
@@ -392,7 +427,7 @@ impl RankEngine {
         self.pop_drives[pi] = drive;
         let prep = drive.prepare(self.spec.dt_ms);
         for ctx in self.ctxs.iter_mut() {
-            let WorkerCtx { blocks, drives, .. } = ctx;
+            let TrajectoryState { blocks, drives, .. } = &mut ctx.state;
             for b in blocks.iter().filter(|b| b.pop == pop) {
                 let lo = b.offset as usize;
                 let hi = lo + b.state.len();
@@ -439,14 +474,15 @@ impl RankEngine {
             // worker tables grow in lockstep (every update interns into
             // all of them), so a full table fails here on the first
             // context, before any block is re-pointed
-            let Some(pidx) = ctx.tables.intern(shifted) else {
+            let Some(pidx) = ctx.state.tables.intern(shifted) else {
                 anyhow::bail!(
                     "per-worker parameter table is full (255 distinct \
                      parameter sets); reuse previous DC values or reset \
                      offsets to 0 instead of sweeping unboundedly"
                 );
             };
-            for b in ctx.blocks.iter_mut().filter(|b| b.pop == pop) {
+            for b in ctx.state.blocks.iter_mut().filter(|b| b.pop == pop)
+            {
                 b.pidx = pidx;
                 if let PopulationState::Lif(s) = &mut b.state {
                     s.pidx.fill(pidx);
@@ -538,9 +574,9 @@ impl RankEngine {
             for ctx in &mut self.ctxs {
                 phases::gather_inputs(ctx, now);
                 {
-                    let WorkerCtx {
+                    let TrajectoryState {
                         blocks, scratch_e, scratch_i, spikes, ..
-                    } = &mut *ctx;
+                    } = &mut ctx.state;
                     for b in blocks.iter_mut() {
                         let off = b.offset as usize;
                         let n = b.state.len();
@@ -564,14 +600,22 @@ impl RankEngine {
                 // plasticity: the same thread-owned kernel as the native
                 // path, run serially on the rank thread
                 if let Some(s) = &self.stdp {
-                    let pt = ctx
-                        .post_traces
+                    let WorkerCtx { t, topo, state, .. } = ctx;
+                    let te = &topo.threads[*t];
+                    let TrajectoryState {
+                        post_traces, weights, spikes, ..
+                    } = state;
+                    let pt = post_traces
                         .as_mut()
                         .expect("stdp net without post traces");
-                    for i in 0..ctx.spikes.len() {
-                        let ls = ctx.spikes[i];
+                    let ws = weights
+                        .as_deref_mut()
+                        .expect("stdp net without weight copy");
+                    for i in 0..spikes.len() {
+                        let ls = spikes[i];
                         phases::potentiate_post(
-                            &mut ctx.edges,
+                            te,
+                            ws,
                             pt,
                             &s.pre_traces,
                             &s.params,
@@ -595,7 +639,7 @@ impl RankEngine {
                 }
             }
             let lo = ctx.lo;
-            for &ls in &ctx.spikes {
+            for &ls in &ctx.state.spikes {
                 let local = lo + ls;
                 let gid = self.store.posts[local as usize];
                 self.total_spikes += 1;
@@ -614,20 +658,46 @@ impl RankEngine {
         self.step += 1;
     }
 
-    /// Per-rank heap accounting (the Fig 18 memory panel's quantity).
-    pub fn memory(&self) -> MemoryBreakdown {
-        let mut m = self.store.memory();
+    /// Bytes of the **shared** build product this engine reads: the
+    /// immutable store (posts/pres maps + every thread's edges). In an
+    /// ensemble these bytes exist once no matter how many trajectories
+    /// run over them — account them once, not per engine.
+    pub fn shared_memory(&self) -> MemoryBreakdown {
+        self.store.shared_memory()
+    }
+
+    /// Bytes this trajectory **owns**: neuron state, rings, drives,
+    /// traces, the private plastic-weight copy — the marginal cost of
+    /// one more ensemble member over the same store.
+    pub fn trajectory_memory(&self) -> MemoryBreakdown {
+        let mut m = MemoryBreakdown::new();
         for ctx in &self.ctxs {
-            m.add("edges", ctx.edges.bytes());
             m.add("state", ctx.state_bytes());
-            m.add("rings", ctx.ring_e.bytes() + ctx.ring_i.bytes());
-            m.add("drives", vec_bytes(&ctx.drives));
-            if let Some(pt) = &ctx.post_traces {
+            m.add(
+                "rings",
+                ctx.state.ring_e.bytes() + ctx.state.ring_i.bytes(),
+            );
+            m.add("drives", vec_bytes(&ctx.state.drives));
+            if let Some(pt) = &ctx.state.post_traces {
                 m.add("traces", pt.bytes());
+            }
+            if let Some(w) = &ctx.state.weights {
+                m.add("weights", vec_bytes(w));
             }
         }
         if let Some(s) = &self.stdp {
             m.add("traces", s.pre_traces.bytes());
+        }
+        m
+    }
+
+    /// Per-rank heap accounting (the Fig 18 memory panel's quantity):
+    /// shared store + this trajectory's state. Standalone runs see the
+    /// same total as before the topology/state split.
+    pub fn memory(&self) -> MemoryBreakdown {
+        let mut m = self.shared_memory();
+        for (k, v) in self.trajectory_memory().components() {
+            m.add(k, v);
         }
         m
     }

@@ -14,10 +14,14 @@
 //!    keys off the generic spike event, never off model internals, so
 //!    STDP works on any spiking population.
 //!
-//! Every function here reads shared step state from [`StepJob`] and
-//! writes only through the context it was handed — the mutex-free
+//! Every function here reads the **shared immutable topology** through
+//! `ctx.topo` (never writes it — N ensemble trajectories step over the
+//! same store concurrently) and writes only the per-trajectory
+//! [`TrajectoryState`] of the context it was handed — the mutex-free
 //! ownership discipline is enforced by what the signatures can reach,
-//! plus the paper's optional runtime Abort check (`ctx.verify`).
+//! plus the paper's optional runtime Abort check (`ctx.verify`). The
+//! one historically-mutable store field, the plastic weights, lives in
+//! `ctx.state.weights` (a private copy on STDP nets).
 
 use std::time::Instant;
 
@@ -26,7 +30,7 @@ use crate::model::dynamics::NeuronModel;
 use crate::model::stdp::{StdpParams, TraceSet};
 use crate::Step;
 
-use super::workers::{StdpRank, StepJob, WorkerCtx};
+use super::workers::{StdpRank, StepJob, TrajectoryState, WorkerCtx};
 
 /// Run one worker's share of a step: deliver, then (on the native
 /// backend) integrate and apply plasticity. On the PJRT backend workers
@@ -36,7 +40,7 @@ pub(crate) fn run_compute(
     job: &StepJob,
     native: bool,
 ) {
-    ctx.spikes.clear();
+    ctx.state.spikes.clear();
     ctx.model_ns = [0; NeuronModel::COUNT];
     let t0 = Instant::now();
     deliver(ctx, job);
@@ -55,11 +59,19 @@ pub(crate) fn run_compute(
 /// Phase 1: route every pending spike through this thread's edge runs.
 /// Ring slots advance monotonically within a delay-sorted run (paper
 /// Fig 12b/15), so the wrap is a subtract, not a division per edge.
+///
+/// Weights come from the trajectory's private copy on plastic nets
+/// (read-modify-write) and straight from the shared store otherwise
+/// (read-only — the branch is per-run-invariant and predicted away).
 fn deliver(ctx: &mut WorkerCtx, job: &StepJob) {
     let (lo, hi) = (ctx.lo, ctx.hi);
     let (verify, t) = (ctx.verify, ctx.t);
     let params = job.stdp.as_ref().map(|s| s.params);
-    let WorkerCtx { edges: te, ring_e, ring_i, post_traces, .. } = ctx;
+    let WorkerCtx { topo, state, .. } = ctx;
+    let te: &ThreadEdges = &topo.threads[t];
+    let TrajectoryState { ring_e, ring_i, post_traces, weights, .. } =
+        state;
+    let mut weights = weights.as_deref_mut();
     let ring_len = ring_e.len as Step;
     for &(p, emit) in &job.pending {
         let run = te.run(p as usize);
@@ -85,15 +97,18 @@ fn deliver(ctx: &mut WorkerCtx, job: &StepJob) {
             }
             prev_delay = delay;
             let lp = (post - lo) as usize;
-            let mut w = te.weight[ei];
-            if let (Some(params), Some(pt)) =
-                (params.as_ref(), post_traces.as_ref())
+            let mut w = match &weights {
+                Some(ws) => ws[ei],
+                None => te.weight[ei],
+            };
+            if let (Some(params), Some(pt), Some(ws)) =
+                (params.as_ref(), post_traces.as_ref(), weights.as_mut())
             {
                 if te.plastic.get(ei) {
                     // depression at (extrapolated) arrival time
                     let x = pt.at(lp as u32, emit + delay);
                     w = params.depress(w, x);
-                    te.weight[ei] = w;
+                    ws[ei] = w;
                 }
             }
             if w >= 0.0 {
@@ -117,11 +132,14 @@ fn deliver(ctx: &mut WorkerCtx, job: &StepJob) {
 /// inhibitory and land in `scratch_i` — the seed engine silently
 /// dropped them.
 pub(crate) fn gather_inputs(ctx: &mut WorkerCtx, now: Step) {
-    let seed = ctx.seed;
-    let now_slot = ctx.ring_e.slot(now);
-    let WorkerCtx {
-        ring_e, ring_i, drives, posts, scratch_e, scratch_i, ..
-    } = ctx;
+    let seed = ctx.state.seed;
+    let now_slot = ctx.state.ring_e.slot(now);
+    let (lo, hi) = (ctx.lo as usize, ctx.hi as usize);
+    let WorkerCtx { topo, state, .. } = ctx;
+    let posts = &topo.posts[lo..hi];
+    let TrajectoryState {
+        ring_e, ring_i, drives, scratch_e, scratch_i, ..
+    } = state;
     let n = drives.len();
     // drain the rings' due slot …
     for i in 0..n {
@@ -159,9 +177,10 @@ pub(crate) fn gather_inputs(ctx: &mut WorkerCtx, now: Step) {
 /// EXPERIMENTS.md §Perf.)
 fn integrate(ctx: &mut WorkerCtx) {
     let mode = ctx.integrate;
-    let WorkerCtx {
-        blocks, scratch_e, scratch_i, tables, spikes, model_ns, ..
-    } = ctx;
+    let model_ns = &mut ctx.model_ns;
+    let TrajectoryState {
+        blocks, scratch_e, scratch_i, tables, spikes, ..
+    } = &mut ctx.state;
     for b in blocks.iter_mut() {
         let lo = b.offset as usize;
         let hi = lo + b.state.len();
@@ -185,18 +204,24 @@ fn integrate(ctx: &mut WorkerCtx) {
 /// Phase 3 (native backend): potentiate for every spike this worker just
 /// collected.
 fn plasticity(ctx: &mut WorkerCtx, stdp: &StdpRank, now: Step) {
-    let WorkerCtx { edges, post_traces, spikes, .. } = ctx;
+    let WorkerCtx { topo, state, t, .. } = ctx;
+    let te: &ThreadEdges = &topo.threads[*t];
+    let TrajectoryState { post_traces, weights, spikes, .. } = state;
     let pt = post_traces.as_mut().expect("stdp net without post traces");
+    let ws = weights.as_deref_mut().expect("stdp net without weight copy");
     for &ls in spikes.iter() {
-        potentiate_post(edges, pt, &stdp.pre_traces, &stdp.params, ls, now);
+        potentiate_post(te, ws, pt, &stdp.pre_traces, &stdp.params, ls, now);
     }
 }
 
 /// A post spike potentiates its incoming plastic edges (thread-owned) and
 /// bumps the post trace. `ls` is the worker-local post index. The single
 /// shared kernel behind both the native and PJRT plasticity paths.
+/// Topology (`edges`) is read-only; the mutated weights are the
+/// trajectory's private copy (`ws`, indexed like `edges.weight`).
 pub(crate) fn potentiate_post(
-    edges: &mut ThreadEdges,
+    edges: &ThreadEdges,
+    ws: &mut [f64],
     post_traces: &mut TraceSet,
     pre_traces: &TraceSet,
     params: &StdpParams,
@@ -209,7 +234,7 @@ pub(crate) fn potentiate_post(
     for k in r0..r1 {
         let ei = edges.plastic_by_post_edge[k] as usize;
         let x = pre_traces.at(edges.epre[ei], now);
-        edges.weight[ei] = params.potentiate(edges.weight[ei], x);
+        ws[ei] = params.potentiate(ws[ei], x);
     }
     post_traces.bump(ls, now);
 }

@@ -94,6 +94,7 @@ use crate::{Gid, Step};
 
 use super::checkpoint::{get_u64, put_u64};
 use super::comm_driver::CommDriver;
+use super::ensemble::SharedNetwork;
 use super::{
     EngineOptions, RankEngine, RankOutput, RunConfig, RunOutput,
 };
@@ -197,8 +198,12 @@ pub struct SimulationBuilder {
     verify_ownership: bool,
     artifacts_dir: String,
     seed: u64,
+    drive_seed: Option<u64>,
     probes: Vec<ProbeReg>,
     transport: Transport,
+    /// Ensemble path: skip partitioning and store construction, build
+    /// engines over these pre-built shared stores instead.
+    shared: Option<SharedNetwork>,
 }
 
 impl SimulationBuilder {
@@ -219,8 +224,10 @@ impl SimulationBuilder {
             verify_ownership: false,
             artifacts_dir: "artifacts".into(),
             seed,
+            drive_seed: None,
             probes: Vec::new(),
             transport: Transport::Local,
+            shared: None,
         }
     }
 
@@ -299,6 +306,24 @@ impl SimulationBuilder {
     /// Partition seed (defaults to the spec's network seed).
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Poisson drive seed (defaults to the spec's network seed).
+    /// Changes the stimulus realization only — never the built network
+    /// — which is what lets ensemble trajectories over one shared
+    /// store see independent noise streams.
+    pub fn drive_seed(mut self, seed: u64) -> Self {
+        self.drive_seed = Some(seed);
+        self
+    }
+
+    /// Ensemble path ([`super::Ensemble::trajectory`]): adopt an
+    /// already-built [`SharedNetwork`] — its partition replaces this
+    /// builder's mapping/seed, and every rank engine is constructed
+    /// over the shared store (per-trajectory state only).
+    pub(crate) fn shared(mut self, net: SharedNetwork) -> Self {
+        self.shared = Some(net);
         self
     }
 
@@ -391,16 +416,41 @@ impl SimulationBuilder {
             );
         }
         let spec = self.spec;
-        let partition = Arc::new(match self.mapping {
-            MappingKind::AreaProcesses => {
-                area_processes_partition(&spec, self.ranks, self.seed)
-            }
-            MappingKind::RandomEquivalent => random_equivalent_partition(
-                spec.n_total(),
-                self.ranks,
-                self.seed,
-            ),
-        });
+        if let Some(net) = &self.shared {
+            ensure!(
+                Arc::ptr_eq(&net.spec, &spec),
+                "shared network was built over a different spec"
+            );
+            ensure!(
+                net.stores.len() == self.ranks,
+                "shared network was built for {} ranks, session is \
+                 configured for {}",
+                net.stores.len(),
+                self.ranks
+            );
+            ensure!(
+                net.threads == self.threads,
+                "shared network was decomposed for {} threads, session \
+                 is configured for {}",
+                net.threads,
+                self.threads
+            );
+        }
+        let partition = match &self.shared {
+            Some(net) => Arc::clone(&net.partition),
+            None => Arc::new(match self.mapping {
+                MappingKind::AreaProcesses => area_processes_partition(
+                    &spec, self.ranks, self.seed,
+                ),
+                MappingKind::RandomEquivalent => {
+                    random_equivalent_partition(
+                        spec.n_total(),
+                        self.ranks,
+                        self.seed,
+                    )
+                }
+            }),
+        };
         let min_delay = spec.min_delay_steps as Step;
         assert!(min_delay >= 1, "window size must be positive");
         let factories: Arc<Vec<(String, ProbeFactory)>> = Arc::new(
@@ -449,6 +499,10 @@ impl SimulationBuilder {
             let spec = Arc::clone(&spec);
             let partition = Arc::clone(&partition);
             let factories = Arc::clone(&factories);
+            let prebuilt = self
+                .shared
+                .as_ref()
+                .map(|net| Arc::clone(&net.stores[r]));
             let opts = EngineOptions {
                 n_threads: self.threads,
                 comm: self.comm,
@@ -460,6 +514,7 @@ impl SimulationBuilder {
                 record_limit: self.record_limit,
                 verify_ownership: self.verify_ownership,
                 artifacts_dir: self.artifacts_dir.clone(),
+                drive_seed: self.drive_seed,
             };
             let comm_mode = self.comm;
             let handle = std::thread::Builder::new()
@@ -468,6 +523,7 @@ impl SimulationBuilder {
                     rank_main(
                         spec,
                         partition,
+                        prebuilt,
                         r,
                         opts,
                         comm_mode,
@@ -904,6 +960,32 @@ impl Simulation {
         Ok(MemoryReport::new(per_rank))
     }
 
+    /// Separable heap accounting, summed over this process's ranks:
+    /// `(shared topology bytes, per-trajectory state bytes)`. The
+    /// shared half is the build product ensemble trajectories share —
+    /// count it once per network; the trajectory half is what each
+    /// additional session over the same network actually costs
+    /// (`cortex serve` admission charges exactly this way).
+    pub fn memory_split(&mut self) -> Result<(u64, u64)> {
+        for r in 0..self.links.len() {
+            self.send(r, Cmd::MemorySplit)?;
+        }
+        let (mut shared, mut state) = (0u64, 0u64);
+        for (r, res) in self.recv_each().into_iter().enumerate() {
+            match res? {
+                Resp::MemSplit(s, t) => {
+                    shared += s;
+                    state += t;
+                }
+                _ => bail!(
+                    "rank {}: unexpected memory response",
+                    self.links[r].rank
+                ),
+            }
+        }
+        Ok((shared, state))
+    }
+
     /// Tear the session down and merge the classic one-shot
     /// [`RunOutput`] (raster from the built-in recorder, critical-path
     /// and aggregate timers, memory, exchange statistics).
@@ -1076,6 +1158,8 @@ enum Cmd {
     /// Report the engine's current per-population (drive, DC) state.
     StimState,
     Memory,
+    /// Report (shared topology bytes, per-trajectory state bytes).
+    MemorySplit,
     Finish,
 }
 
@@ -1204,6 +1288,8 @@ enum Resp {
     Data(Box<ProbeData>),
     Stim(Vec<(PoissonDrive, f64)>),
     Mem(Box<MemoryBreakdown>),
+    /// (shared topology bytes, per-trajectory state bytes).
+    MemSplit(u64, u64),
     /// (rank output, total simulation seconds on this rank)
     Output(Box<(RankOutput, f64)>),
     Err(String),
@@ -1242,6 +1328,7 @@ struct RankRuntime {
 fn rank_main(
     spec: Arc<NetworkSpec>,
     partition: Arc<Partition>,
+    prebuilt: Option<Arc<RankStore>>,
     r: usize,
     opts: EngineOptions,
     comm_mode: CommMode,
@@ -1251,7 +1338,7 @@ fn rank_main(
     resp_tx: Sender<Resp>,
 ) {
     let mut rt = match build_runtime(
-        spec, partition, r, opts, comm_mode, comm, factories,
+        spec, partition, prebuilt, r, opts, comm_mode, comm, factories,
     ) {
         Ok(rt) => {
             let built =
@@ -1285,9 +1372,11 @@ fn rank_main(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn build_runtime(
     spec: Arc<NetworkSpec>,
     partition: Arc<Partition>,
+    prebuilt: Option<Arc<RankStore>>,
     r: usize,
     opts: EngineOptions,
     comm_mode: CommMode,
@@ -1297,9 +1386,17 @@ fn build_runtime(
     let t_build = Instant::now();
     let routing_mode = opts.routing;
     // store construction runs on the engine's own worker pool (two-pass
-    // streaming builder) — the rank thread only orchestrates
-    let mut engine =
-        RankEngine::build(Arc::clone(&spec), &partition, r, opts)?;
+    // streaming builder) — the rank thread only orchestrates. On the
+    // ensemble path the store is already built and shared: only this
+    // trajectory's state gets allocated, which is the whole point.
+    let mut engine = match prebuilt {
+        Some(store) => {
+            RankEngine::with_shared(Arc::clone(&spec), store, opts)?
+        }
+        None => {
+            RankEngine::build(Arc::clone(&spec), &partition, r, opts)?
+        }
+    };
     // the subscription collective (one alltoall over the run transport,
     // before window 0): ship every peer the set of its gids this rank's
     // sub-graph consumes, receive the sets the peers consume of ours —
@@ -1429,6 +1526,10 @@ impl RankRuntime {
             },
             Cmd::StimState => Resp::Stim(self.engine.stimulus_state()),
             Cmd::Memory => Resp::Mem(Box::new(self.engine.memory())),
+            Cmd::MemorySplit => Resp::MemSplit(
+                self.engine.shared_memory().total(),
+                self.engine.trajectory_memory().total(),
+            ),
             Cmd::Finish => unreachable!("handled by rank_main"),
         }
     }

@@ -2,14 +2,19 @@
 //! over thread-owned, provably disjoint state").
 //!
 //! A [`WorkerCtx`] is everything one compute thread touches during the
-//! deliver / integrate / plasticity phases: its [`ThreadEdges`] share of
-//! the indegree sub-graph, its neuron-model state blocks, its rows of
-//! both input rings, its STDP post-traces, its Poisson drives and scratch
-//! buffers, and its spike outbox. The context is built **once** in
-//! `RankEngine::new` — the per-thread data is *moved in* (via
-//! [`RankStore::take_threads`]) instead of being re-borrowed with
-//! `split_at_mut` every step — and thereafter the engine only hands whole
-//! contexts around, never slices.
+//! deliver / integrate / plasticity phases, split along the ownership
+//! boundary the ensemble runtime exploits: the **shared, immutable
+//! topology** (an `Arc<RankStore>` holding every thread's
+//! [`ThreadEdges`] share of the indegree sub-graph, the post/pre gid
+//! maps and the thread ranges) and the **per-trajectory mutable state**
+//! ([`TrajectoryState`]: neuron-model state blocks, both input rings,
+//! STDP post-traces and the private plastic-weight copy, Poisson drives,
+//! interned model tables, scratch buffers, the spike outbox and the
+//! drive seed). The context is built **once** per trajectory in
+//! `RankEngine::new` — the store is *shared* (via `Arc`), never moved or
+//! re-borrowed with `split_at_mut` every step — and thereafter the
+//! engine only hands whole contexts around, never slices. N trajectories
+//! over one built network differ only in their `TrajectoryState`.
 //!
 //! Neuron dynamics are model-generic: the worker's contiguous post range
 //! is segmented into [`PopBlock`]s, one per population run, each holding
@@ -91,17 +96,13 @@ pub(crate) struct PopBlock {
     pub state: PopulationState,
 }
 
-/// One compute thread's permanently-owned share of the rank.
-pub(crate) struct WorkerCtx {
-    /// Worker index (== thread id in the decomposition).
-    pub t: usize,
-    /// Owned local-post range `[lo, hi)`.
-    pub lo: u32,
-    pub hi: u32,
-    /// The thread's private (pre, delay)-sorted edge store.
-    pub edges: ThreadEdges,
-    /// Gids of the owned posts (indexed by local offset `i = post - lo`).
-    pub posts: Vec<Gid>,
+/// Everything one worker mutates while stepping **one trajectory**.
+///
+/// This is the carve-out that makes ensembles cheap: a second
+/// trajectory over the same built network costs one of these per
+/// thread (state blocks, rings, traces, drives, interned tables, a
+/// plastic-weight copy on STDP nets) — never a second CSR store.
+pub(crate) struct TrajectoryState {
     /// Model state of the owned posts, one block per population run,
     /// tiling `[0, hi - lo)` in order.
     pub blocks: Vec<PopBlock>,
@@ -112,13 +113,57 @@ pub(crate) struct WorkerCtx {
     pub post_traces: Option<TraceSet>,
     /// Poisson drives of the owned posts.
     pub drives: Vec<PreparedPoisson>,
-    /// Model dispatch tables (shared values, owned copy for locality).
+    /// Model dispatch tables (per-trajectory copy: DC stimulus interns
+    /// shifted parameter sets into it mid-run).
     pub tables: ModelTables,
+    /// Private plastic-weight copy, `Some` iff the net has STDP: the
+    /// only part of [`ThreadEdges`] that mutates during stepping, so
+    /// it is the only part a trajectory owns. Indexed exactly like
+    /// `threads[t].weight`; `None` ⇒ read the shared immutable weights.
+    pub weights: Option<Vec<f64>>,
     /// Per-step input staging (no per-step allocation).
     pub scratch_e: Vec<f64>,
     pub scratch_i: Vec<f64>,
     /// Local indices (relative to `lo`) of this step's spikes.
     pub spikes: Vec<u32>,
+    /// Drive seed (Poisson drive hashing) — the per-trajectory noise
+    /// stream; defaults to the spec's network seed.
+    pub seed: u64,
+}
+
+impl TrajectoryState {
+    /// Actual heap bytes of everything this trajectory owns for one
+    /// worker span (the marginal cost of one more ensemble member).
+    pub fn bytes(&self) -> u64 {
+        use crate::metrics::memory::vec_bytes;
+        let mut b = self.blocks.iter().map(|x| x.state.bytes()).sum::<u64>();
+        b += self.ring_e.bytes() + self.ring_i.bytes();
+        if let Some(pt) = &self.post_traces {
+            b += pt.bytes();
+        }
+        b += vec_bytes(&self.drives);
+        if let Some(w) = &self.weights {
+            b += vec_bytes(w);
+        }
+        b += vec_bytes(&self.scratch_e) + vec_bytes(&self.scratch_i);
+        b
+    }
+}
+
+/// One compute thread's permanently-owned share of the rank: a handle
+/// into the shared topology plus its private [`TrajectoryState`].
+pub(crate) struct WorkerCtx {
+    /// Worker index (== thread id in the decomposition).
+    pub t: usize,
+    /// Owned local-post range `[lo, hi)`.
+    pub lo: u32,
+    pub hi: u32,
+    /// The shared, immutable build product. This worker's
+    /// (pre, delay)-sorted edge store is `topo.threads[t]`; read-only
+    /// during stepping (plastic weights live in `state.weights`).
+    pub topo: Arc<RankStore>,
+    /// Everything mutable per trajectory.
+    pub state: TrajectoryState,
     /// [deliver_ns, integrate+plasticity_ns] of the last step.
     pub phase_ns: [u64; 2],
     /// Integrate nanoseconds of the last step, split per neuron model
@@ -129,8 +174,6 @@ pub(crate) struct WorkerCtx {
     pub integrate: IntegrateMode,
     /// Compile the paper's thread-ownership abort check into delivery.
     pub verify: bool,
-    /// Network seed (Poisson drive hashing).
-    pub seed: u64,
 }
 
 impl WorkerCtx {
@@ -139,9 +182,19 @@ impl WorkerCtx {
         (self.hi - self.lo) as usize
     }
 
+    /// This worker's share of the shared edge store.
+    pub fn edges(&self) -> &ThreadEdges {
+        &self.topo.threads[self.t]
+    }
+
+    /// Gids of the owned posts (indexed by local offset `i = post - lo`).
+    pub fn posts(&self) -> &[Gid] {
+        &self.topo.posts[self.lo as usize..self.hi as usize]
+    }
+
     /// Actual heap bytes of the neuron-model state blocks.
     pub fn state_bytes(&self) -> u64 {
-        self.blocks.iter().map(|b| b.state.bytes()).sum()
+        self.state.blocks.iter().map(|b| b.state.bytes()).sum()
     }
 }
 
@@ -171,29 +224,29 @@ fn build_blocks(
     blocks
 }
 
-/// Build all worker contexts for a rank, moving the per-thread edge
-/// stores out of `store` and splitting every dynamical container along
-/// the decomposition's thread ranges exactly once.
+/// Build all worker contexts for one trajectory over a (possibly
+/// shared) built store: every context holds an `Arc` of the topology
+/// plus a freshly-initialized [`TrajectoryState`] split along the
+/// decomposition's thread ranges. The store itself is never mutated —
+/// N trajectories can run these contexts concurrently over one build.
 pub(crate) fn build_worker_ctxs(
     spec: &NetworkSpec,
-    store: &mut RankStore,
+    store: &Arc<RankStore>,
     integrate: IntegrateMode,
     verify: bool,
+    drive_seed: u64,
 ) -> Vec<WorkerCtx> {
     let tables = spec.model_tables();
     let ring_len = (store.max_delay as usize + 1).max(2);
-    let thread_edges = store.take_threads();
-    assert!(!thread_edges.is_empty(), "store must have >= 1 thread");
-    let ranges = store.thread_ranges.clone();
-    thread_edges
-        .into_iter()
+    assert!(!store.threads.is_empty(), "store must have >= 1 thread");
+    store
+        .thread_ranges
+        .iter()
         .enumerate()
-        .map(|(t, edges)| {
-            let (lo, hi) = ranges[t];
+        .map(|(t, &(lo, hi))| {
             let span = (hi - lo) as usize;
-            let posts: Vec<Gid> =
-                store.posts[lo as usize..hi as usize].to_vec();
-            let blocks = build_blocks(spec, &tables, &posts);
+            let posts = &store.posts[lo as usize..hi as usize];
+            let blocks = build_blocks(spec, &tables, posts);
             debug_assert_eq!(
                 blocks.iter().map(|b| b.state.len()).sum::<usize>(),
                 span
@@ -205,26 +258,34 @@ pub(crate) fn build_worker_ctxs(
             let post_traces = spec.stdp.map(|p| {
                 TraceSet::new(span, p.tau_minus_ms, spec.dt_ms)
             });
+            // STDP mutates weights during stepping — give the
+            // trajectory its own copy; static nets read the shared
+            // store's weights directly (the ensemble memory win)
+            let weights = spec
+                .stdp
+                .map(|_| store.threads[t].weight.clone());
             WorkerCtx {
                 t,
                 lo,
                 hi,
-                edges,
-                posts,
-                blocks,
-                ring_e: InputRing::new(span, ring_len),
-                ring_i: InputRing::new(span, ring_len),
-                post_traces,
-                drives,
-                tables: tables.clone(),
-                scratch_e: vec![0.0; span],
-                scratch_i: vec![0.0; span],
-                spikes: Vec::new(),
+                topo: Arc::clone(store),
+                state: TrajectoryState {
+                    blocks,
+                    ring_e: InputRing::new(span, ring_len),
+                    ring_i: InputRing::new(span, ring_len),
+                    post_traces,
+                    drives,
+                    tables: tables.clone(),
+                    weights,
+                    scratch_e: vec![0.0; span],
+                    scratch_i: vec![0.0; span],
+                    spikes: Vec::new(),
+                    seed: drive_seed,
+                },
                 phase_ns: [0, 0],
                 model_ns: [0; NeuronModel::COUNT],
                 integrate,
                 verify,
-                seed: spec.seed,
             }
         })
         .collect()

@@ -29,7 +29,12 @@
 //!   (`engine::session`): rank engines built once on session-owned
 //!   threads, repeated `run_for` calls, mid-run stimulus control,
 //!   session-wide checkpoint/restore. [`engine::run_simulation`] is a
-//!   thin one-shot wrapper over it.
+//!   thin one-shot wrapper over it. The ownership model splits each
+//!   worker into shared read-only topology (`Arc<RankStore>`) and
+//!   mutable per-trajectory state, so an [`engine::Ensemble`] builds
+//!   the network **once** and instantiates N cheap trajectories
+//!   (seed/stimulus variations; `cortex sweep` and the `[sweep]`
+//!   config section drive it from the CLI).
 //! - [`probe`]  — pluggable per-rank observers drained through the
 //!   session: spike rasters with gid/population filters, population
 //!   firing rates, membrane-voltage traces, STDP weight snapshots,
@@ -49,7 +54,8 @@
 //!   many concurrent [`engine::Simulation`] sessions behind a
 //!   versioned length-prefixed control protocol with typed admission
 //!   control against `[serve]` thread/memory quotas, server-push
-//!   probe streaming, and suspend-to-blob with transparent resume
+//!   probe streaming, and suspend-to-blob — optionally spilled to
+//!   disk via `serve.spill_dir` — with transparent resume
 //!   (plus the [`serve::Client`] behind `cortex client`).
 //! - [`config`], [`metrics`], [`util`], [`cli`] — experiment configuration,
 //!   instrumentation and the from-scratch support substrates (the build is

@@ -3,11 +3,20 @@
 //! The [`SessionManager`] owns every hosted [`Simulation`] and meters
 //! two shared quotas from the `[serve]` config: a worker-thread budget
 //! (one session costs `ranks × threads` rank threads) and an optional
-//! resident-memory budget (measured post-build from the engine's own
-//! [`Simulation::memory`] accounting, plus suspended checkpoint
-//! blobs). A request the quotas cannot cover is refused with a typed
-//! [`AdmissionError`] — the caller can retry after `close`/`suspend`,
-//! distinguishing "over budget" from a hard failure.
+//! resident-memory budget. Memory is measured post-build from the
+//! engine's own separable accounting
+//! ([`Simulation::memory_split`]: shared topology bytes — the CSR
+//! rank store — plus per-trajectory state bytes), plus any suspended
+//! checkpoint blobs still held on the heap. A request the quotas
+//! cannot cover is refused with a typed [`AdmissionError`] — the
+//! caller can retry after `close`/`suspend`, distinguishing "over
+//! budget" from a hard failure.
+//!
+//! Suspended blobs normally stay heap-resident and count against the
+//! memory budget. With `[serve] spill_dir` set, suspend writes the
+//! CORTEX3 blob to `<spill_dir>/session-<id>.ckpt` instead — the
+//! session then costs zero resident bytes until resumed. Spill files
+//! are deleted on resume and on close.
 //!
 //! Concurrency model: connection threads `checkout` a session (its
 //! slot is marked busy), drive it **outside** the manager lock — long
@@ -28,6 +37,7 @@
 
 use std::collections::HashMap;
 use std::io::Cursor;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -57,7 +67,10 @@ pub struct ActiveSession {
     sim: Simulation,
     cfg: SessionCfg,
     threads: u64,
-    mem_bytes: u64,
+    /// Immutable topology bytes (CSR rank store), summed over ranks.
+    shared_bytes: u64,
+    /// Mutable per-trajectory state bytes (rings, traces, blocks).
+    state_bytes: u64,
     /// Probe data drained at suspend time, merged back into the next
     /// drain of the same probe after resume.
     carry: Vec<(String, ProbeData)>,
@@ -129,11 +142,92 @@ impl ActiveSession {
         let m = self.cfg.spec.min_delay_steps as u64;
         m > 0 && self.sim.step() % m == 0
     }
+
+    /// Bytes charged against the serve memory budget: shared topology
+    /// plus per-trajectory state.
+    fn mem_bytes(&self) -> u64 {
+        self.shared_bytes + self.state_bytes
+    }
+
+    /// The session's measured (shared topology, per-trajectory state)
+    /// byte split, as charged at admission time.
+    pub fn memory_split(&self) -> (u64, u64) {
+        (self.shared_bytes, self.state_bytes)
+    }
+}
+
+/// Where a suspended session's CORTEX3 blob lives. Heap blobs count
+/// against the resident-memory budget; spilled blobs cost only disk.
+enum Blob {
+    Heap(Vec<u8>),
+    Disk { path: PathBuf, len: u64 },
+}
+
+impl Blob {
+    /// Bytes charged against the resident-memory budget.
+    fn resident_bytes(&self) -> u64 {
+        match self {
+            Blob::Heap(b) => b.len() as u64,
+            Blob::Disk { .. } => 0,
+        }
+    }
+
+    /// Load the blob contents, reading the spill file if on disk.
+    fn read(&self) -> Result<Vec<u8>> {
+        match self {
+            Blob::Heap(b) => Ok(b.clone()),
+            Blob::Disk { path, len } => {
+                let bytes = std::fs::read(path).map_err(|e| {
+                    anyhow::anyhow!(
+                        "reading spilled session blob {}: {e}",
+                        path.display()
+                    )
+                })?;
+                ensure!(
+                    bytes.len() as u64 == *len,
+                    "spilled session blob {} is {} bytes, expected {}",
+                    path.display(),
+                    bytes.len(),
+                    len
+                );
+                Ok(bytes)
+            }
+        }
+    }
+
+    /// Delete the backing spill file, if any. Removal failures are
+    /// ignored: the session is already gone, a stale file is the
+    /// operator's only cost.
+    fn discard(self) {
+        if let Blob::Disk { path, .. } = self {
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+/// Park a freshly serialized checkpoint blob: on the heap when
+/// `spill_dir` is empty, otherwise spilled to
+/// `<spill_dir>/session-<id>.ckpt`.
+fn park_blob(spill_dir: &str, id: u64, blob: Vec<u8>) -> Result<Blob> {
+    if spill_dir.is_empty() {
+        return Ok(Blob::Heap(blob));
+    }
+    std::fs::create_dir_all(spill_dir).map_err(|e| {
+        anyhow::anyhow!("creating serve.spill_dir {spill_dir}: {e}")
+    })?;
+    let path = Path::new(spill_dir).join(format!("session-{id}.ckpt"));
+    std::fs::write(&path, &blob).map_err(|e| {
+        anyhow::anyhow!(
+            "spilling session blob to {}: {e}",
+            path.display()
+        )
+    })?;
+    Ok(Blob::Disk { path, len: blob.len() as u64 })
 }
 
 /// A session parked as a checkpoint blob: no threads, no engines.
 struct SuspendedSession {
-    blob: Vec<u8>,
+    blob: Blob,
     cfg: SessionCfg,
     threads: u64,
     parked: Vec<(String, ProbeData)>,
@@ -222,19 +316,21 @@ impl SessionManager {
             probes: probes.to_vec(),
         };
         let mut sim = build_session(&scfg, None)?;
-        let mem_bytes = sim.memory()?.total_bytes();
-        self.admit_memory(mem_bytes)?; // drops `sim` on refusal
+        // measured, not estimated: shared topology + trajectory state
+        let (shared_bytes, state_bytes) = sim.memory_split()?;
+        self.admit_memory(shared_bytes + state_bytes)?; // drops `sim`
         let id = self.next_id;
         self.next_id += 1;
         self.threads_in_use += want;
-        self.mem_in_use += mem_bytes;
+        self.mem_in_use += shared_bytes + state_bytes;
         self.slots.insert(
             id,
             Slot::Active(Box::new(ActiveSession {
                 sim,
                 cfg: scfg,
                 threads: want,
-                mem_bytes,
+                shared_bytes,
+                state_bytes,
                 carry: Vec::new(),
                 last_used: Instant::now(),
             })),
@@ -312,16 +408,21 @@ impl SessionManager {
         if let Err(e) = self.admit_threads(s.threads) {
             return Err((s, e));
         }
-        let mut sim = match build_session(&s.cfg, Some(&s.blob)) {
+        let bytes = match s.blob.read() {
+            Ok(b) => b,
+            Err(e) => return Err((s, e)),
+        };
+        let mut sim = match build_session(&s.cfg, Some(&bytes)) {
             Ok(sim) => sim,
             Err(e) => return Err((s, e)),
         };
-        let mem_bytes = match sim.memory() {
-            Ok(m) => m.total_bytes(),
+        let (shared_bytes, state_bytes) = match sim.memory_split() {
+            Ok(split) => split,
             Err(e) => return Err((s, e)),
         };
+        let mem_bytes = shared_bytes + state_bytes;
         // the blob is released on success, so re-admit the difference
-        let blob_bytes = s.blob.len() as u64;
+        let blob_bytes = s.blob.resident_bytes();
         let budget = self.mem_budget_bytes();
         if budget != 0
             && self.mem_in_use - blob_bytes + mem_bytes > budget
@@ -335,11 +436,13 @@ impl SessionManager {
         }
         self.mem_in_use = self.mem_in_use - blob_bytes + mem_bytes;
         self.threads_in_use += s.threads;
+        s.blob.discard(); // spill file, if any, is now stale
         Ok(Box::new(ActiveSession {
             sim,
             cfg: s.cfg,
             threads: s.threads,
-            mem_bytes,
+            shared_bytes,
+            state_bytes,
             carry: s.parked,
             last_used: Instant::now(),
         }))
@@ -378,17 +481,28 @@ impl SessionManager {
                 return Err(e);
             }
         };
-        let mut blob = Vec::new();
-        if let Err(e) = s.sim.checkpoint(&mut blob) {
+        let mut bytes = Vec::new();
+        if let Err(e) = s.sim.checkpoint(&mut bytes) {
+            s.carry = parked; // keep drained probe data with the session
             self.slots.insert(id, Slot::Active(s));
             return Err(e);
         }
-        // rank threads join here; only the blob stays resident
-        let ActiveSession { sim, cfg, threads, mem_bytes, .. } = *s;
+        let blob = match park_blob(&self.limits.spill_dir, id, bytes) {
+            Ok(blob) => blob,
+            Err(e) => {
+                s.carry = parked;
+                self.slots.insert(id, Slot::Active(s));
+                return Err(e);
+            }
+        };
+        // rank threads join here; only the blob (heap case) stays
+        // resident
+        let mem_bytes = s.mem_bytes();
+        let ActiveSession { sim, cfg, threads, .. } = *s;
         drop(sim);
         self.threads_in_use -= threads;
         self.mem_in_use -= mem_bytes;
-        self.mem_in_use += blob.len() as u64;
+        self.mem_in_use += blob.resident_bytes();
         self.slots.insert(
             id,
             Slot::Suspended(Box::new(SuspendedSession {
@@ -413,11 +527,12 @@ impl SessionManager {
             }
             Some(Slot::Active(s)) => {
                 self.threads_in_use -= s.threads;
-                self.mem_in_use -= s.mem_bytes;
+                self.mem_in_use -= s.mem_bytes();
                 // dropping the Simulation joins its rank threads
             }
             Some(Slot::Suspended(s)) => {
-                self.mem_in_use -= s.blob.len() as u64;
+                self.mem_in_use -= s.blob.resident_bytes();
+                s.blob.discard();
             }
         }
         Ok(())
@@ -475,9 +590,14 @@ impl SessionManager {
         }
     }
 
-    /// Drop every session (joins all rank threads).
+    /// Drop every session (joins all rank threads) and delete any
+    /// spill files still on disk.
     pub fn shutdown(&mut self) {
-        self.slots.clear();
+        for (_, slot) in self.slots.drain() {
+            if let Slot::Suspended(s) = slot {
+                s.blob.discard();
+            }
+        }
         self.threads_in_use = 0;
         self.mem_in_use = 0;
     }
@@ -634,6 +754,81 @@ mod tests {
             (0, 0, 0)
         );
         assert!(mgr.close(a).is_err(), "double close is an error");
+    }
+
+    #[test]
+    fn admission_charges_shared_plus_trajectory_bytes() {
+        let mut mgr = SessionManager::new(limits(8, 8, 0));
+        let a = mgr.create("", &tiny_overrides(1, 1), &[]).unwrap();
+        let s = mgr.checkout(a).unwrap();
+        let (shared, state) = s.memory_split();
+        assert!(shared > 0, "CSR store must have measurable bytes");
+        assert!(state > 0, "trajectory state must have bytes");
+        mgr.checkin(a, s);
+        assert_eq!(mgr.stats().mem_in_use, shared + state);
+        mgr.close(a).unwrap();
+        assert_eq!(mgr.stats().mem_in_use, 0);
+    }
+
+    #[test]
+    fn spill_dir_moves_suspended_blobs_to_disk() {
+        let dir = std::env::temp_dir().join(format!(
+            "cortex-spill-test-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut mgr = SessionManager::new(ServeConfig {
+            spill_dir: dir.to_string_lossy().into_owned(),
+            ..limits(8, 8, 0)
+        });
+        let a = mgr.create("", &tiny_overrides(1, 1), &[]).unwrap();
+
+        mgr.suspend(a).unwrap();
+        let spilled = dir.join(format!("session-{a}.ckpt"));
+        assert!(spilled.is_file(), "blob must land in spill_dir");
+        assert_eq!(
+            mgr.stats().mem_in_use,
+            0,
+            "a spilled session costs no resident bytes"
+        );
+
+        // resume reloads from disk and deletes the spill file
+        let s = mgr.checkout(a).unwrap();
+        assert!(!spilled.exists(), "resume deletes the spill file");
+        assert!(mgr.stats().mem_in_use > 0);
+        mgr.checkin(a, s);
+
+        // close of a suspended session also deletes its file
+        mgr.suspend(a).unwrap();
+        assert!(spilled.is_file());
+        mgr.close(a).unwrap();
+        assert!(!spilled.exists(), "close deletes the spill file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_spill_file_fails_resume_but_keeps_the_slot() {
+        let dir = std::env::temp_dir().join(format!(
+            "cortex-spill-gone-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut mgr = SessionManager::new(ServeConfig {
+            spill_dir: dir.to_string_lossy().into_owned(),
+            ..limits(8, 8, 0)
+        });
+        let a = mgr.create("", &tiny_overrides(1, 1), &[]).unwrap();
+        mgr.suspend(a).unwrap();
+        std::fs::remove_file(dir.join(format!("session-{a}.ckpt")))
+            .unwrap();
+        assert!(mgr.checkout(a).is_err(), "blob is gone");
+        assert_eq!(
+            mgr.stats().suspended,
+            1,
+            "slot survives for a later close"
+        );
+        mgr.close(a).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

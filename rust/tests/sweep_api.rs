@@ -1,0 +1,273 @@
+//! Ensemble/sweep acceptance bar: sharing one built network across N
+//! trajectories may change ownership, never arithmetic.
+//!
+//! * every ensemble trajectory (drive seed + DC/Poisson overrides) is
+//!   **bit-identical** — raster and checkpoint bytes — to a standalone
+//!   session that builds its own store and issues the same schedule,
+//!   across thread counts 1/2/4 and both exchange modes;
+//! * the rank stores are genuinely shared (`Arc` refcounts rise per
+//!   trajectory) and a plastic trajectory's STDP updates never leak
+//!   into a sibling;
+//! * distinct drive seeds decorrelate trajectories, equal seeds
+//!   reproduce them;
+//! * `cortex sweep` runs a `[sweep]` grid end-to-end and writes the
+//!   results JSON.
+
+use std::sync::Arc;
+
+use cortex::atlas::hpc::{hpc_benchmark_spec, HpcParams};
+use cortex::atlas::random_spec;
+use cortex::config::CommMode;
+use cortex::engine::{Ensemble, RunConfig, Simulation};
+use cortex::probe::{SpikeRaster, WeightSnapshots};
+
+fn base_cfg(threads: usize, comm: CommMode) -> RunConfig {
+    RunConfig {
+        ranks: 2,
+        threads,
+        comm,
+        steps: 200,
+        record_limit: Some(u32::MAX),
+        verify_ownership: true,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+/// Raster + checkpoint bytes after 200 steps under a fixed stimulus
+/// schedule (drive seed 99, DC on E, Poisson override on I).
+fn run_schedule(mut sim: Simulation) -> (Vec<(u64, u32)>, Vec<u8>) {
+    sim.run_for(200).unwrap();
+    let raster =
+        sim.drain("raster").unwrap().into_raster().unwrap();
+    let mut blob = Vec::new();
+    sim.checkpoint(&mut blob).unwrap();
+    (raster, blob)
+}
+
+#[test]
+fn trajectories_bit_identical_to_standalone_builds() {
+    let spec = Arc::new(random_spec(400, 40, 11));
+    let mut reference: Option<Vec<(u64, u32)>> = None;
+    for comm in [CommMode::Serialized, CommMode::Overlap] {
+        for threads in [1usize, 2, 4] {
+            let cfg = base_cfg(threads, comm);
+            // one shared build, then a trajectory with overrides
+            let ens = Ensemble::builder(Arc::clone(&spec))
+                .run_config(&cfg)
+                .build()
+                .unwrap();
+            let traj = ens
+                .trajectory()
+                .drive_seed(99)
+                .dc("E", 120.0)
+                .poisson("I", 9_000.0, 87.8)
+                .probe(SpikeRaster::all("raster"))
+                .build()
+                .unwrap();
+            let (raster_e, blob_e) = run_schedule(traj);
+            assert!(!raster_e.is_empty(), "network should be active");
+
+            // standalone: own build, same schedule in the same order
+            let mut solo = Simulation::builder(Arc::clone(&spec))
+                .run_config(&cfg)
+                .drive_seed(99)
+                .probe(SpikeRaster::all("raster"))
+                .build()
+                .unwrap();
+            solo.set_dc("E", 120.0).unwrap();
+            solo.set_poisson("I", 9_000.0, 87.8).unwrap();
+            let (raster_s, blob_s) = run_schedule(solo);
+
+            assert_eq!(
+                raster_e, raster_s,
+                "{comm:?}/{threads}t: shared-store trajectory raster \
+                 diverged from its standalone build"
+            );
+            assert_eq!(
+                blob_e, blob_s,
+                "{comm:?}/{threads}t: checkpoint bytes diverged"
+            );
+            // and the result is thread/comm invariant like any run
+            if let Some(want) = &reference {
+                assert_eq!(
+                    want, &raster_e,
+                    "{comm:?}/{threads}t changed the raster"
+                );
+            } else {
+                reference = Some(raster_e);
+            }
+        }
+    }
+}
+
+#[test]
+fn stores_are_shared_and_memory_split_is_consistent() {
+    let spec = Arc::new(random_spec(400, 40, 7));
+    let cfg = RunConfig {
+        ranks: 2,
+        threads: 2,
+        seed: 7,
+        ..Default::default()
+    };
+    let ens = Ensemble::builder(Arc::clone(&spec))
+        .run_config(&cfg)
+        .build()
+        .unwrap();
+    let before = Arc::strong_count(ens.network().store(0));
+    let mut a = ens.trajectory().build().unwrap();
+    let mut b = ens.trajectory().drive_seed(1).build().unwrap();
+    assert!(
+        Arc::strong_count(ens.network().store(0)) >= before + 2,
+        "each trajectory should hold the shared store, not a copy"
+    );
+    // the split accounting covers the merged report exactly
+    let (shared, state) = a.memory_split().unwrap();
+    assert!(shared > 0 && state > 0);
+    assert_eq!(shared + state, a.memory().unwrap().total_bytes());
+    assert_eq!(
+        shared,
+        ens.shared_memory().total_bytes(),
+        "trajectory shared bytes must equal the ensemble's own report"
+    );
+    a.run_for(20).unwrap();
+    b.run_for(20).unwrap();
+    a.finish().unwrap();
+    b.finish().unwrap();
+}
+
+#[test]
+fn drive_seeds_decorrelate_and_reproduce() {
+    let spec = Arc::new(random_spec(400, 40, 19));
+    let ens = Ensemble::builder(Arc::clone(&spec))
+        .ranks(1)
+        .threads(2)
+        .record_limit(Some(u32::MAX))
+        .build()
+        .unwrap();
+    let run = |seed: u64| {
+        let mut sim = ens
+            .trajectory()
+            .drive_seed(seed)
+            .probe(SpikeRaster::all("raster"))
+            .build()
+            .unwrap();
+        sim.run_for(200).unwrap();
+        sim.drain("raster").unwrap().into_raster().unwrap()
+    };
+    let (a, b, a2) = (run(1), run(2), run(1));
+    assert!(!a.is_empty(), "network should be active");
+    assert_eq!(a, a2, "equal drive seeds must reproduce the raster");
+    assert_ne!(a, b, "distinct drive seeds should decorrelate noise");
+}
+
+#[test]
+fn plastic_trajectories_do_not_leak_weights_into_siblings() {
+    let spec = Arc::new(hpc_benchmark_spec(
+        &HpcParams {
+            n_neurons: 500,
+            indegree: 100,
+            plastic: true,
+            eta: 0.95,
+            ..Default::default()
+        },
+        29,
+    ));
+    let cfg = RunConfig {
+        ranks: 1,
+        threads: 2,
+        verify_ownership: true,
+        seed: 29,
+        ..Default::default()
+    };
+    let weights_of = |mut sim: Simulation| {
+        sim.run_for(120).unwrap();
+        let w = sim.drain("w").unwrap().into_weights().unwrap();
+        w.into_iter().last().unwrap().1
+    };
+    // standalone reference
+    let solo = Simulation::builder(Arc::clone(&spec))
+        .run_config(&cfg)
+        .probe(WeightSnapshots::new("w"))
+        .build()
+        .unwrap();
+    let w_solo = weights_of(solo);
+    assert!(!w_solo.is_empty(), "network should have plastic edges");
+
+    // run a *hotter* sibling first — if trajectories shared mutable
+    // weights, its STDP updates would contaminate the plain one
+    let ens = Ensemble::builder(Arc::clone(&spec))
+        .run_config(&cfg)
+        .build()
+        .unwrap();
+    let hot = ens
+        .trajectory()
+        .drive_seed(777)
+        .poisson("E", 20_000.0, 87.8)
+        .probe(WeightSnapshots::new("w"))
+        .build()
+        .unwrap();
+    let w_hot = weights_of(hot);
+    let plain = ens
+        .trajectory()
+        .probe(WeightSnapshots::new("w"))
+        .build()
+        .unwrap();
+    let w_plain = weights_of(plain);
+    assert_ne!(
+        w_hot, w_plain,
+        "the stimulus override should actually move weights"
+    );
+    assert_eq!(
+        w_solo, w_plain,
+        "sibling trajectory's plasticity leaked into the shared store"
+    );
+}
+
+#[test]
+fn sweep_cli_runs_a_grid_and_writes_json() {
+    let dir = std::env::temp_dir()
+        .join(format!("cortex-sweep-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let config = dir.join("sweep.toml");
+    std::fs::write(
+        &config,
+        r#"
+title = "sweep smoke"
+[network]
+kind = "random"
+n_neurons = 300
+indegree = 30
+[sim]
+sim_ms = 10
+[engine]
+ranks = 1
+threads = 2
+[sweep]
+steps = 60
+parallel = 2
+seeds = [1, 2]
+dc = ["E:50"]
+"#,
+    )
+    .unwrap();
+    let out = dir.join("sweep.json");
+    let argv: Vec<String> = [
+        "sweep",
+        "--config",
+        config.to_str().unwrap(),
+        "--out",
+        out.to_str().unwrap(),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    cortex::cli::main_with(&argv).unwrap();
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert!(
+        text.contains("\"trajectories\""),
+        "results JSON should list trajectories: {text}"
+    );
+    assert!(text.contains("\"shared_build_seconds\""));
+    let _ = std::fs::remove_dir_all(&dir);
+}
