@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
                 build: BuildMode::TwoPass,
                 integrate: IntegrateMode::Vector,
                 routing: RoutingMode::Routed,
+                comm_group: Vec::new(),
                 steps,
                 record_limit: None,
                 verify_ownership: false,

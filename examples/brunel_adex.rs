@@ -64,6 +64,7 @@ fn main() -> anyhow::Result<()> {
             build: BuildMode::TwoPass,
             integrate: IntegrateMode::Vector,
             routing: RoutingMode::Routed,
+            comm_group: Vec::new(),
             steps,
             record_limit: Some(u32::MAX),
             verify_ownership: true,

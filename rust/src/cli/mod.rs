@@ -9,6 +9,7 @@
 //!                  [--steps N] [--out FILE]      one shared network build
 //! cortex launch    --ranks N [--config F] ...    spawn an N-process TCP
 //!                  [--port-base P]               cluster on localhost
+//!                  [--group-size N]              … hierarchical host groups
 //! cortex verify    [--config F] [--set k=v]...   paper §IV.A verification
 //! cortex partition [--config F] [--set k=v]...   inspect the decomposition
 //! cortex info      [--artifacts DIR]             PJRT artifact report
@@ -33,9 +34,10 @@ use crate::atlas::hpc::{hpc_benchmark_spec, HpcParams};
 use crate::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use crate::atlas::potjans::{potjans_spec_with, PotjansModels};
 use crate::atlas::{random_spec_with, NetworkSpec};
+use crate::comm::CommGroups;
 use crate::config::{
     CommTransport, ConfigDoc, EngineKind, ExperimentConfig, NetworkKind,
-    SweepDc, SweepPoisson,
+    RoutingMode, SweepDc, SweepPoisson,
 };
 use crate::decomp::{
     area_processes_partition, random_equivalent_partition, RankStore,
@@ -62,6 +64,9 @@ pub struct Args {
     pub peers: Option<String>,
     /// `--ranks N` — cluster size for `cortex launch`.
     pub ranks: Option<usize>,
+    /// `--group-size N` — host-group width `cortex launch` auto-assigns
+    /// under hierarchical routing when `engine.comm_group` is unset.
+    pub group_size: Option<usize>,
     /// `--port-base P` — first localhost port `cortex launch` assigns.
     pub port_base: u16,
     /// `--raster-out FILE` — dump the merged spike raster as
@@ -149,6 +154,14 @@ impl Args {
                             .context("--ranks needs a count")?
                             .parse()
                             .context("--ranks must be an integer")?,
+                    );
+                }
+                "--group-size" => {
+                    args.group_size = Some(
+                        it.next()
+                            .context("--group-size needs a count")?
+                            .parse()
+                            .context("--group-size must be an integer")?,
                     );
                 }
                 "--port-base" => {
@@ -347,6 +360,7 @@ pub fn run_config_of(cfg: &ExperimentConfig) -> RunConfig {
         build: cfg.build,
         integrate: cfg.integrate,
         routing: cfg.routing,
+        comm_group: cfg.comm_group.clone(),
         steps: cfg.steps(),
         record_limit: cfg.record_raster.then_some(cfg.record_limit as u32),
         verify_ownership: false,
@@ -441,6 +455,11 @@ pub fn cmd_run(args: &Args) -> Result<()> {
                 human_bytes(out.comm_recv_bytes),
                 out.windows,
                 cfg.routing
+            );
+            println!(
+                "comm frames: {} total; overlap ratio {:.2} \
+                 (exchange ns hidden behind compute, min over ranks)",
+                out.comm_frames, out.comm_overlap_ratio
             );
             println!("--- phase times (critical path) ---");
             print!("{}", out.timer_max.report());
@@ -818,15 +837,81 @@ pub fn cmd_launch(args: &Args) -> Result<()> {
         (1..=1024).contains(&n),
         "launch supports 1..=1024 ranks, got {n}"
     );
+    // Hierarchical routing: pin the host-group map down before
+    // spawning. `engine.comm_group` from the config wins; otherwise
+    // chop the ranks into consecutive groups of `--group-size`
+    // (default 2) and pass the assignment to every child explicitly,
+    // so relay election is identical across the cluster.
+    let groups = if cfg.routing == RoutingMode::Hierarchical && n > 1 {
+        let g = if cfg.comm_group.is_empty() {
+            CommGroups::even(n, args.group_size.unwrap_or(2))
+        } else {
+            ensure!(
+                cfg.comm_group.len() == n,
+                "engine.comm_group assigns {} ranks, launch runs {n}",
+                cfg.comm_group.len()
+            );
+            match CommGroups::new(cfg.comm_group.clone()) {
+                Ok(g) => g,
+                Err(e) => bail!("engine.comm_group: {e}"),
+            }
+        };
+        Some(g)
+    } else {
+        ensure!(
+            args.group_size.is_none(),
+            "--group-size needs engine.routing = \"hierarchical\""
+        );
+        None
+    };
+    // Each group's ranks take consecutive ports from their own block,
+    // with a one-port stagger gap between blocks: a relay that dies
+    // and is relaunched never races a neighbouring group's member
+    // socket for the same port while the cluster drains.
+    let ports: Vec<usize> = match &groups {
+        Some(g) => {
+            let mut ports = vec![0usize; n];
+            let mut next = args.port_base as usize;
+            for grp in 0..g.n_groups() {
+                for &r in g.members(grp) {
+                    ports[r] = next;
+                    next += 1;
+                }
+                next += 1;
+            }
+            ports
+        }
+        None => (args.port_base as usize..).take(n).collect(),
+    };
+    let top = ports.iter().copied().max().unwrap_or(0);
     ensure!(
-        args.port_base as usize + n <= u16::MAX as usize,
+        top <= u16::MAX as usize,
         "--port-base {} leaves no room for {n} ports",
         args.port_base
     );
-    let peers: Vec<String> = (0..n)
-        .map(|i| format!("127.0.0.1:{}", args.port_base as usize + i))
-        .collect();
+    let peers: Vec<String> =
+        ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
     let peers_arg = peers.join(",");
+    if let Some(g) = &groups {
+        let map: Vec<String> = (0..g.n_groups())
+            .map(|i| {
+                format!(
+                    "g{i}[{}] relay r{}",
+                    g.members(i)
+                        .iter()
+                        .map(|r| r.to_string())
+                        .collect::<Vec<_>>()
+                        .join(","),
+                    g.relay(i)
+                )
+            })
+            .collect();
+        println!(
+            "hierarchical routing: {} host groups: {}",
+            g.n_groups(),
+            map.join("; ")
+        );
+    }
     let exe = std::env::current_exe()
         .context("cannot locate the cortex binary")?;
     println!("launching {n} rank processes: {peers_arg}");
@@ -843,6 +928,20 @@ pub fn cmd_launch(args: &Args) -> Result<()> {
         }
         for s in &args.overrides {
             cmd.arg("--set").arg(s);
+        }
+        if let Some(g) = &groups {
+            // every child gets the explicit assignment, even when it
+            // came from CommGroups::even — relay election must not
+            // depend on per-process defaults
+            let ids: Vec<String> = g
+                .assignment()
+                .iter()
+                .map(|id| id.to_string())
+                .collect();
+            cmd.arg("--set").arg(format!(
+                "engine.comm_group=[{}]",
+                ids.join(", ")
+            ));
         }
         if args.artifacts_dir != "artifacts" {
             cmd.arg("--artifacts").arg(&args.artifacts_dir);
@@ -901,9 +1000,37 @@ pub fn cmd_launch(args: &Args) -> Result<()> {
             children.swap_remove(i);
             progressed = true;
         }
-        if failed.is_some() {
+        if let Some(f) = failed {
             // one casualty dooms the cluster — don't let the rest
-            // hang out their join/exchange timeouts
+            // hang out their join/exchange timeouts. Under
+            // hierarchical routing the casualty's own host group goes
+            // first: if the dead rank was a relay, its members are
+            // wedged in the gather round and can never make progress.
+            if let Some(g) = &groups {
+                let gid = g.group_of(f);
+                let role = if g.relay(gid) == f {
+                    "relay"
+                } else {
+                    "member"
+                };
+                eprintln!(
+                    "rank {f} was the {role} of group {gid}; \
+                     killing group {gid} first"
+                );
+                let mut i = 0;
+                while i < children.len() {
+                    if g.group_of(children[i].0) == gid {
+                        let (r, mut child) = children.swap_remove(i);
+                        eprintln!(
+                            "killing rank {r} (group {gid} casualty)"
+                        );
+                        let _ = child.kill();
+                        let _ = child.wait();
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
             for (r, mut child) in children.drain(..) {
                 eprintln!("killing rank {r} (sibling failed)");
                 let _ = child.kill();
@@ -999,56 +1126,81 @@ pub fn cmd_partition(args: &Args) -> Result<()> {
         "merge_ms",
         "fill_ms"
     );
-    // per-rank interest: sub_counts[r][s] = gids rank r subscribes to
-    // from rank s (what interest routing puts on the s→r wire)
-    let mut sub_counts: Vec<Vec<u64>> = Vec::with_capacity(cfg.ranks);
-    for r in 0..cfg.ranks {
-        let rank_of = part.rank_of.clone();
-        let is_local =
-            move |g: u32| rank_of[g as usize] as usize == r;
-        // honour engine.build so the ablation's peak/timings are
-        // inspectable from here too
-        let store = match cfg.build {
-            crate::config::BuildMode::TwoPass => RankStore::build(
-                &spec,
-                &part.members[r],
-                is_local,
-                r as u16,
-                cfg.threads,
-            ),
-            crate::config::BuildMode::Serial => {
-                RankStore::build_serial(
-                    &spec,
-                    &part.members[r],
-                    is_local,
-                    r as u16,
-                    cfg.threads,
-                )
-            }
-        };
-        let b = store.build;
-        sub_counts.push(
-            store
-                .subscriptions(&part)
-                .iter()
-                .map(|bucket| bucket.len() as u64)
-                .collect(),
-        );
-        println!(
-            "{:>5} {:>8} {:>10} {:>10} {:>12} {:>12} {:>12} \
-             {:>9.2} {:>9.2} {:>9.2}",
-            r,
-            store.n_posts(),
-            store.n_pres(),
-            store.n_remote_pres(),
-            store.n_edges(),
-            human_bytes(store.memory().total()),
-            human_bytes(b.peak_bytes),
-            b.count_ns as f64 * 1e-6,
-            b.merge_ns as f64 * 1e-6,
-            b.fill_ns as f64 * 1e-6,
-        );
+    // Build every rank's store in parallel — the builds are
+    // independent and inspection runs want the table fast for wide
+    // clusters (each worker still honours engine.threads internally;
+    // this tool favours wall-clock over a tidy CPU budget). Workers
+    // return the formatted row plus the rank's subscription counts:
+    // sub_counts[r][s] = gids rank r subscribes to from rank s (what
+    // interest routing puts on the s→r wire). Printing stays in rank
+    // order.
+    let build_mode = cfg.build;
+    let threads = cfg.threads;
+    let rows: Vec<(String, Vec<u64>)> = std::thread::scope(|scope| {
+        let spec = &spec;
+        let part = &part;
+        let handles: Vec<_> = (0..cfg.ranks)
+            .map(|r| {
+                scope.spawn(move || {
+                    let rank_of = part.rank_of.clone();
+                    let is_local =
+                        move |g: u32| rank_of[g as usize] as usize == r;
+                    // honour engine.build so the ablation's
+                    // peak/timings are inspectable from here too
+                    let store = match build_mode {
+                        crate::config::BuildMode::TwoPass => {
+                            RankStore::build(
+                                spec,
+                                &part.members[r],
+                                is_local,
+                                r as u16,
+                                threads,
+                            )
+                        }
+                        crate::config::BuildMode::Serial => {
+                            RankStore::build_serial(
+                                spec,
+                                &part.members[r],
+                                is_local,
+                                r as u16,
+                                threads,
+                            )
+                        }
+                    };
+                    let b = store.build;
+                    let subs: Vec<u64> = store
+                        .subscriptions(part)
+                        .iter()
+                        .map(|bucket| bucket.len() as u64)
+                        .collect();
+                    let row = format!(
+                        "{:>5} {:>8} {:>10} {:>10} {:>12} {:>12} \
+                         {:>12} {:>9.2} {:>9.2} {:>9.2}",
+                        r,
+                        store.n_posts(),
+                        store.n_pres(),
+                        store.n_remote_pres(),
+                        store.n_edges(),
+                        human_bytes(store.memory().total()),
+                        human_bytes(b.peak_bytes),
+                        b.count_ns as f64 * 1e-6,
+                        b.merge_ns as f64 * 1e-6,
+                        b.fill_ns as f64 * 1e-6,
+                    );
+                    (row, subs)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("partition build worker panicked"))
+            .collect()
+    });
+    for (row, _) in &rows {
+        println!("{row}");
     }
+    let sub_counts: Vec<Vec<u64>> =
+        rows.into_iter().map(|(_, subs)| subs).collect();
     if cfg.ranks > 1 {
         // worst-case per-window wire volumes: every owned gid spiking
         // once per window — broadcast ships the full packet to every
@@ -1094,6 +1246,94 @@ pub fn cmd_partition(args: &Args) -> Result<()> {
                     sub_in as f64 * WIRE as f64,
                 ) * 1e6,
             );
+        }
+        if cfg.routing == RoutingMode::Hierarchical {
+            // per-group aggregation: what the relay merge does to the
+            // same worst-case window — frames collapse to the
+            // two-level count, and the wire carries merged
+            // multi-source frames between relays
+            let groups = if cfg.comm_group.is_empty() {
+                CommGroups::even(cfg.ranks, 2)
+            } else {
+                match CommGroups::new(cfg.comm_group.clone()) {
+                    Ok(g) => g,
+                    Err(e) => bail!("engine.comm_group: {e}"),
+                }
+            };
+            let (flat, hier) = crate::comm::frames_per_window(
+                cfg.ranks,
+                groups.n_groups(),
+            );
+            println!(
+                "--- hierarchical aggregation ({} host groups) ---",
+                groups.n_groups()
+            );
+            println!(
+                "frames/window: flat mesh {flat} -> hierarchical {hier}"
+            );
+            println!(
+                "{:>5} {:>12} {:>5} {:>12} {:>12} {:>12}",
+                "group",
+                "ranks",
+                "relay",
+                "gather_max",
+                "merged_max",
+                "tofu_hier"
+            );
+            for gi in 0..groups.n_groups() {
+                let members = groups.members(gi);
+                // worst member→relay gather frame: one member's
+                // inter-group routed bytes, bundled into a single
+                // hand-off
+                let gather_max = members
+                    .iter()
+                    .map(|&s| {
+                        (0..cfg.ranks)
+                            .filter(|&r| groups.group_of(r) != gi)
+                            .map(|r| sub_counts[r][s])
+                            .sum::<u64>()
+                            * WIRE
+                    })
+                    .max()
+                    .unwrap_or(0);
+                // worst relay→relay merged frame: everything this
+                // group ships to its busiest destination group
+                let merged_max = (0..groups.n_groups())
+                    .filter(|&b| b != gi)
+                    .map(|b| {
+                        groups
+                            .members(b)
+                            .iter()
+                            .map(|&r| {
+                                members
+                                    .iter()
+                                    .map(|&s| sub_counts[r][s])
+                                    .sum::<u64>()
+                            })
+                            .sum::<u64>()
+                            * WIRE
+                    })
+                    .max()
+                    .unwrap_or(0);
+                println!(
+                    "{:>5} {:>12} {:>5} {:>12} {:>12} {:>10.1}us",
+                    gi,
+                    members
+                        .iter()
+                        .map(|r| r.to_string())
+                        .collect::<Vec<_>>()
+                        .join(","),
+                    groups.relay(gi),
+                    human_bytes(gather_max),
+                    human_bytes(merged_max),
+                    tofu.hierarchical_exchange_seconds(
+                        groups.n_groups(),
+                        members.len(),
+                        gather_max as f64,
+                        merged_max as f64,
+                    ) * 1e6,
+                );
+            }
         }
     }
     Ok(())
@@ -1482,6 +1722,37 @@ mod tests {
             run_config_of(&a.experiment().unwrap()).routing,
             RoutingMode::Routed
         );
+    }
+
+    #[test]
+    fn hierarchical_routing_flows_into_run_config() {
+        let a = Args::parse(&s(&[
+            "run",
+            "--set",
+            "engine.routing=\"hierarchical\"",
+            "--set",
+            "engine.ranks=4",
+            "--set",
+            "engine.comm_group=[0, 0, 1, 1]",
+        ]))
+        .unwrap();
+        let cfg = a.experiment().unwrap();
+        assert_eq!(cfg.routing, RoutingMode::Hierarchical);
+        assert_eq!(cfg.comm_group, vec![0, 0, 1, 1]);
+        let rc = run_config_of(&cfg);
+        assert_eq!(rc.routing, RoutingMode::Hierarchical);
+        assert_eq!(rc.comm_group, vec![0, 0, 1, 1]);
+        // --group-size parses (cortex launch auto-grouping)
+        let a = Args::parse(&s(&[
+            "launch",
+            "--ranks",
+            "4",
+            "--group-size",
+            "2",
+        ]))
+        .unwrap();
+        assert_eq!(a.group_size, Some(2));
+        assert!(Args::parse(&s(&["launch", "--group-size"])).is_err());
     }
 
     #[test]

@@ -53,6 +53,10 @@ pub enum CodecError {
     /// A spike predates the window it is being packed into
     /// (encode-side validation).
     SpikeBeforeWindow { step: u32, window_start: u32 },
+    /// An assembled merged frame exceeds the transport's frame bound
+    /// (encode-side validation; a relay merging many members' packets
+    /// must refuse to emit a frame the receiver would reject).
+    Oversize { bytes: usize, limit: usize },
 }
 
 impl fmt::Display for CodecError {
@@ -79,6 +83,11 @@ impl fmt::Display for CodecError {
                      {window_start}"
                 )
             }
+            CodecError::Oversize { bytes, limit } => write!(
+                f,
+                "merged frame of {bytes} bytes exceeds the \
+                 {limit}-byte bound"
+            ),
         }
     }
 }
@@ -333,6 +342,104 @@ pub fn decode_frame(
         });
     }
     Ok((window, spikes))
+}
+
+/// One (source rank, destination rank) sub-frame inside a merged
+/// multi-source container ([`encode_merged`]). The hierarchical
+/// exchange moves these through relay ranks; the final receiver sorts
+/// its entries by `source` so concatenation reproduces the flat routed
+/// exchange's source-rank delivery order bit-for-bit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MergedEntry {
+    pub source: u16,
+    pub dest: u16,
+    pub spikes: SpikePacket,
+}
+
+/// Encode a merged multi-source frame: varint window counter, varint
+/// entry count, then per entry varint source rank, varint destination
+/// rank, varint window start (minimum spike step, self-describing like
+/// [`encode_frame`]) and the packed spike list. One such frame replaces
+/// a whole group's per-peer frames on the inter-group wire, which is
+/// where the hierarchical exchange sheds its message count.
+///
+/// The assembled frame is bounded against `limit` (the transport's
+/// frame cap): a merge that would exceed it is refused with
+/// [`CodecError::Oversize`] instead of poisoning the receiving peer.
+pub fn encode_merged(
+    window: u64,
+    entries: &[MergedEntry],
+    limit: usize,
+) -> Result<Vec<u8>, CodecError> {
+    let mut out = Vec::with_capacity(
+        16 + entries.iter().map(|e| e.spikes.len() + 8).sum::<usize>(),
+    );
+    put_varint(&mut out, window);
+    put_varint(&mut out, entries.len() as u64);
+    for e in entries {
+        put_varint(&mut out, e.source as u64);
+        put_varint(&mut out, e.dest as u64);
+        let start =
+            e.spikes.iter().map(|m| m.step).min().unwrap_or(0);
+        put_varint(&mut out, start as u64);
+        pack_into(start, &e.spikes, &mut out)?;
+    }
+    if out.len() > limit {
+        return Err(CodecError::Oversize {
+            bytes: out.len(),
+            limit,
+        });
+    }
+    Ok(out)
+}
+
+/// Decode a merged multi-source frame produced by [`encode_merged`]:
+/// returns the embedded window counter and the sub-frame entries in
+/// wire order. Fully fallible like the rest of the codec — truncated
+/// buffers, overlong varints, ranks escaping the 16-bit domain,
+/// implausible entry counts and trailing bytes are all [`CodecError`]s,
+/// never panics. Rank-topology checks (does `source` belong to the
+/// sending group, is `dest` local) stay with the caller, which knows
+/// the group layout.
+pub fn decode_merged(
+    buf: &[u8],
+) -> Result<(u64, Vec<MergedEntry>), CodecError> {
+    let mut pos = 0usize;
+    let window = get_varint(buf, &mut pos)?;
+    let n = get_varint(buf, &mut pos)?;
+    // every entry costs at least 4 bytes (source, dest, start, spike
+    // count — one varint each); reject counts the buffer cannot hold
+    // before allocating anything proportional to them
+    let remaining = (buf.len() - pos) as u64;
+    if n.saturating_mul(4) > remaining {
+        return Err(CodecError::Truncated);
+    }
+    let mut entries = Vec::with_capacity(n as usize);
+    for _ in 0..n {
+        let source = get_varint(buf, &mut pos)?;
+        let dest = get_varint(buf, &mut pos)?;
+        if source > u16::MAX as u64 || dest > u16::MAX as u64 {
+            return Err(CodecError::ValueOverflow);
+        }
+        let start = get_varint(buf, &mut pos)?;
+        if start > u32::MAX as u64 {
+            return Err(CodecError::ValueOverflow);
+        }
+        let spikes = unpack_at(start as u32, buf, &mut pos)?;
+        entries.push(MergedEntry {
+            source: source as u16,
+            dest: dest as u16,
+            spikes,
+        });
+    }
+    if pos != buf.len() {
+        return Err(CodecError::LengthMismatch {
+            declared: n,
+            used: pos,
+            len: buf.len(),
+        });
+    }
+    Ok((window, entries))
 }
 
 /// Message-count/volume model of one window exchange among `ranks`.
@@ -590,6 +697,135 @@ mod tests {
         let (w, spikes) = decode_frame(&frame).unwrap();
         assert_eq!(w, 42);
         assert!(spikes.is_empty());
+    }
+
+    #[test]
+    fn merged_frame_roundtrips() {
+        let mut rng = Rng::new(17);
+        for w in 0..30u64 {
+            let n_entries = (w % 5) as usize;
+            let entries: Vec<MergedEntry> = (0..n_entries)
+                .map(|i| MergedEntry {
+                    source: (i * 2) as u16,
+                    dest: (i * 2 + 1) as u16,
+                    spikes: window(
+                        &mut rng,
+                        (w * 15) as u32,
+                        15,
+                        (i * 7) % 23,
+                    ),
+                })
+                .collect();
+            let buf =
+                encode_merged(w, &entries, usize::MAX).unwrap();
+            let (got_w, got) = decode_merged(&buf).unwrap();
+            assert_eq!(got_w, w);
+            assert_eq!(got.len(), entries.len());
+            for (g, e) in got.iter().zip(&entries) {
+                assert_eq!((g.source, g.dest), (e.source, e.dest));
+                let mut want = e.spikes.clone();
+                want.sort_unstable_by_key(|m| (m.step, m.gid));
+                let mut have = g.spikes.clone();
+                have.sort_unstable_by_key(|m| (m.step, m.gid));
+                assert_eq!(have, want);
+            }
+        }
+    }
+
+    #[test]
+    fn merged_frame_respects_the_size_bound() {
+        let entries = vec![MergedEntry {
+            source: 0,
+            dest: 1,
+            spikes: (0..1000)
+                .map(|i| SpikeMsg { gid: i * 3, step: 5 })
+                .collect(),
+        }];
+        let full = encode_merged(3, &entries, usize::MAX).unwrap();
+        assert_eq!(
+            encode_merged(3, &entries, full.len()).unwrap().len(),
+            full.len()
+        );
+        assert_eq!(
+            encode_merged(3, &entries, full.len() - 1),
+            Err(CodecError::Oversize {
+                bytes: full.len(),
+                limit: full.len() - 1
+            })
+        );
+    }
+
+    #[test]
+    fn merged_frame_rejects_absurd_entry_count() {
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 9); // window
+        put_varint(&mut buf, u64::MAX); // entries
+        buf.push(0);
+        assert_eq!(decode_merged(&buf), Err(CodecError::Truncated));
+    }
+
+    #[test]
+    fn merged_frame_rejects_rank_overflow_and_trailing_bytes() {
+        // source rank past u16
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 0); // window
+        put_varint(&mut buf, 1); // one entry
+        put_varint(&mut buf, (u16::MAX as u64) + 1);
+        put_varint(&mut buf, 0);
+        put_varint(&mut buf, 0);
+        put_varint(&mut buf, 0);
+        assert_eq!(
+            decode_merged(&buf),
+            Err(CodecError::ValueOverflow)
+        );
+        // trailing garbage after a valid frame
+        let mut buf = encode_merged(
+            1,
+            &[MergedEntry {
+                source: 2,
+                dest: 3,
+                spikes: vec![SpikeMsg { gid: 4, step: 20 }],
+            }],
+            usize::MAX,
+        )
+        .unwrap();
+        buf.push(0);
+        assert!(matches!(
+            decode_merged(&buf),
+            Err(CodecError::LengthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn merged_decode_never_panics_on_adversarial_bytes() {
+        // bit-flip and truncation fuzz over a real frame — every decode
+        // must return, never panic (the container is wire input)
+        let mut rng = Rng::new(41);
+        let entries: Vec<MergedEntry> = (0..4)
+            .map(|i| MergedEntry {
+                source: i,
+                dest: 7 - i,
+                spikes: window(&mut rng, 100, 15, 40),
+            })
+            .collect();
+        let frame = encode_merged(5, &entries, usize::MAX).unwrap();
+        for cut in 0..frame.len() {
+            let _ = decode_merged(&frame[..cut]);
+        }
+        for _ in 0..2000 {
+            let mut fuzz = frame.clone();
+            for _ in 0..1 + rng.below(4) {
+                let i = rng.below(fuzz.len() as u64) as usize;
+                fuzz[i] ^= 1 << rng.below(8);
+            }
+            let _ = decode_merged(&fuzz);
+        }
+        for _ in 0..500 {
+            let len = rng.below(64) as usize;
+            let junk: Vec<u8> =
+                (0..len).map(|_| rng.below(256) as u8).collect();
+            let _ = decode_merged(&junk);
+        }
     }
 
     #[test]

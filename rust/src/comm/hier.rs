@@ -1,0 +1,706 @@
+//! Hierarchical spike exchange: merged packets over two-level routing
+//! (paper §III.C, and "A Low-latency Communication Design for Brain
+//! Simulations" — merged spike packets plus intra-host/inter-host
+//! routing keep spike delivery sub-linear where a full mesh collapses).
+//!
+//! Ranks are partitioned into **host groups** ([`CommGroups`], config
+//! `engine.comm_group`, auto-assigned by `cortex launch`). Each group
+//! elects its lowest rank as the **relay**; one window exchange then
+//! runs in three rounds instead of a flat per-peer mesh:
+//!
+//! ```text
+//!   group 0                         group 1
+//!   ┌──────────────┐               ┌──────────────┐
+//!   │ r1 ─┐        │   merged      │        ┌─ r3 │
+//!   │     ├─ r0 ═══╪═══════════════╪══ r2 ──┤     │
+//!   │ ····┘ (relay)│  multi-source │(relay) └···· │
+//!   └──────────────┘    frames     └──────────────┘
+//!    A: gather        B: relay ↔ relay       C: scatter
+//! ```
+//!
+//! * **A (gather)** — every member hands its relay one frame bundling
+//!   its per-destination routed packets;
+//! * **B (relay exchange)** — relays exchange one merged multi-source
+//!   frame per destination *group* ([`bsb::encode_merged`]), carrying
+//!   every member's sub-frame for every rank of that group — the
+//!   O(groups²) wire stage that replaces the O(ranks²) mesh;
+//! * **C (scatter)** — each relay re-buckets by destination rank and
+//!   hands every member its sub-frames.
+//!
+//! The receiver sorts its sub-frames by source rank before
+//! concatenating, which reproduces the flat exchange's source-rank
+//! delivery order — hierarchical is **bit-identical to routed and
+//! broadcast by construction**, it only changes who carries the bytes.
+//!
+//! Co-located members of a group (ranks hosted by the same process)
+//! skip the transport entirely: the session wires them an in-process
+//! channel fast path ([`FastLink`]), so intra-group rounds never touch
+//! loopback TCP. Inter-group traffic stays on the wrapped transport's
+//! point-to-point frames ([`Communicator::send_frame`]).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::{
+    bsb, bsb::MergedEntry, CommError, Communicator, Outbound,
+    SpikePacket, MAX_FRAME_BYTES,
+};
+
+/// The host-group topology: which group each rank belongs to. Group
+/// ids must be contiguous from zero and every group non-empty; the
+/// relay of a group is its lowest rank.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CommGroups {
+    group_of: Vec<usize>,
+    members: Vec<Vec<usize>>,
+}
+
+impl CommGroups {
+    /// Validate a per-rank group-id assignment (`group_of[r]` is rank
+    /// `r`'s group).
+    pub fn new(group_of: Vec<usize>) -> Result<CommGroups, CommError> {
+        if group_of.is_empty() {
+            return Err(CommError::Protocol(
+                "comm groups need at least one rank",
+            ));
+        }
+        let n_groups = group_of.iter().copied().max().unwrap_or(0) + 1;
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+        for (r, &g) in group_of.iter().enumerate() {
+            members[g].push(r);
+        }
+        if members.iter().any(|m| m.is_empty()) {
+            return Err(CommError::Protocol(
+                "comm group ids must be contiguous from zero",
+            ));
+        }
+        Ok(CommGroups { group_of, members })
+    }
+
+    /// Evenly chop `ranks` into groups of (up to) `group_size`
+    /// consecutive ranks — the shape `cortex launch` auto-assigns.
+    pub fn even(ranks: usize, group_size: usize) -> CommGroups {
+        let gs = group_size.max(1);
+        CommGroups::new((0..ranks).map(|r| r / gs).collect())
+            .expect("even grouping is always valid")
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.group_of.len()
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn group_of(&self, rank: usize) -> usize {
+        self.group_of[rank]
+    }
+
+    /// Ranks of group `g`, ascending.
+    pub fn members(&self, g: usize) -> &[usize] {
+        &self.members[g]
+    }
+
+    /// The relay (lowest rank) of group `g`.
+    pub fn relay(&self, g: usize) -> usize {
+        self.members[g][0]
+    }
+
+    /// The relay of `rank`'s own group.
+    pub fn relay_of(&self, rank: usize) -> usize {
+        self.relay(self.group_of[rank])
+    }
+
+    pub fn is_relay(&self, rank: usize) -> bool {
+        self.relay_of(rank) == rank
+    }
+
+    /// The per-rank group-id assignment this topology was built from.
+    pub fn assignment(&self) -> &[usize] {
+        &self.group_of
+    }
+}
+
+/// One direction pair of an in-process fast path between two
+/// co-located ranks: frames sent here never touch the transport.
+pub struct FastLink {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+/// Wire in-process channel links for every **same-group** pair among
+/// the ranks this process hosts (`present`). Returns each rank's
+/// peer→link map, to hand to [`HierarchicalComm::with_fastpath`].
+/// Inter-group pairs are left on the transport on purpose — that is
+/// the traffic the relay merge exists for.
+pub fn fastpath_links(
+    groups: &CommGroups,
+    present: &[usize],
+) -> HashMap<usize, HashMap<usize, FastLink>> {
+    let mut links: HashMap<usize, HashMap<usize, FastLink>> =
+        present.iter().map(|&r| (r, HashMap::new())).collect();
+    for (i, &a) in present.iter().enumerate() {
+        for &b in &present[i + 1..] {
+            if groups.group_of(a) != groups.group_of(b) {
+                continue;
+            }
+            let (ab_tx, ab_rx) = channel::<Vec<u8>>();
+            let (ba_tx, ba_rx) = channel::<Vec<u8>>();
+            links
+                .get_mut(&a)
+                .expect("present rank")
+                .insert(b, FastLink { tx: ab_tx, rx: ba_rx });
+            links
+                .get_mut(&b)
+                .expect("present rank")
+                .insert(a, FastLink { tx: ba_tx, rx: ab_rx });
+        }
+    }
+    links
+}
+
+/// The hierarchical exchange endpoint: wraps any transport and runs
+/// the gather / relay-exchange / scatter protocol over its
+/// point-to-point frames (plus the in-process fast path where wired).
+/// Like the flat transports, an endpoint that has returned an error is
+/// poisoned and must not be reused.
+pub struct HierarchicalComm {
+    inner: Box<dyn Communicator>,
+    groups: CommGroups,
+    fastpath: HashMap<usize, FastLink>,
+    /// Cap on any assembled merged frame ([`MAX_FRAME_BYTES`] unless
+    /// narrowed for testing).
+    frame_limit: usize,
+    window: u64,
+    exchanges: u64,
+    frames: u64,
+    fast_bytes_sent: u64,
+    fast_bytes_received: u64,
+}
+
+impl HierarchicalComm {
+    /// Wrap `inner`; `groups` must span exactly `inner.size()` ranks.
+    pub fn new(
+        inner: Box<dyn Communicator>,
+        groups: CommGroups,
+    ) -> Result<HierarchicalComm, CommError> {
+        if groups.n_ranks() != inner.size() {
+            return Err(CommError::Protocol(
+                "comm group assignment does not span the cluster",
+            ));
+        }
+        Ok(HierarchicalComm {
+            inner,
+            groups,
+            fastpath: HashMap::new(),
+            frame_limit: MAX_FRAME_BYTES,
+            window: 0,
+            exchanges: 0,
+            frames: 0,
+            fast_bytes_sent: 0,
+            fast_bytes_received: 0,
+        })
+    }
+
+    /// Install in-process links ([`fastpath_links`]) for co-located
+    /// same-group peers.
+    pub fn with_fastpath(
+        mut self,
+        links: HashMap<usize, FastLink>,
+    ) -> HierarchicalComm {
+        self.fastpath = links;
+        self
+    }
+
+    /// Narrow the merged-frame cap (testing the over-merge refusal
+    /// without assembling 64 MiB of spikes).
+    pub fn with_frame_limit(mut self, limit: usize) -> HierarchicalComm {
+        self.frame_limit = limit;
+        self
+    }
+
+    pub fn groups(&self) -> &CommGroups {
+        &self.groups
+    }
+
+    fn send_to(
+        &mut self,
+        peer: usize,
+        frame: Vec<u8>,
+    ) -> Result<(), CommError> {
+        self.frames += 1;
+        match self.fastpath.get(&peer) {
+            Some(link) => {
+                self.fast_bytes_sent += frame.len() as u64;
+                link.tx.send(frame).map_err(|_| CommError::PeerLost {
+                    peer: peer as u16,
+                    window: self.window,
+                })
+            }
+            None => self.inner.send_frame(peer, &frame),
+        }
+    }
+
+    fn recv_from(&mut self, peer: usize) -> Result<Vec<u8>, CommError> {
+        match self.fastpath.get(&peer) {
+            Some(link) => {
+                let frame =
+                    link.rx.recv().map_err(|_| CommError::PeerLost {
+                        peer: peer as u16,
+                        window: self.window,
+                    })?;
+                self.fast_bytes_received += frame.len() as u64;
+                Ok(frame)
+            }
+            None => self.inner.recv_frame(peer),
+        }
+    }
+
+    /// Decode a protocol frame and verify its window counter.
+    fn decode_round(
+        &self,
+        buf: &[u8],
+    ) -> Result<Vec<MergedEntry>, CommError> {
+        let (got, entries) = bsb::decode_merged(buf)?;
+        if got != self.window {
+            return Err(CommError::WindowMismatch {
+                got,
+                want: self.window,
+            });
+        }
+        Ok(entries)
+    }
+
+    fn encode_round(
+        &self,
+        entries: &[MergedEntry],
+    ) -> Result<Vec<u8>, CommError> {
+        match bsb::encode_merged(self.window, entries, self.frame_limit)
+        {
+            Ok(frame) => Ok(frame),
+            Err(bsb::CodecError::Oversize { bytes, limit }) => {
+                Err(CommError::FrameTooLarge { bytes, limit })
+            }
+            Err(e) => Err(CommError::Codec(e)),
+        }
+    }
+
+    /// The member side: one gather frame up to the relay, one scatter
+    /// frame back down.
+    fn member_exchange(
+        &mut self,
+        per: Vec<SpikePacket>,
+    ) -> Result<Vec<MergedEntry>, CommError> {
+        let rank = self.inner.rank() as usize;
+        let relay = self.groups.relay_of(rank);
+        let entries: Vec<MergedEntry> = per
+            .into_iter()
+            .enumerate()
+            .filter(|(d, p)| *d != rank && !p.is_empty())
+            .map(|(d, spikes)| MergedEntry {
+                source: rank as u16,
+                dest: d as u16,
+                spikes,
+            })
+            .collect();
+        let frame = self.encode_round(&entries)?;
+        self.send_to(relay, frame)?;
+        let buf = self.recv_from(relay)?;
+        let inbound = self.decode_round(&buf)?;
+        for e in &inbound {
+            if e.dest as usize != rank {
+                return Err(CommError::Protocol(
+                    "scatter sub-frame addressed to another rank",
+                ));
+            }
+        }
+        Ok(inbound)
+    }
+
+    /// The relay side: gather the group's sub-frames, exchange merged
+    /// multi-source frames with every other relay, scatter to members.
+    fn relay_exchange(
+        &mut self,
+        per: Vec<SpikePacket>,
+    ) -> Result<Vec<MergedEntry>, CommError> {
+        let rank = self.inner.rank() as usize;
+        let size = self.inner.size();
+        let g = self.groups.group_of(rank);
+
+        // own packets join the pool directly (source == relay)
+        let mut pool: Vec<MergedEntry> = per
+            .into_iter()
+            .enumerate()
+            .filter(|(d, p)| *d != rank && !p.is_empty())
+            .map(|(d, spikes)| MergedEntry {
+                source: rank as u16,
+                dest: d as u16,
+                spikes,
+            })
+            .collect();
+
+        // round A: every member's bundle, in rank order
+        let members: Vec<usize> = self.groups.members(g).to_vec();
+        for &m in members.iter().filter(|&&m| m != rank) {
+            let buf = self.recv_from(m)?;
+            let entries = self.decode_round(&buf)?;
+            for e in &entries {
+                if e.source as usize != m || e.dest as usize >= size {
+                    return Err(CommError::Protocol(
+                        "gather sub-frame claims a foreign source \
+                         or an out-of-range destination",
+                    ));
+                }
+            }
+            pool.extend(entries);
+        }
+
+        // round B: one merged multi-source frame per destination
+        // group, pairwise-ordered against each partner relay (lower
+        // rank sends first) so blocking point-to-point frames cannot
+        // deadlock
+        let mut partners: Vec<(usize, usize)> = (0..self
+            .groups
+            .n_groups())
+            .filter(|&h| h != g)
+            .map(|h| (h, self.groups.relay(h)))
+            .collect();
+        partners.sort_by_key(|&(_, relay)| relay);
+        let mut delivered: Vec<MergedEntry> = Vec::new();
+        for (h, partner) in partners {
+            let outbound: Vec<MergedEntry> = pool
+                .iter()
+                .filter(|e| {
+                    self.groups.group_of(e.dest as usize) == h
+                })
+                .cloned()
+                .collect();
+            let frame = self.encode_round(&outbound)?;
+            let buf = if rank < partner {
+                self.send_to(partner, frame)?;
+                self.recv_from(partner)?
+            } else {
+                let buf = self.recv_from(partner)?;
+                self.send_to(partner, frame)?;
+                buf
+            };
+            let entries = self.decode_round(&buf)?;
+            for e in &entries {
+                let src = e.source as usize;
+                let dst = e.dest as usize;
+                if src >= size
+                    || self.groups.group_of(src) != h
+                    || dst >= size
+                    || self.groups.group_of(dst) != g
+                {
+                    return Err(CommError::Protocol(
+                        "merged sub-frame crosses the wrong group \
+                         boundary",
+                    ));
+                }
+            }
+            delivered.extend(entries);
+        }
+
+        // intra-group packets never left this relay
+        delivered.extend(
+            pool.into_iter().filter(|e| {
+                self.groups.group_of(e.dest as usize) == g
+            }),
+        );
+
+        // round C: scatter per member
+        for &m in members.iter().filter(|&&m| m != rank) {
+            let for_m: Vec<MergedEntry> = delivered
+                .iter()
+                .filter(|e| e.dest as usize == m)
+                .cloned()
+                .collect();
+            let frame = self.encode_round(&for_m)?;
+            self.send_to(m, frame)?;
+        }
+        delivered.retain(|e| e.dest as usize == rank);
+        Ok(delivered)
+    }
+}
+
+impl Communicator for HierarchicalComm {
+    fn rank(&self) -> u16 {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn exchange_outbound(
+        &mut self,
+        out: Outbound,
+    ) -> Result<SpikePacket, CommError> {
+        let rank = self.inner.rank() as usize;
+        let size = self.inner.size();
+        // normalize to per-destination packets; a broadcast submission
+        // simply replicates the packet per destination (the hierarchy
+        // merges it the same way)
+        let per: Vec<SpikePacket> = match out {
+            Outbound::Routed(per) => per,
+            Outbound::Broadcast(p) => (0..size)
+                .map(|d| if d == rank { Vec::new() } else { p.clone() })
+                .collect(),
+        };
+        if per.len() != size {
+            return Err(CommError::Protocol(
+                "routed submission does not span the cluster",
+            ));
+        }
+        let mut inbound = if self.groups.is_relay(rank) {
+            self.relay_exchange(per)?
+        } else {
+            self.member_exchange(per)?
+        };
+        for e in &inbound {
+            if e.source as usize == rank
+                || e.source as usize >= size
+            {
+                return Err(CommError::Protocol(
+                    "inbound sub-frame claims an impossible source",
+                ));
+            }
+        }
+        // source-rank order is what the flat mesh delivers; restoring
+        // it here is the bit-identity argument in one line
+        inbound.sort_by_key(|e| e.source);
+        let got =
+            inbound.into_iter().flat_map(|e| e.spikes).collect();
+        self.window += 1;
+        self.exchanges += 1;
+        Ok(got)
+    }
+
+    fn alltoall(
+        &mut self,
+        out: Vec<Vec<u8>>,
+    ) -> Result<Vec<Vec<u8>>, CommError> {
+        self.inner.alltoall(out)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.inner.bytes_sent() + self.fast_bytes_sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.inner.bytes_received() + self.fast_bytes_received
+    }
+
+    fn exchanges(&self) -> u64 {
+        self.exchanges
+    }
+
+    fn frames_sent(&self) -> u64 {
+        self.frames
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{LocalCluster, SpikeMsg};
+
+    #[test]
+    fn groups_validate_shape() {
+        assert!(CommGroups::new(vec![]).is_err());
+        // group 1 empty
+        assert!(CommGroups::new(vec![0, 0, 2]).is_err());
+        let g = CommGroups::new(vec![0, 1, 0, 1]).unwrap();
+        assert_eq!(g.n_groups(), 2);
+        assert_eq!(g.members(0), &[0, 2]);
+        assert_eq!(g.relay(1), 1);
+        assert!(g.is_relay(0) && !g.is_relay(2));
+        let even = CommGroups::even(5, 2);
+        assert_eq!(even.assignment(), &[0, 0, 1, 1, 2]);
+    }
+
+    fn msg(gid: u32, step: u32) -> SpikeMsg {
+        SpikeMsg { gid, step }
+    }
+
+    /// Run one routed window through the hierarchy over in-process
+    /// channels and compare against the flat mesh, for several group
+    /// shapes.
+    #[test]
+    fn hierarchical_matches_flat_mesh() {
+        for (ranks, assignment) in [
+            (2usize, vec![0usize, 0]),
+            (2, vec![0, 1]),
+            (4, vec![0, 0, 1, 1]),
+            (4, vec![0, 1, 1, 0]),
+            (6, vec![0, 0, 0, 1, 1, 1]),
+        ] {
+            let groups = CommGroups::new(assignment.clone()).unwrap();
+            // per[src][dst]: a distinct packet per directed pair
+            let per: Vec<Vec<SpikePacket>> = (0..ranks)
+                .map(|s| {
+                    (0..ranks)
+                        .map(|d| {
+                            if s == d {
+                                Vec::new()
+                            } else {
+                                vec![
+                                    msg((s * 100 + d) as u32, 3),
+                                    msg((s * 100 + d + 50) as u32, 4),
+                                ]
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+
+            let flat: Vec<SpikePacket> = LocalCluster::new(ranks)
+                .into_iter()
+                .zip(per.clone())
+                .map(|(mut c, out)| {
+                    std::thread::spawn(move || {
+                        c.exchange_outbound(Outbound::Routed(out))
+                            .unwrap()
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect();
+
+            let hier: Vec<SpikePacket> = LocalCluster::new(ranks)
+                .into_iter()
+                .zip(per)
+                .map(|(c, out)| {
+                    let groups = groups.clone();
+                    std::thread::spawn(move || {
+                        let mut h = HierarchicalComm::new(
+                            Box::new(c),
+                            groups,
+                        )
+                        .unwrap();
+                        h.exchange_outbound(Outbound::Routed(out))
+                            .unwrap()
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect();
+
+            assert_eq!(
+                hier, flat,
+                "{ranks} ranks, groups {assignment:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fastpath_carries_intra_group_rounds() {
+        let ranks = 4;
+        let groups = CommGroups::even(ranks, 2);
+        let links = fastpath_links(
+            &groups,
+            &(0..ranks).collect::<Vec<_>>(),
+        );
+        let mut links: Vec<_> = {
+            let mut v: Vec<_> = links.into_iter().collect();
+            v.sort_by_key(|(r, _)| *r);
+            v
+        };
+        let handles: Vec<_> = LocalCluster::new(ranks)
+            .into_iter()
+            .enumerate()
+            .map(|(r, c)| {
+                let groups = groups.clone();
+                let my = std::mem::take(&mut links[r].1);
+                std::thread::spawn(move || {
+                    let mut h = HierarchicalComm::new(
+                        Box::new(c),
+                        groups,
+                    )
+                    .unwrap()
+                    .with_fastpath(my);
+                    let out = Outbound::Broadcast(vec![msg(
+                        r as u32, 7,
+                    )]);
+                    let got = h.exchange_outbound(out).unwrap();
+                    (got, h.fast_bytes_sent, h.frames_sent())
+                })
+            })
+            .collect();
+        let results: Vec<_> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (r, (got, fast_sent, frames)) in
+            results.iter().enumerate()
+        {
+            let want: SpikePacket = (0..ranks)
+                .filter(|&s| s != r)
+                .map(|s| msg(s as u32, 7))
+                .collect();
+            assert_eq!(got, &want, "rank {r}");
+            // every rank talks to its group-mate over the fast path
+            assert!(*fast_sent > 0, "rank {r} skipped the fast path");
+            // members send 1 frame; relays 1 gather-reply + 1 inter
+            assert!(*frames <= 2, "rank {r}: {frames} frames");
+        }
+        // frames/window across the cluster: 2 members × 1 + 2 relays
+        // × 2 = 6, vs the flat mesh's 4 × 3 = 12
+        let total: u64 =
+            results.iter().map(|(_, _, f)| f).sum();
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn oversize_merge_is_a_typed_error() {
+        // two members' packets individually under the (narrowed) cap
+        // merge past it at the relay: the relay must refuse with
+        // FrameTooLarge, not ship a frame the peer rejects
+        let groups = CommGroups::new(vec![0, 0, 1]).unwrap();
+        let pkt: SpikePacket =
+            (0..64u32).map(|i| msg(i * 37 % 500, 9)).collect();
+        let single =
+            bsb::encode_merged(0, &[], usize::MAX).unwrap().len()
+                + bsb::pack(9, &pkt).unwrap().len()
+                + 8;
+        let handles: Vec<_> = LocalCluster::new(3)
+            .into_iter()
+            .enumerate()
+            .map(|(r, c)| {
+                let groups = groups.clone();
+                let pkt = pkt.clone();
+                std::thread::spawn(move || {
+                    let mut h = HierarchicalComm::new(
+                        Box::new(c),
+                        groups,
+                    )
+                    .unwrap()
+                    // one sub-frame fits, the relay's two-source
+                    // merge does not
+                    .with_frame_limit(single + single / 2);
+                    let per = (0..3)
+                        .map(|d| {
+                            if d == r {
+                                Vec::new()
+                            } else {
+                                pkt.clone()
+                            }
+                        })
+                        .collect();
+                    h.exchange_outbound(Outbound::Routed(per))
+                })
+            })
+            .collect();
+        let results: Vec<_> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(
+            results.iter().any(|r| matches!(
+                r,
+                Err(CommError::FrameTooLarge { .. })
+            )),
+            "no rank refused the over-cap merge"
+        );
+    }
+}

@@ -190,6 +190,50 @@ impl Communicator for LocalComm {
     fn exchanges(&self) -> u64 {
         self.window
     }
+
+    fn send_frame(
+        &mut self,
+        peer: usize,
+        payload: &[u8],
+    ) -> Result<(), CommError> {
+        let tx = self
+            .to_peer
+            .get(peer)
+            .and_then(|t| t.as_ref())
+            .ok_or(CommError::Protocol(
+                "point-to-point frame addressed to a non-peer",
+            ))?;
+        self.bytes_sent += payload.len() as u64;
+        tx.send(Packet::Blob(payload.to_vec())).map_err(|_| {
+            CommError::PeerLost {
+                peer: peer as u16,
+                window: self.window,
+            }
+        })
+    }
+
+    fn recv_frame(&mut self, peer: usize) -> Result<Vec<u8>, CommError> {
+        let rx = self
+            .from_peer
+            .get(peer)
+            .and_then(|r| r.as_ref())
+            .ok_or(CommError::Protocol(
+                "point-to-point frame expected from a non-peer",
+            ))?;
+        match rx.recv() {
+            Ok(Packet::Blob(b)) => {
+                self.bytes_received += b.len() as u64;
+                Ok(b)
+            }
+            Ok(Packet::Spikes { .. }) => Err(CommError::Protocol(
+                "spike packet where a relay frame was due",
+            )),
+            Err(_) => Err(CommError::PeerLost {
+                peer: peer as u16,
+                window: self.window,
+            }),
+        }
+    }
 }
 
 #[cfg(test)]

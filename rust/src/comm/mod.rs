@@ -15,17 +15,25 @@
 //! Fugaku-scale communication times.
 
 pub mod bsb;
+pub mod hier;
 pub mod local;
 pub mod netmodel;
 pub mod tcp;
 
+pub use hier::{CommGroups, HierarchicalComm};
 pub use local::LocalCluster;
-pub use netmodel::TofuModel;
+pub use netmodel::{frames_per_window, TofuModel};
 pub use tcp::TcpComm;
 
 use std::fmt;
 
 use crate::Gid;
+
+/// Sanity bound on any single length-prefixed payload frame. A frame
+/// announcing more is treated as stream corruption by the transports
+/// and as an over-merge by the hierarchical relay — 64 MiB of packed
+/// varint spikes is far beyond any window this simulator produces.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
 /// One spike in flight: source neuron and emission step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -257,6 +265,39 @@ pub trait Communicator: Send {
 
     /// Number of exchanges performed.
     fn exchanges(&self) -> u64;
+
+    /// Point-to-point: deliver one opaque payload frame to `peer`.
+    /// The hierarchical relay protocol ([`hier::HierarchicalComm`])
+    /// moves its gather/merge/scatter rounds through this; transports
+    /// without point-to-point frames refuse with
+    /// [`CommError::Protocol`].
+    fn send_frame(
+        &mut self,
+        peer: usize,
+        payload: &[u8],
+    ) -> Result<(), CommError> {
+        let _ = (peer, payload);
+        Err(CommError::Protocol(
+            "transport has no point-to-point frames",
+        ))
+    }
+
+    /// Point-to-point: block for the next payload frame from `peer`.
+    fn recv_frame(&mut self, peer: usize) -> Result<Vec<u8>, CommError> {
+        let _ = peer;
+        Err(CommError::Protocol(
+            "transport has no point-to-point frames",
+        ))
+    }
+
+    /// Payload frames this rank has put on the wire for spike
+    /// exchanges (the frames-per-window accounting the hierarchical
+    /// layer exists to shrink). Mesh transports emit one frame per
+    /// peer per window; relay transports override with their true
+    /// count.
+    fn frames_sent(&self) -> u64 {
+        self.exchanges() * (self.size() as u64).saturating_sub(1)
+    }
 }
 
 /// Payload size of one spike on the wire (gid + step, packed).

@@ -94,6 +94,43 @@ impl TofuModel {
             )
     }
 
+    /// Estimated time (seconds) of one **hierarchical** exchange
+    /// (gather → relay↔relay merged frames → scatter). Three
+    /// serialized rounds on the critical path:
+    ///
+    /// * gather/scatter are intra-node hops (a host group maps to one
+    ///   node): one latency each, with the relay's injection port
+    ///   carrying `group_size - 1` member frames of `gather_bytes`;
+    /// * the relay round is a routed exchange among `n_groups` relays
+    ///   shipping one merged multi-source frame of `merged_bytes` per
+    ///   destination group — `merged_bytes` is roughly `group_size`×
+    ///   a member frame, but the latency floor drops from
+    ///   `log2(ranks)` to `2 + log2(n_groups)` stages.
+    pub fn hierarchical_exchange_seconds(
+        &self,
+        n_groups: usize,
+        group_size: usize,
+        gather_bytes: f64,
+        merged_bytes: f64,
+    ) -> f64 {
+        if n_groups <= 1 && group_size <= 1 {
+            return 0.0;
+        }
+        let inj = self.injection_bw_gbs * 1e9;
+        let intra = if group_size > 1 {
+            2.0 * (self.latency_us * 1e-6
+                + (group_size as f64 - 1.0) * gather_bytes / inj)
+        } else {
+            0.0
+        };
+        intra
+            + self.routed_exchange_seconds(
+                n_groups,
+                (n_groups as f64 - 1.0) * merged_bytes,
+                (n_groups as f64 - 1.0) * merged_bytes,
+            )
+    }
+
     /// Project a full simulation's communication time: `windows` exchanges
     /// of `avg_bytes_per_rank` each.
     pub fn total_comm_seconds(
@@ -104,6 +141,21 @@ impl TofuModel {
     ) -> f64 {
         windows as f64 * self.allgather_seconds(ranks, avg_bytes_per_rank)
     }
+}
+
+/// Point-to-point frames one window exchange puts on the wire:
+/// `(flat, hierarchical)`. The flat routed mesh sends `R·(R-1)`
+/// frames; the two-level protocol sends one gather and one scatter
+/// frame per non-relay member plus the `G·(G-1)` merged relay frames.
+/// (Intra-group frames that ride an in-process fast path still count
+/// — this is the transport-agnostic message count.)
+pub fn frames_per_window(ranks: usize, n_groups: usize) -> (u64, u64) {
+    if ranks <= 1 {
+        return (0, 0);
+    }
+    let r = ranks as u64;
+    let g = n_groups.clamp(1, ranks) as u64;
+    (r * (r - 1), 2 * (r - g) + g * (g - 1))
 }
 
 #[cfg(test)]
@@ -160,6 +212,39 @@ mod tests {
         assert!(
             m.routed_exchange_seconds(64, 1.0, 1.0) >= floor
         );
+    }
+
+    #[test]
+    fn merged_frames_shrink_the_mesh() {
+        assert_eq!(frames_per_window(4, 2), (12, 6));
+        assert_eq!(frames_per_window(8, 4), (56, 20));
+        // degenerate shapes: 1-rank groups and a single pair change
+        // nothing — the win needs ranks > groups > 1
+        assert_eq!(frames_per_window(2, 2), (2, 2));
+        assert_eq!(frames_per_window(1, 1), (0, 0));
+    }
+
+    #[test]
+    fn hierarchical_cuts_the_latency_floor() {
+        let m = TofuModel::default();
+        assert_eq!(
+            m.hierarchical_exchange_seconds(1, 1, 0.0, 0.0),
+            0.0
+        );
+        // tiny packets, 64 ranks: the flat mesh pays ceil(log2 64) = 6
+        // latency stages; 4 groups of 16 pay two intra-node hops plus
+        // ceil(log2 4) = 2 relay stages even though each merged frame
+        // is 16× a member frame
+        let flat = m.routed_exchange_seconds(64, 64.0, 64.0);
+        let hier =
+            m.hierarchical_exchange_seconds(4, 16, 64.0, 1024.0);
+        assert!(hier < flat, "{hier} !< {flat}");
+        // bandwidth-bound regime: merged frames move the same volume,
+        // so hierarchy must not promise a >2x win there
+        let flat_bw = m.routed_exchange_seconds(64, 64e6, 64e6);
+        let hier_bw =
+            m.hierarchical_exchange_seconds(4, 16, 1e6, 16e6);
+        assert!(hier_bw > 0.4 * flat_bw, "{hier_bw} vs {flat_bw}");
     }
 
     #[test]

@@ -59,8 +59,9 @@ pub const WIRE_VERSION: u16 = 1;
 /// Sanity bound on one frame's payload (64 MiB ≈ tens of millions of
 /// packed spikes per window per rank — far beyond anything a real
 /// window produces). A length prefix above this is treated as
-/// corruption, not honored with an allocation.
-pub const MAX_FRAME_BYTES: usize = 64 << 20;
+/// corruption, not honored with an allocation. Shared with the
+/// hierarchical relay, whose merged frames must fit the same cap.
+pub use super::MAX_FRAME_BYTES;
 
 /// Poll interval while dialing a peer that is not listening yet.
 const RETRY_EVERY: Duration = Duration::from_millis(50);
@@ -603,6 +604,93 @@ impl Communicator for TcpComm {
 
     fn exchanges(&self) -> u64 {
         self.window
+    }
+
+    fn send_frame(
+        &mut self,
+        peer: usize,
+        payload: &[u8],
+    ) -> Result<(), CommError> {
+        if payload.len() > MAX_FRAME_BYTES {
+            return Err(CommError::FrameTooLarge {
+                bytes: payload.len(),
+                limit: MAX_FRAME_BYTES,
+            });
+        }
+        let window = self.window;
+        let stream = self
+            .streams
+            .get_mut(peer)
+            .and_then(|s| s.as_mut())
+            .ok_or(CommError::Protocol(
+                "point-to-point frame addressed to a non-peer",
+            ))?;
+        // relay frames travel between exchanges, when the streams are
+        // in their blocking state — same length-prefixed layout as the
+        // window loop
+        let res = stream
+            .write_all(&(payload.len() as u32).to_le_bytes())
+            .and_then(|()| stream.write_all(payload));
+        if let Err(e) = res {
+            return Err(match e.kind() {
+                ErrorKind::BrokenPipe
+                | ErrorKind::ConnectionReset
+                | ErrorKind::UnexpectedEof => CommError::PeerLost {
+                    peer: peer as u16,
+                    window,
+                },
+                _ => CommError::Io(e),
+            });
+        }
+        self.bytes_sent += (4 + payload.len()) as u64;
+        Ok(())
+    }
+
+    fn recv_frame(&mut self, peer: usize) -> Result<Vec<u8>, CommError> {
+        let window = self.window;
+        let stream = self
+            .streams
+            .get_mut(peer)
+            .and_then(|s| s.as_mut())
+            .ok_or(CommError::Protocol(
+                "point-to-point frame expected from a non-peer",
+            ))?;
+        let lost = |e: &std::io::Error| {
+            e.kind() == ErrorKind::UnexpectedEof
+                || e.kind() == ErrorKind::ConnectionReset
+                || e.kind() == ErrorKind::BrokenPipe
+        };
+        let mut header = [0u8; 4];
+        match stream.read_exact(&mut header) {
+            Ok(()) => {}
+            Err(e) if lost(&e) => {
+                return Err(CommError::PeerLost {
+                    peer: peer as u16,
+                    window,
+                })
+            }
+            Err(e) => return Err(CommError::Io(e)),
+        }
+        let len = u32::from_le_bytes(header) as usize;
+        if len > MAX_FRAME_BYTES {
+            return Err(CommError::FrameTooLarge {
+                bytes: len,
+                limit: MAX_FRAME_BYTES,
+            });
+        }
+        let mut payload = vec![0u8; len];
+        match stream.read_exact(&mut payload) {
+            Ok(()) => {}
+            Err(e) if lost(&e) => {
+                return Err(CommError::PeerLost {
+                    peer: peer as u16,
+                    window,
+                })
+            }
+            Err(e) => return Err(CommError::Io(e)),
+        }
+        self.bytes_received += (4 + len) as u64;
+        Ok(payload)
     }
 }
 

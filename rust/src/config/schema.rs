@@ -145,6 +145,12 @@ pub enum RoutingMode {
     /// Ablation fallback: the full allgather of every rank's packet to
     /// every peer (measures what interest routing saves on the wire).
     Broadcast,
+    /// Two-level exchange: ranks are partitioned into host groups
+    /// (`engine.comm_group`), each group's relay rank merges its
+    /// members' routed packets into one multi-source frame per
+    /// destination group (see `comm::hier`). Bit-identical to `routed`;
+    /// trades per-peer frames for per-group frames.
+    Hierarchical,
 }
 
 /// Integrate-kernel formulation (`engine.integrate`, see `model`).
@@ -215,6 +221,10 @@ pub struct ExperimentConfig {
     /// Rank-ordered listen addresses of the TCP cluster
     /// (`engine.peers` / `--peers`); must have exactly `ranks` entries.
     pub peers: Vec<String>,
+    /// Per-rank host-group ids for the hierarchical exchange
+    /// (`engine.comm_group`); empty = auto groups of two consecutive
+    /// ranks when `engine.routing = "hierarchical"`.
+    pub comm_group: Vec<usize>,
 
     // [serve]
     pub serve: ServeConfig,
@@ -466,6 +476,7 @@ impl Default for ExperimentConfig {
             transport: CommTransport::Local,
             tcp_rank: None,
             peers: Vec::new(),
+            comm_group: Vec::new(),
             serve: ServeConfig::default(),
             sweep: SweepConfig::default(),
         }
@@ -579,6 +590,7 @@ impl ExperimentConfig {
                 &[
                     ("routed", RoutingMode::Routed),
                     ("broadcast", RoutingMode::Broadcast),
+                    ("hierarchical", RoutingMode::Hierarchical),
                 ],
             )?,
             artifacts_dir: doc.str("engine.artifacts_dir", &d.artifacts_dir)?,
@@ -593,6 +605,7 @@ impl ExperimentConfig {
             )?,
             tcp_rank: parse_tcp_rank(doc)?,
             peers: parse_peers(doc)?,
+            comm_group: parse_comm_group(doc)?,
             serve: serve_config_from(doc)?,
             sweep: sweep_config_from(doc)?,
         };
@@ -699,6 +712,34 @@ impl ExperimentConfig {
                  engine.transport = \"tcp\"",
             );
         }
+        if !self.comm_group.is_empty() {
+            if self.routing != RoutingMode::Hierarchical {
+                return bad(
+                    "engine.comm_group",
+                    "only used with engine.routing = \"hierarchical\"",
+                );
+            }
+            if self.comm_group.len() != self.ranks {
+                return bad(
+                    "engine.comm_group",
+                    "must assign a group id to every engine.ranks rank",
+                );
+            }
+            // group ids must be contiguous from zero (each group gets
+            // a relay; an empty group would elect nobody)
+            let n_groups =
+                self.comm_group.iter().copied().max().unwrap_or(0) + 1;
+            let mut seen = vec![false; n_groups];
+            for &g in &self.comm_group {
+                seen[g] = true;
+            }
+            if seen.iter().any(|s| !s) {
+                return bad(
+                    "engine.comm_group",
+                    "group ids must be contiguous from zero",
+                );
+            }
+        }
         if self.serve.addr.is_empty() {
             return bad("serve.addr", "must be a host:port address");
         }
@@ -788,6 +829,31 @@ fn parse_peers(doc: &ConfigDoc) -> Result<Vec<String>, ConfigError> {
         Some(_) => Err(ConfigError::Type {
             key: "engine.peers".into(),
             expected: "array of \"host:port\" strings",
+        }),
+    }
+}
+
+/// `engine.comm_group` — per-rank host-group ids of the hierarchical
+/// exchange (index = rank, value = group).
+fn parse_comm_group(
+    doc: &ConfigDoc,
+) -> Result<Vec<usize>, ConfigError> {
+    match doc.get("engine.comm_group") {
+        None => Ok(Vec::new()),
+        Some(Value::Array(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_i64().filter(|x| *x >= 0).map(|x| x as usize).ok_or(
+                    ConfigError::Type {
+                        key: "engine.comm_group".into(),
+                        expected: "array of non-negative integers",
+                    },
+                )
+            })
+            .collect(),
+        Some(_) => Err(ConfigError::Type {
+            key: "engine.comm_group".into(),
+            expected: "array of non-negative integers",
         }),
     }
 }
@@ -986,6 +1052,50 @@ comm = "serialized"
         let doc =
             ConfigDoc::parse("[engine]\nrouting = \"multicast\"").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn comm_group_parses_and_validates() {
+        // default: empty assignment (auto-grouped downstream)
+        let doc = ConfigDoc::parse("").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert!(cfg.comm_group.is_empty());
+
+        let doc = ConfigDoc::parse(
+            "[engine]\nrouting = \"hierarchical\"\nranks = 4\n\
+             comm_group = [0, 0, 1, 1]",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.routing, RoutingMode::Hierarchical);
+        assert_eq!(cfg.comm_group, vec![0, 0, 1, 1]);
+
+        // hierarchical without an assignment is fine (auto groups)
+        let doc = ConfigDoc::parse(
+            "[engine]\nrouting = \"hierarchical\"\nranks = 4",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_ok());
+
+        // wrong length, non-contiguous ids, wrong routing mode,
+        // non-integer entries: all rejected
+        for toml in [
+            "[engine]\nrouting = \"hierarchical\"\nranks = 4\n\
+             comm_group = [0, 0, 1]",
+            "[engine]\nrouting = \"hierarchical\"\nranks = 4\n\
+             comm_group = [0, 0, 2, 2]",
+            "[engine]\nranks = 4\ncomm_group = [0, 0, 1, 1]",
+            "[engine]\nrouting = \"hierarchical\"\nranks = 2\n\
+             comm_group = [0, -1]",
+            "[engine]\nrouting = \"hierarchical\"\nranks = 2\n\
+             comm_group = \"both\"",
+        ] {
+            let doc = ConfigDoc::parse(toml).unwrap();
+            assert!(
+                ExperimentConfig::from_doc(&doc).is_err(),
+                "expected rejection: {toml}"
+            );
+        }
     }
 
     #[test]

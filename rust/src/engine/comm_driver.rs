@@ -21,13 +21,45 @@
 //! and exits, so a poisoned transport surfaces on the rank loop instead
 //! of panicking a detached thread.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::comm::{
     CommError, Communicator, Outbound, RoutingTable, SpikePacket,
 };
 use crate::config::CommMode;
+
+/// Measured exchange accounting of one driver: how long the exchanges
+/// themselves took (`busy_ns`, routing + wire time) and how much of
+/// that the rank loop actually spent blocked (`wait_ns`). Serialized
+/// drivers block for every nanosecond (`wait == busy`); an overlapped
+/// driver's gap between the two is exchange time hidden behind
+/// compute.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub(crate) struct CommStats {
+    /// ns the transport spent inside `exchange_outbound` (plus the
+    /// routing split, which runs on the same thread as the exchange).
+    pub busy_ns: u64,
+    /// ns the rank loop spent blocked on a completed exchange.
+    pub wait_ns: u64,
+}
+
+impl CommStats {
+    /// Fraction of exchange time hidden behind compute:
+    /// `(busy − wait) / busy`, 0 when nothing was exchanged (and for
+    /// any serialized driver, which hides nothing by construction).
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.busy_ns == 0 {
+            0.0
+        } else {
+            self.busy_ns.saturating_sub(self.wait_ns) as f64
+                / self.busy_ns as f64
+        }
+    }
+}
 
 /// Split a window packet per destination if a routing table is
 /// installed, else broadcast it whole.
@@ -48,16 +80,28 @@ pub(crate) enum CommDriver {
         comm: Box<dyn Communicator>,
         routing: Option<RoutingTable>,
         staged: Option<SpikePacket>,
+        busy_ns: u64,
     },
     Overlap {
         req: Sender<SpikePacket>,
         resp: Receiver<Result<SpikePacket, CommError>>,
         handle: JoinHandle<Box<dyn Communicator>>,
-        in_flight: bool,
+        /// Exchanges submitted but not yet received. The request
+        /// channel double-buffers outbound windows: up to
+        /// [`Self::STAGING_DEPTH`] may be in flight, so the rank loop
+        /// can stage window `k`'s packet while `k-1` is still on the
+        /// wire.
+        in_flight: usize,
+        busy_ns: Arc<AtomicU64>,
+        wait_ns: u64,
     },
 }
 
 impl CommDriver {
+    /// Outbound windows that may be submitted ahead of their receive
+    /// (overlap mode): the one on the wire plus one staged behind it.
+    pub const STAGING_DEPTH: usize = 2;
+
     /// `routing: None` keeps the broadcast allgather (the ablation
     /// baseline and the only shape `SoloComm` ever sees).
     pub fn new(
@@ -66,13 +110,18 @@ impl CommDriver {
         routing: Option<RoutingTable>,
     ) -> CommDriver {
         match mode {
-            CommMode::Serialized => {
-                CommDriver::Serialized { comm, routing, staged: None }
-            }
+            CommMode::Serialized => CommDriver::Serialized {
+                comm,
+                routing,
+                staged: None,
+                busy_ns: 0,
+            },
             CommMode::Overlap => {
                 let (req_tx, req_rx) = channel::<SpikePacket>();
                 let (resp_tx, resp_rx) =
                     channel::<Result<SpikePacket, CommError>>();
+                let busy = Arc::new(AtomicU64::new(0));
+                let busy_in_thread = Arc::clone(&busy);
                 let mut comm = comm;
                 let handle = std::thread::spawn(move || {
                     // the dedicated communication thread: drains exchange
@@ -81,8 +130,13 @@ impl CommDriver {
                     // exits — its endpoint is poisoned). Routing the
                     // packet happens here too, off the rank loop.
                     while let Ok(pkt) = req_rx.recv() {
+                        let t = Instant::now();
                         let out = outbound_of(routing.as_ref(), pkt);
                         let got = comm.exchange_outbound(out);
+                        busy_in_thread.fetch_add(
+                            t.elapsed().as_nanos() as u64,
+                            Ordering::Relaxed,
+                        );
                         let failed = got.is_err();
                         if resp_tx.send(got).is_err() || failed {
                             break;
@@ -94,9 +148,27 @@ impl CommDriver {
                     req: req_tx,
                     resp: resp_rx,
                     handle,
-                    in_flight: false,
+                    in_flight: 0,
+                    busy_ns: busy,
+                    wait_ns: 0,
                 }
             }
+        }
+    }
+
+    /// Exchange-time accounting so far (see [`CommStats`]). Read this
+    /// before [`Self::finish`]; a serialized driver reports
+    /// `wait == busy`.
+    pub fn stats(&self) -> CommStats {
+        match self {
+            CommDriver::Serialized { busy_ns, .. } => CommStats {
+                busy_ns: *busy_ns,
+                wait_ns: *busy_ns,
+            },
+            CommDriver::Overlap { busy_ns, wait_ns, .. } => CommStats {
+                busy_ns: busy_ns.load(Ordering::Relaxed),
+                wait_ns: *wait_ns,
+            },
         }
     }
 
@@ -106,31 +178,51 @@ impl CommDriver {
     /// [`Self::recv_completed`].
     pub fn submit(&mut self, pkt: SpikePacket) -> Result<(), CommError> {
         match self {
-            CommDriver::Serialized { comm, routing, staged } => {
+            CommDriver::Serialized {
+                comm,
+                routing,
+                staged,
+                busy_ns,
+            } => {
                 debug_assert!(staged.is_none());
+                let t = Instant::now();
                 let out = outbound_of(routing.as_ref(), pkt);
-                *staged = Some(comm.exchange_outbound(out)?);
+                let got = comm.exchange_outbound(out);
+                *busy_ns += t.elapsed().as_nanos() as u64;
+                *staged = Some(got?);
                 Ok(())
             }
             CommDriver::Overlap { req, in_flight, .. } => {
-                debug_assert!(!*in_flight);
+                debug_assert!(
+                    *in_flight < Self::STAGING_DEPTH,
+                    "outbound staging is {} deep",
+                    Self::STAGING_DEPTH
+                );
                 req.send(pkt).map_err(|_| CommError::Shutdown)?;
-                *in_flight = true;
+                *in_flight += 1;
                 Ok(())
             }
         }
     }
 
-    /// Receive the previously submitted window's remote spikes.
+    /// Receive the oldest submitted window's remote spikes.
     pub fn recv_completed(&mut self) -> Result<SpikePacket, CommError> {
         match self {
             CommDriver::Serialized { staged, .. } => {
                 Ok(staged.take().unwrap_or_default())
             }
-            CommDriver::Overlap { resp, in_flight, .. } => {
-                if *in_flight {
-                    *in_flight = false;
-                    match resp.recv() {
+            CommDriver::Overlap {
+                resp,
+                in_flight,
+                wait_ns,
+                ..
+            } => {
+                if *in_flight > 0 {
+                    *in_flight -= 1;
+                    let t = Instant::now();
+                    let got = resp.recv();
+                    *wait_ns += t.elapsed().as_nanos() as u64;
+                    match got {
                         Ok(r) => r,
                         Err(_) => Err(CommError::Shutdown),
                     }
@@ -145,8 +237,14 @@ impl CommDriver {
     pub fn finish(self) -> Box<dyn Communicator> {
         match self {
             CommDriver::Serialized { comm, .. } => comm,
-            CommDriver::Overlap { req, resp, handle, in_flight } => {
-                if in_flight {
+            CommDriver::Overlap {
+                req,
+                resp,
+                handle,
+                in_flight,
+                ..
+            } => {
+                for _ in 0..in_flight {
                     let _ = resp.recv();
                 }
                 drop(req);
@@ -254,5 +352,106 @@ mod tests {
             matches!(err, CommError::PeerLost { peer: 1, window: 1 }),
             "unexpected error: {err}"
         );
+    }
+
+    /// A transport whose exchange takes a measurable amount of time —
+    /// for exercising the busy/wait accounting.
+    struct SlowComm {
+        exchanges: u64,
+        delay: std::time::Duration,
+    }
+
+    impl Communicator for SlowComm {
+        fn rank(&self) -> u16 {
+            0
+        }
+        fn size(&self) -> usize {
+            2
+        }
+        fn exchange_outbound(
+            &mut self,
+            _out: Outbound,
+        ) -> Result<SpikePacket, CommError> {
+            std::thread::sleep(self.delay);
+            self.exchanges += 1;
+            Ok(Vec::new())
+        }
+        fn alltoall(
+            &mut self,
+            out: Vec<Vec<u8>>,
+        ) -> Result<Vec<Vec<u8>>, CommError> {
+            Ok(vec![Vec::new(); out.len()])
+        }
+        fn bytes_sent(&self) -> u64 {
+            0
+        }
+        fn bytes_received(&self) -> u64 {
+            0
+        }
+        fn exchanges(&self) -> u64 {
+            self.exchanges
+        }
+    }
+
+    #[test]
+    fn serialized_driver_hides_nothing() {
+        let mut d = CommDriver::new(
+            Box::new(SlowComm {
+                exchanges: 0,
+                delay: std::time::Duration::from_millis(2),
+            }),
+            CommMode::Serialized,
+            None,
+        );
+        d.submit(pkt()).unwrap();
+        assert!(d.recv_completed().unwrap().is_empty());
+        let s = d.stats();
+        assert!(s.busy_ns > 0, "exchange time not measured");
+        assert_eq!(s.wait_ns, s.busy_ns);
+        assert_eq!(s.overlap_ratio(), 0.0);
+    }
+
+    #[test]
+    fn overlapped_exchange_hidden_behind_compute_scores_high() {
+        let mut d = CommDriver::new(
+            Box::new(SlowComm {
+                exchanges: 0,
+                delay: std::time::Duration::from_millis(5),
+            }),
+            CommMode::Overlap,
+            None,
+        );
+        d.submit(pkt()).unwrap();
+        // "compute" for longer than the exchange takes: the receive
+        // below should barely block
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        assert!(d.recv_completed().unwrap().is_empty());
+        let s = d.stats();
+        assert!(s.busy_ns > 0, "exchange time not measured");
+        assert!(
+            s.overlap_ratio() > 0.2,
+            "exchange not hidden: {s:?}"
+        );
+        let comm = d.finish();
+        assert_eq!(comm.exchanges(), 1);
+    }
+
+    #[test]
+    fn staging_depth_two_pipelines_submissions() {
+        let mut d = CommDriver::new(
+            Box::new(SlowComm {
+                exchanges: 0,
+                delay: std::time::Duration::from_millis(1),
+            }),
+            CommMode::Overlap,
+            None,
+        );
+        // two windows in flight before the first receive
+        d.submit(pkt()).unwrap();
+        d.submit(pkt()).unwrap();
+        assert!(d.recv_completed().unwrap().is_empty());
+        assert!(d.recv_completed().unwrap().is_empty());
+        let comm = d.finish();
+        assert_eq!(comm.exchanges(), 2);
     }
 }

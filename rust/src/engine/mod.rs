@@ -722,6 +722,12 @@ pub struct RankOutput {
     /// subscribed subsets).
     pub comm_recv_bytes: u64,
     pub windows: u64,
+    /// Payload frames this rank put on the wire (hierarchical routing
+    /// merges these below the mesh's `windows × (ranks − 1)`).
+    pub comm_frames: u64,
+    /// Fraction of this rank's exchange time hidden behind compute
+    /// (`(busy − wait) / busy` of its comm driver; 0 when serialized).
+    pub comm_overlap_ratio: f64,
     /// Store + engine construction time (not simulation), measured on
     /// the rank thread that built the engine.
     pub build_seconds: f64,
@@ -747,6 +753,9 @@ pub struct RunConfig {
     /// Spike-exchange routing (interest-routed vs the broadcast
     /// allgather ablation; bit-identical either way).
     pub routing: RoutingMode,
+    /// Per-rank host-group ids for hierarchical routing (empty = auto
+    /// groups of two consecutive ranks).
+    pub comm_group: Vec<usize>,
     pub steps: Step,
     /// Built-in raster: record gids below this bound; `None` disables
     /// recording entirely (documented [`SpikeRecorder::disabled`]
@@ -769,6 +778,7 @@ impl Default for RunConfig {
             build: BuildMode::TwoPass,
             integrate: IntegrateMode::Vector,
             routing: RoutingMode::Routed,
+            comm_group: Vec::new(),
             steps: 1000,
             record_limit: None,
             verify_ownership: false,
@@ -799,6 +809,13 @@ pub struct RunOutput {
     /// projection charges injection and reception independently).
     pub comm_recv_bytes: u64,
     pub windows: u64,
+    /// Payload frames across ranks per run (hierarchical routing's
+    /// headline metric: merged relay frames vs the mesh's
+    /// `windows × ranks × (ranks − 1)`).
+    pub comm_frames: u64,
+    /// Fraction of exchange time hidden behind compute, worst rank
+    /// (min over ranks — the critical-path view; 0 when serialized).
+    pub comm_overlap_ratio: f64,
     pub partition: Partition,
 }
 

@@ -74,7 +74,8 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::atlas::NetworkSpec;
 use crate::comm::{
-    bsb, Communicator, LocalCluster, RoutingTable, SoloComm,
+    bsb, hier::fastpath_links, CommGroups, Communicator,
+    HierarchicalComm, LocalCluster, RoutingTable, SoloComm,
     SpikePacket, TcpComm,
 };
 use crate::config::{
@@ -194,6 +195,7 @@ pub struct SimulationBuilder {
     build: BuildMode,
     integrate: IntegrateMode,
     routing: RoutingMode,
+    comm_group: Vec<usize>,
     record_limit: Option<Gid>,
     verify_ownership: bool,
     artifacts_dir: String,
@@ -220,6 +222,7 @@ impl SimulationBuilder {
             build: BuildMode::TwoPass,
             integrate: IntegrateMode::Vector,
             routing: RoutingMode::Routed,
+            comm_group: Vec::new(),
             record_limit: None,
             verify_ownership: false,
             artifacts_dir: "artifacts".into(),
@@ -281,6 +284,15 @@ impl SimulationBuilder {
     /// ablation — bit-identical rasters either way).
     pub fn routing(mut self, r: RoutingMode) -> Self {
         self.routing = r;
+        self
+    }
+
+    /// Per-rank host-group ids for [`RoutingMode::Hierarchical`]
+    /// (`group_of[rank] = group`; ids contiguous from zero). Empty (the
+    /// default) auto-groups pairs of consecutive ranks. Ignored by the
+    /// flat routing modes.
+    pub fn comm_group(mut self, group_of: Vec<usize>) -> Self {
+        self.comm_group = group_of;
         self
     }
 
@@ -363,6 +375,7 @@ impl SimulationBuilder {
         self.build = cfg.build;
         self.integrate = cfg.integrate;
         self.routing = cfg.routing;
+        self.comm_group = cfg.comm_group.clone();
         self.record_limit = cfg.record_limit;
         self.verify_ownership = cfg.verify_ownership;
         self.artifacts_dir = cfg.artifacts_dir.clone();
@@ -491,6 +504,48 @@ impl SimulationBuilder {
                 comm.rank()
             );
         }
+
+        // hierarchical routing: wrap every endpoint in the relay
+        // protocol, with in-process fast-path channels between
+        // co-located same-group ranks (single-rank processes — one
+        // rank per `cortex launch` child — keep everything on the
+        // transport's point-to-point frames)
+        let endpoints = if self.routing == RoutingMode::Hierarchical
+            && n_ranks > 1
+        {
+            let groups = if self.comm_group.is_empty() {
+                CommGroups::even(n_ranks, 2)
+            } else {
+                CommGroups::new(self.comm_group.clone())
+                    .map_err(|e| anyhow!("engine.comm_group: {e}"))?
+            };
+            ensure!(
+                groups.n_ranks() == n_ranks,
+                "comm groups assign {} ranks, session is configured \
+                 for {n_ranks}",
+                groups.n_ranks()
+            );
+            let present: Vec<usize> =
+                endpoints.iter().map(|(r, _)| *r).collect();
+            let mut fast = fastpath_links(&groups, &present);
+            endpoints
+                .into_iter()
+                .map(|(r, comm)| {
+                    let links = fast.remove(&r).unwrap_or_default();
+                    HierarchicalComm::new(comm, groups.clone())
+                        .map(|h| {
+                            (
+                                r,
+                                Box::new(h.with_fastpath(links))
+                                    as Box<dyn Communicator>,
+                            )
+                        })
+                        .map_err(|e| anyhow!("rank {r}: {e}"))
+                })
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            endpoints
+        };
 
         let mut links = Vec::with_capacity(endpoints.len());
         for (r, comm) in endpoints {
@@ -1038,6 +1093,8 @@ impl Simulation {
         let mut comm_bytes = 0;
         let mut comm_recv_bytes = 0;
         let mut windows = 0;
+        let mut comm_frames = 0;
+        let mut comm_overlap_ratio = f64::INFINITY;
         let mut wall_seconds: f64 = 0.0;
         let mut build_seconds: f64 = 0.0;
         for (o, sim_s) in &outputs {
@@ -1049,8 +1106,15 @@ impl Simulation {
             comm_bytes += o.comm_bytes;
             comm_recv_bytes += o.comm_recv_bytes;
             windows = windows.max(o.windows);
+            comm_frames += o.comm_frames;
+            // critical-path view: the rank hiding the least
+            comm_overlap_ratio =
+                comm_overlap_ratio.min(o.comm_overlap_ratio);
             wall_seconds = wall_seconds.max(*sim_s);
             build_seconds = build_seconds.max(o.build_seconds);
+        }
+        if !comm_overlap_ratio.is_finite() {
+            comm_overlap_ratio = 0.0;
         }
         raster.events.sort_unstable();
         Ok(RunOutput {
@@ -1064,6 +1128,8 @@ impl Simulation {
             comm_bytes,
             comm_recv_bytes,
             windows,
+            comm_frames,
+            comm_overlap_ratio,
             partition: Arc::try_unwrap(partition)
                 .unwrap_or_else(|a| (*a).clone()),
         })
@@ -1322,6 +1388,9 @@ struct RankRuntime {
     build_seconds: f64,
     /// Total simulation wall time across `run_for` calls.
     sim_seconds: f64,
+    /// Hidden exchange nanoseconds already folded into the
+    /// `comm_hidden` timer phase (repeat drains add only deltas).
+    hidden_ns_recorded: u64,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1403,7 +1472,9 @@ fn build_runtime(
     // the routing table the driver then filters every window against
     let mut comm = comm;
     let routing = match routing_mode {
-        RoutingMode::Routed if comm.size() > 1 => {
+        RoutingMode::Routed | RoutingMode::Hierarchical
+            if comm.size() > 1 =>
+        {
             Some(engine.timer.time("comm_subscribe", || {
                 subscription_collective(
                     &engine.store,
@@ -1439,6 +1510,7 @@ fn build_runtime(
         probes,
         build_seconds,
         sim_seconds: 0.0,
+        hidden_ns_recorded: 0,
     })
 }
 
@@ -1500,6 +1572,7 @@ impl RankRuntime {
                 Resp::Ack
             }
             Cmd::Drain(name) => {
+                self.record_comm_hidden();
                 let view = StepView::at_rest(&self.engine);
                 match self
                     .probes
@@ -1539,6 +1612,11 @@ impl RankRuntime {
     /// stimulus updates. Exchange failures (window misalignment,
     /// malformed wire frames, lost peers) propagate as errors.
     fn window_start(&mut self) -> Result<()> {
+        // stimulus updates first: they touch drive state only (never
+        // the spike stream), so applying them while the previous
+        // window's exchange is still in flight is identity-safe — and
+        // keeps that work off the blocking receive below
+        self.apply_pending_stim();
         if self.window_drained {
             self.window_drained = false;
         } else {
@@ -1548,7 +1626,6 @@ impl RankRuntime {
                 .time("comm_wait", || driver.recv_completed())?;
             engine.enqueue_remote(&incoming);
         }
-        self.apply_pending_stim();
         Ok(())
     }
 
@@ -1582,24 +1659,44 @@ impl RankRuntime {
             let t0 = Instant::now();
             self.engine.step_once(&mut self.outbox);
             self.engine.timer.add("compute", t0.elapsed().as_nanos());
-            if !self.probes.is_empty() {
-                let view = StepView::new(
-                    &self.engine,
-                    now,
-                    &self.outbox[mark..],
-                );
-                for (_, p) in self.probes.iter_mut() {
-                    p.on_step(&view);
-                }
-            }
-            self.step_in_window += 1;
-            if self.step_in_window == self.m {
+            if self.step_in_window + 1 == self.m {
+                // the window is complete the moment its last step has
+                // computed: ship it before this step's probe
+                // processing, so probe work — and everything the
+                // caller does until the next window's first step —
+                // overlaps the exchange. Probes still observe the
+                // step's outbox tail, from a copy taken before the
+                // packet moves to the driver.
+                let tail: SpikePacket = if self.probes.is_empty() {
+                    Vec::new()
+                } else {
+                    self.outbox[mark..].to_vec()
+                };
                 let pkt = std::mem::take(&mut self.outbox);
                 let RankRuntime { engine, driver, .. } = self;
                 engine
                     .timer
                     .time("comm_submit", || driver.submit(pkt))?;
                 self.step_in_window = 0;
+                if !self.probes.is_empty() {
+                    let view =
+                        StepView::new(&self.engine, now, &tail);
+                    for (_, p) in self.probes.iter_mut() {
+                        p.on_step(&view);
+                    }
+                }
+            } else {
+                if !self.probes.is_empty() {
+                    let view = StepView::new(
+                        &self.engine,
+                        now,
+                        &self.outbox[mark..],
+                    );
+                    for (_, p) in self.probes.iter_mut() {
+                        p.on_step(&view);
+                    }
+                }
+                self.step_in_window += 1;
             }
         }
         self.sim_seconds += t_run.elapsed().as_secs_f64();
@@ -1668,6 +1765,24 @@ impl RankRuntime {
     /// Flush a trailing partial window, tear down the exchange driver
     /// and **move** the recorder/timer out of the engine into the
     /// rank's output.
+    /// Fold the driver's hidden exchange time (comm-thread busy time
+    /// minus the wait the rank loop actually observed) into the
+    /// `comm_hidden` timer phase, so phase probes and reports show
+    /// the overlap win next to `comm_wait`. Only the delta since the
+    /// last call is added; an exchange still in flight may briefly
+    /// overstate the hidden share (busy accrues before its wait is
+    /// observed) — fine for a wall-clock phase, which is explicitly
+    /// nondeterministic.
+    fn record_comm_hidden(&mut self) {
+        let s = self.driver.stats();
+        let hidden = s.busy_ns.saturating_sub(s.wait_ns);
+        let delta = hidden.saturating_sub(self.hidden_ns_recorded);
+        if delta > 0 {
+            self.engine.timer.add("comm_hidden", delta as u128);
+            self.hidden_ns_recorded = hidden;
+        }
+    }
+
     fn finish_output(&mut self) -> Result<(RankOutput, f64)> {
         if self.step_in_window != 0 {
             let pkt = std::mem::take(&mut self.outbox);
@@ -1676,7 +1791,16 @@ impl RankRuntime {
                 .timer
                 .time("comm_submit", || driver.submit(pkt))?;
             self.step_in_window = 0;
+            // drain the flush measured, so the teardown exchange
+            // keeps the busy/wait accounting coherent (its spikes are
+            // past the last full window and discarded, as before; a
+            // teardown exchange failure stays non-fatal)
+            let _ = engine
+                .timer
+                .time("comm_wait", || driver.recv_completed());
         }
+        self.record_comm_hidden();
+        let stats = self.driver.stats();
         let driver = std::mem::replace(
             &mut self.driver,
             CommDriver::new(
@@ -1702,6 +1826,8 @@ impl RankRuntime {
                 comm_bytes: comm.bytes_sent(),
                 comm_recv_bytes: comm.bytes_received(),
                 windows: comm.exchanges(),
+                comm_frames: comm.frames_sent(),
+                comm_overlap_ratio: stats.overlap_ratio(),
                 build_seconds: self.build_seconds,
             },
             self.sim_seconds,

@@ -41,10 +41,13 @@
 //!   phase-timer streams.
 //! - [`comm`]   — MPI-like communicator over in-memory ranks **or TCP
 //!   sockets between OS processes** (`cortex launch` / `cortex run
-//!   --rank`), spike broadcast with dedicated communication thread
-//!   (paper §III.C), the fallible BSB wire codec (varint delta coding,
-//!   window-counter verification), and a Tofu-D network cost model for
-//!   Fugaku-scale projections.
+//!   --rank`), spike exchange with dedicated communication thread
+//!   (paper §III.C): broadcast, interest-routed per-peer frames, or
+//!   hierarchical two-level relay merge over host groups
+//!   (`engine.comm_group`) with an in-process fast path for co-located
+//!   ranks; the fallible BSB wire codec (varint delta coding,
+//!   window-counter verification, merged multi-source frames), and a
+//!   Tofu-D network cost model for Fugaku-scale projections.
 //! - [`nest_baseline`] — a NEST-style reference engine embodying the design
 //!   choices the paper compares against (random distribution, atomic
 //!   delivery, serialized exchange).

@@ -24,8 +24,11 @@ use std::time::Duration;
 
 use cortex::atlas::marmoset::{marmoset_spec, MarmosetParams};
 use cortex::atlas::potjans::potjans_spec;
-use cortex::comm::bsb::{self, CodecError};
-use cortex::comm::{Communicator, SpikeMsg, TcpComm};
+use cortex::comm::bsb::{self, CodecError, MergedEntry};
+use cortex::comm::{
+    CommError, CommGroups, Communicator, HierarchicalComm,
+    LocalCluster, Outbound, SpikeMsg, TcpComm, MAX_FRAME_BYTES,
+};
 use cortex::config::{
     BuildMode, CommMode, ConfigDoc, DynamicsBackend, ExecMode,
     ExperimentConfig, IntegrateMode, MappingKind, RoutingMode,
@@ -170,6 +173,7 @@ fn local_run(
             build: BuildMode::TwoPass,
             integrate: IntegrateMode::Vector,
             routing,
+            comm_group: Vec::new(),
             steps: STEPS,
             record_limit: Some(u32::MAX),
             verify_ownership: false,
@@ -445,6 +449,273 @@ fn routed_checkpoints_are_bit_identical_to_broadcast() {
     assert_eq!(
         routed, bcast,
         "routing mode leaked into the checkpointed state"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Hierarchical exchange: bit-identity across the rank × transport ×
+// comm-mode matrix, merged-frame reduction, and failure surfaces
+// ---------------------------------------------------------------------
+
+#[test]
+fn hierarchical_is_bit_identical_across_the_local_matrix() {
+    // 2/4/8 ranks × serialized/overlap: the two-level relay protocol
+    // must reproduce the flat routed raster bit-for-bit (the receiver
+    // re-sorts merged sub-frames into source-rank order, so delivery
+    // is indistinguishable), while collapsing the per-window frame
+    // count at ≥ 4 ranks (2 ranks = one group = no relay round, same
+    // two frames either way)
+    let spec = Arc::new(potjans_spec(SCALE, SEED));
+    for ranks in [2usize, 4, 8] {
+        for comm in [CommMode::Serialized, CommMode::Overlap] {
+            let routed =
+                local_run(&spec, comm, ranks, RoutingMode::Routed);
+            assert!(
+                !routed.raster.events.is_empty(),
+                "{ranks}r/{comm:?}: microcircuit should be active"
+            );
+            let hier = local_run(
+                &spec,
+                comm,
+                ranks,
+                RoutingMode::Hierarchical,
+            );
+            assert_eq!(
+                hier.raster.events, routed.raster.events,
+                "{ranks}r/{comm:?}: hierarchical exchange changed \
+                 the raster"
+            );
+            assert_eq!(hier.total_spikes, routed.total_spikes);
+            // closed cluster: every byte sent is a byte received
+            assert_eq!(hier.comm_bytes, hier.comm_recv_bytes);
+            if ranks >= 4 {
+                assert!(
+                    hier.comm_frames < routed.comm_frames,
+                    "{ranks}r/{comm:?}: merged frames {} not below \
+                     flat mesh {}",
+                    hier.comm_frames,
+                    routed.comm_frames
+                );
+            } else {
+                assert_eq!(hier.comm_frames, routed.comm_frames);
+            }
+            // the overlap ratio is a share of hidden exchange time;
+            // serialized mode by definition hides nothing
+            assert!(
+                (0.0..=1.0).contains(&hier.comm_overlap_ratio),
+                "ratio {} out of range",
+                hier.comm_overlap_ratio
+            );
+            if comm == CommMode::Serialized {
+                assert_eq!(hier.comm_overlap_ratio, 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_is_bit_identical_over_tcp() {
+    // real sockets: gather/scatter and the relay↔relay merged frames
+    // ride the TCP point-to-point frame path (one rank per endpoint,
+    // so there is no in-process fast path to hide behind); uneven
+    // run_for chunks at 4 ranks exercise mid-window stops against the
+    // double-buffered staging
+    let spec = Arc::new(potjans_spec(SCALE, SEED));
+    let chunks: &[u64] = &[STEPS];
+    let split: &[u64] = &[7, 100, 493];
+    for (ranks, comm, chunks) in [
+        (2usize, CommMode::Serialized, chunks),
+        (2, CommMode::Overlap, chunks),
+        (4, CommMode::Serialized, chunks),
+        (4, CommMode::Overlap, split),
+        (8, CommMode::Overlap, chunks),
+    ] {
+        let want = local_run(&spec, comm, ranks, RoutingMode::Routed)
+            .raster
+            .events;
+        let got = tcp_raster_matrix(
+            &spec,
+            comm,
+            chunks,
+            ranks,
+            RoutingMode::Hierarchical,
+        );
+        assert_eq!(
+            got, want,
+            "{ranks}r/{comm:?}: hierarchical TCP exchange changed \
+             the raster ({} vs {} events)",
+            got.len(),
+            want.len()
+        );
+    }
+}
+
+#[test]
+fn hierarchical_checkpoints_are_bit_identical_to_routed() {
+    // bit-equal checkpoint blobs mean the relay protocol agrees with
+    // the flat mesh on every membrane potential, queue entry and RNG
+    // draw — not just on the recorded raster
+    let spec = Arc::new(potjans_spec(SCALE, SEED));
+    let blob_of = |routing: RoutingMode| {
+        let mut sim = Simulation::builder(Arc::clone(&spec))
+            .ranks(4)
+            .threads(THREADS)
+            .comm(CommMode::Overlap)
+            .routing(routing)
+            .record_limit(Some(u32::MAX))
+            .seed(SEED)
+            .build()
+            .unwrap();
+        sim.run_for(300).unwrap();
+        let mut blob = Vec::new();
+        sim.checkpoint(&mut blob).unwrap();
+        sim.finish().unwrap();
+        blob
+    };
+    let hier = blob_of(RoutingMode::Hierarchical);
+    let routed = blob_of(RoutingMode::Routed);
+    assert!(!hier.is_empty());
+    assert_eq!(
+        hier, routed,
+        "hierarchical routing leaked into the checkpointed state"
+    );
+}
+
+#[test]
+fn merged_frame_garbage_never_panics_only_typed_errors() {
+    property("merged garbage decode is total", 500, |g| {
+        let n = g.usize(0..200);
+        let bytes: Vec<u8> =
+            (0..n).map(|_| g.u32(0..256) as u8).collect();
+        // any outcome is fine as long as it is a returned value
+        let _ = bsb::decode_merged(&bytes);
+        Ok(())
+    });
+}
+
+/// Four TCP ranks under hierarchical routing (groups {0,1} / {2,3});
+/// `casualty` completes one window exchange and then drops its
+/// endpoint cold. Every survivor must surface a typed
+/// [`CommError::PeerLost`] from whatever protocol round it was blocked
+/// in — never a panic, never a hang. The loss reaches each rank
+/// mid-window: the adjacent rank fails its gather or relay round, its
+/// own teardown then cascades the error to the rest of the cluster.
+fn hier_tcp_peer_loss(casualty: usize) {
+    let ranks = 4usize;
+    let groups = CommGroups::even(ranks, 2);
+    let listeners: Vec<TcpListener> = (0..ranks)
+        .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+        .collect();
+    let peers: Vec<String> = listeners
+        .iter()
+        .map(|l| l.local_addr().unwrap().to_string())
+        .collect();
+    let handles: Vec<_> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(rank, listener)| {
+            let peers = peers.clone();
+            let groups = groups.clone();
+            thread::spawn(move || {
+                let tcp = TcpComm::join_with_listener(
+                    rank as u16,
+                    listener,
+                    &peers,
+                    Duration::from_secs(30),
+                )
+                .unwrap();
+                let mut comm =
+                    HierarchicalComm::new(Box::new(tcp), groups)
+                        .unwrap();
+                let windows = if rank == casualty { 1 } else { 3 };
+                let mut err = None;
+                for _ in 0..windows {
+                    let out = Outbound::Routed(
+                        (0..ranks)
+                            .map(|d| {
+                                if d == rank {
+                                    Vec::new()
+                                } else {
+                                    vec![SpikeMsg {
+                                        gid: rank as u32,
+                                        step: 0,
+                                    }]
+                                }
+                            })
+                            .collect(),
+                    );
+                    match comm.exchange_outbound(out) {
+                        Ok(_) => {}
+                        Err(e) => {
+                            err = Some(e);
+                            break;
+                        }
+                    }
+                }
+                (rank, err)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (rank, err) = h.join().unwrap();
+        if rank == casualty {
+            assert!(
+                err.is_none(),
+                "casualty rank {rank} should exit clean: {err:?}"
+            );
+        } else {
+            match err {
+                Some(CommError::PeerLost { .. }) => {}
+                other => panic!(
+                    "rank {rank}: expected PeerLost, got {other:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn member_loss_mid_window_surfaces_peer_lost_on_every_survivor() {
+    // rank 3 is a plain member: its relay fails the gather round
+    hier_tcp_peer_loss(3);
+}
+
+#[test]
+fn relay_loss_mid_window_surfaces_peer_lost_on_every_survivor() {
+    // rank 2 relays group 1: its member and the partner relay both
+    // lose their counterpart mid-protocol
+    hier_tcp_peer_loss(2);
+}
+
+#[test]
+fn window_mismatch_inside_a_merged_frame_is_a_typed_error() {
+    // a member that desyncs its window counter must be refused with
+    // the counters in the error, not have its spikes delivered into
+    // the wrong window
+    let mut comms = LocalCluster::new(2);
+    let mut member = comms.pop().unwrap(); // rank 1
+    let relay = comms.pop().unwrap(); // rank 0
+    let groups = CommGroups::new(vec![0, 0]).unwrap();
+    let mut relay =
+        HierarchicalComm::new(Box::new(relay), groups).unwrap();
+    let entries = vec![MergedEntry {
+        source: 1,
+        dest: 0,
+        spikes: vec![SpikeMsg { gid: 9, step: 0 }],
+    }];
+    // stamped with window 7 while the relay is at window 0
+    let frame =
+        bsb::encode_merged(7, &entries, MAX_FRAME_BYTES).unwrap();
+    member.send_frame(0, &frame).unwrap();
+    let err = relay
+        .exchange_outbound(Outbound::Routed(vec![
+            Vec::new(),
+            Vec::new(),
+        ]))
+        .unwrap_err();
+    assert!(
+        matches!(err, CommError::WindowMismatch { got: 7, want: 0 }),
+        "expected WindowMismatch, got {err:?}"
     );
 }
 

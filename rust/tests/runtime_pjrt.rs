@@ -109,6 +109,7 @@ fn pjrt_backend_full_simulation_matches_native() {
         build: BuildMode::TwoPass,
         integrate: IntegrateMode::Vector,
         routing: RoutingMode::Routed,
+        comm_group: Vec::new(),
         steps: 400,
         record_limit: Some(u32::MAX),
         verify_ownership: false,
